@@ -1,0 +1,121 @@
+//! **End-to-end validation driver** (EXPERIMENTS.md §E2E).
+//!
+//! Exercises the full three-layer system on the real benchmark suite:
+//!
+//! * builds every suite instance (all three classes),
+//! * partitions with all presets (SDet-LP, BiPart-like, DetJet,
+//!   DetFlows, simulated non-det modes) across k ∈ {4, 8},
+//! * routes one DetJet configuration through the **AOT-compiled XLA
+//!   executable** (L1 Pallas kernel → L2 JAX → HLO text → PJRT) and
+//!   asserts bit-equality with the native path — proving all layers
+//!   compose,
+//! * verifies determinism of every deterministic preset across thread
+//!   counts on every instance,
+//! * reports the paper's headline metrics: quality ratios vs SDet and
+//!   BiPart, DetFlows' extra quality, and relative running times.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example e2e_suite
+//! ```
+
+use detpart::config::Config;
+use detpart::partitioner::{partition, partition_with_selector};
+use detpart::util::stats::geometric_mean;
+use std::collections::BTreeMap;
+
+fn main() {
+    let xla = detpart::runtime::XlaGainSelector::load_default();
+    match &xla {
+        Ok(s) => println!(
+            "XLA backend loaded: platform={}, k variants {:?}",
+            s.platform(),
+            s.loaded_ks()
+        ),
+        Err(e) => println!("XLA backend unavailable ({e}); native-only run"),
+    }
+
+    let presets = ["sdet", "bipart", "detjet", "nondet-jet", "detflows"];
+    let ks = [4usize, 8];
+    let mut km1: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    let mut time: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    let mut xla_checked = 0usize;
+
+    for inst in detpart::gen::suite::mini_suite() {
+        let hg = inst.build();
+        println!(
+            "\n=== {} ({}; n={} m={} pins={}) ===",
+            inst.name,
+            inst.class.name(),
+            hg.num_vertices(),
+            hg.num_edges(),
+            hg.num_pins()
+        );
+        for k in ks {
+            for preset in presets {
+                let cfg = Config::preset(preset, 1).unwrap();
+                let r = partition(&hg, k, &cfg);
+                println!(
+                    "  k={k} {preset:<12} λ−1={:<7} imb={:.3} {:>7.2}s {}",
+                    r.km1,
+                    r.imbalance,
+                    r.total_s,
+                    if r.balanced { "" } else { "UNBALANCED" }
+                );
+                km1.entry(preset).or_default().push((r.km1 + 1) as f64);
+                time.entry(preset).or_default().push(r.total_s.max(1e-6));
+
+                // Determinism spot check across thread counts.
+                if preset != "nondet-jet" && preset != "nondet-flows" {
+                    let r2 = detpart::par::with_num_threads(4, || partition(&hg, k, &cfg));
+                    assert_eq!(r.part, r2.part, "{preset} non-deterministic on {}", inst.name);
+                }
+
+                // L1/L2/L3 composition: XLA backend must be bit-identical.
+                if preset == "detjet" && k == 8 {
+                    if let Ok(s) = &xla {
+                        let rx = partition_with_selector(&hg, k, &cfg, Some(s));
+                        assert_eq!(
+                            r.part, rx.part,
+                            "XLA backend diverged from native on {}",
+                            inst.name
+                        );
+                        xla_checked += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    println!("\n================= headline metrics =================");
+    let gm = |m: &BTreeMap<&str, Vec<f64>>, p: &str| geometric_mean(&m[p]);
+    let dj = gm(&km1, "detjet");
+    println!("quality (geomean λ−1+1, lower better):");
+    for p in presets {
+        println!(
+            "  {p:<12} {:>10.1}  ({:.2}x vs detjet)",
+            gm(&km1, p),
+            gm(&km1, p) / dj
+        );
+    }
+    let tj = gm(&time, "detjet");
+    println!("running time (geomean s):");
+    for p in presets {
+        println!(
+            "  {p:<12} {:>10.3}  ({:.2}x vs detjet)",
+            gm(&time, p),
+            gm(&time, p) / tj
+        );
+    }
+    println!("\npaper shape checks:");
+    let sdet_ratio = gm(&km1, "sdet") / dj;
+    let bipart_ratio = gm(&km1, "bipart") / dj;
+    let flows_ratio = gm(&km1, "detflows") / dj;
+    println!("  DetJet vs SDet quality:    {sdet_ratio:.2}x (paper: 1.18x)");
+    println!("  DetJet vs BiPart quality:  {bipart_ratio:.2}x (paper: 2.4x)");
+    println!("  DetFlows vs DetJet:        {:.1}% better (paper: 4-5%)", 100.0 * (1.0 - flows_ratio));
+    println!("  XLA-backend bit-equality checks passed: {xla_checked}");
+    assert!(sdet_ratio > 1.0, "DetJet must beat SDet in aggregate");
+    assert!(bipart_ratio > 1.0, "DetJet must beat BiPart-like in aggregate");
+    assert!(flows_ratio <= 1.0, "DetFlows must not be worse than DetJet");
+    println!("\nE2E suite PASSED");
+}

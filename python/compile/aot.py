@@ -1,0 +1,70 @@
+"""AOT export: lower the L2 computations to HLO **text** artifacts.
+
+HLO text — not ``HloModuleProto.serialize()`` — is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+(idempotent; driven by ``make artifacts``).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"tile_rows": model.TILE_ROWS, "artifacts": {}}
+    for k in model.SUPPORTED_KS:
+        lowered = jax.jit(model.gain_select_entry(k)).lower(
+            *model.gain_select_example_args(k)
+        )
+        text = to_hlo_text(lowered)
+        name = f"gain_select_k{k}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "kind": "gain_select",
+            "k": k,
+            "chars": len(text),
+        }
+    lowered = jax.jit(model.rebalance_priority_entry()).lower(
+        *model.rebalance_priority_example_args()
+    )
+    text = to_hlo_text(lowered)
+    name = "rebalance_priority.hlo.txt"
+    with open(os.path.join(out_dir, name), "w") as f:
+        f.write(text)
+    manifest["artifacts"][name] = {"kind": "rebalance_priority", "chars": len(text)}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    manifest = export_all(args.out_dir)
+    for name, meta in manifest["artifacts"].items():
+        print(f"wrote {name}: {meta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: Jet move selection over a dense affinity tile.
+
+Given a ``(TILE, K)`` block-affinity matrix for a tile of vertices, pick
+for every vertex the best target block, its gain, and the Jet temperature
+admission flag:
+
+    score[r, b]  = affinity[r, b] - leave_cost[r]
+    valid[r, b]  = (b != current[r]) and (affinity[r, b] > 0)
+    target[r]    = argmax_b masked(score)      (first max -> lowest id)
+    gain[r]      = score[r, target[r]]
+    admit[r]     = gain[r] >= -tau * internal[r]   (and any valid target)
+
+This is the GPU-Jet insight re-tiled for the TPU model Pallas exposes:
+one ``(TILE, K)`` tile is a VMEM-resident block (256x128xf32 = 128 KiB at
+the largest K), the reduction over K is a vectorized masked max on the
+VPU, and the grid/BlockSpec expresses the HBM<->VMEM streaming that the
+GPU original handled with threadblocks. ``interpret=True`` everywhere:
+the CPU PJRT plugin cannot run Mosaic custom-calls; real-TPU perf is
+estimated in DESIGN.md / EXPERIMENTS.md §Perf from the VMEM footprint.
+
+Tie-break contract (shared with the Rust native path and ref.py): the
+*lowest* block id among maxima wins — ``jnp.argmax`` takes the first
+maximum, and the Rust path iterates blocks in ascending order with a
+strict ``>`` update.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile geometry — must match rust/src/refinement/jet/candidates.rs.
+TILE_ROWS = 256
+
+# Plain Python float (a traced jnp constant would be captured as a
+# pallas_call const, which interpret mode rejects).
+NEG_INF = -3.0e38
+
+
+def _gain_select_kernel(aff_ref, cur_ref, leave_ref, internal_ref, tau_ref,
+                        target_ref, gain_ref, admit_ref):
+    """Pallas kernel body: one (TILE_ROWS, K) tile."""
+    aff = aff_ref[...]                      # (T, K) f32
+    cur = cur_ref[...]                      # (T,)   i32
+    leave = leave_ref[...]                  # (T,)   f32
+    internal = internal_ref[...]            # (T,)   f32
+    tau = tau_ref[0]                        # scalar f32
+
+    t, k = aff.shape
+    block_ids = jax.lax.broadcasted_iota(jnp.int32, (t, k), 1)
+    valid = (block_ids != cur[:, None]) & (aff > 0.0)
+    score = jnp.where(valid, aff - leave[:, None], NEG_INF)
+
+    target = jnp.argmax(score, axis=1).astype(jnp.int32)  # first max
+    gain = jnp.max(score, axis=1)
+    any_valid = jnp.any(valid, axis=1)
+    admit = (any_valid & (gain >= -tau * internal)).astype(jnp.int32)
+
+    target_ref[...] = jnp.where(any_valid, target, 0)
+    gain_ref[...] = jnp.where(any_valid, gain, 0.0)
+    admit_ref[...] = admit
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def gain_select(affinity, current, leave_cost, internal, tau, *, k):
+    """L2-callable wrapper around the Pallas kernel (single tile)."""
+    assert affinity.shape == (TILE_ROWS, k)
+    tau_vec = jnp.reshape(tau.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _gain_select_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((TILE_ROWS,), jnp.int32),
+            jax.ShapeDtypeStruct((TILE_ROWS,), jnp.float32),
+            jax.ShapeDtypeStruct((TILE_ROWS,), jnp.int32),
+        ),
+        interpret=True,
+    )(affinity, current, leave_cost, internal, tau_vec)

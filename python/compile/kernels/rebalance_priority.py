@@ -1,0 +1,39 @@
+"""L1 Pallas kernel: deterministic-rebalancer move priorities.
+
+The paper's weight-aware priority (Section 4.3):
+
+    priority(v) = gain(v) / c(v)   if gain(v) < 0
+                  gain(v) * c(v)   if gain(v) > 0
+                  0                otherwise
+
+Vectorized over a tile of shed candidates. Elementwise VPU work; one
+(TILE,) f32 lane set per input. The Rust rebalancer compares priorities
+with exact integer cross-multiplication; this kernel is the dense f32
+counterpart used for analysis and the L2 export (all production inputs
+are integers < 2^24, where f32 arithmetic is exact).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 256
+
+
+def _rebalance_priority_kernel(gain_ref, weight_ref, out_ref):
+    gain = gain_ref[...]
+    weight = weight_ref[...]
+    neg = gain / jnp.maximum(weight, 1.0)
+    pos = gain * weight
+    out_ref[...] = jnp.where(gain < 0.0, neg, jnp.where(gain > 0.0, pos, 0.0))
+
+
+@jax.jit
+def rebalance_priority(gain, weight):
+    """Priorities for a tile of candidates (higher = move first)."""
+    assert gain.shape == (TILE_ROWS,)
+    return pl.pallas_call(
+        _rebalance_priority_kernel,
+        out_shape=jax.ShapeDtypeStruct((TILE_ROWS,), jnp.float32),
+        interpret=True,
+    )(gain, weight)

@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Deliberately written with independent, straightforward numpy-style code
+(no shared helpers with the kernels) so a bug in the kernel cannot hide
+in a shared dependency. pytest + hypothesis sweep shapes and values.
+"""
+
+import numpy as np
+
+
+def gain_select_ref(affinity, current, leave_cost, internal, tau):
+    """Reference semantics of kernels.gain_select (row-wise loops)."""
+    affinity = np.asarray(affinity, dtype=np.float32)
+    t, k = affinity.shape
+    target = np.zeros(t, dtype=np.int32)
+    gain = np.zeros(t, dtype=np.float32)
+    admit = np.zeros(t, dtype=np.int32)
+    for r in range(t):
+        best_b = -1
+        best_score = -np.inf
+        for b in range(k):
+            if b == int(current[r]):
+                continue
+            if affinity[r, b] <= 0.0:
+                continue
+            score = np.float32(affinity[r, b]) - np.float32(leave_cost[r])
+            if score > best_score:  # strict: first (lowest b) max wins
+                best_score = score
+                best_b = b
+        if best_b >= 0:
+            target[r] = best_b
+            gain[r] = best_score
+            admit[r] = int(best_score >= -np.float32(tau) * np.float32(internal[r]))
+    return target, gain, admit
+
+
+def rebalance_priority_ref(gain, weight):
+    """Reference semantics of kernels.rebalance_priority."""
+    gain = np.asarray(gain, dtype=np.float32)
+    weight = np.asarray(weight, dtype=np.float32)
+    out = np.zeros_like(gain)
+    for i in range(len(gain)):
+        if gain[i] < 0:
+            out[i] = gain[i] / max(weight[i], np.float32(1.0))
+        elif gain[i] > 0:
+            out[i] = gain[i] * weight[i]
+        else:
+            out[i] = 0.0
+    return out

@@ -1,0 +1,51 @@
+"""L2: the exported JAX computation(s), calling the L1 Pallas kernels.
+
+The "model" of this systems paper is the dense move-selection arithmetic
+of deterministic Jet refinement: per tile of 256 vertices, select the
+best target block, gain, and temperature admission (kernels.gain_select),
+plus the rebalancer priority transform. Both are exported per supported
+block count k; the Rust coordinator feeds tiles from its sparse gain
+tables and consumes the selections on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gain_select import TILE_ROWS, gain_select
+from .kernels.rebalance_priority import rebalance_priority
+
+SUPPORTED_KS = (2, 4, 8, 16, 32, 64, 128)
+
+
+def gain_select_entry(k):
+    """Return the jittable tile entry point for block count ``k``."""
+
+    def fn(affinity, current, leave_cost, internal, tau):
+        return gain_select(affinity, current, leave_cost, internal, tau, k=k)
+
+    return fn
+
+
+def gain_select_example_args(k):
+    """Example abstract args for AOT lowering."""
+    return (
+        jax.ShapeDtypeStruct((TILE_ROWS, k), jnp.float32),
+        jax.ShapeDtypeStruct((TILE_ROWS,), jnp.int32),
+        jax.ShapeDtypeStruct((TILE_ROWS,), jnp.float32),
+        jax.ShapeDtypeStruct((TILE_ROWS,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+
+
+def rebalance_priority_entry():
+    def fn(gain, weight):
+        return (rebalance_priority(gain, weight),)
+
+    return fn
+
+
+def rebalance_priority_example_args():
+    return (
+        jax.ShapeDtypeStruct((TILE_ROWS,), jnp.float32),
+        jax.ShapeDtypeStruct((TILE_ROWS,), jnp.float32),
+    )

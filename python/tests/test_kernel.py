@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs the pure-numpy oracle.
+
+Hypothesis sweeps tile contents (and k across the supported variants);
+assert_allclose with exact equality where the contract demands it
+(target/admit are discrete; gains are exact in f32 for integer inputs).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.gain_select import TILE_ROWS, gain_select
+from compile.kernels.rebalance_priority import rebalance_priority
+from compile.kernels.ref import gain_select_ref, rebalance_priority_ref
+from compile import model
+
+
+def run_kernel(aff, cur, leave, internal, tau, k):
+    t, g, a = gain_select(
+        jnp.asarray(aff), jnp.asarray(cur), jnp.asarray(leave),
+        jnp.asarray(internal), jnp.float32(tau), k=k,
+    )
+    return np.asarray(t), np.asarray(g), np.asarray(a)
+
+
+def make_case(rng, k, integer=True):
+    """Random tile with integer-valued affinities (the production regime)."""
+    aff = rng.integers(0, 50, size=(TILE_ROWS, k)).astype(np.float32)
+    # knock out most entries (sparse affinities, like real gain tables)
+    mask = rng.random((TILE_ROWS, k)) < 0.7
+    aff[mask] = 0.0
+    cur = rng.integers(0, k, size=TILE_ROWS).astype(np.int32)
+    leave = rng.integers(0, 60, size=TILE_ROWS).astype(np.float32)
+    internal = rng.integers(0, 40, size=TILE_ROWS).astype(np.float32)
+    if not integer:
+        aff += rng.random((TILE_ROWS, k)).astype(np.float32) * 0.5
+    return aff, cur, leave, internal
+
+
+@pytest.mark.parametrize("k", model.SUPPORTED_KS)
+def test_gain_select_matches_ref_per_k(k):
+    rng = np.random.default_rng(k)
+    aff, cur, leave, internal = make_case(rng, k)
+    for tau in (0.0, 0.25, 0.75):
+        got = run_kernel(aff, cur, leave, internal, tau, k)
+        want = gain_select_ref(aff, cur, leave, internal, tau)
+        np.testing.assert_array_equal(got[0], want[0], err_msg=f"target k={k} tau={tau}")
+        np.testing.assert_allclose(got[1], want[1], err_msg=f"gain k={k} tau={tau}")
+        np.testing.assert_array_equal(got[2], want[2], err_msg=f"admit k={k} tau={tau}")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    k_idx=st.integers(0, len(model.SUPPORTED_KS) - 1),
+    tau=st.sampled_from([0.0, 0.1, 0.375, 0.75, 1.0]),
+)
+def test_gain_select_hypothesis_sweep(seed, k_idx, tau):
+    k = model.SUPPORTED_KS[k_idx]
+    rng = np.random.default_rng(seed)
+    aff, cur, leave, internal = make_case(rng, k)
+    got = run_kernel(aff, cur, leave, internal, tau, k)
+    want = gain_select_ref(aff, cur, leave, internal, tau)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_allclose(got[1], want[1])
+    np.testing.assert_array_equal(got[2], want[2])
+
+
+def test_all_zero_affinity_row_not_admitted():
+    k = 8
+    aff = np.zeros((TILE_ROWS, k), dtype=np.float32)
+    cur = np.zeros(TILE_ROWS, dtype=np.int32)
+    leave = np.ones(TILE_ROWS, dtype=np.float32)
+    internal = np.ones(TILE_ROWS, dtype=np.float32)
+    t, g, a = run_kernel(aff, cur, leave, internal, 1.0, k)
+    assert not a.any()
+    assert not t.any()
+    assert not g.any()
+
+
+def test_current_block_never_selected():
+    k = 4
+    rng = np.random.default_rng(7)
+    aff = rng.integers(1, 10, size=(TILE_ROWS, k)).astype(np.float32)
+    cur = rng.integers(0, k, size=TILE_ROWS).astype(np.int32)
+    leave = np.zeros(TILE_ROWS, dtype=np.float32)
+    internal = np.zeros(TILE_ROWS, dtype=np.float32)
+    t, _, a = run_kernel(aff, cur, leave, internal, 0.0, k)
+    assert (t != cur).all()
+    assert a.all()
+
+
+def test_tie_break_lowest_block_id():
+    k = 8
+    aff = np.zeros((TILE_ROWS, k), dtype=np.float32)
+    aff[:, 3] = 5.0
+    aff[:, 6] = 5.0  # equal affinity, higher id
+    cur = np.zeros(TILE_ROWS, dtype=np.int32)
+    leave = np.zeros(TILE_ROWS, dtype=np.float32)
+    internal = np.zeros(TILE_ROWS, dtype=np.float32)
+    t, _, _ = run_kernel(aff, cur, leave, internal, 0.0, k)
+    assert (t == 3).all()
+
+
+def test_temperature_admission_boundary():
+    k = 2
+    aff = np.zeros((TILE_ROWS, k), dtype=np.float32)
+    aff[:, 1] = 2.0
+    cur = np.zeros(TILE_ROWS, dtype=np.int32)
+    leave = np.full(TILE_ROWS, 5.0, dtype=np.float32)  # gain = -3
+    internal = np.full(TILE_ROWS, 4.0, dtype=np.float32)
+    # -tau * internal = -3 exactly at tau=0.75 → admitted (>=)
+    _, g, a = run_kernel(aff, cur, leave, internal, 0.75, k)
+    assert (g == -3.0).all()
+    assert a.all()
+    _, _, a2 = run_kernel(aff, cur, leave, internal, 0.5, k)  # threshold -2
+    assert not a2.any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_rebalance_priority_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    gain = rng.integers(-50, 50, size=TILE_ROWS).astype(np.float32)
+    weight = rng.integers(1, 20, size=TILE_ROWS).astype(np.float32)
+    got = np.asarray(rebalance_priority(jnp.asarray(gain), jnp.asarray(weight)))
+    want = rebalance_priority_ref(gain, weight)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_rebalance_priority_ordering_semantics():
+    # positive: multiplied; negative: divided; zero: zero.
+    gain = np.array([4.0, -4.0, 0.0] + [0.0] * (TILE_ROWS - 3), dtype=np.float32)
+    weight = np.array([2.0, 2.0, 5.0] + [1.0] * (TILE_ROWS - 3), dtype=np.float32)
+    out = np.asarray(rebalance_priority(jnp.asarray(gain), jnp.asarray(weight)))
+    assert out[0] == 8.0
+    assert out[1] == -2.0
+    assert out[2] == 0.0

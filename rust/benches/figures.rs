@@ -1,0 +1,95 @@
+//! The experiment bench harness (criterion is unavailable offline; this
+//! is a `harness = false` bench binary).
+//!
+//! ```text
+//! cargo bench                      # quick mode, all experiments
+//! cargo bench -- fig8              # one experiment
+//! cargo bench -- all --full        # the full matrix (long!)
+//! cargo bench -- micro             # micro-benchmarks of the hot paths
+//! ```
+//!
+//! Every table and figure of the paper maps to one experiment id — see
+//! DESIGN.md §3.
+
+use detpart::experiments::{figures, ExpCtx};
+
+fn micro_benchmarks() {
+    use detpart::config::JetConfig;
+    use detpart::datastructures::PartitionedHypergraph;
+    use detpart::util::Timer;
+
+    println!("== micro: hot-path timings ==");
+    let h = detpart::gen::sat_hypergraph(20_000, 60_000, 12, 7);
+    let part: Vec<u32> = (0..20_000)
+        .map(|v| (detpart::util::rng::hash64(3, v as u64) % 8) as u32)
+        .collect();
+    let p = PartitionedHypergraph::new(&h, 8, part);
+    let locked = detpart::util::Bitset::new(20_000);
+
+    let reps = 5;
+    let t = Timer::start();
+    let mut n_cands = 0;
+    for _ in 0..reps {
+        n_cands = detpart::refinement::jet::candidates::collect_candidates(
+            &p, &locked, 0.75, None,
+        )
+        .len();
+    }
+    println!(
+        "  candidates: {:.3} ms/iter ({n_cands} candidates)",
+        t.elapsed_s() * 1e3 / reps as f64
+    );
+
+    let cands =
+        detpart::refinement::jet::candidates::collect_candidates(&p, &locked, 0.75, None);
+    let t = Timer::start();
+    let mut n_kept = 0;
+    for _ in 0..reps {
+        n_kept = detpart::refinement::jet::afterburner::afterburner(&p, &cands).len();
+    }
+    println!(
+        "  afterburner: {:.3} ms/iter ({n_kept} kept of {})",
+        t.elapsed_s() * 1e3 / reps as f64,
+        cands.len()
+    );
+
+    let t = Timer::start();
+    for _ in 0..reps {
+        let p2 = PartitionedHypergraph::new(&h, 8, p.snapshot());
+        detpart::refinement::jet::refine_jet(&p2, 0.03, &JetConfig::default(), 1, None);
+    }
+    println!("  full jet refine: {:.1} ms/iter", t.elapsed_s() * 1e3 / reps as f64);
+
+    let t = Timer::start();
+    for _ in 0..reps {
+        let _ = p.km1();
+    }
+    println!("  km1 reduce: {:.3} ms/iter", t.elapsed_s() * 1e3 / reps as f64);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // cargo bench passes --bench; ignore unknown flags except --full.
+    let full = args.iter().any(|a| a == "--full");
+    let names: Vec<&String> =
+        args.iter().filter(|a| !a.starts_with("--") && !a.contains("bench")).collect();
+    let ctx = ExpCtx::new("results", !full);
+    println!(
+        "experiment harness ({} mode, {} threads)",
+        if full { "full" } else { "quick" },
+        detpart::par::num_threads()
+    );
+    if names.is_empty() {
+        figures::run_all(&ctx);
+        micro_benchmarks();
+        return;
+    }
+    for name in names {
+        if name == "micro" {
+            micro_benchmarks();
+        } else if !figures::run_by_name(&ctx, name) {
+            eprintln!("unknown experiment {name:?} — try fig1..fig12, tab1, micro, all");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! ```text
+//! detpart partition --input <file.hgr|.graph> | --instance <name>
+//!                   --k <k> [--preset detjet] [--eps 0.03] [--seed 0]
+//!                   [--threads N] [--gain-backend native|xla]
+//!                   [--output <part file>]
+//! detpart generate  --list | --instance <name> --output <file.hgr>
+//! detpart verify-determinism --instance <name> --k <k> [--preset ..]
+//! ```
+
+use crate::config::{Config, GainBackend};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Entry point used by `main`.
+pub fn run() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Parse `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("unexpected argument {a:?}");
+        };
+        if key == "list" || key == "quick" {
+            flags.insert(key.to_string(), "true".to_string());
+            i += 1;
+        } else {
+            let v = args.get(i + 1).ok_or_else(|| anyhow!("missing value for --{key}"))?;
+            flags.insert(key.to_string(), v.clone());
+            i += 2;
+        }
+    }
+    Ok(flags)
+}
+
+pub fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    if let Some(t) = flags.get("threads") {
+        crate::par::set_num_threads(t.parse().context("--threads")?);
+    }
+    match cmd.as_str() {
+        "partition" => cmd_partition(&flags),
+        "generate" => cmd_generate(&flags),
+        "verify-determinism" => cmd_verify(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `detpart help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "detpart — deterministic parallel high-quality hypergraph partitioning\n\
+         \n\
+         USAGE:\n\
+         \x20 detpart partition --input <f.hgr|f.graph> --k <k> [--preset detjet]\n\
+         \x20          [--eps 0.03] [--seed 0] [--threads N]\n\
+         \x20          [--gain-backend native|xla] [--output out.part]\n\
+         \x20 detpart partition --instance <name> --k <k> ...\n\
+         \x20 detpart generate --list\n\
+         \x20 detpart generate --instance <name> --output <f.hgr>\n\
+         \x20 detpart verify-determinism --instance <name> --k <k> [--preset ..]\n\
+         \n\
+         PRESETS: {}\n\
+         EXPERIMENTS: the per-figure harnesses are bench binaries — run\n\
+         `cargo bench` or `cargo run --release --example e2e_suite`.",
+        Config::preset_names().join(", ")
+    );
+}
+
+fn load_input(flags: &HashMap<String, String>) -> Result<crate::datastructures::Hypergraph> {
+    if let Some(name) = flags.get("instance") {
+        let inst = crate::gen::instance_by_name(name)
+            .ok_or_else(|| anyhow!("unknown instance {name:?} (try `generate --list`)"))?;
+        return Ok(inst.build());
+    }
+    let input = flags.get("input").ok_or_else(|| anyhow!("--input or --instance required"))?;
+    let path = Path::new(input);
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("hgr") => crate::io::read_hgr(path),
+        Some("graph") => crate::io::read_graph(path),
+        _ => bail!("unsupported input extension (want .hgr or .graph)"),
+    }
+}
+
+fn build_config(flags: &HashMap<String, String>) -> Result<Config> {
+    let preset = flags.get("preset").map(String::as_str).unwrap_or("detjet");
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let mut cfg =
+        Config::preset(preset, seed).ok_or_else(|| anyhow!("unknown preset {preset:?}"))?;
+    if let Some(e) = flags.get("eps") {
+        cfg.eps = e.parse().context("--eps")?;
+    }
+    if let Some(b) = flags.get("gain-backend") {
+        cfg.refinement.gain_backend = match b.as_str() {
+            "native" => GainBackend::Native,
+            "xla" => GainBackend::Xla,
+            other => bail!("unknown gain backend {other:?}"),
+        };
+    }
+    Ok(cfg)
+}
+
+fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
+    let hg = load_input(flags)?;
+    let k: usize = flags.get("k").ok_or_else(|| anyhow!("--k required"))?.parse()?;
+    let cfg = build_config(flags)?;
+    let selector_holder;
+    let selector: Option<&dyn crate::refinement::jet::candidates::TileSelector> =
+        if cfg.refinement.gain_backend == GainBackend::Xla {
+            selector_holder = crate::runtime::XlaGainSelector::load_default()?;
+            println!(
+                "gain backend: XLA/PJRT ({}) with k variants {:?}",
+                selector_holder.platform(),
+                selector_holder.loaded_ks()
+            );
+            Some(&selector_holder)
+        } else {
+            None
+        };
+    println!(
+        "partitioning: n={} m={} pins={} k={k} preset={} seed={} threads={}",
+        hg.num_vertices(),
+        hg.num_edges(),
+        hg.num_pins(),
+        cfg.name,
+        cfg.seed,
+        crate::par::num_threads()
+    );
+    let r = crate::partitioner::partition_with_selector(&hg, k, &cfg, selector);
+    println!(
+        "result: km1={} cut={} imbalance={:.4} balanced={} time={:.3}s",
+        r.km1, r.cut, r.imbalance, r.balanced, r.total_s
+    );
+    for (phase, secs) in r.timings.phases() {
+        println!("  {phase:<18} {secs:>8.3}s");
+    }
+    if let Some(out) = flags.get("output") {
+        crate::io::write_partition(&r.part, Path::new(out))?;
+        println!("partition written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
+    if flags.contains_key("list") {
+        println!("{:<16} {:<10} {:>9} {:>9} {:>10}", "name", "class", "vertices", "edges", "pins");
+        for inst in crate::gen::suite() {
+            let h = inst.build();
+            println!(
+                "{:<16} {:<10} {:>9} {:>9} {:>10}",
+                inst.name,
+                inst.class.name(),
+                h.num_vertices(),
+                h.num_edges(),
+                h.num_pins()
+            );
+        }
+        return Ok(());
+    }
+    let name = flags.get("instance").ok_or_else(|| anyhow!("--instance or --list required"))?;
+    let out = flags.get("output").ok_or_else(|| anyhow!("--output required"))?;
+    let inst = crate::gen::instance_by_name(name)
+        .ok_or_else(|| anyhow!("unknown instance {name:?}"))?;
+    let h = inst.build();
+    crate::io::write_hgr(&h, &PathBuf::from(out))?;
+    println!("wrote {} (n={} m={})", out, h.num_vertices(), h.num_edges());
+    Ok(())
+}
+
+fn cmd_verify(flags: &HashMap<String, String>) -> Result<()> {
+    let hg = load_input(flags)?;
+    let k: usize = flags.get("k").ok_or_else(|| anyhow!("--k required"))?.parse()?;
+    let cfg = build_config(flags)?;
+    println!("verifying determinism of preset {} on k={k} ...", cfg.name);
+    let mut reference: Option<(Vec<u32>, i64)> = None;
+    for nt in [1usize, 2, 4, 8] {
+        let r = crate::par::with_num_threads(nt, || crate::partitioner::partition(&hg, k, &cfg));
+        println!("  threads={nt}: km1={} imbalance={:.4}", r.km1, r.imbalance);
+        match &reference {
+            None => reference = Some((r.part, r.km1)),
+            Some((part, km1)) => {
+                if *part != r.part || *km1 != r.km1 {
+                    bail!("NON-DETERMINISTIC: threads={nt} differs from threads=1");
+                }
+            }
+        }
+    }
+    println!("deterministic OK (identical partitions across 1/2/4/8 threads)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flag_parsing() {
+        let f = parse_flags(&s(&["--k", "4", "--list", "--seed", "7"])).unwrap();
+        assert_eq!(f["k"], "4");
+        assert_eq!(f["list"], "true");
+        assert_eq!(f["seed"], "7");
+        assert!(parse_flags(&s(&["oops"])).is_err());
+        assert!(parse_flags(&s(&["--k"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        assert!(dispatch(&s(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn generate_list_runs() {
+        dispatch(&s(&["generate", "--list"])).unwrap();
+    }
+
+    #[test]
+    fn partition_instance_roundtrip() {
+        let dir = std::env::temp_dir().join("detpart_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("out.part");
+        dispatch(&s(&[
+            "partition",
+            "--instance",
+            "spm2d-64",
+            "--k",
+            "2",
+            "--preset",
+            "sdet",
+            "--output",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let part = crate::io::read_partition(&out, Some(64 * 64)).unwrap();
+        assert!(part.iter().all(|&b| b < 2));
+    }
+}

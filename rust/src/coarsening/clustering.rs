@@ -1,0 +1,420 @@
+//! Deterministic synchronous clustering (Algorithm 4 + the paper's three
+//! improvements).
+//!
+//! Vertices are processed in hash-shuffled order, split into synchronous
+//! subrounds. Each subround: (1) all singleton vertices of the subround
+//! *propose* a target cluster under the heavy-edge rating, in parallel and
+//! against frozen cluster labels; (2) accidental swap pairs
+//! (`T[u]=v ∧ T[v]=u`) are merged; (3) proposals are *approved* grouped by
+//! target cluster, admitting lightest-first within the cluster weight
+//! budget; (4) approved moves are applied at the barrier.
+//!
+//! The subround schedule is either the paper's prefix-doubling scheme
+//! (100 sequential singleton steps, then doubling sizes up to 1% of |V|)
+//! or the old fixed-r split (ablation).
+
+use crate::config::CoarseningConfig;
+use crate::datastructures::Hypergraph;
+use crate::util::rng::hash64;
+use crate::{VertexId, Weight};
+
+/// Fixed-point scale for ratings (exact integer arithmetic → no float
+/// summation-order issues).
+const SCALE: i64 = 1 << 20;
+
+/// Compute a clustering. Returns `cluster_of[v] = representative vertex id`.
+pub fn cluster_vertices(
+    hg: &Hypergraph,
+    communities: Option<&[u32]>,
+    cfg: &CoarseningConfig,
+    max_cluster_weight: Weight,
+    seed: u64,
+) -> Vec<VertexId> {
+    let n = hg.num_vertices();
+    let mut cluster_of: Vec<VertexId> = (0..n as VertexId).collect();
+    let mut cluster_weight: Vec<Weight> =
+        (0..n).map(|v| hg.vertex_weight(v as VertexId)).collect();
+
+    // Deterministic hash-shuffled visit order.
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    crate::par::par_sort_by_key(&mut order, |&v| (hash64(seed, v as u64), v));
+
+    for batch in subround_batches(n, cfg) {
+        let batch = &order[batch];
+        process_subround(
+            hg,
+            communities,
+            cfg,
+            max_cluster_weight,
+            seed,
+            batch,
+            &mut cluster_of,
+            &mut cluster_weight,
+        );
+    }
+    cluster_of
+}
+
+/// Subround index ranges over the shuffled order.
+fn subround_batches(n: usize, cfg: &CoarseningConfig) -> Vec<std::ops::Range<usize>> {
+    let mut out = Vec::new();
+    if n == 0 {
+        return out;
+    }
+    if cfg.prefix_doubling {
+        let cap = ((n as f64 * cfg.subround_cap_frac).ceil() as usize).max(1);
+        let mut pos = 0usize;
+        let mut done_seq = 0usize;
+        let mut size = 1usize;
+        while pos < n {
+            let sz = if done_seq < cfg.initial_sequential_subrounds {
+                done_seq += 1;
+                1
+            } else {
+                size = (size * 2).min(cap);
+                size
+            };
+            let end = (pos + sz).min(n);
+            out.push(pos..end);
+            pos = end;
+        }
+    } else {
+        let r = cfg.fallback_subrounds.max(1);
+        out = crate::par::pool::chunk_ranges(n, r);
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn process_subround(
+    hg: &Hypergraph,
+    communities: Option<&[u32]>,
+    cfg: &CoarseningConfig,
+    max_cluster_weight: Weight,
+    seed: u64,
+    batch: &[VertexId],
+    cluster_of: &mut [VertexId],
+    cluster_weight: &mut [Weight],
+) {
+    // --- Phase 1: parallel proposals against frozen labels (per-thread
+    // rating scratch; a per-vertex HashMap was the top allocation cost in
+    // profiles — see EXPERIMENTS.md §Perf). ---
+    let cluster_of_frozen: &[VertexId] = cluster_of;
+    let cluster_weight_frozen: &[Weight] = cluster_weight;
+    let mut proposals: Vec<VertexId> = vec![0; batch.len()];
+    {
+        let nt = crate::par::num_threads().max(1);
+        let ranges = crate::par::pool::chunk_ranges(batch.len(), nt);
+        let mut slices: Vec<&mut [VertexId]> = Vec::new();
+        let mut rest = proposals.as_mut_slice();
+        for r in &ranges {
+            let (head, tail) = rest.split_at_mut(r.len());
+            slices.push(head);
+            rest = tail;
+        }
+        std::thread::scope(|s| {
+            for (slice, range) in slices.into_iter().zip(ranges) {
+                s.spawn(move || {
+                    let mut scratch = RatingScratch::default();
+                    for (out, i) in slice.iter_mut().zip(range) {
+                        let u = batch[i];
+                        *out = if cluster_of_frozen[u as usize] != u
+                            || cluster_weight_frozen[u as usize] != hg.vertex_weight(u)
+                        {
+                            u // not a singleton — stays
+                        } else {
+                            best_rated_cluster(
+                                hg,
+                                communities,
+                                cfg,
+                                max_cluster_weight,
+                                seed,
+                                u,
+                                cluster_of_frozen,
+                                cluster_weight_frozen,
+                                &mut scratch,
+                            )
+                        };
+                    }
+                });
+            }
+        });
+    }
+
+    // --- Phase 2: swap prevention (paper improvement #2). ---
+    if cfg.prevent_swaps {
+        // position of each vertex within the batch
+        let mut pos_of: std::collections::HashMap<VertexId, usize> =
+            std::collections::HashMap::with_capacity(batch.len());
+        for (i, &u) in batch.iter().enumerate() {
+            pos_of.insert(u, i);
+        }
+        for i in 0..batch.len() {
+            let u = batch[i];
+            let v = proposals[i];
+            if v == u {
+                continue;
+            }
+            if let Some(&j) = pos_of.get(&v) {
+                if proposals[j] == u && u < v {
+                    // Merge the pair: the heavier current cluster hosts.
+                    let (wu, wv) = (cluster_weight[u as usize], cluster_weight[v as usize]);
+                    if wu >= wv {
+                        proposals[i] = u; // u stays; v (proposal j) joins u
+                    } else {
+                        proposals[j] = v; // v stays; u (proposal i) joins v
+                    }
+                }
+            }
+        }
+    }
+
+    // --- Phase 2b: break chains. If u proposes to join v while v itself
+    // proposes a move (u→v→w), approving both would nest clusters. We
+    // deterministically cancel every move whose *target* is itself moving
+    // this subround; the canceled vertex can re-propose in a later
+    // subround against the updated labels.
+    {
+        let moving: std::collections::HashSet<VertexId> = batch
+            .iter()
+            .zip(proposals.iter())
+            .filter(|&(&u, &t)| t != u)
+            .map(|(&u, _)| u)
+            .collect();
+        for (i, &u) in batch.iter().enumerate() {
+            let t = proposals[i];
+            if t != u && moving.contains(&t) {
+                proposals[i] = u;
+            }
+        }
+    }
+
+    // --- Phase 3: grouped approval, lightest-first (deterministic). ---
+    // moves sorted by (target, weight, id) → per-target prefix admission.
+    let mut moves: Vec<(VertexId, Weight, VertexId)> = Vec::new();
+    for (i, &u) in batch.iter().enumerate() {
+        let t = proposals[i];
+        if t != u {
+            moves.push((t, hg.vertex_weight(u), u));
+        }
+    }
+    crate::par::par_sort_by_key(&mut moves, |&(t, w, u)| (t, w, u));
+    let mut idx = 0;
+    while idx < moves.len() {
+        let target = moves[idx].0;
+        let mut budget = max_cluster_weight - cluster_weight[target as usize];
+        let mut j = idx;
+        while j < moves.len() && moves[j].0 == target {
+            let (_, w, u) = moves[j];
+            if w <= budget {
+                budget -= w;
+                cluster_of[u as usize] = target;
+                cluster_weight[target as usize] += w;
+                cluster_weight[u as usize] = 0;
+            }
+            j += 1;
+        }
+        idx = j;
+    }
+}
+
+/// Reusable per-thread rating scratch: a small association list beats a
+/// freshly allocated HashMap for the (low-degree) common case.
+#[derive(Default)]
+struct RatingScratch {
+    ratings: Vec<(VertexId, i64)>,
+    seen_this_edge: Vec<VertexId>,
+}
+
+impl RatingScratch {
+    #[inline]
+    fn add(&mut self, c: VertexId, w: i64) {
+        for entry in &mut self.ratings {
+            if entry.0 == c {
+                entry.1 += w;
+                return;
+            }
+        }
+        self.ratings.push((c, w));
+    }
+}
+
+/// Heavy-edge rating over neighbor clusters; returns the chosen cluster
+/// rep (or `u` itself if none qualifies).
+#[allow(clippy::too_many_arguments)]
+fn best_rated_cluster(
+    hg: &Hypergraph,
+    communities: Option<&[u32]>,
+    cfg: &CoarseningConfig,
+    max_cluster_weight: Weight,
+    seed: u64,
+    u: VertexId,
+    cluster_of: &[VertexId],
+    cluster_weight: &[Weight],
+    scratch: &mut RatingScratch,
+) -> VertexId {
+    let cu = hg.vertex_weight(u);
+    scratch.ratings.clear();
+    for &e in hg.incident_edges(u) {
+        let sz = hg.edge_size(e);
+        if !(2..=cfg.max_rating_edge_size).contains(&sz) {
+            continue;
+        }
+        let w = hg.edge_weight(e) * SCALE / (sz as Weight - 1);
+        scratch.seen_this_edge.clear();
+        for &p in hg.pins(e) {
+            if p == u {
+                continue;
+            }
+            let c = cluster_of[p as usize];
+            if cfg.fix_rating_bug {
+                // Fixed rating: ω(e)/(|e|−1) once per (edge, cluster).
+                if scratch.seen_this_edge.contains(&c) {
+                    continue;
+                }
+                scratch.seen_this_edge.push(c);
+            }
+            // (buggy variant falls through: adds once per pin)
+            scratch.add(c, w);
+        }
+    }
+    let mut best: Option<(i64, u64, VertexId)> = None;
+    for &(c, r) in &scratch.ratings {
+        if c == u {
+            continue;
+        }
+        if cluster_weight[c as usize] + cu > max_cluster_weight {
+            continue;
+        }
+        if let Some(comm) = communities {
+            if comm[c as usize] != comm[u as usize] {
+                continue;
+            }
+        }
+        let tie = hash64(seed ^ 0xA5A5, c as u64);
+        let cand = (r, tie, c);
+        if best.map_or(true, |b| cand > b) {
+            best = Some(cand);
+        }
+    }
+    best.map(|(_, _, c)| c).unwrap_or(u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    fn weights_consistent(hg: &Hypergraph, cluster_of: &[VertexId]) {
+        let mut by_rep: std::collections::HashMap<VertexId, Weight> =
+            std::collections::HashMap::new();
+        for v in 0..hg.num_vertices() {
+            *by_rep.entry(cluster_of[v]).or_insert(0) += hg.vertex_weight(v as VertexId);
+        }
+        let total: Weight = by_rep.values().sum();
+        assert_eq!(total, hg.total_vertex_weight());
+    }
+
+    #[test]
+    fn clusters_are_rooted() {
+        // cluster_of[rep] == rep for every used rep (one-level forest).
+        let h = gen::sat_hypergraph(400, 1200, 6, 2);
+        let cfg = CoarseningConfig::default();
+        let c = cluster_vertices(&h, None, &cfg, 50, 3);
+        for v in 0..h.num_vertices() {
+            let rep = c[v];
+            assert_eq!(c[rep as usize], rep, "rep {rep} of {v} not a root");
+        }
+        weights_consistent(&h, &c);
+    }
+
+    #[test]
+    fn shrinks_meaningfully() {
+        let h = gen::grid::grid2d_graph(30, 30);
+        let cfg = CoarseningConfig::default();
+        let c = cluster_vertices(&h, None, &cfg, 100, 1);
+        let reps: std::collections::HashSet<_> = c.iter().copied().collect();
+        assert!(reps.len() < 700, "only shrank to {}", reps.len());
+    }
+
+    #[test]
+    fn respects_max_cluster_weight() {
+        let h = gen::vlsi_netlist(20, 1.2, 4);
+        let cfg = CoarseningConfig::default();
+        let cap = 10;
+        let c = cluster_vertices(&h, None, &cfg, cap, 5);
+        let mut by_rep: std::collections::HashMap<VertexId, Weight> =
+            std::collections::HashMap::new();
+        for v in 0..h.num_vertices() {
+            *by_rep.entry(c[v]).or_insert(0) += h.vertex_weight(v as VertexId);
+        }
+        // Singletons heavier than the cap are allowed (macro cells); merged
+        // clusters must obey it.
+        for (&rep, &w) in &by_rep {
+            let members = c.iter().filter(|&&r| r == rep).count();
+            if members > 1 {
+                assert!(w <= cap, "cluster {rep} weight {w} > {cap}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_doubling_schedule_shape() {
+        let cfg = CoarseningConfig::default();
+        let batches = subround_batches(100_000, &cfg);
+        // 100 singleton batches first.
+        for b in &batches[..100] {
+            assert_eq!(b.len(), 1);
+        }
+        // Then doubling, capped at 1%.
+        assert_eq!(batches[100].len(), 2);
+        assert_eq!(batches[101].len(), 4);
+        let cap = 1000;
+        assert!(batches.iter().all(|b| b.len() <= cap));
+        let covered: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(covered, 100_000);
+    }
+
+    #[test]
+    fn fallback_schedule_is_r_batches() {
+        let cfg = CoarseningConfig { prefix_doubling: false, ..Default::default() };
+        let batches = subround_batches(1000, &cfg);
+        assert_eq!(batches.len(), 3);
+    }
+
+    #[test]
+    fn swap_prevention_removes_mutual_pairs() {
+        // Two vertices strongly tied: without swap prevention they can end
+        // up in the same subround proposing each other.
+        let h = Hypergraph::new(2, &[vec![0, 1]], None, Some(vec![100]));
+        let mut cfg = CoarseningConfig { prevent_swaps: true, ..Default::default() };
+        cfg.prefix_doubling = false;
+        cfg.fallback_subrounds = 1; // both in one subround
+        let c = cluster_vertices(&h, None, &cfg, 100, 7);
+        assert_eq!(c[0], c[1], "pair should merge, got {c:?}");
+    }
+
+    #[test]
+    fn buggy_vs_fixed_rating_differ() {
+        // Vertex 0 chooses between cluster A = {1,2} (reached via one
+        // 3-pin edge, two pins inside A) and cluster B = {3} (via a 2-pin
+        // edge). Per-(edge,cluster) contributions: edge0 = {0,1,2}, w=3,
+        // |e|−1=2 → A gets 1.5·S counted once (fixed) or twice → 3·S
+        // (buggy). edge1 = {0,3}, w=2 → B gets 2·S either way.
+        // Hence fixed → B, buggy → A.
+        let edges = vec![vec![0u32, 1, 2], vec![0, 3], vec![1, 2]];
+        let h = Hypergraph::new(4, &edges, None, Some(vec![3, 2, 100]));
+        // Pre-cluster 1 and 2 together by running... instead call the
+        // rating directly with a prepared cluster_of.
+        let cluster_of = vec![0, 1, 1, 3]; // 1 and 2 share cluster rep 1
+        let cw = vec![1, 2, 0, 1];
+        let fixed = CoarseningConfig { fix_rating_bug: true, ..Default::default() };
+        let buggy = CoarseningConfig { fix_rating_bug: false, ..Default::default() };
+        let t_fixed =
+            best_rated_cluster(&h, None, &fixed, 100, 1, 0, &cluster_of, &cw, &mut RatingScratch::default());
+        let t_buggy =
+            best_rated_cluster(&h, None, &buggy, 100, 1, 0, &cluster_of, &cw, &mut RatingScratch::default());
+        assert_eq!(t_fixed, 3, "fixed rating should pick the 2-pin edge side");
+        assert_eq!(t_buggy, 1, "buggy rating double-counts the big edge");
+    }
+}

@@ -1,0 +1,169 @@
+//! Cluster contraction: build the coarse hypergraph from a clustering.
+//!
+//! Coarse vertices are the cluster representatives, renumbered densely in
+//! increasing rep-id order (deterministic). Each hyperedge maps its pins
+//! to coarse ids, deduplicates, drops size-1 edges, and **identical nets
+//! are merged** with summed weights (the standard multilevel optimization:
+//! contraction creates many parallel nets).
+
+use crate::datastructures::{Hypergraph, HypergraphBuilder};
+use crate::{VertexId, Weight};
+use std::collections::HashMap;
+
+/// Contract `hg` under `cluster_of` (rep-rooted: `cluster_of[rep] = rep`).
+/// Returns the coarse hypergraph and the fine→coarse vertex map.
+pub fn contract(hg: &Hypergraph, cluster_of: &[VertexId]) -> (Hypergraph, Vec<VertexId>) {
+    let n = hg.num_vertices();
+    assert_eq!(cluster_of.len(), n);
+    // Dense renumbering of reps in increasing id order.
+    let mut is_rep = vec![false; n];
+    for v in 0..n {
+        let r = cluster_of[v] as usize;
+        debug_assert_eq!(cluster_of[r], cluster_of[v], "cluster forest not rooted");
+        is_rep[r] = true;
+    }
+    let mut coarse_id = vec![VertexId::MAX; n];
+    let mut next = 0 as VertexId;
+    for v in 0..n {
+        if is_rep[v] {
+            coarse_id[v] = next;
+            next += 1;
+        }
+    }
+    let num_coarse = next as usize;
+    let map: Vec<VertexId> =
+        (0..n).map(|v| coarse_id[cluster_of[v] as usize]).collect();
+
+    // Coarse vertex weights.
+    let mut weights = vec![0 as Weight; num_coarse];
+    for v in 0..n {
+        weights[map[v] as usize] += hg.vertex_weight(v as VertexId);
+    }
+
+    // Coarse edges: map pins, dedup, drop singles, merge identical nets.
+    // Parallel per-chunk collection, deterministic merge via sorted keys.
+    let coarse_edges: Vec<(Vec<VertexId>, Weight)> = {
+        let partial: Vec<HashMap<Vec<VertexId>, Weight>> = {
+            let nchunks = crate::par::num_threads().max(1);
+            let ranges = crate::par::pool::chunk_ranges(hg.num_edges(), nchunks);
+            let mut maps: Vec<HashMap<Vec<VertexId>, Weight>> = Vec::new();
+            for _ in 0..ranges.len() {
+                maps.push(HashMap::new());
+            }
+            {
+                let slots: Vec<_> = maps.iter_mut().zip(ranges).collect();
+                std::thread::scope(|s| {
+                    for (slot, range) in slots {
+                        let map_ref = &map;
+                        s.spawn(move || {
+                            let mut pins: Vec<VertexId> = Vec::new();
+                            for e in range {
+                                pins.clear();
+                                pins.extend(
+                                    hg.pins(e as crate::EdgeId)
+                                        .iter()
+                                        .map(|&p| map_ref[p as usize]),
+                                );
+                                pins.sort_unstable();
+                                pins.dedup();
+                                if pins.len() >= 2 {
+                                    *slot.entry(pins.clone()).or_insert(0) +=
+                                        hg.edge_weight(e as crate::EdgeId);
+                                }
+                            }
+                        });
+                    }
+                });
+            }
+            maps
+        };
+        // Merge chunk maps (chunk order irrelevant: addition commutes) and
+        // sort keys for deterministic edge ids.
+        let mut merged: HashMap<Vec<VertexId>, Weight> = HashMap::new();
+        for m in partial {
+            for (k, w) in m {
+                *merged.entry(k).or_insert(0) += w;
+            }
+        }
+        let mut edges: Vec<(Vec<VertexId>, Weight)> = merged.into_iter().collect();
+        edges.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        edges
+    };
+
+    let mut builder = HypergraphBuilder::new(num_coarse);
+    builder.set_vertex_weights(weights);
+    for (pins, w) in &coarse_edges {
+        builder.add_edge(pins, *w);
+    }
+    (builder.build(), map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contracts_pairs() {
+        // 4 vertices, clusters {0,1} and {2,3}; edges {0,1} internal,
+        // {1,2} crossing, {0,3} crossing (parallel after contraction).
+        let h = Hypergraph::new(
+            4,
+            &[vec![0, 1], vec![1, 2], vec![0, 3]],
+            Some(vec![1, 2, 3, 4]),
+            Some(vec![5, 7, 9]),
+        );
+        let cluster_of = vec![0, 0, 2, 2];
+        let (c, map) = contract(&h, &cluster_of);
+        assert_eq!(c.num_vertices(), 2);
+        assert_eq!(map, vec![0, 0, 1, 1]);
+        assert_eq!(c.vertex_weight(0), 3);
+        assert_eq!(c.vertex_weight(1), 7);
+        // Internal edge dropped; two crossing edges merged: weight 16.
+        assert_eq!(c.num_edges(), 1);
+        assert_eq!(c.edge_weight(0), 16);
+        assert_eq!(c.pins(0), &[0, 1]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn identity_clustering_drops_nothing_but_merges_parallels() {
+        let h = Hypergraph::new(3, &[vec![0, 1], vec![0, 1], vec![1, 2]], None, None);
+        let cluster_of = vec![0, 1, 2];
+        let (c, map) = contract(&h, &cluster_of);
+        assert_eq!(c.num_vertices(), 3);
+        assert_eq!(map, vec![0, 1, 2]);
+        assert_eq!(c.num_edges(), 2); // parallel {0,1} merged
+        let w01 = (0..2).find(|&e| c.pins(e as u32) == [0, 1]).unwrap();
+        assert_eq!(c.edge_weight(w01 as u32), 2);
+    }
+
+    #[test]
+    fn deterministic_across_threads() {
+        let h = crate::gen::sat_hypergraph(300, 1000, 8, 1);
+        let cfg = crate::config::CoarseningConfig::default();
+        let clusters = super::super::cluster_vertices(&h, None, &cfg, 20, 5);
+        let mut outs = Vec::new();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let (c, map) = contract(&h, &clusters);
+                let edges: Vec<(Vec<u32>, i64)> = (0..c.num_edges())
+                    .map(|e| (c.pins(e as u32).to_vec(), c.edge_weight(e as u32)))
+                    .collect();
+                outs.push((map, edges));
+            });
+        }
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn preserves_total_weight_and_pin_bounds() {
+        let h = crate::gen::vlsi_netlist(16, 1.2, 9);
+        let cfg = crate::config::CoarseningConfig::default();
+        let clusters = super::super::cluster_vertices(&h, None, &cfg, 30, 2);
+        let (c, map) = contract(&h, &clusters);
+        assert_eq!(c.total_vertex_weight(), h.total_vertex_weight());
+        assert!(c.num_pins() <= h.num_pins());
+        assert!(map.iter().all(|&m| (m as usize) < c.num_vertices()));
+        c.validate().unwrap();
+    }
+}

@@ -1,0 +1,183 @@
+//! Multilevel coarsening phase (Section 6 of the paper).
+//!
+//! Repeats two alternating steps — deterministic synchronous clustering
+//! with the heavy-edge rating ([`clustering`]) and cluster contraction
+//! ([`contraction`]) — until the hypergraph has at most
+//! `contraction_limit_per_k · k` vertices or stops shrinking.
+
+pub mod clustering;
+pub mod contraction;
+
+use crate::config::CoarseningConfig;
+use crate::datastructures::Hypergraph;
+use crate::{BlockId, VertexId};
+
+pub use clustering::cluster_vertices;
+pub use contraction::contract;
+
+/// One coarsening level: the coarse hypergraph plus the fine→coarse map.
+pub struct Level {
+    pub coarse: Hypergraph,
+    /// `map[fine_vertex] = coarse_vertex`.
+    pub map: Vec<VertexId>,
+}
+
+/// The full coarsening hierarchy. `levels[0]` is built from the input
+/// hypergraph; `levels.last()` holds the coarsest hypergraph.
+pub struct Hierarchy {
+    pub levels: Vec<Level>,
+}
+
+impl Hierarchy {
+    /// The coarsest hypergraph (the input itself if no level was built).
+    pub fn coarsest<'a>(&'a self, input: &'a Hypergraph) -> &'a Hypergraph {
+        self.levels.last().map(|l| &l.coarse).unwrap_or(input)
+    }
+
+    /// Project a partition of the coarsest hypergraph back to the input.
+    pub fn project_to_input(&self, coarsest_part: &[BlockId]) -> Vec<BlockId> {
+        let mut part = coarsest_part.to_vec();
+        for level in self.levels.iter().rev() {
+            part = level.map.iter().map(|&cv| part[cv as usize]).collect();
+        }
+        part
+    }
+}
+
+/// Run the coarsening phase. `communities` (optional) restricts clustering
+/// to within-community merges; it is projected through each level.
+pub fn coarsen(
+    input: &Hypergraph,
+    communities: Option<&[u32]>,
+    cfg: &CoarseningConfig,
+    k: usize,
+    seed: u64,
+) -> Hierarchy {
+    let contraction_limit = (cfg.contraction_limit_per_k * k).max(4 * k);
+    let max_cluster_weight = ((cfg.max_cluster_weight_factor
+        * input.total_vertex_weight() as f64
+        / contraction_limit as f64)
+        .ceil() as crate::Weight)
+        .max(1);
+
+    let mut levels: Vec<Level> = Vec::new();
+    let mut communities: Option<Vec<u32>> = communities.map(|c| c.to_vec());
+    let mut pass = 0u64;
+    loop {
+        let current = levels.last().map(|l| &l.coarse).unwrap_or(input);
+        let n = current.num_vertices();
+        if n <= contraction_limit {
+            break;
+        }
+        let clusters = cluster_vertices(
+            current,
+            communities.as_deref(),
+            cfg,
+            max_cluster_weight,
+            seed ^ (pass.wrapping_mul(0x9E3779B97F4A7C15)),
+        );
+        let (coarse, map) = contract(current, &clusters);
+        let shrunk = coarse.num_vertices();
+        if shrunk as f64 > cfg.min_shrink_factor * n as f64 {
+            break; // converged — contraction no longer effective
+        }
+        // Project communities to the coarse hypergraph.
+        if let Some(c) = &communities {
+            let mut coarse_c = vec![0u32; shrunk];
+            for v in 0..n {
+                coarse_c[map[v] as usize] = c[v];
+            }
+            communities = Some(coarse_c);
+        }
+        levels.push(Level { coarse, map });
+        pass += 1;
+        if pass > 200 {
+            break; // safety
+        }
+    }
+    Hierarchy { levels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn coarsens_below_limit_and_preserves_weight() {
+        let h = gen::spm_hypergraph_2d(40, 40);
+        let cfg = CoarseningConfig::default();
+        let hier = coarsen(&h, None, &cfg, 2, 7);
+        assert!(!hier.levels.is_empty());
+        let coarsest = hier.coarsest(&h);
+        assert!(coarsest.num_vertices() < h.num_vertices());
+        assert_eq!(coarsest.total_vertex_weight(), h.total_vertex_weight());
+        coarsest.validate().unwrap();
+        for l in &hier.levels {
+            l.coarse.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn projection_roundtrip() {
+        let h = gen::sat_hypergraph(600, 1800, 6, 3);
+        let cfg = CoarseningConfig::default();
+        let hier = coarsen(&h, None, &cfg, 4, 1);
+        let nc = hier.coarsest(&h).num_vertices();
+        // Assign blocks round-robin on the coarsest level and project.
+        let coarse_part: Vec<u32> = (0..nc as u32).map(|v| v % 4).collect();
+        let part = hier.project_to_input(&coarse_part);
+        assert_eq!(part.len(), h.num_vertices());
+        // Every fine vertex inherits its coarse rep's block.
+        let mut cur: Vec<u32> = part.clone();
+        for level in &hier.levels {
+            let next: Vec<u32> = (0..level.coarse.num_vertices() as u32)
+                .map(|cv| {
+                    // all fine members agree
+                    let members: Vec<_> =
+                        (0..level.map.len()).filter(|&f| level.map[f] == cv).collect();
+                    let b = cur[members[0]];
+                    assert!(members.iter().all(|&m| cur[m] == b));
+                    b
+                })
+                .collect();
+            cur = next;
+        }
+        assert_eq!(cur, coarse_part);
+    }
+
+    #[test]
+    fn deterministic_across_threads() {
+        let h = gen::vlsi_netlist(30, 1.1, 5);
+        let cfg = CoarseningConfig::default();
+        let mut snapshots = Vec::new();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let hier = coarsen(&h, None, &cfg, 2, 9);
+                let sizes: Vec<usize> =
+                    hier.levels.iter().map(|l| l.coarse.num_vertices()).collect();
+                let maps: Vec<Vec<u32>> = hier.levels.iter().map(|l| l.map.clone()).collect();
+                snapshots.push((sizes, maps));
+            });
+        }
+        assert!(snapshots.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn respects_communities() {
+        // Two halves of a grid as forced communities: no cluster spans.
+        let h = gen::grid::grid2d_graph(16, 16);
+        let comm: Vec<u32> = (0..256).map(|v| if v % 16 < 8 { 0 } else { 1 }).collect();
+        let cfg = CoarseningConfig::default();
+        let hier = coarsen(&h, Some(&comm), &cfg, 2, 11);
+        if let Some(l0) = hier.levels.first() {
+            for v in 0..256usize {
+                for u in 0..256usize {
+                    if l0.map[v] == l0.map[u] {
+                        assert_eq!(comm[v], comm[u], "cluster spans communities");
+                    }
+                }
+            }
+        }
+    }
+}

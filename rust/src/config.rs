@@ -1,0 +1,388 @@
+//! Configuration system: every parameter the paper discusses is a field,
+//! and each evaluated configuration is a named preset —
+//! `detjet`, `detflows`, `sdet` (Mt-KaHyPar-SDet-like), `bipart`
+//! (BiPart-like), and the simulated non-deterministic modes
+//! `nondet-jet` / `nondet-flows`.
+
+/// Which refinement algorithm drives uncoarsening.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefinementAlgo {
+    /// Synchronous deterministic label propagation (SDet / BiPart class).
+    LabelPropagation,
+    /// Deterministic Jet (Section 4).
+    Jet,
+    /// No refinement (ablation).
+    None,
+}
+
+/// How Jet's candidate selection evaluates the dense move-selection
+/// arithmetic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GainBackend {
+    /// Pure-Rust path (default; fastest on CPU).
+    Native,
+    /// AOT-compiled XLA executable (authored as a Pallas kernel) — the
+    /// L1/L2 layers of the stack. Bit-identical to `Native` (tested).
+    Xla,
+}
+
+/// Preprocessing options.
+#[derive(Clone, Debug)]
+pub struct PreprocessingConfig {
+    /// Community detection restricting coarsening (Heuer & Schlag style).
+    pub use_communities: bool,
+    /// Rounds of synchronous community label propagation.
+    pub community_rounds: usize,
+    /// Maximum community size as a fraction of |V|.
+    pub max_community_frac: f64,
+}
+
+impl Default for PreprocessingConfig {
+    fn default() -> Self {
+        PreprocessingConfig {
+            use_communities: true,
+            community_rounds: 16,
+            max_community_frac: 0.25,
+        }
+    }
+}
+
+/// Deterministic coarsening options (Section 6).
+#[derive(Clone, Debug)]
+pub struct CoarseningConfig {
+    /// Stop coarsening at `contraction_limit_per_k · k` vertices.
+    pub contraction_limit_per_k: usize,
+    /// Max cluster weight = `factor · c(V) / contraction limit`.
+    pub max_cluster_weight_factor: f64,
+    /// Prefix-doubling subround schedule (paper improvement #3). When
+    /// false, uses `fallback_subrounds` equal-size subrounds (the old
+    /// deterministic coarsening of Mt-KaHyPar-SDet).
+    pub prefix_doubling: bool,
+    /// Sequential warm-up subrounds of size 1 under prefix doubling.
+    pub initial_sequential_subrounds: usize,
+    /// Subround size cap as a fraction of |V| under prefix doubling.
+    pub subround_cap_frac: f64,
+    /// Number of subrounds when prefix doubling is off (paper: r = 3).
+    pub fallback_subrounds: usize,
+    /// Detect & merge `T[u]=v ∧ T[v]=u` pairs (paper improvement #2).
+    pub prevent_swaps: bool,
+    /// Count each hyperedge once per target cluster in the rating
+    /// (paper improvement #1 — the bugfix). `false` reproduces the old
+    /// buggy behaviour for the ablation (Fig. 11).
+    pub fix_rating_bug: bool,
+    /// Ignore hyperedges larger than this in the rating function.
+    pub max_rating_edge_size: usize,
+    /// Abort coarsening when a pass shrinks |V| by less than this factor.
+    pub min_shrink_factor: f64,
+}
+
+impl Default for CoarseningConfig {
+    fn default() -> Self {
+        CoarseningConfig {
+            contraction_limit_per_k: 160,
+            max_cluster_weight_factor: 1.5,
+            prefix_doubling: true,
+            initial_sequential_subrounds: 100,
+            subround_cap_frac: 0.01,
+            fallback_subrounds: 3,
+            prevent_swaps: true,
+            fix_rating_bug: true,
+            max_rating_edge_size: 1000,
+            min_shrink_factor: 0.99,
+        }
+    }
+}
+
+/// Initial partitioning (portfolio × recursive bipartitioning).
+#[derive(Clone, Debug)]
+pub struct InitialConfig {
+    /// Bipartition attempts per recursion node (portfolio size).
+    pub attempts: usize,
+    /// 2-way LP polish rounds per attempt.
+    pub lp_rounds: usize,
+}
+
+impl Default for InitialConfig {
+    fn default() -> Self {
+        InitialConfig { attempts: 12, lp_rounds: 3 }
+    }
+}
+
+/// Synchronous label propagation refinement.
+#[derive(Clone, Debug)]
+pub struct LpConfig {
+    pub max_rounds: usize,
+    /// Hash-based subrounds per round: moves apply at subround barriers,
+    /// breaking the symmetric oscillations of fully synchronous LP
+    /// (Mt-KaHyPar-SDet uses the same device).
+    pub subrounds: usize,
+}
+
+impl Default for LpConfig {
+    fn default() -> Self {
+        LpConfig { max_rounds: 8, subrounds: 5 }
+    }
+}
+
+/// Deterministic Jet refinement (Section 4).
+#[derive(Clone, Debug)]
+pub struct JetConfig {
+    /// Temperature schedule: one full Jet run per τ, decreasing
+    /// (Section 7.3 — final configuration uses three: 0.75, 0.375, 0).
+    pub temperatures: Vec<f64>,
+    /// Override schedule for the finest level (Fig. 4's τ_c/τ_f split:
+    /// `temperatures` is used on coarse levels, this on the input level).
+    pub temperatures_fine: Option<Vec<f64>>,
+    /// Stop a Jet run after this many iterations without improvement
+    /// (paper final configuration: 8).
+    pub max_iterations_without_improvement: usize,
+    /// Hard cap on iterations per temperature (safety).
+    pub max_iterations: usize,
+    /// Rebalancer deadzone parameter d (paper: 0.1).
+    pub deadzone: f64,
+    /// Run the afterburner filter (disabling degrades to unconstrained LP;
+    /// ablation knob).
+    pub use_afterburner: bool,
+    /// Weight-aware rebalancer priorities (`gain/c(v)` resp. `gain·c(v)`,
+    /// the paper's improvement over Jet's plain-gain priorities).
+    /// Disabling falls back to plain gain — ablation knob.
+    pub weight_aware_rebalance: bool,
+    /// Simulated non-deterministic mode: moves are applied immediately in
+    /// a seed-shuffled order instead of synchronously (exercises the same
+    /// gain machinery but exhibits run-to-run variance).
+    pub asynchronous: bool,
+}
+
+impl Default for JetConfig {
+    fn default() -> Self {
+        JetConfig {
+            temperatures: vec![0.75, 0.375, 0.0],
+            temperatures_fine: None,
+            max_iterations_without_improvement: 8,
+            max_iterations: 300,
+            deadzone: 0.1,
+            use_afterburner: true,
+            weight_aware_rebalance: true,
+            asynchronous: false,
+        }
+    }
+}
+
+/// Deterministic flow-based refinement (Section 5).
+#[derive(Clone, Debug)]
+pub struct FlowConfig {
+    /// Scaling parameter α for the region-growing weight budget.
+    pub alpha: f64,
+    /// Seed for the (intentionally non-deterministic-order) max-flow's
+    /// augmenting path exploration. Determinism of results must hold for
+    /// *any* value — tests vary it.
+    pub flow_seed: u64,
+    /// Run the termination check before piercing (the paper's bug fix).
+    /// `false` reproduces the subtle non-determinism for demonstration.
+    pub term_check_before_piercing: bool,
+    /// Maximum k-way scheduling rounds without improvement.
+    pub max_rounds_without_improvement: usize,
+    /// Hard cap on scheduling rounds.
+    pub max_rounds: usize,
+    /// Skip flow refinement on hypergraphs larger than this many pins
+    /// (time-limit stand-in).
+    pub max_pins: usize,
+}
+
+impl Default for FlowConfig {
+    fn default() -> Self {
+        FlowConfig {
+            alpha: 16.0,
+            flow_seed: 0,
+            term_check_before_piercing: true,
+            max_rounds_without_improvement: 2,
+            max_rounds: 16,
+            max_pins: 50_000_000,
+        }
+    }
+}
+
+/// Refinement stack.
+#[derive(Clone, Debug)]
+pub struct RefinementConfig {
+    pub algo: RefinementAlgo,
+    pub lp: LpConfig,
+    pub jet: JetConfig,
+    /// `Some` enables flow-based refinement after Jet/LP on each level.
+    pub flows: Option<FlowConfig>,
+    pub gain_backend: GainBackend,
+}
+
+impl Default for RefinementConfig {
+    fn default() -> Self {
+        RefinementConfig {
+            algo: RefinementAlgo::Jet,
+            lp: LpConfig::default(),
+            jet: JetConfig::default(),
+            flows: None,
+            gain_backend: GainBackend::Native,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub eps: f64,
+    pub seed: u64,
+    pub preprocessing: PreprocessingConfig,
+    pub coarsening: CoarseningConfig,
+    pub initial: InitialConfig,
+    pub refinement: RefinementConfig,
+    /// Use recursive bipartitioning all the way down (BiPart style)
+    /// instead of direct k-way multilevel.
+    pub recursive_bipartitioning: bool,
+    /// Preset name (for reports).
+    pub name: &'static str,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            eps: 0.03,
+            seed: 0,
+            preprocessing: PreprocessingConfig::default(),
+            coarsening: CoarseningConfig::default(),
+            initial: InitialConfig::default(),
+            refinement: RefinementConfig::default(),
+            recursive_bipartitioning: false,
+            name: "detjet",
+        }
+    }
+}
+
+impl Config {
+    /// **DetJet** — the paper's main configuration: improved deterministic
+    /// coarsening + deterministic Jet with three temperatures.
+    pub fn detjet(seed: u64) -> Self {
+        Config { seed, ..Default::default() }
+    }
+
+    /// **DetFlows** — DetJet plus deterministic flow-based refinement.
+    pub fn detflows(seed: u64) -> Self {
+        let mut c = Config::detjet(seed);
+        c.refinement.flows = Some(FlowConfig::default());
+        c.name = "detflows";
+        c
+    }
+
+    /// **SDet-like** — the previous deterministic Mt-KaHyPar mode:
+    /// old coarsening (no prefix doubling / swap prevention / bugfix) and
+    /// synchronous label propagation refinement.
+    pub fn sdet(seed: u64) -> Self {
+        let mut c = Config::detjet(seed);
+        c.coarsening.prefix_doubling = false;
+        c.coarsening.prevent_swaps = false;
+        c.coarsening.fix_rating_bug = false;
+        c.refinement.algo = RefinementAlgo::LabelPropagation;
+        c.name = "sdet";
+        c
+    }
+
+    /// **BiPart-like** — recursive bipartitioning + synchronous LP,
+    /// with the *weak* component choices of the original BiPart:
+    /// matching-quality coarsening (old rating, no swap prevention, few
+    /// subrounds), a single greedy initial-partition attempt instead of a
+    /// portfolio, shallow LP, and no community preprocessing. See
+    /// DESIGN.md §1 (substitutions) — this models BiPart's quality
+    /// class, not its exact code.
+    pub fn bipart(seed: u64) -> Self {
+        let mut c = Config::sdet(seed);
+        c.recursive_bipartitioning = true;
+        c.preprocessing.use_communities = false;
+        c.initial.attempts = 2;
+        c.initial.lp_rounds = 1;
+        c.refinement.lp.max_rounds = 2;
+        c.refinement.lp.subrounds = 2;
+        c.coarsening.fallback_subrounds = 2;
+        c.name = "bipart";
+        c
+    }
+
+    /// Simulated **non-deterministic default** (Mt-KaHyPar-Default
+    /// stand-in): asynchronous Jet moves — different seeds model different
+    /// thread interleavings.
+    pub fn nondet_jet(seed: u64) -> Self {
+        let mut c = Config::detjet(seed);
+        c.refinement.jet.asynchronous = true;
+        c.name = "nondet-jet";
+        c
+    }
+
+    /// Simulated **non-deterministic flows** (Mt-KaHyPar-Flows stand-in).
+    pub fn nondet_flows(seed: u64) -> Self {
+        let mut c = Config::nondet_jet(seed);
+        c.refinement.flows = Some(FlowConfig::default());
+        c.name = "nondet-flows";
+        c
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str, seed: u64) -> Option<Config> {
+        match name {
+            "detjet" => Some(Config::detjet(seed)),
+            "detflows" => Some(Config::detflows(seed)),
+            "sdet" => Some(Config::sdet(seed)),
+            "bipart" => Some(Config::bipart(seed)),
+            "nondet-jet" => Some(Config::nondet_jet(seed)),
+            "nondet-flows" => Some(Config::nondet_flows(seed)),
+            _ => None,
+        }
+    }
+
+    /// All preset names.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["detjet", "detflows", "sdet", "bipart", "nondet-jet", "nondet-flows"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in Config::preset_names() {
+            let c = Config::preset(name, 1).unwrap();
+            assert_eq!(c.name, *name);
+        }
+        assert!(Config::preset("nope", 1).is_none());
+    }
+
+    #[test]
+    fn preset_distinctions() {
+        let dj = Config::detjet(0);
+        assert_eq!(dj.refinement.algo, RefinementAlgo::Jet);
+        assert!(dj.refinement.flows.is_none());
+        assert!(dj.coarsening.fix_rating_bug);
+
+        let df = Config::detflows(0);
+        assert!(df.refinement.flows.is_some());
+
+        let sd = Config::sdet(0);
+        assert_eq!(sd.refinement.algo, RefinementAlgo::LabelPropagation);
+        assert!(!sd.coarsening.prefix_doubling);
+
+        let bp = Config::bipart(0);
+        assert!(bp.recursive_bipartitioning);
+
+        let nd = Config::nondet_jet(0);
+        assert!(nd.refinement.jet.asynchronous);
+    }
+
+    #[test]
+    fn default_matches_paper_parameters() {
+        let c = Config::default();
+        assert_eq!(c.eps, 0.03);
+        assert_eq!(c.refinement.jet.temperatures, vec![0.75, 0.375, 0.0]);
+        assert_eq!(c.refinement.jet.max_iterations_without_improvement, 8);
+        assert_eq!(c.refinement.jet.deadzone, 0.1);
+        assert_eq!(c.coarsening.initial_sequential_subrounds, 100);
+        assert_eq!(c.coarsening.subround_cap_frac, 0.01);
+    }
+}

@@ -1,0 +1,319 @@
+//! Static weighted hypergraph in bidirectional CSR form.
+//!
+//! `H = (V, E, c, ω)`: edge→pin incidence and vertex→edge incidence are
+//! both stored as offset/value arrays, so `pins(e)` and
+//! `incident_edges(v)` are O(1) slices. Construction is deterministic:
+//! incidence lists are materialized in increasing edge order.
+
+use crate::{EdgeId, VertexId, Weight};
+
+/// Immutable weighted hypergraph.
+#[derive(Clone, Debug)]
+pub struct Hypergraph {
+    edge_offsets: Vec<usize>,
+    pins: Vec<VertexId>,
+    vertex_offsets: Vec<usize>,
+    incidence: Vec<EdgeId>,
+    vertex_weights: Vec<Weight>,
+    edge_weights: Vec<Weight>,
+    total_vertex_weight: Weight,
+}
+
+impl Hypergraph {
+    /// Build from an edge list. `edges[e]` is the pin set of hyperedge `e`
+    /// (must be non-empty, pins in `[0, num_vertices)`, duplicates within
+    /// an edge are rejected in debug builds).
+    pub fn new(
+        num_vertices: usize,
+        edges: &[Vec<VertexId>],
+        vertex_weights: Option<Vec<Weight>>,
+        edge_weights: Option<Vec<Weight>>,
+    ) -> Self {
+        let mut b = HypergraphBuilder::new(num_vertices);
+        if let Some(vw) = vertex_weights {
+            b.set_vertex_weights(vw);
+        }
+        for (i, e) in edges.iter().enumerate() {
+            let w = edge_weights.as_ref().map(|ws| ws[i]).unwrap_or(1);
+            b.add_edge(e, w);
+        }
+        b.build()
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.vertex_weights.len()
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.edge_weights.len()
+    }
+
+    #[inline]
+    pub fn num_pins(&self) -> usize {
+        self.pins.len()
+    }
+
+    /// Pins of hyperedge `e`.
+    #[inline]
+    pub fn pins(&self, e: EdgeId) -> &[VertexId] {
+        &self.pins[self.edge_offsets[e as usize]..self.edge_offsets[e as usize + 1]]
+    }
+
+    /// Hyperedges incident to vertex `v`, in increasing edge-id order.
+    #[inline]
+    pub fn incident_edges(&self, v: VertexId) -> &[EdgeId] {
+        &self.incidence[self.vertex_offsets[v as usize]..self.vertex_offsets[v as usize + 1]]
+    }
+
+    #[inline]
+    pub fn edge_size(&self, e: EdgeId) -> usize {
+        self.edge_offsets[e as usize + 1] - self.edge_offsets[e as usize]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.vertex_offsets[v as usize + 1] - self.vertex_offsets[v as usize]
+    }
+
+    #[inline]
+    pub fn vertex_weight(&self, v: VertexId) -> Weight {
+        self.vertex_weights[v as usize]
+    }
+
+    #[inline]
+    pub fn edge_weight(&self, e: EdgeId) -> Weight {
+        self.edge_weights[e as usize]
+    }
+
+    #[inline]
+    pub fn total_vertex_weight(&self) -> Weight {
+        self.total_vertex_weight
+    }
+
+    /// Total incident weight of a vertex: `Σ_{e ∈ I(v)} ω(e)`.
+    pub fn incident_weight(&self, v: VertexId) -> Weight {
+        self.incident_edges(v).iter().map(|&e| self.edge_weight(e)).sum()
+    }
+
+    /// Maximum hyperedge size.
+    pub fn max_edge_size(&self) -> usize {
+        (0..self.num_edges()).map(|e| self.edge_size(e as EdgeId)).max().unwrap_or(0)
+    }
+
+    /// Average vertex degree (pins / vertices).
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            0.0
+        } else {
+            self.num_pins() as f64 / self.num_vertices() as f64
+        }
+    }
+
+    /// Is this hypergraph actually a graph (all edges of size 2)?
+    pub fn is_graph(&self) -> bool {
+        (0..self.num_edges()).all(|e| self.edge_size(e as EdgeId) == 2)
+    }
+
+    /// Structural sanity check used by tests & after contraction.
+    pub fn validate(&self) -> Result<(), String> {
+        if *self.edge_offsets.last().unwrap() != self.pins.len() {
+            return Err("edge offsets do not cover pins".into());
+        }
+        if *self.vertex_offsets.last().unwrap() != self.incidence.len() {
+            return Err("vertex offsets do not cover incidence".into());
+        }
+        if self.pins.len() != self.incidence.len() {
+            return Err("pin count mismatch between directions".into());
+        }
+        for e in 0..self.num_edges() {
+            let ps = self.pins(e as EdgeId);
+            if ps.is_empty() {
+                return Err(format!("edge {e} is empty"));
+            }
+            for &p in ps {
+                if p as usize >= self.num_vertices() {
+                    return Err(format!("edge {e} has out-of-range pin {p}"));
+                }
+                if !self.incident_edges(p).contains(&(e as EdgeId)) {
+                    return Err(format!("incidence of vertex {p} missing edge {e}"));
+                }
+            }
+            let mut sorted = ps.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != ps.len() {
+                return Err(format!("edge {e} has duplicate pins"));
+            }
+        }
+        let tw: Weight = self.vertex_weights.iter().sum();
+        if tw != self.total_vertex_weight {
+            return Err("total vertex weight stale".into());
+        }
+        Ok(())
+    }
+}
+
+/// Incremental constructor for [`Hypergraph`].
+#[derive(Debug, Default)]
+pub struct HypergraphBuilder {
+    num_vertices: usize,
+    edge_offsets: Vec<usize>,
+    pins: Vec<VertexId>,
+    edge_weights: Vec<Weight>,
+    vertex_weights: Option<Vec<Weight>>,
+}
+
+impl HypergraphBuilder {
+    pub fn new(num_vertices: usize) -> Self {
+        HypergraphBuilder {
+            num_vertices,
+            edge_offsets: vec![0],
+            pins: Vec::new(),
+            edge_weights: Vec::new(),
+            vertex_weights: None,
+        }
+    }
+
+    /// Override unit vertex weights.
+    pub fn set_vertex_weights(&mut self, w: Vec<Weight>) {
+        assert_eq!(w.len(), self.num_vertices);
+        self.vertex_weights = Some(w);
+    }
+
+    /// Append one hyperedge. Pins are copied; empty edges are skipped,
+    /// single-pin edges are kept (callers may filter).
+    pub fn add_edge(&mut self, pins: &[VertexId], weight: Weight) {
+        if pins.is_empty() {
+            return;
+        }
+        debug_assert!(pins.iter().all(|&p| (p as usize) < self.num_vertices));
+        #[cfg(debug_assertions)]
+        {
+            let mut s = pins.to_vec();
+            s.sort_unstable();
+            s.dedup();
+            debug_assert_eq!(s.len(), pins.len(), "duplicate pins in edge");
+        }
+        self.pins.extend_from_slice(pins);
+        self.edge_offsets.push(self.pins.len());
+        self.edge_weights.push(weight);
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edge_weights.len()
+    }
+
+    /// Finalize: builds the vertex→edge direction deterministically (edges
+    /// scanned in increasing id order).
+    pub fn build(self) -> Hypergraph {
+        let n = self.num_vertices;
+        let vertex_weights = self.vertex_weights.unwrap_or_else(|| vec![1; n]);
+        let total_vertex_weight = vertex_weights.iter().sum();
+        // Count degrees.
+        let mut vertex_offsets = vec![0usize; n + 1];
+        for &p in &self.pins {
+            vertex_offsets[p as usize + 1] += 1;
+        }
+        for i in 0..n {
+            vertex_offsets[i + 1] += vertex_offsets[i];
+        }
+        // Scatter in edge order → deterministic incidence lists sorted by
+        // edge id.
+        let mut cursor = vertex_offsets.clone();
+        let mut incidence = vec![0 as EdgeId; self.pins.len()];
+        for e in 0..self.edge_weights.len() {
+            for i in self.edge_offsets[e]..self.edge_offsets[e + 1] {
+                let v = self.pins[i] as usize;
+                incidence[cursor[v]] = e as EdgeId;
+                cursor[v] += 1;
+            }
+        }
+        Hypergraph {
+            edge_offsets: self.edge_offsets,
+            pins: self.pins,
+            vertex_offsets,
+            incidence,
+            vertex_weights,
+            edge_weights: self.edge_weights,
+            total_vertex_weight,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Hypergraph {
+        // 5 vertices, 3 edges: {0,1,2}, {2,3}, {3,4}, weights 1/2/3.
+        Hypergraph::new(
+            5,
+            &[vec![0, 1, 2], vec![2, 3], vec![3, 4]],
+            None,
+            Some(vec![1, 2, 3]),
+        )
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let h = tiny();
+        assert_eq!(h.num_vertices(), 5);
+        assert_eq!(h.num_edges(), 3);
+        assert_eq!(h.num_pins(), 7);
+        assert_eq!(h.pins(0), &[0, 1, 2]);
+        assert_eq!(h.edge_size(1), 2);
+        assert_eq!(h.degree(2), 2);
+        assert_eq!(h.degree(3), 2);
+        assert_eq!(h.incident_edges(3), &[1, 2]);
+        assert_eq!(h.edge_weight(2), 3);
+        assert_eq!(h.vertex_weight(0), 1);
+        assert_eq!(h.total_vertex_weight(), 5);
+        assert_eq!(h.incident_weight(2), 1 + 2);
+        assert_eq!(h.max_edge_size(), 3);
+        assert!(!h.is_graph());
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn incidence_sorted_by_edge_id() {
+        let h = tiny();
+        for v in 0..5u32 {
+            let inc = h.incident_edges(v);
+            assert!(inc.windows(2).all(|w| w[0] < w[1]), "v={v} inc={inc:?}");
+        }
+    }
+
+    #[test]
+    fn vertex_weights_respected() {
+        let h = Hypergraph::new(3, &[vec![0, 1]], Some(vec![5, 7, 9]), None);
+        assert_eq!(h.total_vertex_weight(), 21);
+        assert_eq!(h.vertex_weight(2), 9);
+        assert_eq!(h.edge_weight(0), 1); // default unit
+    }
+
+    #[test]
+    fn graph_detection() {
+        let g = Hypergraph::new(4, &[vec![0, 1], vec![1, 2], vec![2, 3]], None, None);
+        assert!(g.is_graph());
+        assert_eq!(g.avg_degree(), 6.0 / 4.0);
+    }
+
+    #[test]
+    fn builder_skips_empty_edges() {
+        let mut b = HypergraphBuilder::new(3);
+        b.add_edge(&[], 1);
+        b.add_edge(&[0, 2], 4);
+        let h = b.build();
+        assert_eq!(h.num_edges(), 1);
+        assert_eq!(h.pins(0), &[0, 2]);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut h = tiny();
+        h.total_vertex_weight += 1;
+        assert!(h.validate().is_err());
+    }
+}

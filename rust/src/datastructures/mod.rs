@@ -1,0 +1,11 @@
+//! Core data structures: the static hypergraph (bidirectional CSR), the
+//! dynamic partition state with per-edge pin counts and connectivity, and
+//! the quotient graph over blocks used by the flow-refinement scheduler.
+
+pub mod hypergraph;
+pub mod partition;
+pub mod quotient;
+
+pub use hypergraph::{Hypergraph, HypergraphBuilder};
+pub use partition::{AffinityBuffer, PartitionedHypergraph};
+pub use quotient::QuotientGraph;

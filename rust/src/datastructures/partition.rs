@@ -1,0 +1,491 @@
+//! Dynamic k-way partition state over a [`Hypergraph`].
+//!
+//! Maintains, under (batched, parallel) vertex moves:
+//! * the block assignment `Π`,
+//! * block weights `c(V_i)`,
+//! * per-edge pin counts `φ_e[i] = |e ∩ V_i|` (dense, `E × k`),
+//! * per-edge connectivity `λ(e) = |Λ(e)|`.
+//!
+//! All mutation goes through atomics whose *final* state after a
+//! synchronous round is interleaving-independent (fetch-add discipline;
+//! the `0→1` / `1→0` transition of a pin count adjusts `λ` exactly once
+//! in every interleaving), so parallel batch application preserves
+//! determinism.
+
+use crate::datastructures::Hypergraph;
+use crate::{BlockId, EdgeId, VertexId, Weight};
+use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+
+/// Reusable dense per-block affinity scratch (k entries + touched list).
+#[derive(Debug, Default, Clone)]
+pub struct AffinityBuffer {
+    values: Vec<Weight>,
+    touched: Vec<BlockId>,
+}
+
+impl AffinityBuffer {
+    pub fn new(k: usize) -> Self {
+        AffinityBuffer { values: vec![0; k], touched: Vec::with_capacity(k) }
+    }
+
+    #[inline]
+    pub fn add(&mut self, b: BlockId, w: Weight) {
+        if self.values[b as usize] == 0 {
+            self.touched.push(b);
+        }
+        self.values[b as usize] += w;
+    }
+
+    #[inline]
+    pub fn get(&self, b: BlockId) -> Weight {
+        self.values[b as usize]
+    }
+
+    /// Blocks touched since the last reset, in first-touch order.
+    #[inline]
+    pub fn touched(&self) -> &[BlockId] {
+        &self.touched
+    }
+
+    pub fn reset(&mut self) {
+        for &b in &self.touched {
+            self.values[b as usize] = 0;
+        }
+        self.touched.clear();
+    }
+}
+
+/// k-way partition state with incremental connectivity maintenance.
+pub struct PartitionedHypergraph<'a> {
+    hg: &'a Hypergraph,
+    k: usize,
+    part: Vec<AtomicU32>,
+    block_weights: Vec<AtomicI64>,
+    /// Dense pin counts, row-major: `pin_counts[e * k + b]`.
+    pin_counts: Vec<AtomicU32>,
+    connectivity: Vec<AtomicU32>,
+}
+
+impl<'a> PartitionedHypergraph<'a> {
+    /// Build from an assignment vector (entries must be `< k`).
+    pub fn new(hg: &'a Hypergraph, k: usize, part: Vec<BlockId>) -> Self {
+        assert_eq!(part.len(), hg.num_vertices());
+        assert!(k >= 1);
+        debug_assert!(part.iter().all(|&b| (b as usize) < k));
+        let p = PartitionedHypergraph {
+            hg,
+            k,
+            part: part.into_iter().map(AtomicU32::new).collect(),
+            block_weights: (0..k).map(|_| AtomicI64::new(0)).collect(),
+            pin_counts: (0..hg.num_edges() * k).map(|_| AtomicU32::new(0)).collect(),
+            connectivity: (0..hg.num_edges()).map(|_| AtomicU32::new(0)).collect(),
+        };
+        // Block weights.
+        crate::par::for_each_chunk(hg.num_vertices(), |_c, r| {
+            for v in r {
+                let b = p.part(v as VertexId) as usize;
+                p.block_weights[b].fetch_add(hg.vertex_weight(v as VertexId), Ordering::Relaxed);
+            }
+        });
+        // Pin counts + connectivity.
+        crate::par::for_each_chunk(hg.num_edges(), |_c, r| {
+            for e in r {
+                let mut lambda = 0;
+                for &v in hg.pins(e as EdgeId) {
+                    let b = p.part(v) as usize;
+                    if p.pin_counts[e * k + b].fetch_add(1, Ordering::Relaxed) == 0 {
+                        lambda += 1;
+                    }
+                }
+                p.connectivity[e].store(lambda, Ordering::Relaxed);
+            }
+        });
+        p
+    }
+
+    #[inline]
+    pub fn hypergraph(&self) -> &'a Hypergraph {
+        self.hg
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn part(&self, v: VertexId) -> BlockId {
+        self.part[v as usize].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn block_weight(&self, b: BlockId) -> Weight {
+        self.block_weights[b as usize].load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of all block weights.
+    pub fn block_weights(&self) -> Vec<Weight> {
+        (0..self.k).map(|b| self.block_weight(b as BlockId)).collect()
+    }
+
+    #[inline]
+    pub fn pin_count(&self, e: EdgeId, b: BlockId) -> u32 {
+        self.pin_counts[e as usize * self.k + b as usize].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn connectivity(&self, e: EdgeId) -> u32 {
+        self.connectivity[e as usize].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn is_cut_edge(&self, e: EdgeId) -> bool {
+        self.connectivity(e) > 1
+    }
+
+    /// Perfectly balanced block weight `⌈c(V)/k⌉`.
+    #[inline]
+    pub fn avg_block_weight(&self) -> Weight {
+        (self.hg.total_vertex_weight() + self.k as Weight - 1) / self.k as Weight
+    }
+
+    /// Maximum allowed block weight `L_max = (1+ε)·⌈c(V)/k⌉`.
+    pub fn max_block_weight(&self, eps: f64) -> Weight {
+        ((1.0 + eps) * self.avg_block_weight() as f64).floor() as Weight
+    }
+
+    /// `max_i c(V_i) / ⌈c(V)/k⌉ − 1`.
+    pub fn imbalance(&self) -> f64 {
+        let avg = self.avg_block_weight() as f64;
+        let max = (0..self.k).map(|b| self.block_weight(b as BlockId)).max().unwrap_or(0);
+        max as f64 / avg - 1.0
+    }
+
+    /// Is the partition ε-balanced?
+    pub fn is_balanced(&self, eps: f64) -> bool {
+        let lmax = self.max_block_weight(eps);
+        (0..self.k).all(|b| self.block_weight(b as BlockId) <= lmax)
+    }
+
+    /// Connectivity metric `(λ−1)(Π) = Σ_e (λ(e)−1)·ω(e)`.
+    pub fn km1(&self) -> Weight {
+        crate::par::parallel_reduce(
+            self.hg.num_edges(),
+            || 0 as Weight,
+            |r, mut acc| {
+                for e in r {
+                    acc += (self.connectivity(e as EdgeId) as Weight - 1)
+                        * self.hg.edge_weight(e as EdgeId);
+                }
+                acc
+            },
+            |a, b| a + b,
+        )
+    }
+
+    /// Cut metric: total weight of edges with `λ(e) > 1`.
+    pub fn cut(&self) -> Weight {
+        crate::par::parallel_reduce(
+            self.hg.num_edges(),
+            || 0 as Weight,
+            |r, mut acc| {
+                for e in r {
+                    if self.is_cut_edge(e as EdgeId) {
+                        acc += self.hg.edge_weight(e as EdgeId);
+                    }
+                }
+                acc
+            },
+            |a, b| a + b,
+        )
+    }
+
+    /// Move `v` to block `to`, updating all incremental state. Safe to call
+    /// concurrently for *distinct* vertices. Returns false if `v` was
+    /// already in `to`.
+    pub fn apply_move(&self, v: VertexId, to: BlockId) -> bool {
+        let from = self.part[v as usize].swap(to, Ordering::Relaxed);
+        if from == to {
+            return false;
+        }
+        let w = self.hg.vertex_weight(v);
+        self.block_weights[from as usize].fetch_sub(w, Ordering::Relaxed);
+        self.block_weights[to as usize].fetch_add(w, Ordering::Relaxed);
+        for &e in self.hg.incident_edges(v) {
+            let base = e as usize * self.k;
+            // Leaving `from`: last pin out ⇒ λ -= 1.
+            if self.pin_counts[base + from as usize].fetch_sub(1, Ordering::Relaxed) == 1 {
+                self.connectivity[e as usize].fetch_sub(1, Ordering::Relaxed);
+            }
+            // Entering `to`: first pin in ⇒ λ += 1.
+            if self.pin_counts[base + to as usize].fetch_add(1, Ordering::Relaxed) == 0 {
+                self.connectivity[e as usize].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        true
+    }
+
+    /// Apply a batch of moves in parallel. Each vertex may appear at most
+    /// once; the final state is interleaving-independent.
+    pub fn apply_moves(&self, moves: &[(VertexId, BlockId)]) {
+        crate::par::for_each_chunk(moves.len(), |_c, r| {
+            for i in r {
+                let (v, t) = moves[i];
+                self.apply_move(v, t);
+            }
+        });
+    }
+
+    /// Gain of moving `v` to `t` w.r.t. the connectivity metric, with all
+    /// other vertices fixed:
+    /// `gain(v,t) = Σ_e ω(e)·[φ_e(s)=1] − Σ_e ω(e)·[φ_e(t)=0]`.
+    pub fn gain(&self, v: VertexId, t: BlockId) -> Weight {
+        let s = self.part(v);
+        if s == t {
+            return 0;
+        }
+        let mut g = 0;
+        for &e in self.hg.incident_edges(v) {
+            let w = self.hg.edge_weight(e);
+            if self.pin_count(e, s) == 1 {
+                g += w;
+            }
+            if self.pin_count(e, t) == 0 {
+                g -= w;
+            }
+        }
+        g
+    }
+
+    /// Gather per-block affinities for `v` into `buf` and return
+    /// `(w_total, benefit, internal)` where
+    /// * `w_total  = Σ_{e∈I(v)} ω(e)`
+    /// * `benefit  = Σ ω(e)·[φ_e(s)=1]` (weight freed by leaving `s`)
+    /// * `internal = Σ ω(e)·[φ_e(s)>1]` (Jet's temperature denominator)
+    /// * `buf[b]   = Σ ω(e)·[φ_e(b)>0]` for `b ≠ s` present in `I(v)`.
+    ///
+    /// Then `gain(v,b) = buf[b] − (w_total − benefit)` for any `b`
+    /// (affinity 0 for untouched blocks).
+    pub fn collect_affinities(
+        &self,
+        v: VertexId,
+        buf: &mut AffinityBuffer,
+    ) -> (Weight, Weight, Weight) {
+        let s = self.part(v);
+        let mut w_total = 0;
+        let mut benefit = 0;
+        let mut internal = 0;
+        for &e in self.hg.incident_edges(v) {
+            let w = self.hg.edge_weight(e);
+            w_total += w;
+            let phi_s = self.pin_count(e, s);
+            if phi_s == 1 {
+                benefit += w;
+            } else {
+                internal += w;
+            }
+            if self.connectivity(e) > 1 {
+                let base = e as usize * self.k;
+                for b in 0..self.k as BlockId {
+                    if b != s && self.pin_counts[base + b as usize].load(Ordering::Relaxed) > 0 {
+                        buf.add(b, w);
+                    }
+                }
+            }
+        }
+        (w_total, benefit, internal)
+    }
+
+    /// Current assignment as a plain vector (snapshot for rollback).
+    pub fn snapshot(&self) -> Vec<BlockId> {
+        (0..self.hg.num_vertices()).map(|v| self.part(v as VertexId)).collect()
+    }
+
+    /// Roll back to a snapshot by applying inverse moves for every vertex
+    /// whose block differs (cheap when few vertices moved).
+    pub fn rollback_to(&self, snap: &[BlockId]) {
+        assert_eq!(snap.len(), self.hg.num_vertices());
+        crate::par::for_each_chunk(snap.len(), |_c, r| {
+            for v in r {
+                if self.part(v as VertexId) != snap[v] {
+                    self.apply_move(v as VertexId, snap[v]);
+                }
+            }
+        });
+    }
+
+    /// Recompute everything from scratch and compare — test/debug oracle.
+    pub fn validate(&self, eps_check: Option<f64>) -> Result<(), String> {
+        let mut bw = vec![0 as Weight; self.k];
+        for v in 0..self.hg.num_vertices() {
+            let b = self.part(v as VertexId) as usize;
+            if b >= self.k {
+                return Err(format!("vertex {v} in invalid block {b}"));
+            }
+            bw[b] += self.hg.vertex_weight(v as VertexId);
+        }
+        for b in 0..self.k {
+            if bw[b] != self.block_weight(b as BlockId) {
+                return Err(format!(
+                    "block {b} weight stale: stored {} real {}",
+                    self.block_weight(b as BlockId),
+                    bw[b]
+                ));
+            }
+        }
+        for e in 0..self.hg.num_edges() {
+            let mut counts = vec![0u32; self.k];
+            for &v in self.hg.pins(e as EdgeId) {
+                counts[self.part(v) as usize] += 1;
+            }
+            let lambda = counts.iter().filter(|&&c| c > 0).count() as u32;
+            if lambda != self.connectivity(e as EdgeId) {
+                return Err(format!(
+                    "edge {e} connectivity stale: stored {} real {lambda}",
+                    self.connectivity(e as EdgeId)
+                ));
+            }
+            for b in 0..self.k {
+                if counts[b] != self.pin_count(e as EdgeId, b as BlockId) {
+                    return Err(format!("edge {e} pin count for block {b} stale"));
+                }
+            }
+        }
+        if let Some(eps) = eps_check {
+            if !self.is_balanced(eps) {
+                return Err(format!("partition imbalanced: {}", self.imbalance()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hg() -> Hypergraph {
+        // 6 vertices, edges: {0,1,2} w1, {2,3} w2, {3,4,5} w1, {0,5} w3.
+        Hypergraph::new(
+            6,
+            &[vec![0, 1, 2], vec![2, 3], vec![3, 4, 5], vec![0, 5]],
+            None,
+            Some(vec![1, 2, 1, 3]),
+        )
+    }
+
+    #[test]
+    fn initial_state() {
+        let h = hg();
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 1, 1, 1]);
+        assert_eq!(p.block_weight(0), 3);
+        assert_eq!(p.block_weight(1), 3);
+        assert_eq!(p.connectivity(0), 1);
+        assert_eq!(p.connectivity(1), 2);
+        assert_eq!(p.connectivity(2), 1);
+        assert_eq!(p.connectivity(3), 2);
+        assert_eq!(p.km1(), 2 + 3); // edges 1 and 3 are cut
+        assert_eq!(p.cut(), 5);
+        assert_eq!(p.pin_count(0, 0), 3);
+        assert_eq!(p.pin_count(1, 1), 1);
+        p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn gains_match_objective_delta() {
+        let h = hg();
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 1, 1, 1]);
+        for v in 0..6u32 {
+            for t in 0..2u32 {
+                if t == p.part(v) {
+                    continue;
+                }
+                let before = p.km1();
+                let g = p.gain(v, t);
+                let from = p.part(v);
+                p.apply_move(v, t);
+                let after = p.km1();
+                assert_eq!(before - after, g, "v={v} t={t}");
+                p.apply_move(v, from); // revert
+                p.validate(None).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn move_updates_weights_and_counts() {
+        let h = hg();
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 1, 1, 1]);
+        assert!(p.apply_move(2, 1));
+        assert!(!p.apply_move(2, 1)); // no-op repeat
+        assert_eq!(p.block_weight(0), 2);
+        assert_eq!(p.block_weight(1), 4);
+        assert_eq!(p.pin_count(1, 0), 0);
+        assert_eq!(p.pin_count(1, 1), 2);
+        assert_eq!(p.connectivity(1), 1);
+        p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn batch_apply_deterministic_across_threads() {
+        let h = hg();
+        let moves = vec![(0u32, 1u32), (3, 0), (5, 0)];
+        let mut results = Vec::new();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 1, 1, 1]);
+                p.apply_moves(&moves);
+                p.validate(None).unwrap();
+                results.push((p.snapshot(), p.km1(), p.block_weights()));
+            });
+        }
+        assert!(results.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn affinities_consistent_with_gain() {
+        let h = hg();
+        let p = PartitionedHypergraph::new(&h, 3, vec![0, 0, 1, 1, 2, 2]);
+        let mut buf = AffinityBuffer::new(3);
+        for v in 0..6u32 {
+            buf.reset();
+            let (w_total, benefit, internal) = p.collect_affinities(v, &mut buf);
+            assert_eq!(w_total, h.incident_weight(v));
+            assert_eq!(internal + benefit, w_total);
+            for t in 0..3u32 {
+                if t == p.part(v) {
+                    continue;
+                }
+                let expect = p.gain(v, t);
+                let got = buf.get(t) - (w_total - benefit);
+                assert_eq!(got, expect, "v={v} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn rollback_restores_exact_state() {
+        let h = hg();
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 1, 1, 1]);
+        let snap = p.snapshot();
+        let km1 = p.km1();
+        p.apply_moves(&[(0, 1), (4, 0)]);
+        assert_ne!(p.snapshot(), snap);
+        p.rollback_to(&snap);
+        assert_eq!(p.snapshot(), snap);
+        assert_eq!(p.km1(), km1);
+        p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn balance_helpers() {
+        let h = hg();
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 1, 1, 1]);
+        assert_eq!(p.avg_block_weight(), 3);
+        assert!(p.is_balanced(0.0));
+        assert!((p.imbalance() - 0.0).abs() < 1e-9);
+        p.apply_move(3, 0);
+        assert!(!p.is_balanced(0.03));
+        assert!(p.is_balanced(0.5));
+    }
+}

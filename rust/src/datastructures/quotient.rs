@@ -1,0 +1,147 @@
+//! Quotient graph over partition blocks.
+//!
+//! `Q = (V_Q, E_Q)` with blocks as vertices and an edge `(i, j)` whenever
+//! some cut hyperedge touches both blocks. Used by the flow-refinement
+//! scheduler: block pairs are the two-way refinement work items, and the
+//! deterministic matching schedule ([`crate::refinement::flow`]) runs on
+//! this graph. Edge weights are the total cut-hyperedge weight between the
+//! pair (used for prioritization).
+
+use crate::datastructures::PartitionedHypergraph;
+use crate::{BlockId, EdgeId, Weight};
+
+/// Dense symmetric quotient graph (k ≤ a few hundred, so k² is trivial).
+#[derive(Clone, Debug)]
+pub struct QuotientGraph {
+    k: usize,
+    /// Row-major `k × k` cut weight; 0 = no edge.
+    cut_weight: Vec<Weight>,
+}
+
+impl QuotientGraph {
+    /// Build from the current partition state (parallel over edges,
+    /// combined deterministically in chunk order).
+    pub fn build(p: &PartitionedHypergraph) -> Self {
+        let k = p.k();
+        let hg = p.hypergraph();
+        let cut_weight = crate::par::parallel_reduce(
+            hg.num_edges(),
+            || vec![0 as Weight; k * k],
+            |r, mut acc| {
+                let mut present: Vec<BlockId> = Vec::with_capacity(k);
+                for e in r {
+                    let e = e as EdgeId;
+                    if p.connectivity(e) <= 1 {
+                        continue;
+                    }
+                    present.clear();
+                    for b in 0..k as BlockId {
+                        if p.pin_count(e, b) > 0 {
+                            present.push(b);
+                        }
+                    }
+                    let w = hg.edge_weight(e);
+                    for i in 0..present.len() {
+                        for j in i + 1..present.len() {
+                            let (a, b) = (present[i] as usize, present[j] as usize);
+                            acc[a * k + b] += w;
+                            acc[b * k + a] += w;
+                        }
+                    }
+                }
+                acc
+            },
+            |mut a, b| {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += y;
+                }
+                a
+            },
+        );
+        QuotientGraph { k, cut_weight }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn cut_weight(&self, i: BlockId, j: BlockId) -> Weight {
+        self.cut_weight[i as usize * self.k + j as usize]
+    }
+
+    #[inline]
+    pub fn has_edge(&self, i: BlockId, j: BlockId) -> bool {
+        i != j && self.cut_weight(i, j) > 0
+    }
+
+    /// Degree of block `i` in Q.
+    pub fn degree(&self, i: BlockId) -> usize {
+        (0..self.k as BlockId).filter(|&j| self.has_edge(i, j)).count()
+    }
+
+    /// All edges `(i, j)` with `i < j`, in lexicographic order
+    /// (deterministic iteration basis for the scheduler).
+    pub fn edges(&self) -> Vec<(BlockId, BlockId)> {
+        let mut out = Vec::new();
+        for i in 0..self.k as BlockId {
+            for j in i + 1..self.k as BlockId {
+                if self.has_edge(i, j) {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastructures::Hypergraph;
+
+    #[test]
+    fn quotient_of_three_blocks() {
+        // Edge {0,1} inside block 0; {1,2} cut 0-1; {2,3,4} cut 1-2;
+        // {0,4} cut 0-2.
+        let h = Hypergraph::new(
+            5,
+            &[vec![0, 1], vec![1, 2], vec![2, 3, 4], vec![0, 4]],
+            None,
+            Some(vec![1, 5, 7, 2]),
+        );
+        let p = PartitionedHypergraph::new(&h, 3, vec![0, 0, 1, 1, 2]);
+        let q = QuotientGraph::build(&p);
+        assert_eq!(q.k(), 3);
+        assert!(q.has_edge(0, 1) && q.has_edge(1, 2) && q.has_edge(0, 2));
+        assert_eq!(q.cut_weight(0, 1), 5);
+        assert_eq!(q.cut_weight(1, 2), 7);
+        assert_eq!(q.cut_weight(0, 2), 2);
+        assert_eq!(q.cut_weight(1, 0), 5); // symmetric
+        assert_eq!(q.degree(0), 2);
+        assert_eq!(q.edges(), vec![(0, 1), (0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn spanning_cut_edge_adds_all_pairs() {
+        let h = Hypergraph::new(3, &[vec![0, 1, 2]], None, None);
+        let p = PartitionedHypergraph::new(&h, 3, vec![0, 1, 2]);
+        let q = QuotientGraph::build(&p);
+        assert_eq!(q.num_edges(), 3);
+        assert_eq!(q.cut_weight(0, 2), 1);
+    }
+
+    #[test]
+    fn no_cut_edges_empty_quotient() {
+        let h = Hypergraph::new(4, &[vec![0, 1], vec![2, 3]], None, None);
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 1, 1]);
+        let q = QuotientGraph::build(&p);
+        assert_eq!(q.num_edges(), 0);
+        assert_eq!(q.degree(0), 0);
+    }
+}

@@ -1,0 +1,478 @@
+//! Per-figure/table experiment implementations (see DESIGN.md §3 for the
+//! index). Each function regenerates one artifact of the paper's
+//! evaluation: a CSV under `results/` plus an ASCII rendering on stdout.
+
+use super::runner::{objectives_by_preset, print_geomeans, print_profile, run_matrix, ExpCtx, RunRecord};
+use crate::config::{Config, RefinementAlgo};
+use crate::partitioner::partition;
+use crate::util::stats::{geometric_mean, rolling_geometric_mean};
+
+/// Fig. 1 + Fig. 8: DetJet vs the deterministic and (simulated)
+/// non-deterministic state of the art — quality profiles and relative
+/// running times.
+pub fn fig1_fig8(ctx: &ExpCtx) {
+    println!("== fig1/fig8: DetJet vs state of the art ==");
+    let presets = ["detjet", "nondet-jet", "sdet", "bipart"];
+    let records = run_matrix(ctx, &presets, |p, s| Config::preset(p, s).unwrap());
+    ctx.write_records("fig1_fig8_runs.csv", &records);
+    let objs = objectives_by_preset(&records, &presets);
+    print_profile("quality profile (Fig. 1 / Fig. 8 top)", &presets, &objs);
+    print_geomeans(&records, &presets);
+    // Fig. 8 bottom: per-run time relative to the non-det default.
+    let mut rows = Vec::new();
+    for r in &records {
+        if let Some(base) = records.iter().find(|b| {
+            b.preset == "nondet-jet" && b.instance == r.instance && b.k == r.k && b.seed == r.seed
+        }) {
+            rows.push(format!(
+                "{},{},{},{},{:.4}",
+                r.instance,
+                r.k,
+                r.seed,
+                r.preset,
+                r.time_s / base.time_s.max(1e-9)
+            ));
+        }
+    }
+    ctx.write_csv("fig8_relative_time.csv", "instance,k,seed,preset,time_rel_nondet", &rows);
+}
+
+/// Fig. 3 + Fig. 11: coarsening-improvement ablation — final quality and
+/// initial-partition quality for each accumulated change.
+pub fn fig3_fig11(ctx: &ExpCtx) {
+    println!("== fig3/fig11: coarsening ablation ==");
+    let variants: Vec<(&str, Box<dyn Fn(u64) -> Config>)> = vec![
+        ("baseline-det", Box::new(|s| {
+            let mut c = Config::detjet(s);
+            c.coarsening.fix_rating_bug = false;
+            c.coarsening.prevent_swaps = false;
+            c.coarsening.prefix_doubling = false;
+            c
+        })),
+        ("+bugfix", Box::new(|s| {
+            let mut c = Config::detjet(s);
+            c.coarsening.prevent_swaps = false;
+            c.coarsening.prefix_doubling = false;
+            c
+        })),
+        ("+swaps", Box::new(|s| {
+            let mut c = Config::detjet(s);
+            c.coarsening.prefix_doubling = false;
+            c
+        })),
+        ("+prefix-dbl", Box::new(Config::detjet)),
+    ];
+    let names: Vec<&str> = variants.iter().map(|(n, _)| *n).collect();
+    let mut final_records: Vec<RunRecord> = Vec::new();
+    let mut initial_records: Vec<RunRecord> = Vec::new();
+    let threads = crate::par::num_threads();
+    for inst in ctx.instances() {
+        let hg = inst.build();
+        for &k in &ctx.ks() {
+            for &seed in &ctx.seeds() {
+                for (name, make) in &variants {
+                    let cfg = make(seed);
+                    let r = partition(&hg, k, &cfg);
+                    final_records.push(RunRecord::from_result(&inst, name, k, seed, threads, &r));
+                    // Initial-partition quality: same coarsening, no
+                    // refinement (Fig. 11 right).
+                    let mut cfg_ip = make(seed);
+                    cfg_ip.refinement.algo = RefinementAlgo::None;
+                    let r_ip = partition(&hg, k, &cfg_ip);
+                    initial_records
+                        .push(RunRecord::from_result(&inst, name, k, seed, threads, &r_ip));
+                }
+            }
+        }
+    }
+    ctx.write_records("fig11_final_quality.csv", &final_records);
+    ctx.write_records("fig11_initial_quality.csv", &initial_records);
+    let objs = objectives_by_preset(&final_records, &names);
+    print_profile("final quality (Fig. 11 left / Fig. 3)", &names, &objs);
+    let objs_ip = objectives_by_preset(&initial_records, &names);
+    print_profile("initial-partition quality (Fig. 11 right)", &names, &objs_ip);
+}
+
+/// Fig. 4: temperature settings per instance class.
+pub fn fig4(ctx: &ExpCtx) {
+    println!("== fig4: Jet temperature settings ==");
+    let variants: Vec<(&str, Vec<f64>, Option<Vec<f64>>)> = vec![
+        ("tc=.75,tf=.25", vec![0.75], Some(vec![0.25])),
+        ("tc=.25,tf=.25", vec![0.25], Some(vec![0.25])),
+        ("tau=0", vec![0.0], None),
+        ("tau=.75", vec![0.75], None),
+        ("dynamic-3", vec![0.75, 0.375, 0.0], None),
+    ];
+    let names: Vec<&str> = variants.iter().map(|(n, _, _)| *n).collect();
+    let mut records = Vec::new();
+    let threads = crate::par::num_threads();
+    for inst in ctx.instances() {
+        let hg = inst.build();
+        for &k in &ctx.ks() {
+            for &seed in &ctx.seeds() {
+                for (name, coarse, fine) in &variants {
+                    let mut cfg = Config::detjet(seed);
+                    cfg.refinement.jet.temperatures = coarse.clone();
+                    cfg.refinement.jet.temperatures_fine = fine.clone();
+                    let r = partition(&hg, k, &cfg);
+                    records.push(RunRecord::from_result(&inst, name, k, seed, threads, &r));
+                }
+            }
+        }
+    }
+    ctx.write_records("fig4_temperatures.csv", &records);
+    for class in [
+        crate::gen::InstanceClass::Hypergraph,
+        crate::gen::InstanceClass::IrregularGraph,
+        crate::gen::InstanceClass::RegularGraph,
+    ] {
+        let sub: Vec<RunRecord> =
+            records.iter().filter(|r| r.class == class).cloned().collect();
+        if sub.is_empty() {
+            continue;
+        }
+        let objs = objectives_by_preset(&sub, &names);
+        print_profile(&format!("Fig. 4 ({})", class.name()), &names, &objs);
+    }
+}
+
+/// Fig. 5: number of dynamically decreasing temperature rounds (1..5).
+pub fn fig5(ctx: &ExpCtx) {
+    println!("== fig5: number of temperature rounds ==");
+    let schedules: Vec<(String, Vec<f64>)> = (1..=5usize)
+        .map(|n| {
+            let temps: Vec<f64> = if n == 1 {
+                vec![0.0]
+            } else {
+                (0..n).map(|i| 0.75 * (n - 1 - i) as f64 / (n - 1) as f64).collect()
+            };
+            (format!("rounds-{n}"), temps)
+        })
+        .collect();
+    let names: Vec<&str> = schedules.iter().map(|(n, _)| n.as_str()).collect();
+    let mut records = Vec::new();
+    let threads = crate::par::num_threads();
+    for inst in ctx.instances() {
+        let hg = inst.build();
+        for &k in &ctx.ks() {
+            for &seed in &ctx.seeds() {
+                for (name, temps) in &schedules {
+                    let mut cfg = Config::detjet(seed);
+                    cfg.refinement.jet.temperatures = temps.clone();
+                    let r = partition(&hg, k, &cfg);
+                    let mut rec = RunRecord::from_result(&inst, name, k, seed, threads, &r);
+                    rec.preset = name.clone();
+                    records.push(rec);
+                }
+            }
+        }
+    }
+    ctx.write_records("fig5_rounds.csv", &records);
+    let objs = objectives_by_preset(&records, &names);
+    print_profile("Fig. 5 (temperature rounds)", &names, &objs);
+    print_geomeans(&records, &names);
+}
+
+/// Fig. 6: max iterations without improvement ∈ {6, 8, 12}.
+pub fn fig6(ctx: &ExpCtx) {
+    println!("== fig6: Jet iteration budget ==");
+    let values = [6usize, 8, 12];
+    let names: Vec<String> = values.iter().map(|v| format!("iters-{v}")).collect();
+    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let mut records = Vec::new();
+    let threads = crate::par::num_threads();
+    for inst in ctx.instances() {
+        let hg = inst.build();
+        for &k in &ctx.ks() {
+            for &seed in &ctx.seeds() {
+                for (vi, &v) in values.iter().enumerate() {
+                    let mut cfg = Config::detjet(seed);
+                    cfg.refinement.jet.max_iterations_without_improvement = v;
+                    let r = partition(&hg, k, &cfg);
+                    records.push(RunRecord::from_result(&inst, &names[vi], k, seed, threads, &r));
+                }
+            }
+        }
+    }
+    ctx.write_records("fig6_iterations.csv", &records);
+    let objs = objectives_by_preset(&records, &name_refs);
+    print_profile("Fig. 6 (iterations w/o improvement)", &name_refs, &objs);
+    print_geomeans(&records, &name_refs);
+}
+
+/// Fig. 7: strong scaling. On this container (1 physical core) the
+/// speedups are hardware-gated; the harness still produces the paper's
+/// plot (per-instance speedup vs sequential, rolling geomean) plus the
+/// determinism invariance across thread counts.
+pub fn fig7(ctx: &ExpCtx) {
+    println!("== fig7: strong scaling ==");
+    let threads = [1usize, 2, 4, 8];
+    let mut rows = Vec::new();
+    let mut per_instance: Vec<(String, f64, Vec<f64>)> = Vec::new();
+    for inst in ctx.instances() {
+        let hg = inst.build();
+        let k = 8;
+        let mut times = Vec::new();
+        let mut parts: Vec<Vec<u32>> = Vec::new();
+        for &nt in &threads {
+            let r = crate::par::with_num_threads(nt, || {
+                partition(&hg, k, &Config::detjet(1))
+            });
+            times.push(r.total_s);
+            parts.push(r.part);
+            eprintln!("    {} t={nt}: {:.3}s km1={}", inst.name, r.total_s, r.km1);
+        }
+        assert!(
+            parts.windows(2).all(|w| w[0] == w[1]),
+            "scaling run broke determinism on {}",
+            inst.name
+        );
+        let speedups: Vec<f64> = times.iter().map(|&t| times[0] / t.max(1e-9)).collect();
+        rows.push(format!(
+            "{},{:.4},{:.4},{:.4},{:.4}",
+            inst.name, times[0], speedups[1], speedups[2], speedups[3]
+        ));
+        per_instance.push((inst.name.to_string(), times[0], speedups));
+    }
+    ctx.write_csv("fig7_scaling.csv", "instance,seq_time_s,speedup_t2,speedup_t4,speedup_t8", &rows);
+    // Rolling geomean over instances sorted by sequential time (the
+    // paper's x-axis).
+    per_instance.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for (ti, &nt) in threads.iter().enumerate().skip(1) {
+        let sp: Vec<f64> = per_instance.iter().map(|(_, _, s)| s[ti].max(1e-9)).collect();
+        let roll = rolling_geometric_mean(&sp, 5);
+        println!(
+            "  t={nt}: geomean speedup {:.2} (rolling window tail {:.2})",
+            geometric_mean(&sp),
+            roll.last().copied().unwrap_or(0.0)
+        );
+    }
+    println!("  (1-core container: true parallel speedup is hardware-gated; see DESIGN.md)");
+}
+
+/// Fig. 9: deterministic vs non-deterministic flows (and DetJet baseline).
+pub fn fig9(ctx: &ExpCtx) {
+    println!("== fig9: flow-based refinement ==");
+    let presets = ["detflows", "nondet-flows", "detjet"];
+    let records = run_matrix(ctx, &presets, |p, s| Config::preset(p, s).unwrap());
+    ctx.write_records("fig9_flows.csv", &records);
+    let objs = objectives_by_preset(&records, &presets);
+    print_profile("Fig. 9 (flows quality)", &presets, &objs);
+    print_geomeans(&records, &presets);
+}
+
+/// Fig. 10: DetJet vs the BiPart-like baseline on hypergraphs.
+pub fn fig10(ctx: &ExpCtx) {
+    println!("== fig10: DetJet vs BiPart ==");
+    let presets = ["detjet", "bipart"];
+    let mut records = Vec::new();
+    let threads = crate::par::num_threads();
+    for inst in ctx.instances() {
+        if inst.class != crate::gen::InstanceClass::Hypergraph {
+            continue;
+        }
+        let hg = inst.build();
+        for &k in &ctx.ks() {
+            for &seed in &ctx.seeds() {
+                for p in presets {
+                    let cfg = Config::preset(p, seed).unwrap();
+                    let r = partition(&hg, k, &cfg);
+                    records.push(RunRecord::from_result(&inst, p, k, seed, threads, &r));
+                }
+            }
+        }
+    }
+    ctx.write_records("fig10_bipart.csv", &records);
+    let objs = objectives_by_preset(&records, &presets);
+    print_profile("Fig. 10 (DetJet vs BiPart-like)", &presets, &objs);
+    // Paper headline: quality ratio & fraction of wins.
+    let n = objs[0].len();
+    let wins = (0..n).filter(|&i| objs[0][i] <= objs[1][i]).count();
+    let ratio: Vec<f64> = (0..n)
+        .filter(|&i| objs[0][i].is_finite() && objs[1][i].is_finite())
+        .map(|i| (objs[1][i] + 1.0) / (objs[0][i] + 1.0))
+        .collect();
+    let gm_ratio = if ratio.is_empty() {
+        f64::INFINITY // bipart failed everywhere
+    } else {
+        geometric_mean(&ratio)
+    };
+    println!(
+        "  DetJet at least as good on {}/{} instance-k pairs; geomean quality ratio {:.2}x",
+        wins, n, gm_ratio
+    );
+    print_geomeans(&records, &presets);
+}
+
+/// Fig. 12: running-time share of the DetJet components.
+pub fn fig12(ctx: &ExpCtx) {
+    println!("== fig12: component time shares ==");
+    let mut rows = Vec::new();
+    let mut shares: Vec<(f64, Vec<(String, f64)>)> = Vec::new();
+    let threads = crate::par::num_threads();
+    let _ = threads;
+    for inst in ctx.instances() {
+        let hg = inst.build();
+        for &k in &ctx.ks() {
+            let r = partition(&hg, k, &Config::detjet(1));
+            let total: f64 = r.timings.total_s().max(1e-9);
+            let mut parts: Vec<(String, f64)> = r
+                .timings
+                .phases()
+                .map(|(p, s)| (p.to_string(), s / total))
+                .collect();
+            parts.sort_by(|a, b| a.0.cmp(&b.0));
+            let refine_s = r.timings.get_s("refinement-jet");
+            rows.push(format!(
+                "{},{},{:.4},{}",
+                inst.name,
+                k,
+                refine_s,
+                parts
+                    .iter()
+                    .map(|(p, f)| format!("{p}:{f:.3}"))
+                    .collect::<Vec<_>>()
+                    .join(";")
+            ));
+            shares.push((refine_s, parts));
+        }
+    }
+    ctx.write_csv("fig12_time_shares.csv", "instance,k,refinement_s,shares", &rows);
+    // Aggregate shares sorted by refinement time (paper's x-axis).
+    shares.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let phases = ["preprocessing", "coarsening", "initial", "refinement-jet"];
+    println!("  mean time share per component:");
+    for ph in phases {
+        let vals: Vec<f64> = shares
+            .iter()
+            .map(|(_, ps)| {
+                ps.iter().find(|(p, _)| p == ph).map(|(_, f)| *f).unwrap_or(0.0)
+            })
+            .collect();
+        println!("    {ph:<16} {:.1}%", 100.0 * crate::util::stats::mean(&vals));
+    }
+}
+
+/// Table 1: geometric mean running times per preset per instance class.
+pub fn tab1(ctx: &ExpCtx) {
+    println!("== tab1: geometric mean running times ==");
+    let presets = ["detjet", "nondet-jet", "sdet", "detflows", "nondet-flows"];
+    let records = run_matrix(ctx, &presets, |p, s| Config::preset(p, s).unwrap());
+    ctx.write_records("tab1_runs.csv", &records);
+    let classes = [
+        crate::gen::InstanceClass::Hypergraph,
+        crate::gen::InstanceClass::IrregularGraph,
+        crate::gen::InstanceClass::RegularGraph,
+    ];
+    println!(
+        "  {:<14} {:>12} {:>12} {:>12} {:>12}",
+        "preset", "hypergraphs", "irregular", "regular", "all"
+    );
+    let mut rows = Vec::new();
+    for p in presets {
+        let mut cols = Vec::new();
+        for class in classes {
+            let times: Vec<f64> = records
+                .iter()
+                .filter(|r| r.preset == p && r.class == class)
+                .map(|r| r.time_s.max(1e-6))
+                .collect();
+            cols.push(if times.is_empty() { f64::NAN } else { geometric_mean(&times) });
+        }
+        let all: Vec<f64> = records
+            .iter()
+            .filter(|r| r.preset == p)
+            .map(|r| r.time_s.max(1e-6))
+            .collect();
+        let all_gm = geometric_mean(&all);
+        println!(
+            "  {:<14} {:>12.3} {:>12.3} {:>12.3} {:>12.3}",
+            p, cols[0], cols[1], cols[2], all_gm
+        );
+        rows.push(format!("{p},{:.4},{:.4},{:.4},{:.4}", cols[0], cols[1], cols[2], all_gm));
+    }
+    ctx.write_csv("tab1_geomean_times.csv", "preset,hypergraphs,irregular,regular,all", &rows);
+}
+
+/// Design-choice ablations the paper calls out in Section 4: the
+/// weight-aware rebalancer priority, the afterburner filter, and the
+/// deadzone parameter d.
+pub fn ablations(ctx: &ExpCtx) {
+    println!("== ablations: rebalancer priority / afterburner / deadzone ==");
+    let variants: Vec<(&str, Box<dyn Fn(u64) -> Config>)> = vec![
+        ("detjet", Box::new(Config::detjet)),
+        ("plain-priority", Box::new(|s| {
+            let mut c = Config::detjet(s);
+            c.refinement.jet.weight_aware_rebalance = false;
+            c
+        })),
+        ("no-afterburner", Box::new(|s| {
+            let mut c = Config::detjet(s);
+            c.refinement.jet.use_afterburner = false;
+            c
+        })),
+        ("deadzone-0", Box::new(|s| {
+            let mut c = Config::detjet(s);
+            c.refinement.jet.deadzone = 0.0;
+            c
+        })),
+        ("deadzone-.25", Box::new(|s| {
+            let mut c = Config::detjet(s);
+            c.refinement.jet.deadzone = 0.25;
+            c
+        })),
+    ];
+    let names: Vec<&str> = variants.iter().map(|(n, _)| *n).collect();
+    let mut records = Vec::new();
+    let threads = crate::par::num_threads();
+    for inst in ctx.instances() {
+        let hg = inst.build();
+        for &k in &ctx.ks() {
+            for &seed in &ctx.seeds() {
+                for (name, make) in &variants {
+                    let r = partition(&hg, k, &make(seed));
+                    records.push(RunRecord::from_result(&inst, name, k, seed, threads, &r));
+                }
+            }
+        }
+    }
+    ctx.write_records("ablations.csv", &records);
+    let objs = objectives_by_preset(&records, &names);
+    print_profile("design-choice ablations", &names, &objs);
+    print_geomeans(&records, &names);
+}
+
+/// Run every experiment.
+pub fn run_all(ctx: &ExpCtx) {
+    fig1_fig8(ctx);
+    fig3_fig11(ctx);
+    fig4(ctx);
+    fig5(ctx);
+    fig6(ctx);
+    fig7(ctx);
+    fig9(ctx);
+    fig10(ctx);
+    fig12(ctx);
+    tab1(ctx);
+    ablations(ctx);
+}
+
+/// Dispatch by experiment id.
+pub fn run_by_name(ctx: &ExpCtx, name: &str) -> bool {
+    match name {
+        "fig1" | "fig8" | "fig1_fig8" => fig1_fig8(ctx),
+        "fig3" | "fig11" | "fig3_fig11" => fig3_fig11(ctx),
+        "fig4" => fig4(ctx),
+        "fig5" => fig5(ctx),
+        "fig6" => fig6(ctx),
+        "fig7" => fig7(ctx),
+        "fig9" => fig9(ctx),
+        "fig10" => fig10(ctx),
+        "fig12" => fig12(ctx),
+        "tab1" => tab1(ctx),
+        "ablations" => ablations(ctx),
+        "all" => run_all(ctx),
+        _ => return false,
+    }
+    true
+}

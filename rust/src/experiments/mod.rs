@@ -1,0 +1,14 @@
+//! Experiment harness — regenerates every table and figure of the
+//! paper's evaluation (see DESIGN.md §3 for the index).
+//!
+//! Entry points: the bench binary `rust/benches/figures.rs`
+//! (`cargo bench -- <figN|tabN|all> [--full]`) or
+//! [`figures::run_by_name`] programmatically. Results land in
+//! `results/*.csv` with ASCII renderings on stdout.
+
+pub mod figures;
+pub mod profiles;
+pub mod runner;
+
+pub use profiles::{performance_profile, ProfilePoint};
+pub use runner::{ExpCtx, RunRecord};

@@ -1,0 +1,101 @@
+//! Dolan–Moré performance profiles — the paper's quality-comparison plot
+//! (Figs. 1, 3, 4, 5, 6, 8, 9, 10, 11).
+//!
+//! For algorithms `A` over instances `I` with minimization objectives
+//! `q_A(I)`, the profile of `A` maps τ to the fraction of instances with
+//! `q_A(I) ≤ τ · min_{A'} q_{A'}(I)`.
+
+/// One evaluated (τ, fraction) sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProfilePoint {
+    pub tau: f64,
+    pub fraction: f64,
+}
+
+/// Compute performance profiles.
+///
+/// `objectives[a][i]` = objective of algorithm `a` on instance `i`
+/// (`f64::INFINITY` marks a failed/timeout run, matching the paper's ✗
+/// convention). Returns, per algorithm, the profile sampled at `taus`.
+pub fn performance_profile(
+    objectives: &[Vec<f64>],
+    taus: &[f64],
+) -> Vec<Vec<ProfilePoint>> {
+    assert!(!objectives.is_empty());
+    let n_inst = objectives[0].len();
+    assert!(objectives.iter().all(|o| o.len() == n_inst));
+    // Per-instance best (shift by +1 to handle zero objectives, as is
+    // standard for connectivity values that can be 0).
+    let best: Vec<f64> = (0..n_inst)
+        .map(|i| {
+            objectives
+                .iter()
+                .map(|o| o[i] + 1.0)
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    objectives
+        .iter()
+        .map(|obj| {
+            taus.iter()
+                .map(|&tau| {
+                    let hits = (0..n_inst)
+                        .filter(|&i| {
+                            best[i].is_finite() && (obj[i] + 1.0) <= tau * best[i]
+                        })
+                        .count();
+                    ProfilePoint { tau, fraction: hits as f64 / n_inst as f64 }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Standard τ sampling: dense near 1, log-spaced tail (mirrors the
+/// paper's plot axes `1 … 1.5, 2, 10, 100+`).
+pub fn default_taus() -> Vec<f64> {
+    let mut taus: Vec<f64> = (0..=50).map(|i| 1.0 + i as f64 * 0.01).collect();
+    taus.extend([1.6, 1.7, 1.8, 1.9, 2.0, 3.0, 5.0, 10.0, 100.0]);
+    taus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominant_algorithm_hits_one_at_tau_one() {
+        let a = vec![10.0, 20.0, 30.0]; // always best
+        let b = vec![11.0, 40.0, 30.0];
+        let prof = performance_profile(&[a, b], &[1.0, 1.1, 2.0, 100.0]);
+        assert_eq!(prof[0][0].fraction, 1.0);
+        assert!(prof[1][0].fraction < 1.0);
+        // At huge tau everyone reaches 1 (no failures).
+        assert_eq!(prof[1][3].fraction, 1.0);
+    }
+
+    #[test]
+    fn failed_runs_never_qualify() {
+        let a = vec![1.0, f64::INFINITY];
+        let b = vec![2.0, 5.0];
+        let prof = performance_profile(&[a, b], &[1.0, 1000.0]);
+        assert_eq!(prof[0][1].fraction, 0.5, "failure cannot satisfy any tau");
+        assert_eq!(prof[1][1].fraction, 1.0);
+    }
+
+    #[test]
+    fn zero_objectives_handled() {
+        let a = vec![0.0];
+        let b = vec![0.0];
+        let prof = performance_profile(&[a, b], &[1.0]);
+        assert_eq!(prof[0][0].fraction, 1.0);
+        assert_eq!(prof[1][0].fraction, 1.0);
+    }
+
+    #[test]
+    fn taus_sorted_and_start_at_one() {
+        let t = default_taus();
+        assert_eq!(t[0], 1.0);
+        assert!(t.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -1,0 +1,263 @@
+//! Shared experiment infrastructure: the run matrix, CSV emission, and
+//! ASCII renderings of the paper's plots.
+
+use crate::config::Config;
+use crate::gen::{Instance, InstanceClass};
+use crate::partitioner::{partition, PartitionResult};
+use crate::util::stats::geometric_mean;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// One partitioning run's record — a row in every experiment CSV.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub instance: String,
+    pub class: InstanceClass,
+    pub preset: String,
+    pub k: usize,
+    pub seed: u64,
+    pub threads: usize,
+    pub km1: i64,
+    pub imbalance: f64,
+    pub balanced: bool,
+    pub time_s: f64,
+    pub phase_s: Vec<(&'static str, f64)>,
+}
+
+impl RunRecord {
+    pub fn from_result(
+        inst: &Instance,
+        preset: &str,
+        k: usize,
+        seed: u64,
+        threads: usize,
+        r: &PartitionResult,
+    ) -> Self {
+        RunRecord {
+            instance: inst.name.to_string(),
+            class: inst.class,
+            preset: preset.to_string(),
+            k,
+            seed,
+            threads,
+            km1: r.km1,
+            imbalance: r.imbalance,
+            balanced: r.balanced,
+            time_s: r.total_s,
+            phase_s: r.timings.phases().collect(),
+        }
+    }
+
+    /// Objective with the paper's failure convention: unbalanced results
+    /// count as failures (∞) in profiles.
+    pub fn objective(&self) -> f64 {
+        if self.balanced {
+            self.km1 as f64
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Experiment context: output directory + quick/full switch.
+pub struct ExpCtx {
+    pub out_dir: PathBuf,
+    pub quick: bool,
+}
+
+impl ExpCtx {
+    pub fn new(out_dir: impl AsRef<Path>, quick: bool) -> Self {
+        let out_dir = out_dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&out_dir).expect("create results dir");
+        ExpCtx { out_dir, quick }
+    }
+
+    /// Instance set (mini in quick mode).
+    pub fn instances(&self) -> Vec<Instance> {
+        if self.quick {
+            crate::gen::suite::mini_suite()
+        } else {
+            crate::gen::suite()
+        }
+    }
+
+    /// k values (reduced in quick mode; paper: {2,8,11,16,27,64,128}).
+    pub fn ks(&self) -> Vec<usize> {
+        if self.quick {
+            vec![4, 8]
+        } else {
+            vec![2, 8, 16, 27]
+        }
+    }
+
+    pub fn seeds(&self) -> Vec<u64> {
+        if self.quick {
+            vec![1]
+        } else {
+            vec![1, 2, 3]
+        }
+    }
+
+    pub fn write_csv(&self, name: &str, header: &str, rows: &[String]) {
+        let path = self.out_dir.join(name);
+        let mut f = std::fs::File::create(&path).expect("create csv");
+        writeln!(f, "{header}").unwrap();
+        for row in rows {
+            writeln!(f, "{row}").unwrap();
+        }
+        println!("  wrote {}", path.display());
+    }
+
+    pub fn write_records(&self, name: &str, records: &[RunRecord]) {
+        let rows: Vec<String> = records
+            .iter()
+            .map(|r| {
+                format!(
+                    "{},{},{},{},{},{},{},{:.6},{},{:.6}",
+                    r.instance,
+                    r.class.name(),
+                    r.preset,
+                    r.k,
+                    r.seed,
+                    r.threads,
+                    r.km1,
+                    r.imbalance,
+                    r.balanced,
+                    r.time_s
+                )
+            })
+            .collect();
+        self.write_csv(
+            name,
+            "instance,class,preset,k,seed,threads,km1,imbalance,balanced,time_s",
+            &rows,
+        );
+    }
+}
+
+/// Run the full (instances × presets × ks × seeds) matrix.
+pub fn run_matrix(
+    ctx: &ExpCtx,
+    presets: &[&str],
+    config_of: impl Fn(&str, u64) -> Config,
+) -> Vec<RunRecord> {
+    let mut records = Vec::new();
+    let threads = crate::par::num_threads();
+    for inst in ctx.instances() {
+        let hg = inst.build();
+        for &k in &ctx.ks() {
+            for &seed in &ctx.seeds() {
+                for preset in presets {
+                    let cfg = config_of(preset, seed);
+                    let r = partition(&hg, k, &cfg);
+                    eprintln!(
+                        "    {} k={k} seed={seed} {preset}: km1={} t={:.2}s",
+                        inst.name, r.km1, r.total_s
+                    );
+                    records.push(RunRecord::from_result(&inst, preset, k, seed, threads, &r));
+                }
+            }
+        }
+    }
+    records
+}
+
+/// Aggregate per-(instance,k) over seeds with the arithmetic mean (the
+/// paper's per-instance aggregate), returning objective vectors per
+/// preset aligned over instances — the performance-profile input.
+pub fn objectives_by_preset(records: &[RunRecord], presets: &[&str]) -> Vec<Vec<f64>> {
+    let mut keys: Vec<(String, usize)> = records
+        .iter()
+        .map(|r| (r.instance.clone(), r.k))
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    keys.sort();
+    presets
+        .iter()
+        .map(|p| {
+            keys.iter()
+                .map(|(inst, k)| {
+                    let objs: Vec<f64> = records
+                        .iter()
+                        .filter(|r| &r.preset == p && &r.instance == inst && r.k == *k)
+                        .map(|r| r.objective())
+                        .collect();
+                    if objs.is_empty() || objs.iter().any(|o| !o.is_finite()) {
+                        f64::INFINITY
+                    } else {
+                        objs.iter().sum::<f64>() / objs.len() as f64
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Print an ASCII performance profile (sampled at key τ values) — the
+/// textual rendering of the paper's profile plots.
+pub fn print_profile(title: &str, presets: &[&str], objectives: &[Vec<f64>]) {
+    let taus = [1.0, 1.01, 1.05, 1.1, 1.2, 1.5, 2.0];
+    let profs = crate::experiments::profiles::performance_profile(objectives, &taus);
+    println!("\n  {title} — fraction of instances within τ· best:");
+    print!("  {:<14}", "preset");
+    for t in taus {
+        print!(" τ={t:<5}");
+    }
+    println!();
+    for (i, p) in presets.iter().enumerate() {
+        print!("  {p:<14}");
+        for pt in &profs[i] {
+            print!(" {:<7.2}", pt.fraction);
+        }
+        println!();
+    }
+}
+
+/// Geometric-mean objective and time per preset (shifted for zeros).
+pub fn print_geomeans(records: &[RunRecord], presets: &[&str]) {
+    println!("\n  geometric means (objective uses km1+1):");
+    println!("  {:<14} {:>12} {:>10}", "preset", "km1(gm)", "time(gm s)");
+    for p in presets {
+        let rs: Vec<&RunRecord> = records.iter().filter(|r| &r.preset == p).collect();
+        if rs.is_empty() {
+            continue;
+        }
+        let km1: Vec<f64> = rs.iter().map(|r| (r.km1 + 1) as f64).collect();
+        let time: Vec<f64> = rs.iter().map(|r| r.time_s.max(1e-6)).collect();
+        println!(
+            "  {:<14} {:>12.1} {:>10.3}",
+            p,
+            geometric_mean(&km1),
+            geometric_mean(&time)
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_and_aggregates_smoke() {
+        let dir = std::env::temp_dir().join("detpart_exp_test");
+        let ctx = ExpCtx::new(&dir, true);
+        // Tiny custom matrix: one instance, one k, two presets.
+        let inst = crate::gen::instance_by_name("spm2d-64").unwrap();
+        let hg = inst.build();
+        let mut records = Vec::new();
+        for preset in ["sdet", "detjet"] {
+            let cfg = Config::preset(preset, 1).unwrap();
+            let r = partition(&hg, 4, &cfg);
+            records.push(RunRecord::from_result(&inst, preset, 4, 1, 1, &r));
+        }
+        let objs = objectives_by_preset(&records, &["sdet", "detjet"]);
+        assert_eq!(objs.len(), 2);
+        assert_eq!(objs[0].len(), 1);
+        assert!(objs[1][0] <= objs[0][0], "jet should beat sdet here");
+        ctx.write_records("smoke.csv", &records);
+        assert!(dir.join("smoke.csv").exists());
+        print_profile("smoke", &["sdet", "detjet"], &objs);
+        print_geomeans(&records, &["sdet", "detjet"]);
+    }
+}

@@ -1,0 +1,178 @@
+//! Mesh-structured instances: 2D/3D grid and torus *graphs* (the paper's
+//! "regular" class — finite-element and road-like) and sparse-matrix
+//! *hypergraphs* via the column-net model of Çatalyürek & Aykanat
+//! (hyperedge per matrix column of a 5/7-point stencil — the
+//! SuiteSparse-like class).
+
+use crate::datastructures::{Hypergraph, HypergraphBuilder};
+use crate::VertexId;
+
+/// 2D grid graph `w × h` with 4-neighborhood.
+pub fn grid2d_graph(w: usize, h: usize) -> Hypergraph {
+    let idx = |x: usize, y: usize| (y * w + x) as VertexId;
+    let mut b = HypergraphBuilder::new(w * h);
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w {
+                b.add_edge(&[idx(x, y), idx(x + 1, y)], 1);
+            }
+            if y + 1 < h {
+                b.add_edge(&[idx(x, y), idx(x, y + 1)], 1);
+            }
+        }
+    }
+    b.build()
+}
+
+/// 3D grid graph `w × h × d` with 6-neighborhood.
+pub fn grid3d_graph(w: usize, h: usize, d: usize) -> Hypergraph {
+    let idx = |x: usize, y: usize, z: usize| (z * w * h + y * w + x) as VertexId;
+    let mut b = HypergraphBuilder::new(w * h * d);
+    for z in 0..d {
+        for y in 0..h {
+            for x in 0..w {
+                if x + 1 < w {
+                    b.add_edge(&[idx(x, y, z), idx(x + 1, y, z)], 1);
+                }
+                if y + 1 < h {
+                    b.add_edge(&[idx(x, y, z), idx(x, y + 1, z)], 1);
+                }
+                if z + 1 < d {
+                    b.add_edge(&[idx(x, y, z), idx(x, y, z + 1)], 1);
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+/// 2D torus graph (wrap-around grid) — no boundary effects.
+pub fn torus_graph(w: usize, h: usize) -> Hypergraph {
+    assert!(w >= 3 && h >= 3, "torus needs w,h >= 3 for simple edges");
+    let idx = |x: usize, y: usize| (y * w + x) as VertexId;
+    let mut b = HypergraphBuilder::new(w * h);
+    for y in 0..h {
+        for x in 0..w {
+            b.add_edge(&[idx(x, y), idx((x + 1) % w, y)], 1);
+            b.add_edge(&[idx(x, y), idx(x, (y + 1) % h)], 1);
+        }
+    }
+    b.build()
+}
+
+/// Column-net hypergraph of the 5-point-stencil matrix on a `w × h` grid:
+/// vertex per row, hyperedge per column j containing `{i : A_ij ≠ 0}` =
+/// j and its grid neighbors. Models SpMV partitioning inputs.
+pub fn spm_hypergraph_2d(w: usize, h: usize) -> Hypergraph {
+    let idx = |x: usize, y: usize| (y * w + x) as VertexId;
+    let mut b = HypergraphBuilder::new(w * h);
+    let mut pins: Vec<VertexId> = Vec::with_capacity(5);
+    for y in 0..h {
+        for x in 0..w {
+            pins.clear();
+            pins.push(idx(x, y));
+            if x > 0 {
+                pins.push(idx(x - 1, y));
+            }
+            if x + 1 < w {
+                pins.push(idx(x + 1, y));
+            }
+            if y > 0 {
+                pins.push(idx(x, y - 1));
+            }
+            if y + 1 < h {
+                pins.push(idx(x, y + 1));
+            }
+            pins.sort_unstable();
+            b.add_edge(&pins, 1);
+        }
+    }
+    b.build()
+}
+
+/// Column-net hypergraph of the 7-point-stencil matrix on a 3D grid.
+pub fn spm_hypergraph_3d(w: usize, h: usize, d: usize) -> Hypergraph {
+    let idx = |x: usize, y: usize, z: usize| (z * w * h + y * w + x) as VertexId;
+    let mut b = HypergraphBuilder::new(w * h * d);
+    let mut pins: Vec<VertexId> = Vec::with_capacity(7);
+    for z in 0..d {
+        for y in 0..h {
+            for x in 0..w {
+                pins.clear();
+                pins.push(idx(x, y, z));
+                if x > 0 {
+                    pins.push(idx(x - 1, y, z));
+                }
+                if x + 1 < w {
+                    pins.push(idx(x + 1, y, z));
+                }
+                if y > 0 {
+                    pins.push(idx(x, y - 1, z));
+                }
+                if y + 1 < h {
+                    pins.push(idx(x, y + 1, z));
+                }
+                if z > 0 {
+                    pins.push(idx(x, y, z - 1));
+                }
+                if z + 1 < d {
+                    pins.push(idx(x, y, z + 1));
+                }
+                pins.sort_unstable();
+                b.add_edge(&pins, 1);
+            }
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid2d_counts() {
+        let g = grid2d_graph(4, 3);
+        assert_eq!(g.num_vertices(), 12);
+        assert_eq!(g.num_edges(), 3 * 3 + 4 * 2); // horizontal + vertical
+        assert!(g.is_graph());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn grid3d_counts() {
+        let g = grid3d_graph(3, 3, 3);
+        assert_eq!(g.num_vertices(), 27);
+        assert_eq!(g.num_edges(), 3 * (2 * 3 * 3));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn torus_is_regular() {
+        let g = torus_graph(5, 4);
+        assert_eq!(g.num_edges(), 2 * 20);
+        for v in 0..20u32 {
+            assert_eq!(g.degree(v), 4);
+        }
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn spm2d_structure() {
+        let h = spm_hypergraph_2d(3, 3);
+        assert_eq!(h.num_vertices(), 9);
+        assert_eq!(h.num_edges(), 9);
+        // Center column has 5 pins, corners 3.
+        assert_eq!(h.edge_size(4), 5);
+        assert_eq!(h.edge_size(0), 3);
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn spm3d_structure() {
+        let h = spm_hypergraph_3d(3, 3, 3);
+        assert_eq!(h.num_edges(), 27);
+        assert_eq!(h.edge_size(13), 7); // center
+        h.validate().unwrap();
+    }
+}

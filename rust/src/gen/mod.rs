@@ -1,0 +1,23 @@
+//! Deterministic synthetic instance generators.
+//!
+//! The paper evaluates on three benchmark families: 94 hypergraphs
+//! (SuiteSparse sparse matrices, SAT 2014 formulas, DAC 2012 VLSI
+//! netlists), 38 *irregular* graphs (social/web networks) and 33
+//! *regular* graphs (meshes, road networks). Those corpora are
+//! multi-gigabyte downloads; this module generates seeded synthetic
+//! stand-ins from the same structural classes so every experiment in the
+//! paper can be regenerated offline at laptop scale (see DESIGN.md
+//! "substitutions"). All generators are pure functions of their
+//! parameters and seed.
+
+pub mod grid;
+pub mod rmat;
+pub mod sat;
+pub mod suite;
+pub mod vlsi;
+
+pub use grid::{grid2d_graph, grid3d_graph, spm_hypergraph_2d, spm_hypergraph_3d, torus_graph};
+pub use rmat::rmat_graph;
+pub use sat::sat_hypergraph;
+pub use suite::{instance_by_name, suite, Instance, InstanceClass};
+pub use vlsi::vlsi_netlist;

@@ -1,0 +1,97 @@
+//! R-MAT graph generator (Chakrabarti et al.) — the stand-in for the
+//! paper's *irregular* class (social networks, web crawls): heavy-tailed
+//! degree distribution, low diameter, community-ish recursive structure.
+
+use crate::datastructures::{Hypergraph, HypergraphBuilder};
+use crate::util::Rng;
+use crate::VertexId;
+use std::collections::HashSet;
+
+/// Generate an R-MAT graph with `2^scale` vertices and ~`edge_factor·2^scale`
+/// undirected simple edges using the Graph500 probabilities
+/// (a,b,c,d) = (0.57, 0.19, 0.19, 0.05). Self-loops and duplicates are
+/// dropped (so the final count can be slightly lower). Isolated vertices
+/// are kept — real social graphs have them after simplification too.
+pub fn rmat_graph(scale: u32, edge_factor: usize, seed: u64) -> Hypergraph {
+    let n = 1usize << scale;
+    let target = n * edge_factor;
+    let mut rng = Rng::new(seed);
+    let mut seen: HashSet<(VertexId, VertexId)> = HashSet::with_capacity(target * 2);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::with_capacity(target);
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    let mut attempts = 0usize;
+    while edges.len() < target && attempts < target * 20 {
+        attempts += 1;
+        let (mut lo_u, mut lo_v) = (0usize, 0usize);
+        let mut half = n >> 1;
+        while half > 0 {
+            let r = rng.next_f64();
+            if r < a {
+                // top-left
+            } else if r < a + b {
+                lo_v += half;
+            } else if r < a + b + c {
+                lo_u += half;
+            } else {
+                lo_u += half;
+                lo_v += half;
+            }
+            half >>= 1;
+        }
+        let (u, v) = (lo_u as VertexId, lo_v as VertexId);
+        if u == v {
+            continue;
+        }
+        let key = (u.min(v), u.max(v));
+        if seen.insert(key) {
+            edges.push(key);
+        }
+    }
+    // Canonical order → deterministic edge ids independent of HashSet.
+    edges.sort_unstable();
+    let mut builder = HypergraphBuilder::new(n);
+    for (u, v) in edges {
+        builder.add_edge(&[u, v], 1);
+    }
+    builder.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = rmat_graph(8, 8, 42);
+        let b = rmat_graph(8, 8, 42);
+        assert_eq!(a.num_edges(), b.num_edges());
+        for e in 0..a.num_edges() {
+            assert_eq!(a.pins(e as u32), b.pins(e as u32));
+        }
+        let c = rmat_graph(8, 8, 43);
+        assert_ne!(
+            (0..a.num_edges()).map(|e| a.pins(e as u32).to_vec()).collect::<Vec<_>>(),
+            (0..c.num_edges()).map(|e| c.pins(e as u32).to_vec()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn skewed_degrees() {
+        let g = rmat_graph(10, 8, 7);
+        assert!(g.is_graph());
+        g.validate().unwrap();
+        let max_deg = (0..g.num_vertices()).map(|v| g.degree(v as u32)).max().unwrap();
+        let avg = g.avg_degree();
+        assert!(
+            max_deg as f64 > 5.0 * avg,
+            "rmat should be heavy-tailed: max {max_deg} avg {avg}"
+        );
+    }
+
+    #[test]
+    fn near_target_edge_count() {
+        let g = rmat_graph(9, 8, 1);
+        let target = 512 * 8;
+        assert!(g.num_edges() > target / 2, "{} of {target}", g.num_edges());
+    }
+}

@@ -1,0 +1,62 @@
+//! Random k-SAT clause hypergraphs — stand-in for the SAT Competition
+//! 2014 instances in the paper's hypergraph benchmark set. Vertices are
+//! variables, hyperedges are clauses (the standard "variable incidence"
+//! hypergraph used in SAT partitioning studies). Clause sizes are mixed
+//! (mostly 3, some longer) to produce the size skew real CNFs exhibit.
+
+use crate::datastructures::{Hypergraph, HypergraphBuilder};
+use crate::util::Rng;
+use crate::VertexId;
+
+/// `num_vars` variables, `num_clauses` clauses; clause length 3 with
+/// probability 0.85, otherwise uniform in `[4, max_len]`.
+pub fn sat_hypergraph(num_vars: usize, num_clauses: usize, max_len: usize, seed: u64) -> Hypergraph {
+    assert!(num_vars >= max_len.max(3));
+    let mut rng = Rng::new(seed);
+    let mut builder = HypergraphBuilder::new(num_vars);
+    let mut pins: Vec<VertexId> = Vec::new();
+    for _ in 0..num_clauses {
+        let len = if max_len <= 3 || rng.next_bool(0.85) {
+            3
+        } else {
+            rng.next_in(4, max_len as u64 + 1) as usize
+        };
+        pins.clear();
+        while pins.len() < len {
+            let v = rng.next_range(num_vars as u64) as VertexId;
+            if !pins.contains(&v) {
+                pins.push(v);
+            }
+        }
+        pins.sort_unstable();
+        builder.add_edge(&pins, 1);
+    }
+    builder.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_determinism() {
+        let a = sat_hypergraph(200, 800, 10, 5);
+        assert_eq!(a.num_vertices(), 200);
+        assert_eq!(a.num_edges(), 800);
+        a.validate().unwrap();
+        let b = sat_hypergraph(200, 800, 10, 5);
+        for e in 0..800 {
+            assert_eq!(a.pins(e as u32), b.pins(e as u32));
+        }
+    }
+
+    #[test]
+    fn clause_length_mix() {
+        let h = sat_hypergraph(500, 2000, 12, 9);
+        let triples = (0..h.num_edges()).filter(|&e| h.edge_size(e as u32) == 3).count();
+        let long = (0..h.num_edges()).filter(|&e| h.edge_size(e as u32) > 3).count();
+        assert!(triples > 1400, "{triples}");
+        assert!(long > 100, "{long}");
+        assert!(h.max_edge_size() <= 12);
+    }
+}

@@ -1,0 +1,135 @@
+//! The benchmark-suite registry (Table 2 stand-in).
+//!
+//! Mirrors the paper's three instance families at laptop scale:
+//! * `Hypergraph` — SuiteSparse-like SpM column-nets, SAT 2014-like CNFs,
+//!   DAC 2012-like VLSI netlists;
+//! * `IrregularGraph` — R-MAT social/web-like graphs;
+//! * `RegularGraph` — 2D/3D meshes and tori.
+//!
+//! Every instance is a named, seeded, pure function — `detpart generate
+//! --list` prints this registry, and all experiment harnesses iterate it.
+
+use crate::datastructures::Hypergraph;
+
+/// The paper's instance classification (Section 7.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum InstanceClass {
+    Hypergraph,
+    IrregularGraph,
+    RegularGraph,
+}
+
+impl InstanceClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            InstanceClass::Hypergraph => "hypergraph",
+            InstanceClass::IrregularGraph => "irregular",
+            InstanceClass::RegularGraph => "regular",
+        }
+    }
+}
+
+/// A named benchmark instance.
+pub struct Instance {
+    pub name: &'static str,
+    pub class: InstanceClass,
+    build: fn() -> Hypergraph,
+}
+
+impl Instance {
+    pub fn build(&self) -> Hypergraph {
+        (self.build)()
+    }
+}
+
+macro_rules! inst {
+    ($name:literal, $class:ident, $builder:expr) => {
+        Instance { name: $name, class: InstanceClass::$class, build: $builder }
+    };
+}
+
+/// The full default suite (see module docs). Sizes are chosen so the
+/// complete experiment matrix (presets × k × seeds) runs in minutes on a
+/// laptop while still exceeding the coarsening threshold by a wide margin.
+pub fn suite() -> Vec<Instance> {
+    vec![
+        // --- hypergraphs: sparse matrices (column-net) ---
+        inst!("spm2d-64", Hypergraph, || super::spm_hypergraph_2d(64, 64)),
+        inst!("spm2d-96", Hypergraph, || super::spm_hypergraph_2d(96, 96)),
+        inst!("spm3d-16", Hypergraph, || super::spm_hypergraph_3d(16, 16, 16)),
+        inst!("spm3d-22", Hypergraph, || super::spm_hypergraph_3d(22, 22, 22)),
+        // --- hypergraphs: SAT ---
+        inst!("sat-3k", Hypergraph, || super::sat_hypergraph(1000, 3000, 10, 1001)),
+        inst!("sat-8k", Hypergraph, || super::sat_hypergraph(2500, 8000, 14, 1002)),
+        inst!("sat-16k", Hypergraph, || super::sat_hypergraph(4000, 16000, 18, 1003)),
+        // --- hypergraphs: VLSI ---
+        inst!("vlsi-48", Hypergraph, || super::vlsi_netlist(48, 1.15, 2001)),
+        inst!("vlsi-72", Hypergraph, || super::vlsi_netlist(72, 1.15, 2002)),
+        inst!("vlsi-96", Hypergraph, || super::vlsi_netlist(96, 1.15, 2003)),
+        // --- irregular graphs (social/web-like) ---
+        inst!("rmat-s11", IrregularGraph, || super::rmat_graph(11, 8, 3001)),
+        inst!("rmat-s12", IrregularGraph, || super::rmat_graph(12, 8, 3002)),
+        inst!("rmat-s13", IrregularGraph, || super::rmat_graph(13, 6, 3003)),
+        inst!("rmat-s13-dense", IrregularGraph, || super::rmat_graph(13, 12, 3004)),
+        // --- regular graphs (mesh/road-like) ---
+        inst!("grid2d-100", RegularGraph, || super::grid2d_graph(100, 100)),
+        inst!("grid3d-20", RegularGraph, || super::grid3d_graph(20, 20, 20)),
+        inst!("torus-90", RegularGraph, || super::torus_graph(90, 90)),
+        inst!("grid2d-wide", RegularGraph, || super::grid2d_graph(250, 40)),
+    ]
+}
+
+/// A small subset for quick experiments / CI-style tests.
+pub fn mini_suite() -> Vec<Instance> {
+    suite()
+        .into_iter()
+        .filter(|i| matches!(i.name, "spm2d-64" | "sat-3k" | "vlsi-48" | "rmat-s11" | "grid2d-100"))
+        .collect()
+}
+
+/// Look up a single instance by name.
+pub fn instance_by_name(name: &str) -> Option<Instance> {
+    suite().into_iter().find(|i| i.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_instances_build_and_validate() {
+        for inst in mini_suite() {
+            let h = inst.build();
+            h.validate().unwrap();
+            assert!(h.num_vertices() >= 1000, "{} too small", inst.name);
+        }
+    }
+
+    #[test]
+    fn classes_present() {
+        let s = suite();
+        for class in [
+            InstanceClass::Hypergraph,
+            InstanceClass::IrregularGraph,
+            InstanceClass::RegularGraph,
+        ] {
+            assert!(s.iter().filter(|i| i.class == class).count() >= 3, "{class:?}");
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(instance_by_name("sat-3k").is_some());
+        assert!(instance_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn names_unique() {
+        let s = suite();
+        let mut names: Vec<_> = s.iter().map(|i| i.name).collect();
+        names.sort_unstable();
+        let n = names.len();
+        names.dedup();
+        assert_eq!(names.len(), n);
+    }
+}

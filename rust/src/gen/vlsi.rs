@@ -1,0 +1,91 @@
+//! Rent's-rule VLSI netlist generator — stand-in for the DAC 2012
+//! placement-contest netlists in the paper's hypergraph set. Cells are
+//! laid out on a virtual 2D die; nets connect a driver cell to sinks
+//! drawn from a local window (locality follows placement reality), with
+//! net degrees from a truncated power law (2-pin nets dominate, a tail of
+//! high-fanout nets models clock/reset trees).
+
+use crate::datastructures::{Hypergraph, HypergraphBuilder};
+use crate::util::Rng;
+use crate::VertexId;
+
+/// Generate a netlist hypergraph with `side × side` cells and
+/// `nets_per_cell · side²` nets.
+pub fn vlsi_netlist(side: usize, nets_per_cell: f64, seed: u64) -> Hypergraph {
+    let n = side * side;
+    let num_nets = (n as f64 * nets_per_cell).round() as usize;
+    let mut rng = Rng::new(seed);
+    let mut builder = HypergraphBuilder::new(n);
+    let mut pins: Vec<VertexId> = Vec::new();
+    for _ in 0..num_nets {
+        // Net degree: 2 + floor(pareto); clipped.
+        let u = rng.next_f64().max(1e-9);
+        let extra = (u.powf(-0.45) - 1.0).floor() as usize; // heavy-ish tail
+        let degree = (2 + extra).min(24).min(n - 1);
+        // Driver cell.
+        let dx = rng.next_range(side as u64) as usize;
+        let dy = rng.next_range(side as u64) as usize;
+        // Window radius grows with degree (big nets span more die).
+        let radius = 2 + degree;
+        pins.clear();
+        pins.push((dy * side + dx) as VertexId);
+        let mut guard = 0;
+        while pins.len() < degree && guard < 100 {
+            guard += 1;
+            let ox = rng.next_in(0, 2 * radius as u64 + 1) as i64 - radius as i64;
+            let oy = rng.next_in(0, 2 * radius as u64 + 1) as i64 - radius as i64;
+            let x = dx as i64 + ox;
+            let y = dy as i64 + oy;
+            if x < 0 || y < 0 || x >= side as i64 || y >= side as i64 {
+                continue;
+            }
+            let c = (y as usize * side + x as usize) as VertexId;
+            if !pins.contains(&c) {
+                pins.push(c);
+            }
+        }
+        if pins.len() >= 2 {
+            pins.sort_unstable();
+            builder.add_edge(&pins, 1);
+        }
+    }
+    // Cell areas: mostly 1, occasional macro.
+    let weights = (0..n)
+        .map(|i| if crate::util::rng::hash_rng(seed ^ 0xC0FFEE, i as u64, 100) < 2 { 8 } else { 1 })
+        .collect();
+    let mut b2 = builder;
+    b2.set_vertex_weights(weights);
+    b2.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_valid() {
+        let a = vlsi_netlist(24, 1.1, 3);
+        let b = vlsi_netlist(24, 1.1, 3);
+        assert_eq!(a.num_edges(), b.num_edges());
+        a.validate().unwrap();
+        assert_eq!(a.num_vertices(), 576);
+    }
+
+    #[test]
+    fn two_pin_nets_dominate_with_fanout_tail() {
+        let h = vlsi_netlist(40, 1.2, 11);
+        let total = h.num_edges();
+        let two = (0..total).filter(|&e| h.edge_size(e as u32) == 2).count();
+        let big = (0..total).filter(|&e| h.edge_size(e as u32) >= 8).count();
+        assert!(two as f64 > 0.5 * total as f64, "two-pin {two}/{total}");
+        assert!(big > 0, "expected some high-fanout nets");
+    }
+
+    #[test]
+    fn has_macro_cells() {
+        let h = vlsi_netlist(32, 1.0, 7);
+        let heavy = (0..h.num_vertices()).filter(|&v| h.vertex_weight(v as u32) > 1).count();
+        assert!(heavy > 0);
+        assert!(heavy < h.num_vertices() / 10);
+    }
+}

@@ -1,0 +1,339 @@
+//! Initial partitioning on the coarsest hypergraph.
+//!
+//! Recursive bipartitioning with a deterministic portfolio per recursion
+//! node: several seeded attempts of three constructive heuristics
+//! (random balanced fill, BFS region growing, greedy boundary growing),
+//! each polished by 2-way label propagation; the best attempt by
+//! (balance, objective, imbalance, attempt-id) wins — a total order, so
+//! the result is deterministic even though attempts run in parallel.
+
+use crate::config::InitialConfig;
+use crate::datastructures::{Hypergraph, PartitionedHypergraph};
+use crate::refinement::lp::refine_lp;
+use crate::util::rng::{hash64, Rng};
+use crate::{BlockId, EdgeId, VertexId, Weight};
+
+/// Compute a k-way initial partition of (the coarsest) `hg`.
+pub fn initial_partition(
+    hg: &Hypergraph,
+    k: usize,
+    eps: f64,
+    cfg: &InitialConfig,
+    seed: u64,
+) -> Vec<BlockId> {
+    assert!(k >= 1);
+    let mut part = vec![0 as BlockId; hg.num_vertices()];
+    if k == 1 {
+        return part;
+    }
+    // ε is tightened during IP; the multilevel refinement (with its
+    // rebalancer) re-opens the slack afterwards.
+    let ip_eps = (eps * 0.5).max(0.01);
+    recurse(hg, k, ip_eps, cfg, seed, &mut part, 0);
+    part
+}
+
+/// Recursively bipartition the sub-hypergraph of vertices currently
+/// labeled `block_base` into `[block_base, block_base + k)`.
+fn recurse(
+    hg: &Hypergraph,
+    k: usize,
+    eps: f64,
+    cfg: &InitialConfig,
+    seed: u64,
+    part: &mut [BlockId],
+    block_base: BlockId,
+) {
+    if k <= 1 {
+        return;
+    }
+    let k1 = k.div_ceil(2);
+    let k2 = k - k1;
+    let frac0 = k1 as f64 / k as f64;
+    let bip = flat_bipartition(hg, frac0, eps, cfg, seed);
+    // Extract both sides and recurse.
+    for (side, (kk, base)) in
+        [(0u32, (k1, block_base)), (1u32, (k2, block_base + k1 as BlockId))]
+    {
+        if kk == 1 {
+            // Finalize labels for this side.
+            for v in 0..hg.num_vertices() {
+                if bip[v] == side {
+                    part[v] = base;
+                }
+            }
+            continue;
+        }
+        let (sub, sub_to_orig) = extract_side(hg, &bip, side);
+        let mut sub_part = vec![0 as BlockId; sub.num_vertices()];
+        recurse(&sub, kk, eps, cfg, seed ^ hash64(seed, side as u64 + 1), &mut sub_part, 0);
+        for (sv, &ov) in sub_to_orig.iter().enumerate() {
+            part[ov as usize] = base + sub_part[sv];
+        }
+    }
+}
+
+/// Induced sub-hypergraph of one side of a bipartition. Edges are
+/// restricted to in-side pins; those with < 2 remaining pins are dropped
+/// (single-pin nets cannot be cut). Returns the sub-hypergraph and the
+/// sub→original vertex map.
+pub fn extract_side(
+    hg: &Hypergraph,
+    bip: &[BlockId],
+    side: BlockId,
+) -> (Hypergraph, Vec<VertexId>) {
+    let mut orig_to_sub = vec![VertexId::MAX; hg.num_vertices()];
+    let mut sub_to_orig = Vec::new();
+    for v in 0..hg.num_vertices() {
+        if bip[v] == side {
+            orig_to_sub[v] = sub_to_orig.len() as VertexId;
+            sub_to_orig.push(v as VertexId);
+        }
+    }
+    let mut builder = crate::datastructures::HypergraphBuilder::new(sub_to_orig.len());
+    builder.set_vertex_weights(
+        sub_to_orig.iter().map(|&v| hg.vertex_weight(v)).collect(),
+    );
+    let mut pins: Vec<VertexId> = Vec::new();
+    for e in 0..hg.num_edges() {
+        pins.clear();
+        for &p in hg.pins(e as EdgeId) {
+            if bip[p as usize] == side {
+                pins.push(orig_to_sub[p as usize]);
+            }
+        }
+        if pins.len() >= 2 {
+            pins.sort_unstable();
+            builder.add_edge(&pins, hg.edge_weight(e as EdgeId));
+        }
+    }
+    (builder.build(), sub_to_orig)
+}
+
+/// Portfolio bipartitioning: `cfg.attempts` seeded attempts, LP-polished,
+/// deterministic best-pick. Side 0 targets `frac0` of the total weight.
+pub fn flat_bipartition(
+    hg: &Hypergraph,
+    frac0: f64,
+    eps: f64,
+    cfg: &InitialConfig,
+    seed: u64,
+) -> Vec<BlockId> {
+    let total = hg.total_vertex_weight();
+    let target0 = (total as f64 * frac0).ceil() as Weight;
+    let target1 = total - target0;
+    let lmax = [
+        ((1.0 + eps) * target0 as f64).ceil() as Weight,
+        ((1.0 + eps) * target1 as f64).ceil() as Weight,
+    ];
+    let attempts = cfg.attempts.max(1);
+    // Parallel attempts, combined by index order (deterministic).
+    let results: Vec<(Vec<BlockId>, Weight, f64, bool)> =
+        crate::par::map_indexed(attempts, |i| {
+            let aseed = hash64(seed, i as u64);
+            let bip = match i % 3 {
+                0 => random_bipartition(hg, target0, aseed),
+                1 => bfs_bipartition(hg, target0, aseed),
+                _ => greedy_bipartition(hg, target0, aseed),
+            };
+            let p = PartitionedHypergraph::new(hg, 2, bip);
+            refine_lp(&p, &lmax, &crate::config::LpConfig { max_rounds: cfg.lp_rounds, ..Default::default() });
+            let balanced = p.block_weight(0) <= lmax[0] && p.block_weight(1) <= lmax[1];
+            let over = (p.block_weight(0) - target0).max(p.block_weight(1) - target1).max(0);
+            (p.snapshot(), p.km1(), over as f64, balanced)
+        });
+    // Total order: balanced first, then objective, then overweight, then index.
+    let mut best = 0usize;
+    for i in 1..results.len() {
+        let a = &results[i];
+        let b = &results[best];
+        let key_a = (!a.3, a.1, a.2 as i64, i);
+        let key_b = (!b.3, b.1, b.2 as i64, best);
+        if key_a < key_b {
+            best = i;
+        }
+    }
+    results[best].0.clone()
+}
+
+/// Attempt 1: hash-shuffled greedy fill — heavier side gets the rest.
+fn random_bipartition(hg: &Hypergraph, target0: Weight, seed: u64) -> Vec<BlockId> {
+    let n = hg.num_vertices();
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    order.sort_unstable_by_key(|&v| (hash64(seed, v as u64), v));
+    let mut part = vec![1 as BlockId; n];
+    let mut w0 = 0;
+    for &v in &order {
+        if w0 < target0 {
+            part[v as usize] = 0;
+            w0 += hg.vertex_weight(v);
+        }
+    }
+    part
+}
+
+/// Attempt 2: BFS region growing from a seeded start vertex.
+fn bfs_bipartition(hg: &Hypergraph, target0: Weight, seed: u64) -> Vec<BlockId> {
+    let n = hg.num_vertices();
+    let mut part = vec![1 as BlockId; n];
+    let mut visited = vec![false; n];
+    let mut queue = std::collections::VecDeque::new();
+    let mut w0 = 0;
+    let mut rng = Rng::new(seed);
+    let mut next_seed = || rng.next_range(n as u64) as usize;
+    let mut frontier_start = next_seed();
+    loop {
+        // (Re-)seed if the queue dries up before reaching the target.
+        if queue.is_empty() {
+            let mut guard = 0;
+            while visited[frontier_start] && guard < 2 * n {
+                frontier_start = next_seed();
+                guard += 1;
+            }
+            if visited[frontier_start] {
+                break;
+            }
+            visited[frontier_start] = true;
+            queue.push_back(frontier_start as VertexId);
+        }
+        let Some(v) = queue.pop_front() else { break };
+        part[v as usize] = 0;
+        w0 += hg.vertex_weight(v);
+        if w0 >= target0 {
+            break;
+        }
+        for &e in hg.incident_edges(v) {
+            if hg.edge_size(e) > 256 {
+                continue; // giant nets blur BFS locality
+            }
+            for &u in hg.pins(e) {
+                if !visited[u as usize] {
+                    visited[u as usize] = true;
+                    queue.push_back(u);
+                }
+            }
+        }
+    }
+    part
+}
+
+/// Attempt 3: greedy growing — repeatedly absorb the unassigned vertex
+/// with maximal connection to side 0 (sequential; coarsest level is small).
+fn greedy_bipartition(hg: &Hypergraph, target0: Weight, seed: u64) -> Vec<BlockId> {
+    let n = hg.num_vertices();
+    let mut part = vec![1 as BlockId; n];
+    let mut conn = vec![0 as Weight; n];
+    let mut in0 = vec![false; n];
+    let start = hash64(seed, 0xBEEF) as usize % n;
+    let mut w0 = 0;
+    let mut cur = start as VertexId;
+    loop {
+        in0[cur as usize] = true;
+        part[cur as usize] = 0;
+        w0 += hg.vertex_weight(cur);
+        if w0 >= target0 {
+            break;
+        }
+        for &e in hg.incident_edges(cur) {
+            let w = hg.edge_weight(e);
+            for &u in hg.pins(e) {
+                if !in0[u as usize] {
+                    conn[u as usize] += w;
+                }
+            }
+        }
+        // Max connection; ties by id. (Linear scan — coarsest is small.)
+        let mut best: Option<(Weight, VertexId)> = None;
+        for u in 0..n as VertexId {
+            if in0[u as usize] {
+                continue;
+            }
+            let key = (conn[u as usize], u);
+            let better = match best {
+                None => true,
+                Some((bc, bu)) => key.0 > bc || (key.0 == bc && u < bu),
+            };
+            if better {
+                best = Some(key);
+            }
+        }
+        match best {
+            Some((_, u)) => cur = u,
+            None => break,
+        }
+    }
+    part
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bipartition_is_balanced_and_nontrivial() {
+        let h = crate::gen::grid::grid2d_graph(20, 20);
+        let cfg = InitialConfig::default();
+        let bip = flat_bipartition(&h, 0.5, 0.05, &cfg, 3);
+        let w0: Weight =
+            (0..400).filter(|&v| bip[v] == 0).map(|v| h.vertex_weight(v as u32)).sum();
+        assert!(w0 > 150 && w0 < 250, "w0 = {w0}");
+        let cut = crate::metrics::km1(&h, &bip, 2);
+        assert!(cut > 0 && cut < 100, "cut = {cut}");
+    }
+
+    #[test]
+    fn kway_initial_partition_covers_all_blocks() {
+        let h = crate::gen::sat_hypergraph(500, 1500, 6, 7);
+        for k in [2usize, 3, 4, 7, 8] {
+            let part = initial_partition(&h, k, 0.03, &InitialConfig::default(), 11);
+            let mut seen = vec![false; k];
+            for &b in &part {
+                assert!((b as usize) < k);
+                seen[b as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "k={k}: empty block");
+            let imb = crate::metrics::imbalance(&h, &part, k);
+            assert!(imb < 0.25, "k={k}: imbalance {imb}");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_threads_and_runs() {
+        let h = crate::gen::vlsi_netlist(20, 1.1, 2);
+        let mut outs = Vec::new();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                outs.push(initial_partition(&h, 4, 0.03, &InitialConfig::default(), 5));
+            });
+        }
+        outs.push(initial_partition(&h, 4, 0.03, &InitialConfig::default(), 5));
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn extract_side_structure() {
+        let h = Hypergraph::new(
+            5,
+            &[vec![0, 1, 2], vec![2, 3], vec![3, 4]],
+            Some(vec![1, 2, 3, 4, 5]),
+            None,
+        );
+        let bip = vec![0, 0, 0, 1, 1];
+        let (sub, map) = extract_side(&h, &bip, 0);
+        assert_eq!(sub.num_vertices(), 3);
+        assert_eq!(map, vec![0, 1, 2]);
+        assert_eq!(sub.num_edges(), 1); // {2,3} loses pin 3 → 1 pin → drop
+        assert_eq!(sub.pins(0), &[0, 1, 2]);
+        assert_eq!(sub.vertex_weight(2), 3);
+        sub.validate().unwrap();
+    }
+
+    #[test]
+    fn different_seeds_different_partitions() {
+        let h = crate::gen::rmat_graph(9, 6, 4);
+        let a = initial_partition(&h, 2, 0.03, &InitialConfig::default(), 1);
+        let b = initial_partition(&h, 2, 0.03, &InitialConfig::default(), 2);
+        // Not bitwise-equal in general (different random portfolios).
+        assert_eq!(a.len(), b.len());
+    }
+}

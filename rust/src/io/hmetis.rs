@@ -1,0 +1,162 @@
+//! hMetis hypergraph format (`.hgr`).
+//!
+//! Header: `|E| |V| [fmt]` where fmt ∈ {(absent), 1, 10, 11}:
+//! * 1  — hyperedge weights present (first token per edge line),
+//! * 10 — vertex weights present (one line per vertex after the edges),
+//! * 11 — both.
+//!
+//! Vertex ids in the file are 1-based; comment lines start with `%`.
+
+use crate::datastructures::{Hypergraph, HypergraphBuilder};
+use crate::{VertexId, Weight};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Parse an `.hgr` file.
+pub fn read_hgr(path: &Path) -> Result<Hypergraph> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    read_hgr_str(&text)
+}
+
+/// Parse `.hgr` content from a string.
+pub fn read_hgr_str(text: &str) -> Result<Hypergraph> {
+    let mut lines = text.lines().filter(|l| {
+        let t = l.trim();
+        !t.is_empty() && !t.starts_with('%')
+    });
+    let header = lines.next().context("empty hgr file")?;
+    let mut it = header.split_whitespace();
+    let num_edges: usize = it.next().context("missing |E|")?.parse()?;
+    let num_vertices: usize = it.next().context("missing |V|")?.parse()?;
+    let fmt: u32 = it.next().map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let (has_edge_weights, has_vertex_weights) = match fmt {
+        0 => (false, false),
+        1 => (true, false),
+        10 => (false, true),
+        11 => (true, true),
+        f => bail!("unsupported hgr fmt {f}"),
+    };
+
+    let mut builder = HypergraphBuilder::new(num_vertices);
+    let mut pins: Vec<VertexId> = Vec::new();
+    for e in 0..num_edges {
+        let line = lines.next().with_context(|| format!("missing edge line {e}"))?;
+        let mut toks = line.split_whitespace();
+        let w: Weight = if has_edge_weights {
+            toks.next().with_context(|| format!("edge {e}: missing weight"))?.parse()?
+        } else {
+            1
+        };
+        pins.clear();
+        for t in toks {
+            let v: usize = t.parse().with_context(|| format!("edge {e}: bad pin {t}"))?;
+            if v == 0 || v > num_vertices {
+                bail!("edge {e}: pin {v} out of range 1..={num_vertices}");
+            }
+            pins.push((v - 1) as VertexId);
+        }
+        // Some public instances contain repeated pins; dedup keeps the
+        // hypergraph simple (weights are unaffected for connectivity).
+        pins.sort_unstable();
+        pins.dedup();
+        if pins.is_empty() {
+            bail!("edge {e}: no pins");
+        }
+        builder.add_edge(&pins, w);
+    }
+    if has_vertex_weights {
+        let mut vw = Vec::with_capacity(num_vertices);
+        for v in 0..num_vertices {
+            let line = lines.next().with_context(|| format!("missing vertex weight {v}"))?;
+            vw.push(line.trim().parse::<Weight>()?);
+        }
+        builder.set_vertex_weights(vw);
+    }
+    Ok(builder.build())
+}
+
+/// Write an `.hgr` file (always fmt=11: both weight kinds explicit).
+pub fn write_hgr(hg: &Hypergraph, path: &Path) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(&format!("{} {} 11\n", hg.num_edges(), hg.num_vertices()));
+    for e in 0..hg.num_edges() {
+        out.push_str(&hg.edge_weight(e as u32).to_string());
+        for &p in hg.pins(e as u32) {
+            out.push(' ');
+            out.push_str(&(p + 1).to_string());
+        }
+        out.push('\n');
+    }
+    for v in 0..hg.num_vertices() {
+        out.push_str(&hg.vertex_weight(v as u32).to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain() {
+        let h = read_hgr_str("% comment\n3 4\n1 2\n2 3 4\n1 4\n").unwrap();
+        assert_eq!(h.num_edges(), 3);
+        assert_eq!(h.num_vertices(), 4);
+        assert_eq!(h.pins(1), &[1, 2, 3]);
+        assert_eq!(h.edge_weight(0), 1);
+        assert_eq!(h.vertex_weight(0), 1);
+    }
+
+    #[test]
+    fn parse_weighted() {
+        let h = read_hgr_str("2 3 11\n5 1 2\n7 2 3\n10\n20\n30\n").unwrap();
+        assert_eq!(h.edge_weight(0), 5);
+        assert_eq!(h.edge_weight(1), 7);
+        assert_eq!(h.vertex_weight(2), 30);
+        assert_eq!(h.total_vertex_weight(), 60);
+    }
+
+    #[test]
+    fn parse_edge_weights_only() {
+        let h = read_hgr_str("1 2 1\n9 1 2\n").unwrap();
+        assert_eq!(h.edge_weight(0), 9);
+        assert_eq!(h.vertex_weight(1), 1);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(read_hgr_str("").is_err());
+        assert!(read_hgr_str("1 2\n1 3\n").is_err()); // pin out of range
+        assert!(read_hgr_str("2 2\n1 2\n").is_err()); // missing edge line
+        assert!(read_hgr_str("1 2 99\n1 2\n").is_err()); // bad fmt
+    }
+
+    #[test]
+    fn roundtrip() {
+        let h = Hypergraph::new(
+            4,
+            &[vec![0, 1, 2], vec![2, 3]],
+            Some(vec![2, 3, 4, 5]),
+            Some(vec![7, 1]),
+        );
+        let dir = std::env::temp_dir().join("detpart_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.hgr");
+        write_hgr(&h, &path).unwrap();
+        let h2 = read_hgr(&path).unwrap();
+        assert_eq!(h2.num_vertices(), 4);
+        assert_eq!(h2.num_edges(), 2);
+        assert_eq!(h2.pins(0), h.pins(0));
+        assert_eq!(h2.edge_weight(0), 7);
+        assert_eq!(h2.vertex_weight(3), 5);
+    }
+
+    #[test]
+    fn dedups_repeated_pins() {
+        let h = read_hgr_str("1 3\n1 2 2 3\n").unwrap();
+        assert_eq!(h.pins(0), &[0, 1, 2]);
+    }
+}

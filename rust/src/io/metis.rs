@@ -1,0 +1,105 @@
+//! METIS graph format (`.graph`), ingested as a hypergraph whose
+//! hyperedges are the graph edges (2 pins each) — the representation the
+//! paper uses when running the hypergraph partitioner on graphs.
+//!
+//! Header: `|V| |E| [fmt [ncon]]`, fmt ∈ {0,1,10,11,100,...}: we support
+//! vertex weights (fmt 10), edge weights (fmt 1) and both (11). Each of
+//! the following |V| lines lists the neighbors (1-based) of vertex i,
+//! optionally preceded by its weight(s) / interleaved with edge weights.
+
+use crate::datastructures::{Hypergraph, HypergraphBuilder};
+use crate::{VertexId, Weight};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub fn read_graph(path: &Path) -> Result<Hypergraph> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    read_graph_str(&text)
+}
+
+pub fn read_graph_str(text: &str) -> Result<Hypergraph> {
+    let mut lines = text.lines().filter(|l| {
+        let t = l.trim();
+        !t.is_empty() && !t.starts_with('%')
+    });
+    let header = lines.next().context("empty graph file")?;
+    let mut it = header.split_whitespace();
+    let num_vertices: usize = it.next().context("missing |V|")?.parse()?;
+    let num_edges: usize = it.next().context("missing |E|")?.parse()?;
+    let fmt: u32 = it.next().map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let ncon: usize = it.next().map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let has_edge_weights = fmt % 10 == 1;
+    let has_vertex_weights = (fmt / 10) % 10 == 1;
+    if ncon > 1 {
+        bail!("multi-constraint graphs unsupported (ncon={ncon})");
+    }
+
+    let mut vertex_weights = vec![1 as Weight; num_vertices];
+    let mut builder = HypergraphBuilder::new(num_vertices);
+    let mut seen_edges = 0usize;
+    for u in 0..num_vertices {
+        let line = lines.next().with_context(|| format!("missing adjacency line {u}"))?;
+        let mut toks = line.split_whitespace().peekable();
+        if has_vertex_weights {
+            vertex_weights[u] =
+                toks.next().with_context(|| format!("vertex {u}: missing weight"))?.parse()?;
+        }
+        while let Some(t) = toks.next() {
+            let v: usize = t.parse().with_context(|| format!("vertex {u}: bad neighbor {t}"))?;
+            if v == 0 || v > num_vertices {
+                bail!("vertex {u}: neighbor {v} out of range");
+            }
+            let w: Weight = if has_edge_weights {
+                toks.next().with_context(|| format!("vertex {u}: missing edge weight"))?.parse()?
+            } else {
+                1
+            };
+            let v = v - 1;
+            // Each undirected edge appears twice; emit it once (u < v).
+            if u < v {
+                builder.add_edge(&[u as VertexId, v as VertexId], w);
+                seen_edges += 1;
+            }
+        }
+    }
+    if seen_edges != num_edges {
+        bail!("edge count mismatch: header {num_edges}, found {seen_edges}");
+    }
+    builder.set_vertex_weights(vertex_weights);
+    Ok(builder.build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain_triangle() {
+        let h = read_graph_str("3 3\n2 3\n1 3\n1 2\n").unwrap();
+        assert_eq!(h.num_vertices(), 3);
+        assert_eq!(h.num_edges(), 3);
+        assert!(h.is_graph());
+        assert_eq!(h.pins(0), &[0, 1]);
+    }
+
+    #[test]
+    fn parse_weighted() {
+        // fmt=11: vertex weight then (neighbor, edge-weight) pairs.
+        let txt = "2 1 11\n4 2 9\n6 1 9\n";
+        let h = read_graph_str(txt).unwrap();
+        assert_eq!(h.vertex_weight(0), 4);
+        assert_eq!(h.vertex_weight(1), 6);
+        assert_eq!(h.edge_weight(0), 9);
+    }
+
+    #[test]
+    fn detects_count_mismatch() {
+        assert!(read_graph_str("2 2\n2\n1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_multiconstraint() {
+        assert!(read_graph_str("2 1 10 2\n1 1 2\n1 1 1\n").is_err());
+    }
+}

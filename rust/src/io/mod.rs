@@ -1,0 +1,11 @@
+//! File formats: hMetis `.hgr` hypergraphs, METIS `.graph` graphs
+//! (ingested as 2-pin hypergraphs), and partition files (one block id per
+//! line, the standard interchange used by partitioning tools).
+
+pub mod hmetis;
+pub mod metis;
+pub mod partition_file;
+
+pub use hmetis::{read_hgr, read_hgr_str, write_hgr};
+pub use metis::{read_graph, read_graph_str};
+pub use partition_file::{read_partition, write_partition};

@@ -1,0 +1,49 @@
+//! Partition files: one block id per line, line i = block of vertex i.
+//! The standard output format of hMetis/KaHyPar/Mt-KaHyPar — and the
+//! byte-level artifact our determinism checks compare.
+
+use crate::BlockId;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub fn write_partition(part: &[BlockId], path: &Path) -> Result<()> {
+    let mut out = String::with_capacity(part.len() * 3);
+    for &b in part {
+        out.push_str(&b.to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+pub fn read_partition(path: &Path, expected_len: Option<usize>) -> Result<Vec<BlockId>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let part: Vec<BlockId> = text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.trim().parse::<BlockId>().context("bad block id"))
+        .collect::<Result<_>>()?;
+    if let Some(n) = expected_len {
+        if part.len() != n {
+            bail!("partition has {} entries, expected {n}", part.len());
+        }
+    }
+    Ok(part)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("detpart_test_part");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.part");
+        let part = vec![0u32, 1, 1, 0, 3];
+        write_partition(&part, &path).unwrap();
+        assert_eq!(read_partition(&path, Some(5)).unwrap(), part);
+        assert!(read_partition(&path, Some(4)).is_err());
+    }
+}

@@ -1,0 +1,57 @@
+//! # detpart — Deterministic Parallel High-Quality Hypergraph Partitioning
+//!
+//! A reproduction of *"Deterministic Parallel High-Quality Hypergraph
+//! Partitioning"* (Krause, Gottesbüren, Maas; 2025): a multilevel
+//! hypergraph partitioner whose parallel execution is **bit-deterministic**
+//! — the same input and seed produce the same partition regardless of the
+//! number of worker threads or scheduling interleavings — while matching
+//! the solution quality of state-of-the-art non-deterministic solvers.
+//!
+//! The two headline algorithms are:
+//!
+//! * [`refinement::jet`] — **DetJet**: a deterministic, hypergraph-capable
+//!   generalization of the Jet refinement algorithm (unconstrained moves,
+//!   an `O(Σ|e| log |e|)` afterburner, and a deterministic weight-aware
+//!   rebalancer).
+//! * [`refinement::flow`] — **DetFlows**: deterministic flow-based
+//!   refinement built on a *non-deterministic* max-flow core, exploiting
+//!   the uniqueness of inclusion-minimal/-maximal minimum cuts
+//!   (Picard–Queyranne) plus deterministic piercing and scheduling.
+//!
+//! Architecture: this crate is the L3 rust coordinator of a three-layer
+//! rust + JAX + Pallas stack. The dense move-selection arithmetic of Jet is
+//! also available as an AOT-compiled XLA executable (authored as a Pallas
+//! kernel in `python/compile/kernels/`, lowered to HLO text by
+//! `python/compile/aot.py`, loaded at runtime by [`runtime`]). Python is
+//! never on the request path.
+
+pub mod par;
+pub mod util;
+pub mod datastructures;
+pub mod io;
+pub mod gen;
+pub mod metrics;
+pub mod preprocessing;
+pub mod coarsening;
+pub mod initial;
+pub mod refinement;
+pub mod partitioner;
+pub mod config;
+pub mod runtime;
+pub mod experiments;
+pub mod testing;
+pub mod cli;
+
+/// Vertex identifier. Hypergraphs up to ~4B vertices.
+pub type VertexId = u32;
+/// Hyperedge identifier.
+pub type EdgeId = u32;
+/// Block identifier of a k-way partition.
+pub type BlockId = u32;
+/// Vertex / hyperedge weights and gains. Signed to allow gain arithmetic.
+pub type Weight = i64;
+
+/// Sentinel for "no block assigned yet".
+pub const NO_BLOCK: BlockId = u32::MAX;
+/// Sentinel vertex id.
+pub const NO_VERTEX: VertexId = u32::MAX;

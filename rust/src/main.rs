@@ -1,0 +1,5 @@
+//! `detpart` binary — see [`detpart::cli`] for usage.
+
+fn main() {
+    detpart::cli::run();
+}

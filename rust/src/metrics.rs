@@ -1,0 +1,127 @@
+//! Partition quality metrics, computable from a plain assignment vector
+//! (no incremental state needed) — used by IO, tests and the experiment
+//! harness as an independent oracle against the incremental
+//! [`crate::datastructures::PartitionedHypergraph`] state.
+
+use crate::datastructures::Hypergraph;
+use crate::{BlockId, EdgeId, Weight};
+
+/// Connectivity metric `(λ−1)(Π) = Σ_e (λ(e)−1)·ω(e)`.
+pub fn km1(hg: &Hypergraph, part: &[BlockId], k: usize) -> Weight {
+    objective_impl(hg, part, k, |lambda, w| (lambda as Weight - 1) * w)
+}
+
+/// Cut-net metric: `Σ_{e: λ(e)>1} ω(e)`.
+pub fn cut(hg: &Hypergraph, part: &[BlockId], k: usize) -> Weight {
+    objective_impl(hg, part, k, |lambda, w| if lambda > 1 { w } else { 0 })
+}
+
+/// Sum-of-external-degrees: `Σ_{e: λ(e)>1} λ(e)·ω(e)`.
+pub fn soed(hg: &Hypergraph, part: &[BlockId], k: usize) -> Weight {
+    objective_impl(hg, part, k, |lambda, w| if lambda > 1 { lambda as Weight * w } else { 0 })
+}
+
+fn objective_impl(
+    hg: &Hypergraph,
+    part: &[BlockId],
+    k: usize,
+    f: impl Fn(u32, Weight) -> Weight + Sync,
+) -> Weight {
+    assert_eq!(part.len(), hg.num_vertices());
+    crate::par::parallel_reduce(
+        hg.num_edges(),
+        || (0 as Weight, vec![u32::MAX; k]),
+        |r, (mut acc, mut stamp)| {
+            for e in r {
+                let mut lambda = 0u32;
+                for &v in hg.pins(e as EdgeId) {
+                    let b = part[v as usize] as usize;
+                    if stamp[b] != e as u32 {
+                        stamp[b] = e as u32;
+                        lambda += 1;
+                    }
+                }
+                acc += f(lambda, hg.edge_weight(e as EdgeId));
+            }
+            (acc, stamp)
+        },
+        |(a, s), (b, _)| (a + b, s),
+    )
+    .0
+}
+
+/// Block weights of an assignment.
+pub fn block_weights(hg: &Hypergraph, part: &[BlockId], k: usize) -> Vec<Weight> {
+    let mut bw = vec![0 as Weight; k];
+    for v in 0..hg.num_vertices() {
+        bw[part[v] as usize] += hg.vertex_weight(v as u32);
+    }
+    bw
+}
+
+/// `max_i c(V_i)/⌈c(V)/k⌉ − 1`.
+pub fn imbalance(hg: &Hypergraph, part: &[BlockId], k: usize) -> f64 {
+    let avg = ((hg.total_vertex_weight() + k as Weight - 1) / k as Weight) as f64;
+    let max = block_weights(hg, part, k).into_iter().max().unwrap_or(0);
+    max as f64 / avg - 1.0
+}
+
+/// True iff every block obeys `c(V_i) ≤ (1+ε)·⌈c(V)/k⌉`.
+pub fn is_balanced(hg: &Hypergraph, part: &[BlockId], k: usize, eps: f64) -> bool {
+    let lmax = ((1.0 + eps)
+        * ((hg.total_vertex_weight() + k as Weight - 1) / k as Weight) as f64)
+        .floor() as Weight;
+    block_weights(hg, part, k).into_iter().all(|w| w <= lmax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastructures::PartitionedHypergraph;
+
+    fn hg() -> Hypergraph {
+        Hypergraph::new(
+            6,
+            &[vec![0, 1, 2], vec![2, 3], vec![3, 4, 5], vec![0, 5]],
+            None,
+            Some(vec![1, 2, 1, 3]),
+        )
+    }
+
+    #[test]
+    fn km1_and_cut() {
+        let h = hg();
+        let part = vec![0, 0, 0, 1, 1, 1];
+        assert_eq!(km1(&h, &part, 2), 5);
+        assert_eq!(cut(&h, &part, 2), 5);
+        assert_eq!(soed(&h, &part, 2), 10);
+        // 3-way: edge0 λ=2? parts 0,0,1 → λ=2 (w1); edge1 λ=...
+        let part3 = vec![0, 0, 1, 1, 2, 2];
+        assert_eq!(km1(&h, &part3, 3), 1 + 0 + 1 + 3);
+    }
+
+    #[test]
+    fn agrees_with_incremental_state() {
+        let h = hg();
+        let part = vec![0, 1, 0, 1, 0, 1];
+        let p = PartitionedHypergraph::new(&h, 2, part.clone());
+        assert_eq!(km1(&h, &part, 2), p.km1());
+        assert_eq!(cut(&h, &part, 2), p.cut());
+        assert!((imbalance(&h, &part, 2) - p.imbalance()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn balance_checks() {
+        let h = hg();
+        assert!(is_balanced(&h, &[0, 0, 0, 1, 1, 1], 2, 0.0));
+        assert!(!is_balanced(&h, &[0, 0, 0, 0, 1, 1], 2, 0.1));
+        assert_eq!(block_weights(&h, &[0, 0, 0, 0, 1, 1], 2), vec![4, 2]);
+    }
+
+    #[test]
+    fn single_block_is_zero_objective() {
+        let h = hg();
+        assert_eq!(km1(&h, &[0; 6], 1), 0);
+        assert_eq!(cut(&h, &[0; 6], 1), 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Deterministic parallel primitives — the crate's rayon replacement.
+//!
+//! Everything in the partitioner that runs in parallel is expressed via
+//! this module, and every primitive here guarantees **schedule
+//! independence**: the result is a pure function of the input and the
+//! chunk grain, never of thread interleaving. The rules:
+//!
+//! * work is split into *index-ordered chunks*; per-chunk results are
+//!   combined in chunk order (never completion order);
+//! * mutable state is either disjoint per chunk or updated through
+//!   commutative atomics (fetch-add / fetch-or / fetch-min) whose final
+//!   value is interleaving-independent;
+//! * no primitive exposes "first thread wins" semantics.
+//!
+//! The worker count is a process-global ([`set_num_threads`]) so the CLI
+//! `--threads` flag and the scaling benchmark (Fig. 7) control it, and so
+//! tests can assert bit-identical results across different values.
+
+pub mod pool;
+pub mod prefix;
+pub mod sort;
+
+pub use pool::{
+    for_each_chunk, for_each_chunk_mut, map_indexed, num_threads, parallel_reduce,
+    set_num_threads, with_num_threads,
+};
+pub use prefix::{exclusive_prefix_sum, exclusive_prefix_sum_in_place};
+pub use sort::{par_sort_by, par_sort_by_key};

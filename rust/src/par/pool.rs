@@ -1,0 +1,283 @@
+//! Chunked fork-join execution on scoped threads.
+//!
+//! The primitives here spawn at most `num_threads() - 1` helper threads
+//! per call via `std::thread::scope` (the calling thread works too) and
+//! run entirely inline when one thread is configured — which also makes
+//! single-threaded runs the determinism reference that multi-threaded
+//! runs are tested against.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static NUM_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Current worker-thread count (defaults to `available_parallelism`).
+pub fn num_threads() -> usize {
+    let n = NUM_THREADS.load(Ordering::Relaxed);
+    if n == 0 {
+        let d = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        NUM_THREADS.store(d, Ordering::Relaxed);
+        d
+    } else {
+        n
+    }
+}
+
+/// Set the process-global worker-thread count (>= 1).
+pub fn set_num_threads(n: usize) {
+    NUM_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Run `f` with a temporary thread count, restoring the previous value.
+pub fn with_num_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let prev = num_threads();
+    set_num_threads(n);
+    let r = f();
+    set_num_threads(prev);
+    r
+}
+
+/// Split `[0, len)` into at most `parts` contiguous ranges of near-equal
+/// size, in index order. Empty ranges are omitted.
+pub fn chunk_ranges(len: usize, parts: usize) -> Vec<Range<usize>> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, len);
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let sz = base + usize::from(i < extra);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    out
+}
+
+/// Parallel for over index chunks: `f(chunk_index, range)`.
+///
+/// `f` must only touch state that is disjoint per chunk or atomically
+/// commutative; under that contract the result is schedule-independent.
+pub fn for_each_chunk(len: usize, f: impl Fn(usize, Range<usize>) + Sync) {
+    let nt = num_threads();
+    if nt <= 1 || len < 2 {
+        for (ci, r) in chunk_ranges(len, 1).into_iter().enumerate() {
+            f(ci, r);
+        }
+        return;
+    }
+    let chunks = chunk_ranges(len, nt);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut iter = chunks.into_iter().enumerate();
+        let first = iter.next();
+        for (ci, r) in iter {
+            s.spawn(move || f(ci, r));
+        }
+        if let Some((ci, r)) = first {
+            f(ci, r);
+        }
+    });
+}
+
+/// Parallel for over disjoint mutable sub-slices of `data`:
+/// `f(start_offset, &mut [T])`.
+pub fn for_each_chunk_mut<T: Send>(data: &mut [T], f: impl Fn(usize, &mut [T]) + Sync) {
+    let len = data.len();
+    let nt = num_threads();
+    if nt <= 1 || len < 2 {
+        f(0, data);
+        return;
+    }
+    let chunks = chunk_ranges(len, nt);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = data;
+        let mut consumed = 0usize;
+        let mut first: Option<(usize, &mut [T])> = None;
+        for (i, r) in chunks.iter().enumerate() {
+            let (head, tail) = rest.split_at_mut(r.len());
+            let start = consumed;
+            consumed += r.len();
+            rest = tail;
+            if i == 0 {
+                first = Some((start, head));
+            } else {
+                s.spawn(move || f(start, head));
+            }
+        }
+        if let Some((start, head)) = first {
+            f(start, head);
+        }
+    });
+}
+
+/// Parallel map `i -> U` collected into a `Vec<U>` in index order.
+pub fn map_indexed<U: Send>(len: usize, f: impl Fn(usize) -> U + Sync) -> Vec<U> {
+    let mut out: Vec<U> = Vec::with_capacity(len);
+    // SAFETY: every slot is written exactly once below before set_len.
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        out.set_len(len);
+    }
+    {
+        let out_slice = out.as_mut_slice();
+        // Disjoint writes per chunk through a raw pointer wrapper.
+        struct Ptr<U>(*mut U);
+        unsafe impl<U> Sync for Ptr<U> {}
+        let ptr = Ptr(out_slice.as_mut_ptr());
+        let pref = &ptr;
+        for_each_chunk(len, move |_ci, r| {
+            for i in r {
+                // SAFETY: chunks are disjoint; each i written once.
+                unsafe {
+                    std::ptr::write(pref.0.add(i), f(i));
+                }
+            }
+        });
+    }
+    out
+}
+
+/// Parallel reduction: map each chunk to an accumulator with `chunk_fn`,
+/// then fold accumulators **in chunk order** with `combine` — this is what
+/// makes the reduction deterministic even for non-associative-in-floats
+/// combines.
+pub fn parallel_reduce<A: Send>(
+    len: usize,
+    identity: impl Fn() -> A + Sync,
+    chunk_fn: impl Fn(Range<usize>, A) -> A + Sync,
+    combine: impl Fn(A, A) -> A,
+) -> A {
+    let nt = num_threads();
+    if nt <= 1 || len < 2 {
+        return chunk_fn(0..len, identity());
+    }
+    let chunks = chunk_ranges(len, nt);
+    let n_chunks = chunks.len();
+    let mut slots: Vec<Option<A>> = (0..n_chunks).map(|_| None).collect();
+    {
+        let slot_refs: Vec<_> = slots.iter_mut().collect();
+        std::thread::scope(|s| {
+            let chunk_fn = &chunk_fn;
+            let identity = &identity;
+            let mut first = None;
+            for (i, (slot, r)) in slot_refs.into_iter().zip(chunks).enumerate() {
+                if i == 0 {
+                    first = Some((slot, r));
+                } else {
+                    s.spawn(move || {
+                        *slot = Some(chunk_fn(r, identity()));
+                    });
+                }
+            }
+            if let Some((slot, r)) = first {
+                *slot = Some(chunk_fn(r, identity()));
+            }
+        });
+    }
+    let mut acc = identity();
+    for s in slots {
+        acc = combine(acc, s.expect("chunk executed"));
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunk_ranges_cover() {
+        for len in [0usize, 1, 5, 64, 1000] {
+            for parts in [1usize, 2, 3, 7, 64] {
+                let rs = chunk_ranges(len, parts);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, len);
+                let mut expect = 0;
+                for r in &rs {
+                    assert_eq!(r.start, expect);
+                    assert!(!r.is_empty());
+                    expect = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_visits_all() {
+        for nt in [1usize, 2, 4] {
+            with_num_threads(nt, || {
+                let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+                for_each_chunk(97, |_ci, r| {
+                    for i in r {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+            });
+        }
+    }
+
+    #[test]
+    fn chunk_mut_disjoint() {
+        for nt in [1usize, 3, 8] {
+            with_num_threads(nt, || {
+                let mut v = vec![0usize; 100];
+                for_each_chunk_mut(&mut v, |start, s| {
+                    for (j, x) in s.iter_mut().enumerate() {
+                        *x = start + j;
+                    }
+                });
+                assert_eq!(v, (0..100).collect::<Vec<_>>());
+            });
+        }
+    }
+
+    #[test]
+    fn map_indexed_order() {
+        for nt in [1usize, 4] {
+            with_num_threads(nt, || {
+                let v = map_indexed(1000, |i| i * i);
+                assert_eq!(v[31], 961);
+                assert_eq!(v.len(), 1000);
+                assert!(v.windows(2).all(|w| w[0] < w[1]));
+            });
+        }
+    }
+
+    #[test]
+    fn reduce_deterministic_in_chunk_order() {
+        // Float summation order must be chunk-order, hence identical for a
+        // fixed thread count and — with a chunking-independent combine —
+        // identical across thread counts for integer payloads.
+        let data: Vec<u64> = (0..10_000).map(|i| (i * 2654435761) % 1000).collect();
+        let sum_ref: u64 = data.iter().sum();
+        for nt in [1usize, 2, 5] {
+            with_num_threads(nt, || {
+                let s = parallel_reduce(
+                    data.len(),
+                    || 0u64,
+                    |r, mut acc| {
+                        for i in r {
+                            acc += data[i];
+                        }
+                        acc
+                    },
+                    |a, b| a + b,
+                );
+                assert_eq!(s, sum_ref);
+            });
+        }
+    }
+
+    #[test]
+    fn with_num_threads_restores() {
+        let before = num_threads();
+        with_num_threads(3, || assert_eq!(num_threads(), 3));
+        assert_eq!(num_threads(), before);
+    }
+}

@@ -1,0 +1,116 @@
+//! Parallel exclusive prefix sums — the workhorse of deterministic
+//! selection: "sort by priority, prefix-sum the weights, binary-search the
+//! cutoff" is how both the rebalancer and the coarsening approval step
+//! pick a *minimal deterministic subset* instead of a racy one.
+
+use super::pool::{chunk_ranges, for_each_chunk, num_threads};
+
+/// Exclusive prefix sum: returns `(prefix, total)` where
+/// `prefix[i] = sum(xs[..i])`.
+pub fn exclusive_prefix_sum(xs: &[i64]) -> (Vec<i64>, i64) {
+    let mut out = xs.to_vec();
+    let total = exclusive_prefix_sum_in_place(&mut out);
+    (out, total)
+}
+
+/// In-place exclusive prefix sum; returns the total.
+///
+/// Three-phase chunked scan: per-chunk sums, sequential scan over the
+/// (few) chunk sums, then per-chunk rewrite — all combination in chunk
+/// index order.
+pub fn exclusive_prefix_sum_in_place(xs: &mut [i64]) -> i64 {
+    let n = xs.len();
+    if n == 0 {
+        return 0;
+    }
+    let nt = num_threads();
+    if nt <= 1 || n < 4096 {
+        let mut acc = 0i64;
+        for x in xs.iter_mut() {
+            let v = *x;
+            *x = acc;
+            acc += v;
+        }
+        return acc;
+    }
+    let chunks = chunk_ranges(n, nt);
+    // Phase 1: chunk totals.
+    let mut chunk_sums = vec![0i64; chunks.len()];
+    {
+        let sums = std::sync::Mutex::new(&mut chunk_sums);
+        let xs_ref = &*xs;
+        let chunks_ref = &chunks;
+        for_each_chunk(chunks_ref.len(), |_ci, r| {
+            for ci in r {
+                let s: i64 = xs_ref[chunks_ref[ci].clone()].iter().sum();
+                sums.lock().unwrap()[ci] = s;
+            }
+        });
+    }
+    // Phase 2: scan chunk sums sequentially (chunk order == determinism).
+    let mut offsets = vec![0i64; chunks.len()];
+    let mut acc = 0i64;
+    for (i, s) in chunk_sums.iter().enumerate() {
+        offsets[i] = acc;
+        acc += s;
+    }
+    let total = acc;
+    // Phase 3: rewrite each chunk with its offset.
+    {
+        struct Ptr(*mut i64);
+        unsafe impl Sync for Ptr {}
+        let ptr = Ptr(xs.as_mut_ptr());
+        let pref = &ptr;
+        let chunks_ref = &chunks;
+        let offsets_ref = &offsets;
+        for_each_chunk(chunks_ref.len(), move |_ci, r| {
+            for ci in r {
+                let mut acc = offsets_ref[ci];
+                for i in chunks_ref[ci].clone() {
+                    // SAFETY: chunks are disjoint index ranges.
+                    unsafe {
+                        let p = pref.0.add(i);
+                        let v = *p;
+                        *p = acc;
+                        acc += v;
+                    }
+                }
+            }
+        });
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::with_num_threads;
+
+    #[test]
+    fn empty_and_single() {
+        let (p, t) = exclusive_prefix_sum(&[]);
+        assert!(p.is_empty());
+        assert_eq!(t, 0);
+        let (p, t) = exclusive_prefix_sum(&[5]);
+        assert_eq!(p, vec![0]);
+        assert_eq!(t, 5);
+    }
+
+    #[test]
+    fn matches_sequential_reference() {
+        let xs: Vec<i64> = (0..10_000).map(|i| ((i * 7919) % 97) as i64 - 48).collect();
+        let mut expect = Vec::with_capacity(xs.len());
+        let mut acc = 0i64;
+        for &x in &xs {
+            expect.push(acc);
+            acc += x;
+        }
+        for nt in [1usize, 2, 4, 8] {
+            with_num_threads(nt, || {
+                let (p, t) = exclusive_prefix_sum(&xs);
+                assert_eq!(p, expect);
+                assert_eq!(t, acc);
+            });
+        }
+    }
+}

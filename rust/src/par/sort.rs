@@ -1,0 +1,180 @@
+//! Deterministic parallel stable sort.
+//!
+//! Chunk-local stable sorts in parallel, then pairwise stable merges in
+//! parallel rounds. The output is identical to `slice::sort_by` (stable)
+//! for every thread count — asserted by tests — which is what lets the
+//! rebalancer and afterburner rely on a *total* deterministic order.
+
+use super::pool::{chunk_ranges, num_threads};
+use std::cmp::Ordering;
+
+/// Stable parallel sort by comparator. `T: Copy` because merge rounds use
+/// a scratch buffer (all sort payloads in this crate are small PODs).
+pub fn par_sort_by<T: Copy + Send + Sync>(
+    v: &mut [T],
+    cmp: impl Fn(&T, &T) -> Ordering + Send + Sync + Copy,
+) {
+    let n = v.len();
+    let nt = num_threads();
+    if nt <= 1 || n < 8192 {
+        v.sort_by(cmp);
+        return;
+    }
+    // Phase 1: sort chunks in parallel (disjoint mutable sub-slices).
+    let chunks = chunk_ranges(n, nt);
+    let mut bounds: Vec<usize> = chunks.iter().map(|r| r.start).collect();
+    bounds.push(n);
+    {
+        std::thread::scope(|s| {
+            let mut rest = &mut *v;
+            let mut iter = chunks.iter();
+            let first = iter.next();
+            let mut head0: Option<&mut [T]> = None;
+            if let Some(r) = first {
+                let (h, t) = rest.split_at_mut(r.len());
+                head0 = Some(h);
+                rest = t;
+            }
+            for r in iter {
+                let (h, t) = rest.split_at_mut(r.len());
+                rest = t;
+                s.spawn(move || h.sort_by(cmp));
+            }
+            if let Some(h) = head0 {
+                h.sort_by(cmp);
+            }
+        });
+    }
+    // Phase 2: pairwise merge rounds. Runs are identified by `bounds`;
+    // merging (2i, 2i+1) preserves stability because lower-index runs hold
+    // lower-index original elements.
+    let mut scratch: Vec<T> = Vec::with_capacity(n);
+    // SAFETY: scratch fully written by each merge round before reads.
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        scratch.set_len(n);
+    }
+    let mut src_is_v = true;
+    while bounds.len() > 2 {
+        let (src, dst): (&mut [T], &mut [T]) =
+            if src_is_v { (v, &mut scratch) } else { (&mut scratch, v) };
+        let mut new_bounds = Vec::with_capacity(bounds.len() / 2 + 2);
+        let n_runs = bounds.len() - 1;
+        let mut jobs = Vec::new();
+        let mut i = 0;
+        while i < n_runs {
+            new_bounds.push(bounds[i]);
+            if i + 1 < n_runs {
+                jobs.push((bounds[i], bounds[i + 1], bounds[i + 2]));
+                i += 2;
+            } else {
+                jobs.push((bounds[i], bounds[i + 1], bounds[i + 1]));
+                i += 1;
+            }
+        }
+        new_bounds.push(n);
+        {
+            struct Ptr<T>(*mut T);
+            unsafe impl<T> Sync for Ptr<T> {}
+            let dptr = Ptr(dst.as_mut_ptr());
+            let src_ref: &[T] = src;
+            std::thread::scope(|s| {
+                let dref = &dptr;
+                let mut jiter = jobs.iter();
+                let first = jiter.next();
+                for &(lo, mid, hi) in jiter {
+                    s.spawn(move || unsafe { merge_into(src_ref, lo, mid, hi, dref.0, cmp) });
+                }
+                if let Some(&(lo, mid, hi)) = first {
+                    unsafe { merge_into(src_ref, lo, mid, hi, dptr.0, cmp) }
+                }
+            });
+        }
+        bounds = new_bounds;
+        src_is_v = !src_is_v;
+    }
+    if !src_is_v {
+        v.copy_from_slice(&scratch);
+    }
+}
+
+/// Stable merge of `src[lo..mid]` and `src[mid..hi]` into `dst[lo..hi]`.
+///
+/// # Safety
+/// `dst` must be valid for writes in `[lo, hi)` and the range disjoint
+/// from every other concurrent merge job.
+unsafe fn merge_into<T: Copy>(
+    src: &[T],
+    lo: usize,
+    mid: usize,
+    hi: usize,
+    dst: *mut T,
+    cmp: impl Fn(&T, &T) -> Ordering,
+) {
+    let (mut a, mut b, mut o) = (lo, mid, lo);
+    while a < mid && b < hi {
+        // `<=` keeps the left (earlier) element on ties → stability.
+        if cmp(&src[a], &src[b]) != Ordering::Greater {
+            unsafe { *dst.add(o) = src[a] };
+            a += 1;
+        } else {
+            unsafe { *dst.add(o) = src[b] };
+            b += 1;
+        }
+        o += 1;
+    }
+    while a < mid {
+        unsafe { *dst.add(o) = src[a] };
+        a += 1;
+        o += 1;
+    }
+    while b < hi {
+        unsafe { *dst.add(o) = src[b] };
+        b += 1;
+        o += 1;
+    }
+}
+
+/// Stable parallel sort by key.
+pub fn par_sort_by_key<T: Copy + Send + Sync, K: Ord>(
+    v: &mut [T],
+    key: impl Fn(&T) -> K + Send + Sync + Copy,
+) {
+    par_sort_by(v, move |a, b| key(a).cmp(&key(b)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::with_num_threads;
+    use crate::util::Rng;
+
+    #[test]
+    fn sorts_like_std_stable_sort() {
+        let mut rng = Rng::new(1234);
+        for n in [0usize, 1, 10, 1000, 20_000] {
+            let base: Vec<(u32, u32)> =
+                (0..n).map(|i| (rng.next_range(50) as u32, i as u32)).collect();
+            let mut expect = base.clone();
+            expect.sort_by_key(|&(k, _)| k); // stable: payload order preserved
+            for nt in [1usize, 2, 3, 8] {
+                with_num_threads(nt, || {
+                    let mut got = base.clone();
+                    par_sort_by_key(&mut got, |&(k, _)| k);
+                    assert_eq!(got, expect, "n={n} nt={nt}");
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn sort_by_comparator() {
+        let mut v: Vec<i64> = (0..30_000).map(|i| ((i * 2654435761u64) % 1001) as i64 - 500).collect();
+        let mut expect = v.clone();
+        expect.sort();
+        with_num_threads(4, || {
+            par_sort_by(&mut v, |a, b| a.cmp(b));
+        });
+        assert_eq!(v, expect);
+    }
+}

@@ -1,0 +1,182 @@
+//! Deterministic synchronous community detection.
+//!
+//! A size-capped synchronous label propagation on the hypergraph: each
+//! round, every vertex computes its best-connected community under the
+//! edge-weight affinity `Σ_{e ∋ v} ω(e)/(|e|−1) · [e ∩ C ≠ ∅]` and all
+//! moves are applied at a barrier. Moves into communities that exceed the
+//! size cap are rejected deterministically (priority by affinity, then
+//! vertex id). This is a deliberately lighter stand-in for Mt-KaHyPar's
+//! parallel Louvain; its role — restricting coarsening — only requires
+//! *stable, locality-capturing* labels, which tests assert.
+
+use crate::datastructures::Hypergraph;
+use crate::util::rng::hash64;
+use crate::{EdgeId, VertexId, Weight};
+
+/// Returns a community id per vertex (ids are arbitrary but deterministic).
+pub fn detect_communities(
+    hg: &Hypergraph,
+    rounds: usize,
+    max_community_frac: f64,
+    seed: u64,
+) -> Vec<u32> {
+    let n = hg.num_vertices();
+    if n == 0 {
+        return Vec::new();
+    }
+    let cap = ((n as f64 * max_community_frac).ceil() as usize).max(2);
+    let mut labels: Vec<u32> = (0..n as u32).collect();
+    let mut sizes: Vec<u32> = vec![1; n];
+    // Scaled integer affinities (×2^16) keep the arithmetic exact and
+    // platform-independent — float summation order never matters.
+    const SCALE: i64 = 1 << 16;
+
+    for round in 0..rounds {
+        // Phase 1 (parallel, read-only): propose best label per vertex.
+        // Per-thread assoc-list scratch (a per-vertex HashMap was an
+        // allocation hot spot — EXPERIMENTS.md §Perf).
+        let labels_frozen: &[u32] = &labels;
+        let mut proposals: Vec<(u32, i64)> = vec![(0, 0); n];
+        {
+            let nt = crate::par::num_threads().max(1);
+            let ranges = crate::par::pool::chunk_ranges(n, nt);
+            let mut slices: Vec<&mut [(u32, i64)]> = Vec::new();
+            let mut rest = proposals.as_mut_slice();
+            for r in &ranges {
+                let (head, tail) = rest.split_at_mut(r.len());
+                slices.push(head);
+                rest = tail;
+            }
+            std::thread::scope(|s| {
+                for (slice, range) in slices.into_iter().zip(ranges) {
+                    s.spawn(move || {
+                        let mut aff: Vec<(u32, i64)> = Vec::new();
+                        for (out, v) in slice.iter_mut().zip(range) {
+                            let v = v as VertexId;
+                            aff.clear();
+                            for &e in hg.incident_edges(v) {
+                                let sz = hg.edge_size(e);
+                                if !(2..=1024).contains(&sz) {
+                                    continue;
+                                }
+                                let w = hg.edge_weight(e) * SCALE / (sz as Weight - 1);
+                                for &u in hg.pins(e as EdgeId) {
+                                    if u != v {
+                                        let lab = labels_frozen[u as usize];
+                                        match aff.iter_mut().find(|(l, _)| *l == lab) {
+                                            Some(entry) => entry.1 += w,
+                                            None => aff.push((lab, w)),
+                                        }
+                                    }
+                                }
+                            }
+                            let cur = labels_frozen[v as usize];
+                            let cur_aff = aff
+                                .iter()
+                                .find(|(l, _)| *l == cur)
+                                .map(|&(_, a)| a)
+                                .unwrap_or(0);
+                            let mut best = (cur, cur_aff);
+                            for &(lab, a) in &aff {
+                                let better = a > best.1
+                                    || (a == best.1
+                                        && hash64(seed ^ round as u64, lab as u64)
+                                            > hash64(seed ^ round as u64, best.0 as u64));
+                                if better && lab != best.0 {
+                                    best = (lab, a);
+                                }
+                            }
+                            *out = best;
+                        }
+                    });
+                }
+            });
+        }
+        // Phase 2 (sequential, deterministic): apply size-capped moves in
+        // a fixed priority order (affinity desc, vertex id asc).
+        //
+        // Only a hash-selected half of the vertices may change per round:
+        // fully synchronous label adoption makes *every* vertex take a
+        // neighbor's label simultaneously, which on bipartite-ish
+        // structures (grids!) converges to communities that are
+        // independent sets — zero intra-community edges, blocking
+        // coarsening entirely. Freezing half the vertices breaks the
+        // oscillation deterministically.
+        let mut order: Vec<u32> = (0..n as u32)
+            .filter(|&v| hash64(seed ^ 0xA17E ^ round as u64, v as u64) % 2 == 0)
+            .collect();
+        order.sort_by_key(|&v| (-proposals[v as usize].1, v));
+        let mut changed = 0usize;
+        for v in order {
+            let (target, _) = proposals[v as usize];
+            let cur = labels[v as usize];
+            if target == cur {
+                continue;
+            }
+            if (sizes[target as usize] as usize) < cap {
+                sizes[cur as usize] -= 1;
+                sizes[target as usize] += 1;
+                labels[v as usize] = target;
+                changed += 1;
+            }
+        }
+        if changed == 0 {
+            break;
+        }
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn two_cliques_get_two_communities() {
+        // Two 5-cliques joined by a single edge.
+        let mut edges = Vec::new();
+        for a in 0..5u32 {
+            for b in a + 1..5 {
+                edges.push(vec![a, b]);
+                edges.push(vec![a + 5, b + 5]);
+            }
+        }
+        edges.push(vec![4, 5]);
+        let h = Hypergraph::new(10, &edges, None, None);
+        let c = detect_communities(&h, 10, 0.5, 42);
+        for v in 1..5 {
+            assert_eq!(c[v], c[0], "first clique split: {c:?}");
+        }
+        for v in 6..10 {
+            assert_eq!(c[v], c[5], "second clique split: {c:?}");
+        }
+        assert_ne!(c[0], c[5], "cliques merged: {c:?}");
+    }
+
+    #[test]
+    fn deterministic_across_threads() {
+        let h = gen::sat_hypergraph(300, 900, 8, 7);
+        let mut results = Vec::new();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                results.push(detect_communities(&h, 5, 0.25, 99));
+            });
+        }
+        assert!(results.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn size_cap_respected() {
+        let h = gen::grid::grid2d_graph(20, 20);
+        let c = detect_communities(&h, 8, 0.1, 1);
+        use std::collections::HashMap;
+        let mut counts: HashMap<u32, usize> = HashMap::new();
+        for &l in &c {
+            *counts.entry(l).or_insert(0) += 1;
+        }
+        let cap = (400.0 * 0.1f64).ceil() as usize;
+        assert!(counts.values().all(|&s| s <= cap), "{counts:?}");
+        assert!(counts.len() > 1);
+    }
+}

@@ -1,0 +1,8 @@
+//! Preprocessing: deterministic community detection used to restrict
+//! coarsening (Heuer & Schlag: never contract across community borders,
+//! which protects the hypergraph's natural structure from being destroyed
+//! by eager heavy-edge matching).
+
+pub mod community;
+
+pub use community::detect_communities;

@@ -1,0 +1,357 @@
+//! Incremental two-way flow refinement (Algorithm 3 + Section 5.1).
+//!
+//! Solves a sequence of incremental max-flow problems whose min cuts
+//! induce increasingly balanced bipartitions. Determinism despite the
+//! seed-order max-flow rests on three measures from the paper:
+//!
+//! 1. **Unique cut sides** — we only ever inspect the inclusion-minimal
+//!    source side (`source_reachable`) and inclusion-maximal source side
+//!    (complement of `sink_reaching`), which are unique across all
+//!    maximum flows (Picard–Queyranne).
+//! 2. **Deterministic piercing** — candidates are discovered in whatever
+//!    order the residual BFS produces, then sorted (a-posteriori) by a
+//!    deterministic key before selection.
+//! 3. **Termination check before piercing** — the flow-value bound
+//!    against the incumbent cut is evaluated *before* piercing, so both
+//!    the "bound reached by augmentation" and "bound reached by piercing"
+//!    scenarios run the same code path. The buggy order (check after
+//!    piercing, skipping flow computation) is kept behind
+//!    `term_check_before_piercing = false` for demonstration.
+
+use super::dinic::{INF, SINK, SOURCE};
+use super::lawler::{build_network, LawlerNetwork};
+use super::region::{grow_region, Region};
+use crate::config::FlowConfig;
+use crate::datastructures::PartitionedHypergraph;
+use crate::{BlockId, VertexId, Weight};
+
+/// Outcome of a two-way refinement.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PairResult {
+    pub improved: bool,
+    pub moved_vertices: usize,
+    pub old_cut: Weight,
+    pub new_cut: Weight,
+}
+
+/// Refine the bipartition between blocks `b0` and `b1` in place.
+pub fn refine_pair(
+    p: &PartitionedHypergraph,
+    b0: BlockId,
+    b1: BlockId,
+    eps: f64,
+    cfg: &FlowConfig,
+    seed: u64,
+) -> PairResult {
+    let hg = p.hypergraph();
+    let lmax = p.max_block_weight(eps);
+    let region = grow_region(p, b0, b1, eps, cfg.alpha);
+    if region.vertices.is_empty() {
+        return PairResult::default();
+    }
+    let old_cut = pair_cut(p, &region, b0, b1);
+    if old_cut == 0 {
+        return PairResult::default();
+    }
+    let old_max_side = p.block_weight(b0).max(p.block_weight(b1));
+    let pair_total = p.block_weight(b0) + p.block_weight(b1);
+
+    let mut lw = build_network(p, &region);
+    let nr = region.vertices.len();
+    // Terminal membership of region vertices (grows by piercing).
+    let mut in_s = vec![false; nr];
+    let mut in_t = vec![false; nr];
+
+    let mut accepted: Option<(Vec<bool>, Weight)> = None; // (side0 flags, cut)
+    let max_iters = 4 * nr + 16;
+    let mut pierce_pending: Option<(bool, u32)> = None; // (source side?, vertex idx)
+
+    for _iter in 0..max_iters {
+        // Apply any pending pierce (buggy order defers the bound check
+        // until after this point).
+        if let Some((to_source, vi)) = pierce_pending.take() {
+            let node = lw.node_of[vi as usize];
+            if to_source {
+                in_s[vi as usize] = true;
+                lw.net.add_arc(SOURCE, node, INF);
+                lw.net.add_arc(node, SOURCE, INF);
+            } else {
+                in_t[vi as usize] = true;
+                lw.net.add_arc(SINK, node, INF);
+                lw.net.add_arc(node, SINK, INF);
+            }
+        }
+        // Augment to maximality, aborting early above the incumbent cut.
+        lw.net.augment(cfg.flow_seed ^ seed, old_cut);
+        let flow = lw.net.flow_value();
+        if flow > old_cut {
+            break; // can't improve (nor match) the incumbent anymore
+        }
+        let src_reach = lw.net.source_reachable();
+        let snk_reach = lw.net.sink_reaching();
+        // Side weights of the two unique candidate bipartitions.
+        let w_sr: Weight = region_side_weight(hg, &region, |i| src_reach[lw.node_of[i] as usize])
+            + region.source_weight;
+        let w_tr: Weight = region_side_weight(hg, &region, |i| snk_reach[lw.node_of[i] as usize])
+            + region.sink_weight;
+        // Bipartition A: (S_r, rest). Bipartition B: (rest, T_r).
+        let a_balanced = w_sr <= lmax && pair_total - w_sr <= lmax;
+        let b_balanced = w_tr <= lmax && pair_total - w_tr <= lmax;
+        if a_balanced || b_balanced {
+            // Prefer the more balanced of the (equal-cut) candidates.
+            let side0: Vec<bool> = if a_balanced
+                && (!b_balanced
+                    || w_sr.max(pair_total - w_sr) <= w_tr.max(pair_total - w_tr))
+            {
+                (0..nr).map(|i| src_reach[lw.node_of[i] as usize]).collect()
+            } else {
+                (0..nr).map(|i| !snk_reach[lw.node_of[i] as usize]).collect()
+            };
+            let new_max_side = {
+                let w0: Weight = region_side_weight(hg, &region, |i| side0[i])
+                    + region.source_weight;
+                w0.max(pair_total - w0)
+            };
+            if flow < old_cut || (flow == old_cut && new_max_side < old_max_side) {
+                accepted = Some((side0, flow));
+            }
+            break;
+        }
+        // Pierce the lighter side.
+        let pierce_source = w_sr <= w_tr;
+        // First absorb the reachable set into the terminal (S ← S_r).
+        for i in 0..nr {
+            let node = lw.node_of[i] as usize;
+            if pierce_source && src_reach[node] && !in_s[i] {
+                in_s[i] = true;
+                lw.net.add_arc(SOURCE, lw.node_of[i], INF);
+                lw.net.add_arc(lw.node_of[i], SOURCE, INF);
+            }
+            if !pierce_source && snk_reach[node] && !in_t[i] {
+                in_t[i] = true;
+                lw.net.add_arc(SINK, lw.node_of[i], INF);
+                lw.net.add_arc(lw.node_of[i], SINK, INF);
+            }
+        }
+        let cand = select_piercing_vertex(
+            p,
+            &region,
+            &lw,
+            &src_reach,
+            &snk_reach,
+            &in_s,
+            &in_t,
+            pierce_source,
+            if pierce_source { w_sr } else { w_tr },
+            lmax,
+        );
+        let Some(vi) = cand else { break };
+        if cfg.term_check_before_piercing {
+            // Fixed order: pierce now; the bound check happens after the
+            // next augment (both bound-reaching scenarios run the flow
+            // computation).
+            let node = lw.node_of[vi as usize];
+            if pierce_source {
+                in_s[vi as usize] = true;
+                lw.net.add_arc(SOURCE, node, INF);
+                lw.net.add_arc(node, SOURCE, INF);
+            } else {
+                in_t[vi as usize] = true;
+                lw.net.add_arc(SINK, node, INF);
+                lw.net.add_arc(node, SINK, INF);
+            }
+        } else {
+            // Buggy order: defer the pierce and re-check the bound first
+            // next iteration — reproduces the order-dependent termination
+            // the paper fixes.
+            pierce_pending = Some((pierce_source, vi));
+        }
+    }
+
+    let Some((side0, new_cut)) = accepted else {
+        return PairResult { improved: false, moved_vertices: 0, old_cut, new_cut: old_cut };
+    };
+    // Apply: region vertices whose side changed move blocks.
+    let mut moved = 0usize;
+    for (i, &v) in region.vertices.iter().enumerate() {
+        let target = if side0[i] { b0 } else { b1 };
+        if p.part(v) != target {
+            p.apply_move(v, target);
+            moved += 1;
+        }
+    }
+    PairResult { improved: moved > 0, moved_vertices: moved, old_cut, new_cut }
+}
+
+/// Σ weight of region vertices selected by `f`.
+fn region_side_weight(
+    hg: &crate::datastructures::Hypergraph,
+    region: &Region,
+    f: impl Fn(usize) -> bool,
+) -> Weight {
+    region
+        .vertices
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| f(i))
+        .map(|(_, &v)| hg.vertex_weight(v))
+        .sum()
+}
+
+/// Piercing vertex selection: free region vertices on the pierced side's
+/// cut boundary, found via the (non-deterministic-order) residual BFS
+/// results, then **sorted a-posteriori** by a deterministic key:
+/// avoid-augmenting-path first (not reachable from the other terminal),
+/// then smaller weight, then smaller vertex id.
+#[allow(clippy::too_many_arguments)]
+fn select_piercing_vertex(
+    p: &PartitionedHypergraph,
+    region: &Region,
+    lw: &LawlerNetwork,
+    src_reach: &[bool],
+    snk_reach: &[bool],
+    in_s: &[bool],
+    in_t: &[bool],
+    pierce_source: bool,
+    side_weight: Weight,
+    lmax: Weight,
+) -> Option<u32> {
+    let hg = p.hypergraph();
+    let nr = region.vertices.len();
+    let mut best: Option<((u8, Weight, VertexId), u32)> = None;
+    for i in 0..nr {
+        if in_s[i] || in_t[i] {
+            continue;
+        }
+        let node = lw.node_of[i] as usize;
+        let (reached_own, reached_other) = if pierce_source {
+            (src_reach[node], snk_reach[node])
+        } else {
+            (snk_reach[node], src_reach[node])
+        };
+        if reached_own {
+            continue; // already on the pierced side of the cut
+        }
+        let v = region.vertices[i];
+        let w = hg.vertex_weight(v);
+        if side_weight + w > lmax {
+            continue; // piercing this vertex can never yield balance
+        }
+        // Boundary filter: incident to a hyperedge whose terminal-side
+        // node is reached — i.e. a net on (or inside) the current cut
+        // front. Checked via the edge nodes, so it also works when the
+        // reached set contains no region vertices yet (tiny terminals).
+        let on_boundary = hg.incident_edges(v).iter().any(|&e| {
+            region
+                .edges
+                .binary_search(&e)
+                .map(|j| {
+                    let e_in = lw.edge_in_of[j] as usize;
+                    let e_out = e_in + 1;
+                    if pierce_source {
+                        src_reach[e_in]
+                    } else {
+                        snk_reach[e_out]
+                    }
+                })
+                .unwrap_or(false)
+        });
+        if !on_boundary {
+            continue;
+        }
+        let key = (u8::from(reached_other), w, v);
+        if best.map_or(true, |(bk, _)| key < bk) {
+            best = Some((key, i as u32));
+        }
+    }
+    best.map(|(_, i)| i)
+}
+
+/// Cut weight between `b0` and `b1` restricted to region-relevant edges.
+fn pair_cut(p: &PartitionedHypergraph, region: &Region, b0: BlockId, b1: BlockId) -> Weight {
+    region
+        .edges
+        .iter()
+        .filter(|&&e| p.pin_count(e, b0) > 0 && p.pin_count(e, b1) > 0)
+        .map(|&e| p.hypergraph().edge_weight(e))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastructures::Hypergraph;
+
+    #[test]
+    fn improves_suboptimal_grid_bipartition() {
+        // Vertical strip partition with a jagged boundary — flow should
+        // straighten it to (near) the minimal column cut.
+        let h = crate::gen::grid::grid2d_graph(10, 10);
+        let part: Vec<BlockId> = (0..100)
+            .map(|v| {
+                let (x, y) = (v % 10, v / 10);
+                u32::from(x + (y % 3) >= 6) // jagged diagonal-ish cut
+            })
+            .collect();
+        let p = PartitionedHypergraph::new(&h, 2, part);
+        let before = p.km1();
+        let r = refine_pair(&p, 0, 1, 0.1, &FlowConfig::default(), 1);
+        let after = p.km1();
+        assert!(r.improved, "no improvement found");
+        assert!(after < before, "{before} -> {after}");
+        assert!(p.is_balanced(0.1));
+        p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn result_deterministic_across_flow_seeds() {
+        // THE paper property: different max-flow orders, identical result.
+        let h = crate::gen::spm_hypergraph_2d(12, 12);
+        let part: Vec<BlockId> = (0..144).map(|v| u32::from(v % 12 >= 6)).collect();
+        let mut outs = Vec::new();
+        for flow_seed in 0..6u64 {
+            let p = PartitionedHypergraph::new(&h, 2, part.clone());
+            let cfg = FlowConfig { flow_seed, ..Default::default() };
+            let r = refine_pair(&p, 0, 1, 0.1, &cfg, 0);
+            outs.push((p.snapshot(), p.km1(), r));
+        }
+        assert!(
+            outs.windows(2).all(|w| w[0] == w[1]),
+            "flow seed leaked into the refinement result"
+        );
+    }
+
+    #[test]
+    fn rejects_worse_cuts() {
+        // Already-optimal bipartition: flow must not change anything.
+        let h = Hypergraph::new(
+            6,
+            &[vec![0, 1], vec![1, 2], vec![2, 3], vec![3, 4], vec![4, 5]],
+            None,
+            None,
+        );
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 1, 1, 1]);
+        let before = p.km1();
+        refine_pair(&p, 0, 1, 0.2, &FlowConfig::default(), 3);
+        assert_eq!(p.km1(), before);
+        assert!(p.is_balanced(0.2));
+    }
+
+    #[test]
+    fn respects_balance() {
+        let h = crate::gen::grid::grid2d_graph(12, 12);
+        let part: Vec<BlockId> = (0..144).map(|v| u32::from(v % 12 >= 5)).collect();
+        let p = PartitionedHypergraph::new(&h, 2, part);
+        refine_pair(&p, 0, 1, 0.05, &FlowConfig::default(), 2);
+        assert!(p.is_balanced(0.05), "imbalance {}", p.imbalance());
+    }
+
+    #[test]
+    fn noop_on_uncut_pair() {
+        let h = Hypergraph::new(4, &[vec![0, 1], vec![2, 3]], None, None);
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 1, 1]);
+        let r = refine_pair(&p, 0, 1, 0.5, &FlowConfig::default(), 1);
+        assert!(!r.improved);
+        assert_eq!(r.old_cut, 0);
+    }
+}

@@ -1,0 +1,288 @@
+//! Max-flow core with *intentionally non-deterministic* exploration
+//! order.
+//!
+//! The paper's point (Section 5.1) is that flow-based refinement can stay
+//! deterministic **on top of a non-deterministic max-flow**, because the
+//! inclusion-minimal/-maximal min-cuts are unique regardless of the flow
+//! assignment (Picard–Queyranne). We make that property falsifiable: this
+//! Dinic implementation permutes its arc exploration order by a seed
+//! (standing in for the scheduling non-determinism of the parallel
+//! push-relabel algorithm the paper uses), so different seeds produce
+//! different max *flows* — and the test suite asserts the derived *cuts*
+//! are identical for every seed.
+//!
+//! Supports incremental use: piercing adds `∞` arcs from the super
+//! source/sink, and flow is re-augmented from the existing assignment.
+
+use crate::util::rng::hash64;
+
+/// Arc capacity type.
+pub type Cap = i64;
+/// Effectively-infinite capacity for terminal arcs.
+pub const INF: Cap = 1 << 60;
+
+#[derive(Clone, Debug)]
+struct Arc {
+    to: u32,
+    rev: u32,
+    cap: Cap,
+    flow: Cap,
+}
+
+/// Residual flow network with a designated super source (node 0) and
+/// super sink (node 1).
+#[derive(Clone, Debug, Default)]
+pub struct FlowNetwork {
+    adj: Vec<Vec<u32>>,
+    arcs: Vec<Arc>,
+    total_flow: Cap,
+}
+
+pub const SOURCE: u32 = 0;
+pub const SINK: u32 = 1;
+
+impl FlowNetwork {
+    /// Create with `n` nodes (node 0 = source, node 1 = sink; `n ≥ 2`).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2);
+        FlowNetwork { adj: vec![Vec::new(); n], arcs: Vec::new(), total_flow: 0 }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Add a directed arc `u → v` with capacity `cap` (plus 0-capacity
+    /// reverse arc). Returns the arc index.
+    pub fn add_arc(&mut self, u: u32, v: u32, cap: Cap) -> u32 {
+        let i = self.arcs.len() as u32;
+        self.arcs.push(Arc { to: v, rev: i + 1, cap, flow: 0 });
+        self.arcs.push(Arc { to: u, rev: i, cap: 0, flow: 0 });
+        self.adj[u as usize].push(i);
+        self.adj[v as usize].push(i + 1);
+        i
+    }
+
+    #[inline]
+    fn residual(&self, a: u32) -> Cap {
+        let arc = &self.arcs[a as usize];
+        arc.cap - arc.flow
+    }
+
+    /// Current total flow value (includes increments from all augment
+    /// calls since construction).
+    pub fn flow_value(&self) -> Cap {
+        self.total_flow
+    }
+
+    /// Augment the current flow to maximality w.r.t. the current arcs,
+    /// stopping early once the total flow exceeds `limit` (pass
+    /// `Cap::MAX` for a full max-flow). `order_seed` permutes arc
+    /// exploration — the non-determinism knob. Returns the added flow.
+    pub fn augment(&mut self, order_seed: u64, limit: Cap) -> Cap {
+        let n = self.num_nodes();
+        let before = self.total_flow;
+        // Per-node arc visit order, permuted by seed.
+        let order: Vec<Vec<u32>> = (0..n)
+            .map(|u| {
+                let mut o = self.adj[u].clone();
+                o.sort_unstable_by_key(|&a| hash64(order_seed, a as u64));
+                o
+            })
+            .collect();
+        let mut level = vec![u32::MAX; n];
+        let mut iter = vec![0usize; n];
+        loop {
+            if self.total_flow > limit {
+                break;
+            }
+            // BFS levels in the residual network.
+            level.fill(u32::MAX);
+            level[SOURCE as usize] = 0;
+            let mut queue = std::collections::VecDeque::new();
+            queue.push_back(SOURCE);
+            while let Some(u) = queue.pop_front() {
+                for &a in &order[u as usize] {
+                    let v = self.arcs[a as usize].to;
+                    if self.residual(a) > 0 && level[v as usize] == u32::MAX {
+                        level[v as usize] = level[u as usize] + 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            if level[SINK as usize] == u32::MAX {
+                break;
+            }
+            iter.fill(0);
+            // Blocking flow via iterative DFS.
+            loop {
+                let pushed = self.dfs_push(SOURCE, INF, &level, &mut iter, &order);
+                if pushed == 0 {
+                    break;
+                }
+                self.total_flow += pushed;
+                if self.total_flow > limit {
+                    break;
+                }
+            }
+        }
+        self.total_flow - before
+    }
+
+    fn dfs_push(
+        &mut self,
+        u: u32,
+        limit: Cap,
+        level: &[u32],
+        iter: &mut [usize],
+        order: &[Vec<u32>],
+    ) -> Cap {
+        if u == SINK {
+            return limit;
+        }
+        while iter[u as usize] < order[u as usize].len() {
+            let a = order[u as usize][iter[u as usize]];
+            let v = self.arcs[a as usize].to;
+            if self.residual(a) > 0 && level[v as usize] == level[u as usize] + 1 {
+                let d = self.dfs_push(v, limit.min(self.residual(a)), level, iter, order);
+                if d > 0 {
+                    self.arcs[a as usize].flow += d;
+                    let r = self.arcs[a as usize].rev;
+                    self.arcs[r as usize].flow -= d;
+                    return d;
+                }
+            }
+            iter[u as usize] += 1;
+        }
+        0
+    }
+
+    /// Nodes reachable from the source in the residual network — the
+    /// inclusion-minimal min-cut source side (unique; Picard–Queyranne).
+    /// Must be called after [`Self::augment`] saturates (flow is maximal).
+    pub fn source_reachable(&self) -> Vec<bool> {
+        let n = self.num_nodes();
+        let mut seen = vec![false; n];
+        seen[SOURCE as usize] = true;
+        let mut stack = vec![SOURCE];
+        while let Some(u) = stack.pop() {
+            for &a in &self.adj[u as usize] {
+                let v = self.arcs[a as usize].to;
+                if self.residual(a) > 0 && !seen[v as usize] {
+                    seen[v as usize] = true;
+                    stack.push(v);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Nodes that can reach the sink in the residual network — the
+    /// complement of the inclusion-maximal min-cut source side (unique).
+    pub fn sink_reaching(&self) -> Vec<bool> {
+        let n = self.num_nodes();
+        let mut seen = vec![false; n];
+        seen[SINK as usize] = true;
+        let mut stack = vec![SINK];
+        while let Some(u) = stack.pop() {
+            // reverse residual: arc v→u with residual > 0 ⇔ for each arc a
+            // out of u, its reverse has residual.
+            for &a in &self.adj[u as usize] {
+                let arc = &self.arcs[a as usize];
+                let v = arc.to;
+                let rev_res = self.residual(arc.rev);
+                if rev_res > 0 && !seen[v as usize] {
+                    seen[v as usize] = true;
+                    stack.push(v);
+                }
+            }
+        }
+        seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Classic small network with known max-flow value 19.
+    fn diamond() -> FlowNetwork {
+        // 0=s, 1=t, 2..6 internal.
+        let mut net = FlowNetwork::new(6);
+        net.add_arc(SOURCE, 2, 10);
+        net.add_arc(SOURCE, 3, 10);
+        net.add_arc(2, 4, 4);
+        net.add_arc(2, 5, 8);
+        net.add_arc(3, 5, 9);
+        net.add_arc(2, 3, 2);
+        net.add_arc(5, 4, 6);
+        net.add_arc(4, SINK, 10);
+        net.add_arc(5, SINK, 10);
+        net
+    }
+
+    #[test]
+    fn max_flow_value_correct() {
+        for seed in 0..8u64 {
+            let mut net = diamond();
+            let f = net.augment(seed, Cap::MAX);
+            assert_eq!(f, 19, "seed {seed}");
+            assert_eq!(net.flow_value(), 19);
+        }
+    }
+
+    #[test]
+    fn min_cut_sides_unique_across_seeds() {
+        let mut ref_src: Option<Vec<bool>> = None;
+        let mut ref_snk: Option<Vec<bool>> = None;
+        for seed in 0..8u64 {
+            let mut net = diamond();
+            net.augment(seed, Cap::MAX);
+            let src = net.source_reachable();
+            let snk = net.sink_reaching();
+            assert!(src[SOURCE as usize] && !src[SINK as usize]);
+            assert!(snk[SINK as usize] && !snk[SOURCE as usize]);
+            if let Some(r) = &ref_src {
+                assert_eq!(r, &src, "source-reachable differs at seed {seed}");
+                assert_eq!(ref_snk.as_ref().unwrap(), &snk);
+            } else {
+                ref_src = Some(src);
+                ref_snk = Some(snk);
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_augment_after_adding_terminal_arc() {
+        let mut net = diamond();
+        net.augment(1, Cap::MAX);
+        assert_eq!(net.flow_value(), 19);
+        // Open a new source arc to node 4 (piercing-style) — more flow.
+        net.add_arc(SOURCE, 4, INF);
+        let added = net.augment(1, Cap::MAX);
+        assert!(added > 0);
+        // Value now equals total capacity into the sink.
+        assert_eq!(net.flow_value(), 20);
+    }
+
+    #[test]
+    fn limit_aborts_early() {
+        let mut net = diamond();
+        net.augment(0, 5);
+        assert!(net.flow_value() > 5, "must exceed limit before stopping");
+        assert!(net.flow_value() < 19, "should not reach full max-flow");
+    }
+
+    #[test]
+    fn flow_conservation() {
+        let mut net = diamond();
+        net.augment(3, Cap::MAX);
+        for u in 2..6u32 {
+            let mut net_out: Cap = 0;
+            for &a in &net.adj[u as usize] {
+                net_out += net.arcs[a as usize].flow;
+            }
+            assert_eq!(net_out, 0, "conservation violated at {u}");
+        }
+    }
+}

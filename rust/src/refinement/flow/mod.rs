@@ -1,0 +1,20 @@
+//! Deterministic flow-based refinement (Section 5).
+//!
+//! Refines the k-way partition by scheduling two-way refinements on
+//! block pairs ([`scheduler`], a deterministic matching schedule on the
+//! quotient graph). Each two-way refinement ([`bipartition`]) solves a
+//! sequence of incremental max-flow problems on the flow network built
+//! from the region around the cut ([`region`], [`lawler`]) using a
+//! max-flow whose internal exploration order is intentionally
+//! non-deterministic ([`dinic`]) — results stay deterministic because the
+//! inclusion-minimal/-maximal min-cuts are unique (Picard–Queyranne;
+//! see `dinic::FlowNetwork::{source_reachable, sink_reaching}`) and
+//! piercing is order-normalized ([`bipartition`]).
+
+pub mod bipartition;
+pub mod dinic;
+pub mod lawler;
+pub mod region;
+pub mod scheduler;
+
+pub use scheduler::refine_kway_flows;

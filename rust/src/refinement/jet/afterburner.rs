@@ -1,0 +1,319 @@
+//! The hypergraph afterburner (Section 4.2, Algorithm 2).
+//!
+//! Re-evaluates every candidate move assuming all *higher-priority*
+//! candidates (gain desc, id asc — FM-like order) execute first, and
+//! keeps only moves whose recomputed gain is positive. The naive
+//! per-vertex recomputation is `O(Σ|e|²)`; this implementation does
+//! `O(Σ |e ∩ M| log |e ∩ M|)` extra work per edge on top of a linear
+//! scan: per edge, the moved pins are sorted by rank and the pin-count
+//! evolution is simulated only for the blocks those moves touch.
+//! Specialized paths handle `|e ∩ M| ∈ {1,2,3}` without sorting — the
+//! dominant cases in practice.
+
+use super::super::MoveCandidate;
+use crate::datastructures::PartitionedHypergraph;
+use crate::{BlockId, EdgeId};
+use std::sync::atomic::{AtomicI64, Ordering};
+
+/// Filter `candidates` through the afterburner; returns the surviving
+/// moves with their recomputed gains, in rank order.
+pub fn afterburner(
+    p: &PartitionedHypergraph,
+    candidates: &[MoveCandidate],
+) -> Vec<MoveCandidate> {
+    let n = p.hypergraph().num_vertices();
+    if candidates.is_empty() {
+        return Vec::new();
+    }
+    // Rank candidates by the FM-like execution order.
+    let mut by_rank: Vec<MoveCandidate> = candidates.to_vec();
+    crate::par::par_sort_by_key(&mut by_rank, |c| (-c.gain, c.vertex));
+    // vertex → rank (u32::MAX = not a candidate).
+    let mut rank_of = vec![u32::MAX; n];
+    for (r, c) in by_rank.iter().enumerate() {
+        rank_of[c.vertex as usize] = r as u32;
+    }
+
+    // Recomputed gain accumulators, indexed by rank.
+    let recomputed: Vec<AtomicI64> = (0..by_rank.len()).map(|_| AtomicI64::new(0)).collect();
+
+    let hg = p.hypergraph();
+    // Perf: only edges incident to a candidate can contribute; gather
+    // them once (mark-once atomic bitset, drained in id order) instead of
+    // scanning all |E| edges per iteration.
+    let touched = {
+        let marks = crate::util::bitset::AtomicBitset::new(hg.num_edges());
+        crate::par::for_each_chunk(by_rank.len(), |_c, r| {
+            for i in r {
+                for &e in hg.incident_edges(by_rank[i].vertex) {
+                    marks.test_and_set(e as usize);
+                }
+            }
+        });
+        let mut v: Vec<EdgeId> = Vec::new();
+        for e in 0..hg.num_edges() {
+            if marks.get(e) {
+                v.push(e as EdgeId);
+            }
+        }
+        v
+    };
+    crate::par::for_each_chunk(touched.len(), |_c, r| {
+        // (rank, source, target) triples of moved pins, scratch per chunk.
+        let mut moved: Vec<(u32, BlockId, BlockId)> = Vec::new();
+        for ei in r {
+            let e = touched[ei];
+            moved.clear();
+            for &v in hg.pins(e) {
+                let rk = rank_of[v as usize];
+                if rk != u32::MAX {
+                    let c = &by_rank[rk as usize];
+                    moved.push((rk, p.part(v), c.target));
+                }
+            }
+            match moved.len() {
+                0 => {}
+                1 => simulate_1(p, e, moved[0], &recomputed),
+                2 => {
+                    if moved[0].0 > moved[1].0 {
+                        moved.swap(0, 1);
+                    }
+                    simulate_general(p, e, &moved, &recomputed);
+                }
+                3 => {
+                    // 3-element sorting network.
+                    if moved[0].0 > moved[1].0 {
+                        moved.swap(0, 1);
+                    }
+                    if moved[1].0 > moved[2].0 {
+                        moved.swap(1, 2);
+                    }
+                    if moved[0].0 > moved[1].0 {
+                        moved.swap(0, 1);
+                    }
+                    simulate_general(p, e, &moved, &recomputed);
+                }
+                _ => {
+                    moved.sort_unstable_by_key(|&(rk, _, _)| rk);
+                    simulate_general(p, e, &moved, &recomputed);
+                }
+            }
+        }
+    });
+
+    // Keep positive recomputed gains, in rank order.
+    let mut out = Vec::new();
+    for (rk, c) in by_rank.iter().enumerate() {
+        let g = recomputed[rk].load(Ordering::Relaxed);
+        if g > 0 {
+            out.push(MoveCandidate { vertex: c.vertex, target: c.target, gain: g });
+        }
+    }
+    out
+}
+
+/// `|e ∩ M| = 1`: the simulated gain equals the static gain contribution.
+#[inline]
+fn simulate_1(
+    p: &PartitionedHypergraph,
+    e: EdgeId,
+    (rk, s, t): (u32, BlockId, BlockId),
+    recomputed: &[AtomicI64],
+) {
+    let w = p.hypergraph().edge_weight(e);
+    let mut delta = 0;
+    if p.pin_count(e, s) == 1 {
+        delta += w;
+    }
+    if p.pin_count(e, t) == 0 {
+        delta -= w;
+    }
+    if delta != 0 {
+        recomputed[rk as usize].fetch_add(delta, Ordering::Relaxed);
+    }
+}
+
+/// General case: simulate the rank-ordered move sequence on this edge's
+/// pin counts, tracking only the touched blocks in a small association
+/// list (≤ 2·|e∩M| entries).
+fn simulate_general(
+    p: &PartitionedHypergraph,
+    e: EdgeId,
+    moved: &[(u32, BlockId, BlockId)],
+    recomputed: &[AtomicI64],
+) {
+    let w = p.hypergraph().edge_weight(e);
+    // Small assoc list: (block, simulated φ).
+    let mut counts: [(BlockId, i64); 16] = [(u32::MAX, 0); 16];
+    let mut counts_vec: Vec<(BlockId, i64)> = Vec::new();
+    let small = moved.len() * 2 <= 16;
+    let mut len = 0usize;
+    let mut get_idx = |b: BlockId,
+                       counts: &mut [(BlockId, i64); 16],
+                       counts_vec: &mut Vec<(BlockId, i64)>|
+     -> usize {
+        if small {
+            for i in 0..len {
+                if counts[i].0 == b {
+                    return i;
+                }
+            }
+            counts[len] = (b, p.pin_count(e, b) as i64);
+            len += 1;
+            len - 1
+        } else {
+            for (i, &(bb, _)) in counts_vec.iter().enumerate() {
+                if bb == b {
+                    return i;
+                }
+            }
+            counts_vec.push((b, p.pin_count(e, b) as i64));
+            counts_vec.len() - 1
+        }
+    };
+    for &(rk, s, t) in moved {
+        let si = get_idx(s, &mut counts, &mut counts_vec);
+        let ti = get_idx(t, &mut counts, &mut counts_vec);
+        let (sc, tc) = if small {
+            (&mut counts[si].1 as *mut i64, &mut counts[ti].1 as *mut i64)
+        } else {
+            // indices into counts_vec — split borrows via raw pointers
+            let base = counts_vec.as_mut_ptr();
+            unsafe { (&mut (*base.add(si)).1 as *mut i64, &mut (*base.add(ti)).1 as *mut i64) }
+        };
+        // SAFETY: si != ti (s != t for a real move), both in-bounds.
+        let mut delta = 0;
+        unsafe {
+            *sc -= 1;
+            if *sc == 0 {
+                delta += w;
+            }
+            *tc += 1;
+            if *tc == 1 {
+                delta -= w;
+            }
+        }
+        if delta != 0 {
+            recomputed[rk as usize].fetch_add(delta, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastructures::Hypergraph;
+    use crate::{VertexId, Weight};
+
+    /// Oracle: sequential simulation of the full move order on a scratch
+    /// partition, recording each move's gain at execution time.
+    fn oracle(
+        p: &PartitionedHypergraph,
+        candidates: &[MoveCandidate],
+    ) -> Vec<(VertexId, Weight)> {
+        let mut by_rank = candidates.to_vec();
+        by_rank.sort_by_key(|c| (-c.gain, c.vertex));
+        let snap = p.snapshot();
+        let mut gains = Vec::new();
+        for c in &by_rank {
+            let g = p.gain(c.vertex, c.target);
+            p.apply_move(c.vertex, c.target);
+            gains.push((c.vertex, g));
+        }
+        p.rollback_to(&snap);
+        gains
+    }
+
+    fn check_against_oracle(h: &Hypergraph, part: Vec<BlockId>, k: usize, tau: f64) {
+        let p = PartitionedHypergraph::new(h, k, part);
+        let locked = crate::util::Bitset::new(h.num_vertices());
+        let cands = super::super::candidates::collect_candidates(&p, &locked, tau, None);
+        let filtered = afterburner(&p, &cands);
+        let oracle_gains = oracle(&p, &cands);
+        let expected: Vec<(VertexId, Weight)> =
+            oracle_gains.into_iter().filter(|&(_, g)| g > 0).collect();
+        let got: Vec<(VertexId, Weight)> =
+            filtered.iter().map(|c| (c.vertex, c.gain)).collect();
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn matches_sequential_oracle_small() {
+        let h = Hypergraph::new(
+            6,
+            &[vec![0, 1, 2], vec![2, 3], vec![3, 4, 5], vec![0, 5], vec![1, 4]],
+            None,
+            Some(vec![2, 1, 3, 1, 2]),
+        );
+        check_against_oracle(&h, vec![0, 1, 0, 1, 0, 1], 2, 0.75);
+    }
+
+    #[test]
+    fn matches_sequential_oracle_random_instances() {
+        for seed in 0..5u64 {
+            let h = crate::gen::sat_hypergraph(120, 360, 7, seed);
+            let part: Vec<BlockId> =
+                (0..120).map(|v| ((v as u64 + seed) % 3) as BlockId).collect();
+            check_against_oracle(&h, part, 3, 0.75);
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let h = Hypergraph::new(2, &[vec![0, 1]], None, None);
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 1]);
+        assert!(afterburner(&p, &[]).is_empty());
+    }
+
+    #[test]
+    fn companion_moves_rescue_each_other() {
+        // Hyperedge {0,1} cut; both pins moving 1→0's side together: the
+        // second move's recomputed gain sees the first's departure.
+        let h = Hypergraph::new(
+            4,
+            &[vec![0, 1], vec![0, 2], vec![1, 3]],
+            None,
+            Some(vec![10, 1, 1]),
+        );
+        // 0 and 1 in block 1; 2,3 in block 0. Moving both 0,1 → block 0
+        // saves the heavy edge. Individually: gain(0→0) = 10(edge0? no —
+        // edge0 internal to {0,1}) … construct candidates manually.
+        let p = PartitionedHypergraph::new(&h, 2, vec![1, 1, 0, 0]);
+        let cands = vec![
+            MoveCandidate { vertex: 0, target: 0, gain: p.gain(0, 0) },
+            MoveCandidate { vertex: 1, target: 0, gain: p.gain(1, 0) },
+        ];
+        // Static: moving 0 alone keeps edge0 cut (pin 1 remains) → the
+        // heavy weight is not freed; afterburner sees the sequence.
+        let out = afterburner(&p, &cands);
+        let total: Weight = out.iter().map(|c| c.gain).sum();
+        // Executing both must realize the full benefit of uncutting edge0
+        // plus edge1, minus newly cut edge2.
+        let snap = p.snapshot();
+        let before = p.km1();
+        p.apply_moves(&[(0, 0), (1, 0)]);
+        let after = p.km1();
+        p.rollback_to(&snap);
+        // All positive recomputed moves together ≥ actual sequence total.
+        assert!(total >= before - after, "total {total} < delta {}", before - after);
+        assert!(!out.is_empty());
+    }
+
+    #[test]
+    fn deterministic_across_threads() {
+        let h = crate::gen::vlsi_netlist(20, 1.3, 6);
+        let n = h.num_vertices();
+        let part: Vec<BlockId> = (0..n).map(|v| (v % 4) as BlockId).collect();
+        let mut outs = Vec::new();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let p = PartitionedHypergraph::new(&h, 4, part.clone());
+                let locked = crate::util::Bitset::new(n);
+                let cands =
+                    super::super::candidates::collect_candidates(&p, &locked, 0.75, None);
+                outs.push(afterburner(&p, &cands));
+            });
+        }
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+    }
+}

@@ -1,0 +1,316 @@
+//! Jet move-candidate selection (Section 4.1).
+//!
+//! For every unlocked vertex `v` in block `s`, find the highest-gain
+//! target block `t(v)` (deterministic lowest-id tie-break) and admit the
+//! candidate iff
+//!
+//! ```text
+//! gain(v, t(v)) ≥ −τ · Σ_{e ∈ I(v): |e ∩ V_s| > 1} ω(e)
+//! ```
+//!
+//! for the temperature parameter τ — i.e. negative-gain moves are allowed
+//! up to a fraction of the vertex's affinity to its current block.
+//! The gain is computed against the *frozen* partition state (synchronous
+//! rounds), which is what makes Jet deterministic-friendly.
+//!
+//! Two evaluation backends produce bit-identical results:
+//! * the native Rust path (exact i64 arithmetic), and
+//! * tile-based selection through [`TileSelector`] — implemented by the
+//!   AOT-compiled XLA executable authored as a Pallas kernel
+//!   (see `python/compile/kernels/gain_select.py` and
+//!   [`crate::runtime`]). Tiles use f32; all quantities in scope are
+//!   integers far below 2^24, so f32 arithmetic is exact.
+
+use super::super::MoveCandidate;
+use crate::datastructures::{AffinityBuffer, PartitionedHypergraph};
+use crate::util::Bitset;
+use crate::{BlockId, VertexId, Weight};
+
+/// Tile geometry shared with the Pallas kernel / AOT artifacts.
+pub const TILE_ROWS: usize = 256;
+
+/// Backend interface for the dense per-tile move selection.
+///
+/// Inputs are row-major `rows × k` affinities plus per-row scalars;
+/// outputs are the chosen target block, its gain, and the admission flag
+/// under temperature `tau`. Rows with no feasible target must set
+/// `out_admit = 0`.
+pub trait TileSelector: Sync {
+    #[allow(clippy::too_many_arguments)]
+    fn select_tile(
+        &self,
+        k: usize,
+        rows: usize,
+        affinity: &[f32],
+        current: &[u32],
+        leave_cost: &[f32],
+        internal: &[f32],
+        tau: f32,
+        out_target: &mut [u32],
+        out_gain: &mut [f32],
+        out_admit: &mut [u8],
+    );
+}
+
+/// Reference tile selector in pure Rust — semantics identical to the
+/// Pallas kernel (first-maximum = lowest block id wins ties).
+pub struct NativeTileSelector;
+
+impl TileSelector for NativeTileSelector {
+    fn select_tile(
+        &self,
+        k: usize,
+        rows: usize,
+        affinity: &[f32],
+        current: &[u32],
+        leave_cost: &[f32],
+        internal: &[f32],
+        tau: f32,
+        out_target: &mut [u32],
+        out_gain: &mut [f32],
+        out_admit: &mut [u8],
+    ) {
+        for r in 0..rows {
+            let row = &affinity[r * k..(r + 1) * k];
+            let cur = current[r] as usize;
+            // score[b] = affinity[b] − leave_cost; invalid slots → −inf.
+            let mut best_b = u32::MAX;
+            let mut best_score = f32::NEG_INFINITY;
+            for (b, &a) in row.iter().enumerate() {
+                if b == cur || a <= 0.0 {
+                    continue;
+                }
+                let score = a - leave_cost[r];
+                if score > best_score {
+                    best_score = score;
+                    best_b = b as u32;
+                }
+            }
+            if best_b == u32::MAX {
+                out_target[r] = 0;
+                out_gain[r] = 0.0;
+                out_admit[r] = 0;
+            } else {
+                out_target[r] = best_b;
+                out_gain[r] = best_score;
+                out_admit[r] = u8::from(best_score >= -tau * internal[r]);
+            }
+        }
+    }
+}
+
+/// Collect the Jet candidate set `M` for temperature `tau`.
+///
+/// `locked` marks vertices excluded this iteration (moved last iteration).
+/// With `selector = None`, the exact i64 native path is used; otherwise
+/// affinities are marshaled into `TILE_ROWS × k` tiles and dispatched to
+/// the given backend.
+pub fn collect_candidates(
+    p: &PartitionedHypergraph,
+    locked: &Bitset,
+    tau: f64,
+    selector: Option<&dyn TileSelector>,
+) -> Vec<MoveCandidate> {
+    match selector {
+        None => collect_native(p, locked, tau),
+        Some(s) => collect_tiled(p, locked, tau, s),
+    }
+}
+
+fn collect_native(
+    p: &PartitionedHypergraph,
+    locked: &Bitset,
+    tau: f64,
+) -> Vec<MoveCandidate> {
+    // Perf: only boundary vertices can have a non-empty affinity row
+    // (an interior vertex's incident edges are all single-block), so the
+    // scan is restricted to them — semantically identical, and far
+    // cheaper once the partition tightens (see EXPERIMENTS.md §Perf).
+    let boundary = crate::refinement::boundary_vertices(p);
+    let nt = crate::par::num_threads().max(1);
+    let ranges = crate::par::pool::chunk_ranges(boundary.len(), nt);
+    let mut outs: Vec<Vec<MoveCandidate>> = Vec::new();
+    for _ in 0..ranges.len() {
+        outs.push(Vec::new());
+    }
+    {
+        let boundary = &boundary;
+        let slots: Vec<_> = outs.iter_mut().zip(ranges).collect();
+        std::thread::scope(|s| {
+            for (slot, range) in slots {
+                s.spawn(move || {
+                    let mut buf = AffinityBuffer::new(p.k());
+                    for i in range {
+                        let v = boundary[i];
+                        if locked.get(v as usize) {
+                            continue;
+                        }
+                        buf.reset();
+                        let (w_total, benefit, internal) = p.collect_affinities(v, &mut buf);
+                        let leave_cost = w_total - benefit;
+                        // First maximum over ascending block id == kernel
+                        // argmax semantics.
+                        let mut best: Option<(Weight, BlockId)> = None;
+                        let mut touched: Vec<BlockId> = buf.touched().to_vec();
+                        touched.sort_unstable();
+                        for &b in &touched {
+                            let gain = buf.get(b) - leave_cost;
+                            if best.map_or(true, |(bg, _)| gain > bg) {
+                                best = Some((gain, b));
+                            }
+                        }
+                        if let Some((gain, b)) = best {
+                            // Temperature admission (integer-exact form of
+                            // gain ≥ −τ·internal).
+                            let thresh = -(tau * internal as f64);
+                            if (gain as f64) >= thresh {
+                                slot.push(MoveCandidate { vertex: v, target: b, gain });
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+    outs.into_iter().flatten().collect()
+}
+
+/// Tile-based path: same outputs, dispatched through a [`TileSelector`].
+fn collect_tiled(
+    p: &PartitionedHypergraph,
+    locked: &Bitset,
+    tau: f64,
+    selector: &dyn TileSelector,
+) -> Vec<MoveCandidate> {
+    let n = p.hypergraph().num_vertices();
+    let k = p.k();
+    let n_tiles = n.div_ceil(TILE_ROWS);
+    let per_tile: Vec<Vec<MoveCandidate>> = crate::par::map_indexed(n_tiles, |t| {
+        let lo = t * TILE_ROWS;
+        let hi = ((t + 1) * TILE_ROWS).min(n);
+        let rows = hi - lo;
+        let mut affinity = vec![0f32; rows * k];
+        let mut current = vec![0u32; rows];
+        let mut leave_cost = vec![0f32; rows];
+        let mut internal = vec![0f32; rows];
+        let mut row_vertex = vec![VertexId::MAX; rows];
+        let mut buf = AffinityBuffer::new(k);
+        for (r, v) in (lo..hi).enumerate() {
+            let v = v as VertexId;
+            row_vertex[r] = v;
+            current[r] = p.part(v);
+            if locked.get(v as usize) {
+                // all-zero affinity row → no admission
+                continue;
+            }
+            buf.reset();
+            let (w_total, benefit, intr) = p.collect_affinities(v, &mut buf);
+            for &b in buf.touched() {
+                affinity[r * k + b as usize] = buf.get(b) as f32;
+            }
+            leave_cost[r] = (w_total - benefit) as f32;
+            internal[r] = intr as f32;
+        }
+        let mut out_target = vec![0u32; rows];
+        let mut out_gain = vec![0f32; rows];
+        let mut out_admit = vec![0u8; rows];
+        selector.select_tile(
+            k,
+            rows,
+            &affinity,
+            &current,
+            &leave_cost,
+            &internal,
+            tau as f32,
+            &mut out_target,
+            &mut out_gain,
+            &mut out_admit,
+        );
+        let mut cands = Vec::new();
+        for r in 0..rows {
+            if out_admit[r] != 0 {
+                cands.push(MoveCandidate {
+                    vertex: row_vertex[r],
+                    target: out_target[r],
+                    gain: out_gain[r] as Weight,
+                });
+            }
+        }
+        cands
+    });
+    per_tile.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastructures::Hypergraph;
+
+    fn setup() -> (Hypergraph, Vec<BlockId>) {
+        let h = crate::gen::sat_hypergraph(400, 1200, 8, 21);
+        let part: Vec<BlockId> = (0..400).map(|v| (v % 4) as BlockId).collect();
+        (h, part)
+    }
+
+    #[test]
+    fn candidates_match_bruteforce_gains() {
+        let (h, part) = setup();
+        let p = PartitionedHypergraph::new(&h, 4, part);
+        let locked = Bitset::new(400);
+        let cands = collect_candidates(&p, &locked, 0.0, None);
+        assert!(!cands.is_empty());
+        for c in &cands {
+            assert_eq!(c.gain, p.gain(c.vertex, c.target), "vertex {}", c.vertex);
+            assert!(c.gain >= 0, "tau=0 admits only non-negative gains");
+        }
+    }
+
+    #[test]
+    fn temperature_widens_candidate_set() {
+        let (h, part) = setup();
+        let p = PartitionedHypergraph::new(&h, 4, part);
+        let locked = Bitset::new(400);
+        let cold = collect_candidates(&p, &locked, 0.0, None).len();
+        let warm = collect_candidates(&p, &locked, 0.75, None).len();
+        assert!(warm > cold, "warm {warm} <= cold {cold}");
+    }
+
+    #[test]
+    fn locked_vertices_excluded() {
+        let (h, part) = setup();
+        let p = PartitionedHypergraph::new(&h, 4, part);
+        let mut locked = Bitset::new(400);
+        let all = collect_candidates(&p, &locked, 0.5, None);
+        let first = all[0].vertex;
+        locked.set(first as usize);
+        let without = collect_candidates(&p, &locked, 0.5, None);
+        assert!(without.iter().all(|c| c.vertex != first));
+        assert_eq!(without.len(), all.len() - 1);
+    }
+
+    #[test]
+    fn native_and_tiled_paths_agree() {
+        let (h, part) = setup();
+        let p = PartitionedHypergraph::new(&h, 4, part);
+        let locked = Bitset::new(400);
+        for tau in [0.0, 0.25, 0.75] {
+            let native = collect_candidates(&p, &locked, tau, None);
+            let tiled = collect_candidates(&p, &locked, tau, Some(&NativeTileSelector));
+            assert_eq!(native, tiled, "tau={tau}");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_threads() {
+        let (h, part) = setup();
+        let mut outs = Vec::new();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let p = PartitionedHypergraph::new(&h, 4, part.clone());
+                let locked = Bitset::new(400);
+                outs.push(collect_candidates(&p, &locked, 0.5, None));
+            });
+        }
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+    }
+}

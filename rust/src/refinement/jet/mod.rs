@@ -1,0 +1,11 @@
+//! Deterministic Jet refinement (Section 4): candidate selection with
+//! the temperature filter ([`candidates`]), the hypergraph afterburner
+//! ([`afterburner`]), the deterministic weight-aware rebalancer
+//! ([`rebalance`]) and the multi-temperature driver ([`refine_jet`]).
+
+pub mod afterburner;
+pub mod candidates;
+pub mod rebalance;
+
+mod driver;
+pub use driver::{refine_jet, JetStats};

@@ -1,0 +1,307 @@
+//! Deterministic rebalancing (Section 4.3).
+//!
+//! Works in rounds: every overloaded block sheds a *minimal* prefix of
+//! its vertices — ordered by a weight-aware priority — to their preferred
+//! eligible target blocks. Differences to Jet's original weak rebalancer:
+//!
+//! * priority includes the vertex weight: `gain(v)/c(v)` for negative
+//!   gains, `gain(v)·c(v)` for positive (higher = better) — compared with
+//!   exact integer cross-multiplication, no floats;
+//! * selection is a deterministic parallel sort + prefix sum + binary
+//!   search instead of Jet's bucket ordering (whose final-bucket subset
+//!   is non-deterministic);
+//! * a *deadzone* of size `d·ε·⌈c(V)/k⌉` below `L_max` keeps just-fixed
+//!   blocks from being refilled (targets inside it are ineligible);
+//! * vertices with `c(v) > 3/2·(c(V_b) − ⌈c(V)/k⌉)` are never moved.
+
+use crate::datastructures::{AffinityBuffer, PartitionedHypergraph};
+use crate::{BlockId, VertexId, Weight};
+use std::cmp::Ordering;
+
+/// One shed candidate.
+#[derive(Clone, Copy, Debug)]
+struct RebalanceMove {
+    vertex: VertexId,
+    target: BlockId,
+    gain: Weight,
+    weight: Weight,
+}
+
+/// Descending priority order (then ascending id): positive gains first
+/// (larger `g·c` first), then zero, then negative (larger `g/c` first).
+fn priority_cmp(a: &RebalanceMove, b: &RebalanceMove) -> Ordering {
+    let class = |g: Weight| -> u8 {
+        match g.cmp(&0) {
+            Ordering::Greater => 2,
+            Ordering::Equal => 1,
+            Ordering::Less => 0,
+        }
+    };
+    let (ca, cb) = (class(a.gain), class(b.gain));
+    if ca != cb {
+        return cb.cmp(&ca); // higher class first
+    }
+    let ord = match ca {
+        2 => {
+            // gain·c, larger first — exact in i128.
+            let pa = a.gain as i128 * a.weight as i128;
+            let pb = b.gain as i128 * b.weight as i128;
+            pb.cmp(&pa)
+        }
+        0 => {
+            // gain/c, larger first ⟺ a.g·b.c > b.g·a.c (weights > 0).
+            let pa = a.gain as i128 * b.weight as i128;
+            let pb = b.gain as i128 * a.weight as i128;
+            pb.cmp(&pa)
+        }
+        _ => Ordering::Equal,
+    };
+    ord.then(a.vertex.cmp(&b.vertex))
+}
+
+/// Rebalance `p` to `ε`-balance. Returns true on success.
+pub fn rebalance(p: &PartitionedHypergraph, eps: f64, deadzone_d: f64, max_rounds: usize) -> bool {
+    rebalance_with_priority(p, eps, deadzone_d, max_rounds, true)
+}
+
+/// Like [`rebalance`], with the weight-aware priority as an ablation
+/// knob (`false` = Jet's original plain-gain priority).
+pub fn rebalance_with_priority(
+    p: &PartitionedHypergraph,
+    eps: f64,
+    deadzone_d: f64,
+    max_rounds: usize,
+    weight_aware: bool,
+) -> bool {
+    let k = p.k();
+    let lmax = p.max_block_weight(eps);
+    let avg = p.avg_block_weight();
+    let dz = (deadzone_d * eps * avg as f64).ceil() as Weight;
+
+    for _round in 0..max_rounds {
+        let weights = p.block_weights();
+        let overloaded: Vec<BlockId> = (0..k as BlockId)
+            .filter(|&b| weights[b as usize] > lmax)
+            .collect();
+        if overloaded.is_empty() {
+            return true;
+        }
+        let mut progressed = false;
+        for &b in &overloaded {
+            let shed_target = p.block_weight(b) - lmax;
+            if shed_target <= 0 {
+                continue; // an earlier shed this round may have landed here
+            }
+            let moves = collect_block_moves(p, b, lmax, dz, avg);
+            if moves.is_empty() {
+                continue;
+            }
+            // Minimal prefix by priority whose weight covers the overload:
+            // sort, prefix-sum, binary-search (all deterministic).
+            let mut sorted = moves;
+            if weight_aware {
+                crate::par::par_sort_by(&mut sorted, priority_cmp);
+            } else {
+                // Ablation: Jet's original plain-gain priority.
+                crate::par::par_sort_by_key(&mut sorted, |m| (-m.gain, m.vertex));
+            }
+            let w: Vec<Weight> = sorted.iter().map(|m| m.weight).collect();
+            let (prefix, total) = crate::par::exclusive_prefix_sum(&w);
+            if total < shed_target {
+                // shed everything we can
+            }
+            // smallest idx with prefix[idx] + w[idx] >= shed_target
+            let cut = match prefix.binary_search_by(|&ps| {
+                if ps >= shed_target {
+                    Ordering::Greater
+                } else {
+                    Ordering::Less
+                }
+            }) {
+                Ok(i) => i,
+                Err(i) => i,
+            };
+            let selected = &sorted[..cut.min(sorted.len())];
+            if selected.is_empty() {
+                continue;
+            }
+            progressed = true;
+            let batch: Vec<(VertexId, BlockId)> =
+                selected.iter().map(|m| (m.vertex, m.target)).collect();
+            p.apply_moves(&batch);
+        }
+        if !progressed {
+            return false;
+        }
+    }
+    p.is_balanced(eps)
+}
+
+/// All movable vertices of overloaded block `b` with their preferred
+/// eligible target (max gain; untouched eligible blocks count with
+/// affinity 0; deterministic lowest-id tie-break).
+fn collect_block_moves(
+    p: &PartitionedHypergraph,
+    b: BlockId,
+    lmax: Weight,
+    dz: Weight,
+    avg: Weight,
+) -> Vec<RebalanceMove> {
+    let hg = p.hypergraph();
+    let n = hg.num_vertices();
+    let heavy_cap_num = 3 * (p.block_weight(b) - avg); // c(v) > 3/2·(..) ⇔ 2c(v) > 3·(..)
+    let weights = p.block_weights();
+    let k = p.k();
+
+    let nt = crate::par::num_threads().max(1);
+    let ranges = crate::par::pool::chunk_ranges(n, nt);
+    let mut outs: Vec<Vec<RebalanceMove>> = Vec::new();
+    for _ in 0..ranges.len() {
+        outs.push(Vec::new());
+    }
+    {
+        let slots: Vec<_> = outs.iter_mut().zip(ranges).collect();
+        let weights = &weights;
+        std::thread::scope(|s| {
+            for (slot, range) in slots {
+                s.spawn(move || {
+                    let mut buf = AffinityBuffer::new(k);
+                    for v in range {
+                        let v = v as VertexId;
+                        if p.part(v) != b {
+                            continue;
+                        }
+                        let cv = hg.vertex_weight(v);
+                        if 2 * cv > heavy_cap_num {
+                            continue; // heavy-vertex exclusion
+                        }
+                        buf.reset();
+                        let (w_total, benefit, _internal) = p.collect_affinities(v, &mut buf);
+                        let leave_cost = w_total - benefit;
+                        let eligible = |t: BlockId| -> bool {
+                            t != b
+                                && weights[t as usize] + cv <= lmax
+                                && weights[t as usize] < lmax - dz
+                        };
+                        // Best touched eligible target.
+                        let mut best: Option<(Weight, BlockId)> = None;
+                        let mut touched: Vec<BlockId> = buf.touched().to_vec();
+                        touched.sort_unstable();
+                        for &t in &touched {
+                            if !eligible(t) {
+                                continue;
+                            }
+                            let gain = buf.get(t) - leave_cost;
+                            if best.map_or(true, |(bg, _)| gain > bg) {
+                                best = Some((gain, t));
+                            }
+                        }
+                        // A zero-affinity eligible block (gain −leave_cost)
+                        // if better than nothing / all-touched-ineligible.
+                        if best.map_or(true, |(bg, _)| -leave_cost > bg) {
+                            if let Some(t) =
+                                (0..k as BlockId).find(|&t| eligible(t) && buf.get(t) == 0)
+                            {
+                                best = Some((-leave_cost, t));
+                            }
+                        }
+                        if let Some((gain, target)) = best {
+                            slot.push(RebalanceMove { vertex: v, target, gain, weight: cv });
+                        }
+                    }
+                });
+            }
+        });
+    }
+    outs.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastructures::Hypergraph;
+
+    #[test]
+    fn priority_ordering_rules() {
+        let m = |g: Weight, c: Weight, v: VertexId| RebalanceMove {
+            vertex: v,
+            target: 0,
+            gain: g,
+            weight: c,
+        };
+        // positive beats zero beats negative
+        assert_eq!(priority_cmp(&m(1, 1, 0), &m(0, 1, 1)), Ordering::Less);
+        assert_eq!(priority_cmp(&m(0, 1, 0), &m(-1, 1, 1)), Ordering::Less);
+        // positive: g·c larger first → (2,3)=6 before (5,1)=5
+        assert_eq!(priority_cmp(&m(2, 3, 0), &m(5, 1, 1)), Ordering::Less);
+        // negative: g/c larger first → (-1, 4) = -0.25 before (-1, 2) = -0.5
+        assert_eq!(priority_cmp(&m(-1, 4, 0), &m(-1, 2, 1)), Ordering::Less);
+        // ties → lower id first
+        assert_eq!(priority_cmp(&m(-1, 2, 0), &m(-2, 4, 1)), Ordering::Less);
+    }
+
+    #[test]
+    fn restores_balance_on_overloaded_partition() {
+        let h = crate::gen::grid::grid2d_graph(20, 20);
+        // Everything in block 0 except one row.
+        let part: Vec<BlockId> = (0..400).map(|v| u32::from(v >= 380)).collect();
+        let p = PartitionedHypergraph::new(&h, 2, part);
+        assert!(!p.is_balanced(0.03));
+        let ok = rebalance(&p, 0.03, 0.1, 100);
+        assert!(ok, "imbalance left: {}", p.imbalance());
+        assert!(p.is_balanced(0.03));
+        p.validate(Some(0.03)).unwrap();
+    }
+
+    #[test]
+    fn prefers_low_damage_moves() {
+        // Block 0 overloaded by exactly one vertex-weight unit; the
+        // rebalancer should move a vertex with minimal connectivity damage
+        // (an isolated-ish vertex) rather than a hub.
+        let h = Hypergraph::new(
+            6,
+            &[vec![0, 1], vec![0, 2], vec![0, 3], vec![4, 5]],
+            None,
+            None,
+        );
+        // block 0 = {0,1,2,3,4}, block 1 = {5}; Lmax(0.0)=3 → over by 2.
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 0, 0, 1]);
+        let ok = rebalance(&p, 0.0, 0.0, 100);
+        assert!(ok);
+        // Hub 0 (degree 3) should stay in block 0.
+        assert_eq!(p.part(0), 0, "hub was moved: {:?}", p.snapshot());
+        p.validate(Some(0.0)).unwrap();
+    }
+
+    #[test]
+    fn heavy_vertices_stay() {
+        // One huge vertex + padding; shedding the huge one would sink the
+        // block far below average.
+        let h = Hypergraph::new(
+            5,
+            &[vec![0, 1], vec![1, 2], vec![3, 4]],
+            Some(vec![10, 1, 1, 1, 1]),
+            None,
+        );
+        // block0 = {0,1,2} (12), block1 = {3,4} (2); Lmax(0.1)·7 = 7.7→7
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 1, 1]);
+        rebalance(&p, 0.1, 0.1, 100);
+        assert_eq!(p.part(0), 0, "heavy vertex moved");
+    }
+
+    #[test]
+    fn deterministic_across_threads() {
+        let h = crate::gen::sat_hypergraph(500, 1500, 8, 13);
+        let part: Vec<BlockId> = (0..500).map(|v| u32::from(v >= 450)).collect();
+        let mut outs = Vec::new();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let p = PartitionedHypergraph::new(&h, 2, part.clone());
+                let ok = rebalance(&p, 0.03, 0.1, 100);
+                outs.push((ok, p.snapshot(), p.km1()));
+            });
+        }
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+        assert!(outs[0].0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Refinement algorithms (the uncoarsening-phase local search).
+//!
+//! * [`lp`] — deterministic synchronous label propagation (the quality
+//!   class of Mt-KaHyPar-SDet / BiPart; also the 2-way polish used by
+//!   initial partitioning).
+//! * [`jet`] — deterministic Jet (Section 4): unconstrained moves +
+//!   afterburner + deterministic rebalancing.
+//! * [`flow`] — deterministic flow-based refinement (Section 5).
+//!
+//! Shared infrastructure lives here: boundary-vertex collection and the
+//! deterministic *grouped move approval* that turns a set of racy move
+//! wishes into a schedule-independent applied subset.
+
+pub mod jet;
+pub mod lp;
+pub mod flow;
+
+use crate::datastructures::PartitionedHypergraph;
+use crate::{BlockId, VertexId, Weight};
+
+/// A proposed vertex move with its (precomputed) gain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MoveCandidate {
+    pub vertex: VertexId,
+    pub target: BlockId,
+    pub gain: Weight,
+}
+
+/// Collect all boundary vertices (incident to at least one cut edge), in
+/// increasing id order — deterministic by construction.
+pub fn boundary_vertices(p: &PartitionedHypergraph) -> Vec<VertexId> {
+    let hg = p.hypergraph();
+    let marks = crate::util::bitset::AtomicBitset::new(hg.num_vertices());
+    crate::par::for_each_chunk(hg.num_edges(), |_c, r| {
+        for e in r {
+            if p.is_cut_edge(e as crate::EdgeId) {
+                for &v in hg.pins(e as crate::EdgeId) {
+                    marks.test_and_set(v as usize);
+                }
+            }
+        }
+    });
+    let mut out = Vec::new();
+    for v in 0..hg.num_vertices() {
+        if marks.get(v) {
+            out.push(v as VertexId);
+        }
+    }
+    out
+}
+
+/// Deterministic grouped approval: admit candidate moves per target block
+/// in priority order (gain desc, vertex id asc) while the target's weight
+/// budget `max_block_weights[t] − c(V_t)` lasts. Departures during the
+/// same round are deliberately *not* credited (conservative, keeps the
+/// admission independent of other blocks' decisions). Returns the applied
+/// moves.
+pub fn approve_and_apply(
+    p: &PartitionedHypergraph,
+    mut candidates: Vec<MoveCandidate>,
+    max_block_weights: &[Weight],
+) -> Vec<MoveCandidate> {
+    debug_assert_eq!(max_block_weights.len(), p.k());
+    let hg = p.hypergraph();
+    // (target, -gain, id): per-target segments in priority order.
+    crate::par::par_sort_by_key(&mut candidates, |m| (m.target, -m.gain, m.vertex));
+    let mut applied = Vec::new();
+    let mut i = 0;
+    while i < candidates.len() {
+        let t = candidates[i].target;
+        let mut budget = max_block_weights[t as usize] - p.block_weight(t);
+        let mut j = i;
+        while j < candidates.len() && candidates[j].target == t {
+            let m = candidates[j];
+            let w = hg.vertex_weight(m.vertex);
+            if w <= budget {
+                budget -= w;
+                applied.push(m);
+            }
+            j += 1;
+        }
+        i = j;
+    }
+    p.apply_moves(&applied.iter().map(|m| (m.vertex, m.target)).collect::<Vec<_>>());
+    applied
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastructures::Hypergraph;
+
+    #[test]
+    fn boundary_detection() {
+        let h = Hypergraph::new(5, &[vec![0, 1], vec![1, 2], vec![3, 4]], None, None);
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 1, 1, 1]);
+        // Only edge {1,2} is cut → boundary = {1, 2}.
+        assert_eq!(boundary_vertices(&p), vec![1, 2]);
+    }
+
+    #[test]
+    fn approval_respects_budget_and_priority() {
+        let h = Hypergraph::new(
+            4,
+            &[vec![0, 1], vec![1, 2], vec![2, 3]],
+            Some(vec![2, 2, 2, 2]),
+            None,
+        );
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 1, 1]);
+        // Both 0 and 1 want into block 1, budget only fits one → the
+        // higher-gain (then lower-id) candidate wins.
+        let cands = vec![
+            MoveCandidate { vertex: 0, target: 1, gain: 1 },
+            MoveCandidate { vertex: 1, target: 1, gain: 5 },
+        ];
+        let applied = approve_and_apply(&p, cands, &[10, 6]);
+        assert_eq!(applied.len(), 1);
+        assert_eq!(applied[0].vertex, 1);
+        assert_eq!(p.part(1), 1);
+        assert_eq!(p.part(0), 0);
+        p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn approval_deterministic_across_threads() {
+        let h = crate::gen::sat_hypergraph(200, 600, 6, 3);
+        let part: Vec<u32> = (0..200).map(|v| (v % 4) as u32).collect();
+        let lmax = vec![70 as Weight; 4];
+        let mut outs = Vec::new();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let p = PartitionedHypergraph::new(&h, 4, part.clone());
+                let cands: Vec<MoveCandidate> = (0..200u32)
+                    .map(|v| MoveCandidate {
+                        vertex: v,
+                        target: ((v + 1) % 4) as BlockId,
+                        gain: (v % 7) as Weight - 3,
+                    })
+                    .collect();
+                let applied = approve_and_apply(&p, cands, &lmax);
+                outs.push((applied, p.snapshot()));
+            });
+        }
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+    }
+}

@@ -1,0 +1,164 @@
+//! The L3↔L1 bridge: load the AOT-compiled gain-selection executable and
+//! expose it as a [`TileSelector`].
+//!
+//! `python/compile/aot.py` lowers the L2 JAX function (which calls the
+//! Pallas `gain_select` kernel) to **HLO text** — one artifact per
+//! supported block count k — into `artifacts/gain_select_k{K}.hlo.txt`.
+//! This module compiles them once on the PJRT CPU client at startup and
+//! serves tile requests from Jet's candidate selection. Python is never
+//! on this path.
+//!
+//! Signature of each artifact (tile = 256 rows):
+//! ```text
+//! (affinity f32[256,K], current s32[256], leave f32[256],
+//!  internal f32[256], tau f32[])
+//!   -> (target s32[256], gain f32[256], admit s32[256])
+//! ```
+
+use super::super::refinement::jet::candidates::{TileSelector, TILE_ROWS};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Supported k variants (must match `python/compile/aot.py`).
+pub const K_VARIANTS: &[usize] = &[2, 4, 8, 16, 32, 64, 128];
+
+/// XLA-backed tile selector.
+pub struct XlaGainSelector {
+    client: xla::PjRtClient,
+    executables: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+// The PJRT CPU client is thread-safe for execution; accesses from the
+// tile dispatch are synchronized at the Rust level (tiles are handed out
+// from `map_indexed`, each executing independently).
+unsafe impl Sync for XlaGainSelector {}
+unsafe impl Send for XlaGainSelector {}
+
+impl XlaGainSelector {
+    /// Load every available `gain_select_k*.hlo.txt` from `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut executables = BTreeMap::new();
+        for &k in K_VARIANTS {
+            let path = artifacts_dir.join(format!("gain_select_k{k}.hlo.txt"));
+            if !path.exists() {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling k={k}: {e:?}"))?;
+            executables.insert(k, exe);
+        }
+        if executables.is_empty() {
+            anyhow::bail!(
+                "no gain_select artifacts in {} — run `make artifacts`",
+                artifacts_dir.display()
+            );
+        }
+        Ok(XlaGainSelector { client, executables })
+    }
+
+    /// Default artifacts location (`$DETPART_ARTIFACTS` or `./artifacts`).
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("DETPART_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    /// Smallest compiled variant with `k_pad ≥ k`.
+    fn variant_for(&self, k: usize) -> Result<(usize, &xla::PjRtLoadedExecutable)> {
+        self.executables
+            .range(k..)
+            .next()
+            .map(|(&kk, e)| (kk, e))
+            .ok_or_else(|| anyhow!("no gain_select artifact for k >= {k}"))
+    }
+
+    pub fn loaded_ks(&self) -> Vec<usize> {
+        self.executables.keys().copied().collect()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run_tile(
+        &self,
+        k: usize,
+        rows: usize,
+        affinity: &[f32],
+        current: &[u32],
+        leave_cost: &[f32],
+        internal: &[f32],
+        tau: f32,
+        out_target: &mut [u32],
+        out_gain: &mut [f32],
+        out_admit: &mut [u8],
+    ) -> Result<()> {
+        let (kp, exe) = self.variant_for(k)?;
+        // Pad to (TILE_ROWS, kp): zero affinity rows/cols are inert (the
+        // kernel masks non-positive affinities) and padded rows produce
+        // admit = 0.
+        let mut aff = vec![0f32; TILE_ROWS * kp];
+        for r in 0..rows {
+            aff[r * kp..r * kp + k].copy_from_slice(&affinity[r * k..(r + 1) * k]);
+        }
+        let mut cur = vec![0i32; TILE_ROWS];
+        let mut leave = vec![0f32; TILE_ROWS];
+        let mut intr = vec![0f32; TILE_ROWS];
+        for r in 0..rows {
+            cur[r] = current[r] as i32;
+            leave[r] = leave_cost[r];
+            intr[r] = internal[r];
+        }
+        let aff_l = xla::Literal::vec1(&aff)
+            .reshape(&[TILE_ROWS as i64, kp as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let cur_l = xla::Literal::vec1(&cur);
+        let leave_l = xla::Literal::vec1(&leave);
+        let intr_l = xla::Literal::vec1(&intr);
+        let tau_l = xla::Literal::scalar(tau);
+        let result = exe
+            .execute::<xla::Literal>(&[aff_l, cur_l, leave_l, intr_l, tau_l])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
+        let target: Vec<i32> = parts[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let gain: Vec<f32> = parts[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let admit: Vec<i32> = parts[2].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        for r in 0..rows {
+            out_target[r] = target[r] as u32;
+            out_gain[r] = gain[r];
+            out_admit[r] = u8::from(admit[r] != 0);
+        }
+        Ok(())
+    }
+}
+
+impl TileSelector for XlaGainSelector {
+    fn select_tile(
+        &self,
+        k: usize,
+        rows: usize,
+        affinity: &[f32],
+        current: &[u32],
+        leave_cost: &[f32],
+        internal: &[f32],
+        tau: f32,
+        out_target: &mut [u32],
+        out_gain: &mut [f32],
+        out_admit: &mut [u8],
+    ) {
+        self.run_tile(
+            k, rows, affinity, current, leave_cost, internal, tau, out_target, out_gain,
+            out_admit,
+        )
+        .with_context(|| format!("XLA gain_select tile (k={k}, rows={rows})"))
+        .expect("XLA tile dispatch failed");
+    }
+}

@@ -1,0 +1,8 @@
+//! XLA/PJRT runtime — loads the AOT-compiled gain-selection artifacts
+//! (HLO text produced by `python/compile/aot.py` from the Pallas kernels)
+//! and exposes them as a [`crate::refinement::jet::candidates::TileSelector`]
+//! for Jet's candidate selection.
+
+pub mod gain_select;
+
+pub use gain_select::XlaGainSelector;

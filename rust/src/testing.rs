@@ -1,0 +1,142 @@
+//! Property-testing substrate (proptest is unavailable offline): seeded
+//! random-instance strategies plus invariant checkers, used by the
+//! `rust/tests/proptests.rs` integration suite and unit tests.
+
+use crate::datastructures::{Hypergraph, HypergraphBuilder, PartitionedHypergraph};
+use crate::util::Rng;
+use crate::{BlockId, VertexId, Weight};
+
+/// Parameters for random hypergraph generation.
+#[derive(Clone, Copy, Debug)]
+pub struct RandomHypergraphParams {
+    pub min_vertices: usize,
+    pub max_vertices: usize,
+    pub min_edges: usize,
+    pub max_edges: usize,
+    pub max_edge_size: usize,
+    pub max_vertex_weight: Weight,
+    pub max_edge_weight: Weight,
+}
+
+impl Default for RandomHypergraphParams {
+    fn default() -> Self {
+        RandomHypergraphParams {
+            min_vertices: 4,
+            max_vertices: 120,
+            min_edges: 2,
+            max_edges: 300,
+            max_edge_size: 8,
+            max_vertex_weight: 4,
+            max_edge_weight: 5,
+        }
+    }
+}
+
+/// Draw a random valid hypergraph (every edge ≥ 2 distinct pins).
+pub fn random_hypergraph(rng: &mut Rng, p: &RandomHypergraphParams) -> Hypergraph {
+    let n = rng.next_in(p.min_vertices as u64, p.max_vertices as u64 + 1) as usize;
+    let m = rng.next_in(p.min_edges as u64, p.max_edges as u64 + 1) as usize;
+    let mut b = HypergraphBuilder::new(n);
+    b.set_vertex_weights(
+        (0..n).map(|_| rng.next_in(1, p.max_vertex_weight as u64 + 1) as Weight).collect(),
+    );
+    let mut pins: Vec<VertexId> = Vec::new();
+    for _ in 0..m {
+        let sz = rng.next_in(2, (p.max_edge_size.min(n) as u64) + 1) as usize;
+        pins.clear();
+        let mut guard = 0;
+        while pins.len() < sz && guard < 10 * sz {
+            guard += 1;
+            let v = rng.next_range(n as u64) as VertexId;
+            if !pins.contains(&v) {
+                pins.push(v);
+            }
+        }
+        if pins.len() >= 2 {
+            pins.sort_unstable();
+            b.add_edge(&pins, rng.next_in(1, p.max_edge_weight as u64 + 1) as Weight);
+        }
+    }
+    // Guarantee at least one edge so partitions have signal.
+    if b.num_edges() == 0 {
+        b.add_edge(&[0, 1.min(n as u32 - 1)], 1);
+    }
+    b.build()
+}
+
+/// Draw a random k-way assignment.
+pub fn random_partition(rng: &mut Rng, n: usize, k: usize) -> Vec<BlockId> {
+    (0..n).map(|_| rng.next_range(k as u64) as BlockId).collect()
+}
+
+/// Run `f` over `cases` seeded random instances; panics with the seed on
+/// the first failure so the case can be replayed.
+pub fn for_random_instances(
+    base_seed: u64,
+    cases: usize,
+    p: &RandomHypergraphParams,
+    f: impl Fn(u64, &Hypergraph, &mut Rng),
+) {
+    for case in 0..cases {
+        let seed = crate::util::rng::hash64(base_seed, case as u64);
+        let mut rng = Rng::new(seed);
+        let hg = random_hypergraph(&mut rng, p);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(seed, &hg, &mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed on case {case} (seed {seed}): n={} m={}",
+                hg.num_vertices(),
+                hg.num_edges()
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Invariant: the incremental partition state matches a from-scratch
+/// recomputation.
+pub fn check_partition_state(p: &PartitionedHypergraph) {
+    p.validate(None).unwrap_or_else(|e| panic!("partition state invalid: {e}"));
+}
+
+/// Invariant: metrics agree between the incremental state and the
+/// assignment-vector oracle.
+pub fn check_metrics_agree(hg: &Hypergraph, p: &PartitionedHypergraph) {
+    let part = p.snapshot();
+    assert_eq!(crate::metrics::km1(hg, &part, p.k()), p.km1());
+    assert_eq!(crate::metrics::cut(hg, &part, p.k()), p.cut());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_hypergraphs_are_valid() {
+        for_random_instances(1, 20, &RandomHypergraphParams::default(), |_s, hg, _r| {
+            hg.validate().unwrap();
+            assert!(hg.num_edges() >= 1);
+        });
+    }
+
+    #[test]
+    fn random_partitions_in_range() {
+        let mut rng = Rng::new(2);
+        let part = random_partition(&mut rng, 50, 7);
+        assert_eq!(part.len(), 50);
+        assert!(part.iter().all(|&b| b < 7));
+    }
+
+    #[test]
+    fn invariant_checkers_pass_on_fresh_state() {
+        for_random_instances(3, 10, &RandomHypergraphParams::default(), |_s, hg, rng| {
+            let k = rng.next_in(2, 9) as usize;
+            let part = random_partition(rng, hg.num_vertices(), k);
+            let p = PartitionedHypergraph::new(hg, k, part);
+            check_partition_state(&p);
+            check_metrics_agree(hg, &p);
+        });
+    }
+}

@@ -1,0 +1,157 @@
+//! Fixed-size bitset plus an atomic variant for synchronous parallel
+//! rounds (mark-once semantics independent of thread interleaving).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A plain fixed-capacity bitset.
+#[derive(Clone, Debug, Default)]
+pub struct Bitset {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitset {
+    pub fn new(len: usize) -> Self {
+        Bitset { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn clear_bit(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Clear all bits (keeps capacity).
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate over set bit indices in increasing order.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+/// Atomic bitset: `test_and_set` from many threads; the *set of bits* at a
+/// synchronization point is deterministic even if the winning thread isn't.
+#[derive(Debug, Default)]
+pub struct AtomicBitset {
+    words: Vec<AtomicU64>,
+    len: usize,
+}
+
+impl AtomicBitset {
+    pub fn new(len: usize) -> Self {
+        AtomicBitset {
+            words: (0..len.div_ceil(64)).map(|_| AtomicU64::new(0)).collect(),
+            len,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set bit `i`; returns true if this call changed it (was unset).
+    #[inline]
+    pub fn test_and_set(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let mask = 1u64 << (i % 64);
+        let prev = self.words[i / 64].fetch_or(mask, Ordering::Relaxed);
+        prev & mask == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64].load(Ordering::Relaxed) >> (i % 64)) & 1 == 1
+    }
+
+    pub fn clear(&mut self) {
+        for w in &self.words {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = Bitset::new(130);
+        assert!(!b.get(0));
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert_eq!(b.count(), 3);
+        b.clear_bit(64);
+        assert!(!b.get(64));
+        b.clear();
+        assert_eq!(b.count(), 0);
+    }
+
+    #[test]
+    fn iter_ones_order() {
+        let mut b = Bitset::new(200);
+        for i in [3usize, 64, 65, 199] {
+            b.set(i);
+        }
+        let v: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(v, vec![3, 64, 65, 199]);
+    }
+
+    #[test]
+    fn atomic_test_and_set_once() {
+        let b = AtomicBitset::new(100);
+        assert!(b.test_and_set(42));
+        assert!(!b.test_and_set(42));
+        assert!(b.get(42));
+    }
+}

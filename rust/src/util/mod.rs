@@ -1,0 +1,14 @@
+//! Small self-contained utilities: deterministic RNG, statistics,
+//! timers, and bitsets. These replace external crates (rand, etc.) that
+//! are unavailable in the offline build environment — and double as the
+//! determinism substrate: all randomness in the partitioner flows through
+//! [`rng`], which is seeded and scheduling-independent.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod bitset;
+
+pub use bitset::Bitset;
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,185 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! Two layers:
+//! * [`Rng`] — xoshiro256** for sequential streams (initial partitioning
+//!   portfolios, generators).
+//! * [`hash_rng`] / [`hash64`] — *per-element* stateless RNG: a SplitMix64
+//!   finalizer over `(seed, element id)`. Parallel code must use this
+//!   instead of drawing from a shared stream, because draw order from a
+//!   shared stream depends on scheduling and would break determinism.
+
+/// SplitMix64 finalization step — a high-quality 64-bit mixer.
+#[inline]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless hash of `(seed, x)` — the backbone of scheduling-independent
+/// randomness: each element's random bits depend only on the seed and the
+/// element's identity, never on which thread processed it first.
+#[inline]
+pub fn hash64(seed: u64, x: u64) -> u64 {
+    splitmix64(seed ^ splitmix64(x.wrapping_add(0xD6E8FEB86659FD93)))
+}
+
+/// Stateless uniform draw in `[0, n)` for element `x` under `seed`.
+#[inline]
+pub fn hash_rng(seed: u64, x: u64, n: u64) -> u64 {
+    debug_assert!(n > 0);
+    // Lemire's multiply-shift rejection-free mapping (tiny bias, fine for
+    // tie-breaking / sampling use-cases).
+    ((hash64(seed, x) as u128 * n as u128) >> 64) as u64
+}
+
+/// xoshiro256** — fast, high-quality sequential PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 expansion (as recommended by the xoshiro authors).
+    pub fn new(seed: u64) -> Self {
+        let mut z = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            z = z.wrapping_add(0x9E3779B97F4A7C15);
+            *slot = splitmix64(z);
+        }
+        Rng { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn next_range(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn next_in(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next_range(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn next_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent child stream (for nested components).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ splitmix64(tag))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let x = r.next_range(10);
+            assert!(x < 10);
+        }
+        for _ in 0..1000 {
+            let x = r.next_in(5, 8);
+            assert!((5..8).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(11);
+        let mut acc = 0.0;
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            acc += x;
+        }
+        let mean = acc / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn hash_rng_uniform_ish() {
+        let mut counts = [0usize; 8];
+        for x in 0..8000u64 {
+            counts[hash_rng(42, x, 8) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((800..1200).contains(&c), "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut base = Rng::new(9);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

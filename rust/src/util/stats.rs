@@ -1,0 +1,128 @@
+//! Aggregation statistics used by the experiment harness: geometric mean
+//! (the paper's aggregate of choice), arithmetic mean, rolling-window
+//! geometric mean (Fig. 7), and Dolan–Moré performance-profile support
+//! lives in `experiments::profiles`.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean; panics on non-positive entries (callers shift by +1 for
+/// objectives that can be 0, as is standard in the partitioning literature).
+pub fn geometric_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = xs
+        .iter()
+        .map(|&x| {
+            assert!(x > 0.0, "geometric mean requires positive values, got {x}");
+            x.ln()
+        })
+        .sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Geometric mean of `x + 1` minus 1 — safe for zero-valued objectives.
+pub fn geometric_mean_shifted(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = xs.iter().map(|&x| (x + 1.0).ln()).sum();
+    (log_sum / xs.len() as f64).exp() - 1.0
+}
+
+/// Rolling-window geometric mean with window size `w` (used for the
+/// scaling plot, Fig. 7). Output has the same length as the input.
+pub fn rolling_geometric_mean(xs: &[f64], w: usize) -> Vec<f64> {
+    let w = w.max(1);
+    (0..xs.len())
+        .map(|i| {
+            let lo = i.saturating_sub(w / 2);
+            let hi = (i + w / 2 + 1).min(xs.len());
+            geometric_mean(&xs[lo..hi])
+        })
+        .collect()
+}
+
+/// Median of a sample (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        let g = geometric_mean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+        let g = geometric_mean(&[2.0, 2.0, 2.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_shifted_handles_zero() {
+        let g = geometric_mean_shifted(&[0.0, 0.0]);
+        assert!(g.abs() < 1e-12);
+        let g = geometric_mean_shifted(&[3.0]); // (3+1)-1
+        assert!((g - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geomean_rejects_nonpositive() {
+        geometric_mean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn rolling_window() {
+        let xs = [1.0, 1.0, 8.0, 1.0, 1.0];
+        let r = rolling_geometric_mean(&xs, 3);
+        assert_eq!(r.len(), 5);
+        assert!((r[0] - 1.0).abs() < 1e-12);
+        assert!(r[2] > 1.0);
+    }
+
+    #[test]
+    fn median_even_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn stddev_constant_is_zero() {
+        assert_eq!(stddev(&[2.0, 2.0, 2.0]), 0.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Wall-clock timing with named phases — feeds the running-time-share
+//! experiment (Fig. 12) and Table 1.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates time per named phase. `BTreeMap` keeps report order
+/// deterministic.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    acc: BTreeMap<&'static str, Duration>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `phase`.
+    pub fn scope<R>(&mut self, phase: &'static str, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        *self.acc.entry(phase).or_default() += t.elapsed();
+        r
+    }
+
+    /// Add externally measured time.
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.acc.entry(phase).or_default() += d;
+    }
+
+    /// Merge another phase timer into this one.
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.acc {
+            *self.acc.entry(k).or_default() += *v;
+        }
+    }
+
+    pub fn get_s(&self, phase: &str) -> f64 {
+        self.acc.get(phase).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.acc.values().map(|d| d.as_secs_f64()).sum()
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.acc.iter().map(|(k, v)| (*k, v.as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed();
+        let b = t.elapsed();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn phase_accumulation() {
+        let mut pt = PhaseTimer::new();
+        let x = pt.scope("work", || 21 * 2);
+        assert_eq!(x, 42);
+        pt.add("work", Duration::from_millis(5));
+        assert!(pt.get_s("work") >= 0.005);
+        assert_eq!(pt.get_s("absent"), 0.0);
+        assert!(pt.total_s() >= pt.get_s("work"));
+    }
+
+    #[test]
+    fn phase_merge() {
+        let mut a = PhaseTimer::new();
+        a.add("x", Duration::from_millis(2));
+        let mut b = PhaseTimer::new();
+        b.add("x", Duration::from_millis(3));
+        b.add("y", Duration::from_millis(1));
+        a.merge(&b);
+        assert!(a.get_s("x") >= 0.005);
+        assert!(a.get_s("y") >= 0.001);
+    }
+}

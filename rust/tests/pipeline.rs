@@ -1,0 +1,85 @@
+//! End-to-end pipeline integration: quality ordering between presets
+//! (the paper's headline shapes), IO round-trips through the CLI-visible
+//! formats, and behaviour across the paper's k values.
+
+use detpart::config::Config;
+use detpart::gen;
+use detpart::partitioner::partition;
+
+#[test]
+fn quality_ordering_matches_paper_shape() {
+    // Fig. 1 / Fig. 8 / Fig. 9 shape: detflows ≤ detjet < sdet ≤ bipart
+    // in aggregate (geometric mean over a small matrix).
+    let mut km1 = std::collections::HashMap::<&str, Vec<f64>>::new();
+    for inst in ["spm2d-64", "sat-3k", "vlsi-48"] {
+        let hg = gen::instance_by_name(inst).unwrap().build();
+        for k in [4usize, 8] {
+            for preset in ["detflows", "detjet", "sdet", "bipart"] {
+                let cfg = Config::preset(preset, 1).unwrap();
+                let r = partition(&hg, k, &cfg);
+                km1.entry(preset).or_default().push((r.km1 + 1) as f64);
+            }
+        }
+    }
+    let gm = |xs: &Vec<f64>| detpart::util::stats::geometric_mean(xs);
+    let (df, dj, sd, bp) = (gm(&km1["detflows"]), gm(&km1["detjet"]), gm(&km1["sdet"]), gm(&km1["bipart"]));
+    assert!(df <= dj * 1.001, "flows {df:.1} should be <= jet {dj:.1}");
+    assert!(dj < sd, "jet {dj:.1} should beat sdet {sd:.1}");
+    assert!(dj < bp, "jet {dj:.1} should beat bipart {bp:.1}");
+}
+
+#[test]
+fn all_paper_k_values_work() {
+    let hg = gen::instance_by_name("sat-3k").unwrap().build();
+    for k in [2usize, 8, 11, 16, 27, 64] {
+        let r = partition(&hg, k, &Config::detjet(1));
+        assert!(r.km1 > 0);
+        let mut seen = vec![false; k];
+        for &b in &r.part {
+            seen[b as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "k={k}: empty block");
+        assert!(r.imbalance <= 0.03 + 1e-9, "k={k}: imbalance {}", r.imbalance);
+    }
+}
+
+#[test]
+fn graphs_and_hypergraphs_both_supported() {
+    for inst in ["rmat-s11", "grid2d-100", "spm3d-16"] {
+        let hg = gen::instance_by_name(inst).unwrap().build();
+        let r = partition(&hg, 4, &Config::detjet(2));
+        assert!(r.balanced, "{inst}: imbalance {}", r.imbalance);
+        assert!(r.km1 > 0);
+    }
+}
+
+#[test]
+fn hgr_file_roundtrip_preserves_partition_quality() {
+    let hg = gen::instance_by_name("vlsi-48").unwrap().build();
+    let dir = std::env::temp_dir().join("detpart_pipeline_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("inst.hgr");
+    detpart::io::write_hgr(&hg, &path).unwrap();
+    let hg2 = detpart::io::read_hgr(&path).unwrap();
+    let r1 = partition(&hg, 4, &Config::detjet(3));
+    let r2 = partition(&hg2, 4, &Config::detjet(3));
+    assert_eq!(r1.part, r2.part, "round-tripped instance must partition identically");
+}
+
+#[test]
+fn eps_zero_strict_balance() {
+    // Unit weights: perfect balance is feasible; ε = 0 must be honored.
+    let hg = gen::grid::grid2d_graph(32, 32);
+    let mut cfg = Config::detjet(4);
+    cfg.eps = 0.0;
+    let r = partition(&hg, 4, &cfg);
+    assert!(r.balanced, "imbalance {} under eps=0", r.imbalance);
+}
+
+#[test]
+fn single_block_degenerate_case() {
+    let hg = gen::grid::grid2d_graph(10, 10);
+    let r = partition(&hg, 1, &Config::detjet(0));
+    assert_eq!(r.km1, 0);
+    assert!(r.part.iter().all(|&b| b == 0));
+}

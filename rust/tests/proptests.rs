@@ -1,0 +1,303 @@
+//! Property-based integration tests over seeded random hypergraphs
+//! (own harness — proptest is unavailable offline; see
+//! `detpart::testing`). Each property runs on dozens of random instances
+//! and panics with the reproducing seed on failure.
+
+use detpart::config::{Config, FlowConfig, JetConfig, LpConfig};
+use detpart::datastructures::PartitionedHypergraph;
+use detpart::refinement::jet::{rebalance::rebalance, refine_jet};
+use detpart::refinement::lp::refine_lp;
+use detpart::testing::{
+    check_metrics_agree, check_partition_state, for_random_instances, random_partition,
+    RandomHypergraphParams,
+};
+use detpart::util::Bitset;
+
+const P: RandomHypergraphParams = RandomHypergraphParams {
+    min_vertices: 6,
+    max_vertices: 150,
+    min_edges: 4,
+    max_edges: 400,
+    max_edge_size: 10,
+    max_vertex_weight: 4,
+    max_edge_weight: 5,
+};
+
+#[test]
+fn prop_incremental_state_survives_random_move_batches() {
+    for_random_instances(101, 30, &P, |_seed, hg, rng| {
+        let k = rng.next_in(2, 9) as usize;
+        let p = PartitionedHypergraph::new(hg, k, random_partition(rng, hg.num_vertices(), k));
+        for _ in 0..5 {
+            let mut moves: Vec<(u32, u32)> = Vec::new();
+            for v in 0..hg.num_vertices() as u32 {
+                if rng.next_bool(0.3) {
+                    moves.push((v, rng.next_range(k as u64) as u32));
+                }
+            }
+            p.apply_moves(&moves);
+            check_partition_state(&p);
+            check_metrics_agree(hg, &p);
+        }
+    });
+}
+
+#[test]
+fn prop_gain_equals_objective_delta() {
+    for_random_instances(202, 25, &P, |_seed, hg, rng| {
+        let k = rng.next_in(2, 6) as usize;
+        let p = PartitionedHypergraph::new(hg, k, random_partition(rng, hg.num_vertices(), k));
+        for _ in 0..20 {
+            let v = rng.next_range(hg.num_vertices() as u64) as u32;
+            let t = rng.next_range(k as u64) as u32;
+            if t == p.part(v) {
+                continue;
+            }
+            let g = p.gain(v, t);
+            let before = p.km1();
+            p.apply_move(v, t);
+            assert_eq!(before - p.km1(), g, "gain mismatch for v={v} t={t}");
+        }
+    });
+}
+
+#[test]
+fn prop_rebalancer_restores_balance_without_state_corruption() {
+    for_random_instances(303, 25, &P, |seed, hg, rng| {
+        let k = rng.next_in(2, 6) as usize;
+        // Heavily skewed partition: everything in block 0.
+        let mut part = vec![0u32; hg.num_vertices()];
+        for v in 0..hg.num_vertices() {
+            if rng.next_bool(0.2) {
+                part[v] = rng.next_range(k as u64) as u32;
+            }
+        }
+        let p = PartitionedHypergraph::new(hg, k, part);
+        let ok = rebalance(&p, 0.1, 0.1, 200);
+        check_partition_state(&p);
+        if ok {
+            assert!(p.is_balanced(0.1), "seed {seed}: claimed balanced but is not");
+        }
+        // Either way the state must be uncorrupted and weights conserved.
+        let total: i64 = (0..k as u32).map(|b| p.block_weight(b)).sum();
+        assert_eq!(total, hg.total_vertex_weight());
+    });
+}
+
+#[test]
+fn prop_lp_never_worsens_and_respects_budgets() {
+    for_random_instances(404, 20, &P, |seed, hg, rng| {
+        let k = rng.next_in(2, 6) as usize;
+        let p = PartitionedHypergraph::new(hg, k, random_partition(rng, hg.num_vertices(), k));
+        let before = p.km1();
+        let lmax: Vec<i64> = (0..k as u32).map(|b| p.block_weight(b) + 10).collect();
+        let gain = refine_lp(&p, &lmax, &LpConfig::default());
+        check_partition_state(&p);
+        assert!(gain >= 0, "seed {seed}: negative LP gain");
+        assert_eq!(before - p.km1(), gain);
+        for b in 0..k as u32 {
+            assert!(p.block_weight(b) <= lmax[b as usize], "seed {seed}: block {b} over budget");
+        }
+    });
+}
+
+#[test]
+fn prop_jet_improves_or_preserves_and_keeps_balance() {
+    for_random_instances(505, 12, &P, |seed, hg, rng| {
+        let k = rng.next_in(2, 5) as usize;
+        let p = PartitionedHypergraph::new(hg, k, random_partition(rng, hg.num_vertices(), k));
+        // Random partitions of random hypergraphs may start imbalanced;
+        // Jet's contract: end balanced (if the rebalancer can) and never
+        // return something worse than the best balanced state it saw.
+        let cfg = JetConfig::default();
+        let stats = refine_jet(&p, 0.1, &cfg, seed, None);
+        check_partition_state(&p);
+        if stats.balanced {
+            assert!(p.is_balanced(0.1), "seed {seed}");
+        }
+        assert_eq!(stats.final_km1, p.km1());
+    });
+}
+
+#[test]
+fn prop_afterburner_matches_sequential_simulation() {
+    use detpart::refinement::jet::afterburner::afterburner;
+    use detpart::refinement::jet::candidates::collect_candidates;
+    for_random_instances(606, 25, &P, |seed, hg, rng| {
+        let k = rng.next_in(2, 6) as usize;
+        let p = PartitionedHypergraph::new(hg, k, random_partition(rng, hg.num_vertices(), k));
+        let locked = Bitset::new(hg.num_vertices());
+        let cands = collect_candidates(&p, &locked, 0.75, None);
+        let filtered = afterburner(&p, &cands);
+        // Oracle: execute in rank order, record at-execution gains.
+        let mut by_rank = cands.clone();
+        by_rank.sort_by_key(|c| (-c.gain, c.vertex));
+        let snap = p.snapshot();
+        let mut expected = Vec::new();
+        for c in &by_rank {
+            let g = p.gain(c.vertex, c.target);
+            p.apply_move(c.vertex, c.target);
+            if g > 0 {
+                expected.push((c.vertex, g));
+            }
+        }
+        p.rollback_to(&snap);
+        let got: Vec<(u32, i64)> = filtered.iter().map(|c| (c.vertex, c.gain)).collect();
+        assert_eq!(got, expected, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_flow_pair_refinement_sound() {
+    for_random_instances(707, 15, &P, |seed, hg, rng| {
+        let k = 2usize;
+        let p = PartitionedHypergraph::new(hg, k, random_partition(rng, hg.num_vertices(), k));
+        let before = p.km1();
+        let cfg = FlowConfig { flow_seed: seed, ..Default::default() };
+        let r = detpart::refinement::flow::bipartition::refine_pair(&p, 0, 1, 0.2, &cfg, seed);
+        check_partition_state(&p);
+        if r.improved {
+            // Accepted results must not be worse.
+            assert!(p.km1() <= before, "seed {seed}: flow worsened {before} -> {}", p.km1());
+        } else {
+            assert_eq!(p.km1(), before, "seed {seed}: unimproved but mutated");
+        }
+    });
+}
+
+#[test]
+fn prop_dinic_matches_edmonds_karp_oracle() {
+    use detpart::refinement::flow::dinic::{FlowNetwork, SINK, SOURCE};
+    // Reference: plain BFS augmenting-path max-flow on an adjacency
+    // matrix (slow, obviously correct).
+    fn ek_max_flow(n: usize, arcs: &[(u32, u32, i64)]) -> i64 {
+        let mut cap = vec![vec![0i64; n]; n];
+        for &(u, v, c) in arcs {
+            cap[u as usize][v as usize] += c;
+        }
+        let mut flow = 0i64;
+        loop {
+            let mut parent = vec![usize::MAX; n];
+            parent[0] = 0;
+            let mut q = std::collections::VecDeque::from([0usize]);
+            while let Some(u) = q.pop_front() {
+                for v in 0..n {
+                    if parent[v] == usize::MAX && cap[u][v] > 0 {
+                        parent[v] = u;
+                        q.push_back(v);
+                    }
+                }
+            }
+            if parent[1] == usize::MAX {
+                return flow;
+            }
+            let mut bottleneck = i64::MAX;
+            let mut v = 1usize;
+            while v != 0 {
+                let u = parent[v];
+                bottleneck = bottleneck.min(cap[u][v]);
+                v = u;
+            }
+            let mut v = 1usize;
+            while v != 0 {
+                let u = parent[v];
+                cap[u][v] -= bottleneck;
+                cap[v][u] += bottleneck;
+                v = u;
+            }
+            flow += bottleneck;
+        }
+    }
+
+    let mut rng = detpart::util::Rng::new(4242);
+    for case in 0..40 {
+        let n = rng.next_in(4, 14) as usize;
+        let m = rng.next_in(n as u64, (3 * n) as u64) as usize;
+        let mut arcs: Vec<(u32, u32, i64)> = Vec::new();
+        for _ in 0..m {
+            let u = rng.next_range(n as u64) as u32;
+            let v = rng.next_range(n as u64) as u32;
+            if u != v && v != SOURCE && u != SINK {
+                arcs.push((u, v, rng.next_in(1, 20) as i64));
+            }
+        }
+        let want = ek_max_flow(n, &arcs);
+        for seed in 0..4u64 {
+            let mut net = FlowNetwork::new(n);
+            for &(u, v, c) in &arcs {
+                net.add_arc(u, v, c);
+            }
+            let got = net.augment(seed, i64::MAX);
+            assert_eq!(got, want, "case {case} seed {seed}: dinic != oracle");
+            // PQ sides must be valid cuts regardless of seed.
+            let src = net.source_reachable();
+            assert!(src[SOURCE as usize] && !src[SINK as usize] || want == 0);
+        }
+    }
+}
+
+#[test]
+fn prop_hgr_parser_never_panics_on_garbage() {
+    let mut rng = detpart::util::Rng::new(77);
+    let tokens = ["1", "2", "999", "-3", "x", "%c", "\n", " ", "11", "0"];
+    for _ in 0..200 {
+        let len = rng.next_in(0, 40) as usize;
+        let mut s = String::new();
+        for _ in 0..len {
+            s.push_str(tokens[rng.next_range(tokens.len() as u64) as usize]);
+            s.push(if rng.next_bool(0.3) { '\n' } else { ' ' });
+        }
+        // Must return Ok or Err — never panic.
+        let _ = detpart::io::read_hgr_str(&s);
+        let _ = detpart::io::read_graph_str(&s);
+    }
+}
+
+#[test]
+fn prop_quotient_graph_matches_bruteforce() {
+    use detpart::datastructures::QuotientGraph;
+    for_random_instances(909, 20, &P, |seed, hg, rng| {
+        let k = rng.next_in(2, 7) as usize;
+        let part = random_partition(rng, hg.num_vertices(), k);
+        let p = PartitionedHypergraph::new(hg, k, part.clone());
+        let q = QuotientGraph::build(&p);
+        for i in 0..k as u32 {
+            for j in 0..k as u32 {
+                if i == j {
+                    continue;
+                }
+                let mut w = 0i64;
+                for e in 0..hg.num_edges() as u32 {
+                    let pins = hg.pins(e);
+                    let hit_i = pins.iter().any(|&v| part[v as usize] == i);
+                    let hit_j = pins.iter().any(|&v| part[v as usize] == j);
+                    if hit_i && hit_j {
+                        w += hg.edge_weight(e);
+                    }
+                }
+                assert_eq!(q.cut_weight(i, j), w, "seed {seed} pair ({i},{j})");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_full_pipeline_valid_outputs() {
+    let small = RandomHypergraphParams {
+        min_vertices: 30,
+        max_vertices: 300,
+        min_edges: 40,
+        max_edges: 600,
+        max_edge_size: 6,
+        max_vertex_weight: 3,
+        max_edge_weight: 4,
+    };
+    for_random_instances(808, 8, &small, |seed, hg, rng| {
+        let k = rng.next_in(2, 7) as usize;
+        let r = detpart::partitioner::partition(hg, k, &Config::detjet(seed));
+        assert_eq!(r.part.len(), hg.num_vertices());
+        assert!(r.part.iter().all(|&b| (b as usize) < k), "seed {seed}");
+        assert_eq!(r.km1, detpart::metrics::km1(hg, &r.part, k));
+        assert!(r.km1 >= 0);
+    });
+}

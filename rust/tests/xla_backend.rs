@@ -1,0 +1,90 @@
+//! Integration: the AOT-compiled XLA gain-selection executable (authored
+//! as a Pallas kernel, lowered to HLO text by `python/compile/aot.py`)
+//! must be **bit-identical** to the native Rust path — both at the tile
+//! level and through a full Jet refinement and a full partition run.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use detpart::config::Config;
+use detpart::datastructures::PartitionedHypergraph;
+use detpart::refinement::jet::candidates::{
+    collect_candidates, NativeTileSelector, TileSelector, TILE_ROWS,
+};
+use detpart::runtime::XlaGainSelector;
+use detpart::util::Bitset;
+
+fn selector() -> XlaGainSelector {
+    XlaGainSelector::load_default().expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn loads_all_k_variants() {
+    let s = selector();
+    assert_eq!(s.loaded_ks(), vec![2, 4, 8, 16, 32, 64, 128]);
+    assert!(s.platform().to_lowercase().contains("cpu") || !s.platform().is_empty());
+}
+
+#[test]
+fn tile_semantics_match_native_reference() {
+    let s = selector();
+    let native = NativeTileSelector;
+    for k in [2usize, 3, 4, 7, 8, 16] {
+        // k=3,7: exercise padding to the next artifact variant.
+        let rows = TILE_ROWS;
+        let mut rng = detpart::util::Rng::new(k as u64 * 1000 + 7);
+        let mut aff = vec![0f32; rows * k];
+        for a in aff.iter_mut() {
+            if rng.next_bool(0.3) {
+                *a = rng.next_range(50) as f32;
+            }
+        }
+        let cur: Vec<u32> = (0..rows).map(|_| rng.next_range(k as u64) as u32).collect();
+        let leave: Vec<f32> = (0..rows).map(|_| rng.next_range(60) as f32).collect();
+        let internal: Vec<f32> = (0..rows).map(|_| rng.next_range(40) as f32).collect();
+        for tau in [0.0f32, 0.375, 0.75] {
+            let run = |sel: &dyn TileSelector| {
+                let mut t = vec![0u32; rows];
+                let mut g = vec![0f32; rows];
+                let mut a = vec![0u8; rows];
+                sel.select_tile(k, rows, &aff, &cur, &leave, &internal, tau, &mut t, &mut g, &mut a);
+                (t, g, a)
+            };
+            let (tn, gn, an) = run(&native);
+            let (tx, gx, ax) = run(&s);
+            // Compare selections only where admitted: non-admitted rows
+            // have unspecified target/gain in the contract.
+            assert_eq!(an, ax, "admit mismatch k={k} tau={tau}");
+            for r in 0..rows {
+                if an[r] != 0 {
+                    assert_eq!(tn[r], tx[r], "target mismatch k={k} tau={tau} row={r}");
+                    assert_eq!(gn[r], gx[r], "gain mismatch k={k} tau={tau} row={r}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn jet_candidates_identical_between_backends() {
+    let s = selector();
+    let h = detpart::gen::sat_hypergraph(600, 1800, 8, 5);
+    let part: Vec<u32> = (0..600).map(|v| (v % 4) as u32).collect();
+    let p = PartitionedHypergraph::new(&h, 4, part);
+    let locked = Bitset::new(600);
+    for tau in [0.0, 0.375, 0.75] {
+        let native = collect_candidates(&p, &locked, tau, None);
+        let xla = collect_candidates(&p, &locked, tau, Some(&s));
+        assert_eq!(native, xla, "tau={tau}");
+    }
+}
+
+#[test]
+fn full_partition_identical_between_backends() {
+    let s = selector();
+    let h = detpart::gen::vlsi_netlist(32, 1.15, 9);
+    let cfg = Config::detjet(3);
+    let native = detpart::partitioner::partition(&h, 4, &cfg);
+    let xla = detpart::partitioner::partition_with_selector(&h, 4, &cfg, Some(&s));
+    assert_eq!(native.part, xla.part, "backend changed the partition!");
+    assert_eq!(native.km1, xla.km1);
+}
