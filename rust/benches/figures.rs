@@ -60,11 +60,68 @@ fn micro_benchmarks() {
     }
     println!("  full jet refine: {:.1} ms/iter", t.elapsed_s() * 1e3 / reps as f64);
 
+    // BENCH NOTE — incremental partition-state engine (before/after):
+    // `km1()` used to be an O(E) parallel reduce per call and rollback an
+    // O(n) snapshot diff; they are now an O(1) counter load and an
+    // O(#moved) journal revert. The old costs are measured below via the
+    // surviving debug oracles (`km1_scratch`, `snapshot`/`rollback_to`)
+    // next to their incremental replacements, and packed pin-count memory
+    // is printed against the dense E×k·u32 layout it replaced. Run
+    // `cargo bench -- micro` (and `-- all` for the generator suite) to
+    // record the numbers on your hardware.
+    let km1_reps = 10_000;
+    let t = Timer::start();
+    let mut acc = 0i64;
+    for _ in 0..km1_reps {
+        acc = acc.wrapping_add(p.km1());
+    }
+    println!(
+        "  km1 incremental (O(1) counter): {:.1} ns/call [checksum {acc}]",
+        t.elapsed_s() * 1e9 / km1_reps as f64
+    );
     let t = Timer::start();
     for _ in 0..reps {
-        let _ = p.km1();
+        let _ = p.km1_scratch();
     }
-    println!("  km1 reduce: {:.3} ms/iter", t.elapsed_s() * 1e3 / reps as f64);
+    println!(
+        "  km1 scratch reduce (old cost, debug oracle): {:.3} ms/iter",
+        t.elapsed_s() * 1e3 / reps as f64
+    );
+
+    // Rollback: journal revert of a small move batch vs O(n) snapshot.
+    let batch: Vec<(u32, u32)> = (0..20_000u32)
+        .filter(|&v| detpart::util::rng::hash64(11, v as u64) % 50 == 0)
+        .map(|v| (v, (detpart::util::rng::hash64(13, v as u64) % 8) as u32))
+        .collect();
+    p.commit_journal();
+    let t = Timer::start();
+    for _ in 0..reps {
+        p.apply_moves(&batch);
+        p.revert_journal();
+    }
+    println!(
+        "  move batch ({} moves) + journal revert: {:.3} ms/iter",
+        batch.len(),
+        t.elapsed_s() * 1e3 / reps as f64
+    );
+    let snap = p.snapshot();
+    let t = Timer::start();
+    for _ in 0..reps {
+        p.apply_moves(&batch);
+        p.rollback_to(&snap);
+    }
+    println!(
+        "  move batch + O(n) snapshot rollback (old cost): {:.3} ms/iter",
+        t.elapsed_s() * 1e3 / reps as f64
+    );
+
+    println!(
+        "  pin counts: packed {} KiB ({} bits/entry) vs dense {} KiB ({:.1}x)",
+        p.pin_count_memory_bytes() / 1024,
+        p.pin_count_bits(),
+        p.dense_pin_count_memory_bytes() / 1024,
+        p.dense_pin_count_memory_bytes() as f64 / p.pin_count_memory_bytes() as f64
+    );
 }
 
 fn main() {

@@ -10,7 +10,8 @@
 //! ```
 
 use crate::config::{Config, GainBackend};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::{Context, Result};
+use crate::{bail, err};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -39,7 +40,7 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
             flags.insert(key.to_string(), "true".to_string());
             i += 1;
         } else {
-            let v = args.get(i + 1).ok_or_else(|| anyhow!("missing value for --{key}"))?;
+            let v = args.get(i + 1).ok_or_else(|| err!("missing value for --{key}"))?;
             flags.insert(key.to_string(), v.clone());
             i += 2;
         }
@@ -91,10 +92,10 @@ fn print_usage() {
 fn load_input(flags: &HashMap<String, String>) -> Result<crate::datastructures::Hypergraph> {
     if let Some(name) = flags.get("instance") {
         let inst = crate::gen::instance_by_name(name)
-            .ok_or_else(|| anyhow!("unknown instance {name:?} (try `generate --list`)"))?;
+            .ok_or_else(|| err!("unknown instance {name:?} (try `generate --list`)"))?;
         return Ok(inst.build());
     }
-    let input = flags.get("input").ok_or_else(|| anyhow!("--input or --instance required"))?;
+    let input = flags.get("input").ok_or_else(|| err!("--input or --instance required"))?;
     let path = Path::new(input);
     match path.extension().and_then(|e| e.to_str()) {
         Some("hgr") => crate::io::read_hgr(path),
@@ -107,7 +108,7 @@ fn build_config(flags: &HashMap<String, String>) -> Result<Config> {
     let preset = flags.get("preset").map(String::as_str).unwrap_or("detjet");
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let mut cfg =
-        Config::preset(preset, seed).ok_or_else(|| anyhow!("unknown preset {preset:?}"))?;
+        Config::preset(preset, seed).ok_or_else(|| err!("unknown preset {preset:?}"))?;
     if let Some(e) = flags.get("eps") {
         cfg.eps = e.parse().context("--eps")?;
     }
@@ -123,7 +124,7 @@ fn build_config(flags: &HashMap<String, String>) -> Result<Config> {
 
 fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
     let hg = load_input(flags)?;
-    let k: usize = flags.get("k").ok_or_else(|| anyhow!("--k required"))?.parse()?;
+    let k: usize = flags.get("k").ok_or_else(|| err!("--k required"))?.parse()?;
     let cfg = build_config(flags)?;
     let selector_holder;
     let selector: Option<&dyn crate::refinement::jet::candidates::TileSelector> =
@@ -178,10 +179,10 @@ fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
         }
         return Ok(());
     }
-    let name = flags.get("instance").ok_or_else(|| anyhow!("--instance or --list required"))?;
-    let out = flags.get("output").ok_or_else(|| anyhow!("--output required"))?;
+    let name = flags.get("instance").ok_or_else(|| err!("--instance or --list required"))?;
+    let out = flags.get("output").ok_or_else(|| err!("--output required"))?;
     let inst = crate::gen::instance_by_name(name)
-        .ok_or_else(|| anyhow!("unknown instance {name:?}"))?;
+        .ok_or_else(|| err!("unknown instance {name:?}"))?;
     let h = inst.build();
     crate::io::write_hgr(&h, &PathBuf::from(out))?;
     println!("wrote {} (n={} m={})", out, h.num_vertices(), h.num_edges());
@@ -190,7 +191,7 @@ fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_verify(flags: &HashMap<String, String>) -> Result<()> {
     let hg = load_input(flags)?;
-    let k: usize = flags.get("k").ok_or_else(|| anyhow!("--k required"))?.parse()?;
+    let k: usize = flags.get("k").ok_or_else(|| err!("--k required"))?.parse()?;
     let cfg = build_config(flags)?;
     println!("verifying determinism of preset {} on k={k} ...", cfg.name);
     let mut reference: Option<(Vec<u32>, i64)> = None;

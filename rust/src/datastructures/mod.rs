@@ -7,5 +7,5 @@ pub mod partition;
 pub mod quotient;
 
 pub use hypergraph::{Hypergraph, HypergraphBuilder};
-pub use partition::{AffinityBuffer, PartitionedHypergraph};
+pub use partition::{AffinityBuffer, PartitionScratch, PartitionedHypergraph};
 pub use quotient::QuotientGraph;

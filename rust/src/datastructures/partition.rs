@@ -1,20 +1,29 @@
-//! Dynamic k-way partition state over a [`Hypergraph`].
+//! Dynamic k-way partition state over a [`Hypergraph`] — the crate's
+//! incremental partition-state engine.
 //!
 //! Maintains, under (batched, parallel) vertex moves:
 //! * the block assignment `Π`,
 //! * block weights `c(V_i)`,
-//! * per-edge pin counts `φ_e[i] = |e ∩ V_i|` (dense, `E × k`),
-//! * per-edge connectivity `λ(e) = |Λ(e)|`.
+//! * per-edge pin counts `φ_e[i] = |e ∩ V_i|` (bit-packed, `E × k`),
+//! * per-edge connectivity `λ(e) = |Λ(e)|`,
+//! * the **attributed km1 counter** `(λ−1)(Π)` — updated at the exact
+//!   `0→1` / `1→0` pin-count transition points of [`apply_move`], so
+//!   [`km1`](PartitionedHypergraph::km1) is O(1),
+//! * a **move journal** of first-origin blocks since the last
+//!   [`commit_journal`](PartitionedHypergraph::commit_journal), so
+//!   [`revert_journal`](PartitionedHypergraph::revert_journal) undoes
+//!   only moved vertices instead of diffing O(n) snapshots.
 //!
 //! All mutation goes through atomics whose *final* state after a
 //! synchronous round is interleaving-independent (fetch-add discipline;
-//! the `0→1` / `1→0` transition of a pin count adjusts `λ` exactly once
-//! in every interleaving), so parallel batch application preserves
-//! determinism.
+//! the `0→1` / `1→0` transition of a pin count adjusts `λ` and the km1
+//! counter exactly once in every interleaving), so parallel batch
+//! application preserves determinism. Invariants are spelled out in
+//! DESIGN.md §2 and checked by [`validate`](PartitionedHypergraph::validate).
 
 use crate::datastructures::Hypergraph;
-use crate::{BlockId, EdgeId, VertexId, Weight};
-use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+use crate::{BlockId, EdgeId, VertexId, Weight, NO_BLOCK};
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 
 /// Reusable dense per-block affinity scratch (k entries + touched list).
 #[derive(Debug, Default, Clone)]
@@ -55,30 +64,199 @@ impl AffinityBuffer {
     }
 }
 
-/// k-way partition state with incremental connectivity maintenance.
+/// Bit-packed `E × k` pin-count matrix.
+///
+/// Every entry holds a value in `[0, max|e|]` and gets
+/// `⌈log₂(max|e|+1)⌉` bits; `⌊64/bits⌋` entries share one `AtomicU64`
+/// word (entries never straddle words). Because a pin count is only ever
+/// decremented for a pin that is currently counted, every transient value
+/// stays within the field's range in every interleaving — so `±1` updates
+/// are plain CAS-free `fetch_add`/`fetch_sub` of `1 << shift` and cannot
+/// carry into a neighboring field. This cuts pin-count memory 4–8× at
+/// typical edge sizes versus the dense `u32` representation it replaces.
+pub(crate) struct PackedPinCounts {
+    words: Vec<AtomicU64>,
+    bits: u32,
+    per_word: usize,
+    mask: u64,
+}
+
+impl PackedPinCounts {
+    /// Build for `entries` counters bounded by `max_value`, reusing the
+    /// backing buffer of a previous level where capacity allows.
+    fn new_in(entries: usize, max_value: u64, mut words: Vec<AtomicU64>) -> Self {
+        let max_value = max_value.max(1);
+        let bits = u64::BITS - max_value.leading_zeros();
+        let per_word = (64 / bits) as usize;
+        words.clear();
+        words.resize_with(entries.div_ceil(per_word), || AtomicU64::new(0));
+        PackedPinCounts { words, bits, per_word, mask: (1u64 << bits) - 1 }
+    }
+
+    #[inline]
+    fn split(&self, i: usize) -> (usize, u32) {
+        (i / self.per_word, (i % self.per_word) as u32 * self.bits)
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> u32 {
+        let (w, s) = self.split(i);
+        ((self.words[w].load(Ordering::Relaxed) >> s) & self.mask) as u32
+    }
+
+    /// Add 1 to entry `i`; returns the previous value.
+    #[inline]
+    fn fetch_inc(&self, i: usize) -> u32 {
+        let (w, s) = self.split(i);
+        ((self.words[w].fetch_add(1u64 << s, Ordering::Relaxed) >> s) & self.mask) as u32
+    }
+
+    /// Subtract 1 from entry `i` (must be > 0); returns the previous value.
+    #[inline]
+    fn fetch_dec(&self, i: usize) -> u32 {
+        let (w, s) = self.split(i);
+        ((self.words[w].fetch_sub(1u64 << s, Ordering::Relaxed) >> s) & self.mask) as u32
+    }
+
+    /// Bits per entry.
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Actual backing-store size in bytes.
+    fn memory_bytes(&self) -> usize {
+        self.words.len() * std::mem::size_of::<AtomicU64>()
+    }
+}
+
+/// Per-round move journal: for every vertex moved since the last commit,
+/// the block it *first* left. `revert_journal` undoes exactly those
+/// vertices; `commit_journal` accepts the current state as the new
+/// baseline. Appends are lock-free (the `moved` list has one slot per
+/// vertex — a vertex enters at most once per epoch, guarded by the
+/// `first_from` CAS), and both commit and revert are order-independent,
+/// so the journal preserves schedule independence.
+struct MoveJournal {
+    /// `first_from[v]` = block `v` occupied at the last commit, or
+    /// [`NO_BLOCK`] if `v` has not moved since.
+    first_from: Vec<AtomicU32>,
+    /// Vertices moved since the last commit (set is deterministic; slot
+    /// order is not and is never observed).
+    moved: Vec<AtomicU32>,
+    moved_len: AtomicUsize,
+}
+
+impl MoveJournal {
+    #[inline]
+    fn record(&self, v: VertexId, from: BlockId) {
+        if self.first_from[v as usize]
+            .compare_exchange(NO_BLOCK, from, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            let slot = self.moved_len.fetch_add(1, Ordering::Relaxed);
+            self.moved[slot].store(v, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Reusable backing buffers for a [`PartitionedHypergraph`], so
+/// uncoarsening constructs the per-level state without reallocating —
+/// see [`PartitionedHypergraph::new_with_scratch`] /
+/// [`PartitionedHypergraph::into_scratch`].
+#[derive(Default)]
+pub struct PartitionScratch {
+    part: Vec<AtomicU32>,
+    block_weights: Vec<AtomicI64>,
+    pin_words: Vec<AtomicU64>,
+    connectivity: Vec<AtomicU32>,
+    journal_from: Vec<AtomicU32>,
+    journal_moved: Vec<AtomicU32>,
+}
+
+impl PartitionScratch {
+    /// Pre-reserve for a hypergraph of this size (the finest level), so
+    /// coarser levels never reallocate on the way up.
+    pub fn reserve_for(&mut self, hg: &Hypergraph, k: usize) {
+        let n = hg.num_vertices();
+        let bits = u64::BITS - (hg.max_edge_size().max(1) as u64).leading_zeros();
+        let per_word = (64 / bits) as usize;
+        self.part.reserve(n);
+        self.block_weights.reserve(k);
+        self.pin_words.reserve((hg.num_edges() * k).div_ceil(per_word));
+        self.connectivity.reserve(hg.num_edges());
+        self.journal_from.reserve(n);
+        self.journal_moved.reserve(n);
+    }
+}
+
+/// k-way partition state with incremental connectivity, attributed km1
+/// and move-journal rollback.
 pub struct PartitionedHypergraph<'a> {
     hg: &'a Hypergraph,
     k: usize,
     part: Vec<AtomicU32>,
     block_weights: Vec<AtomicI64>,
-    /// Dense pin counts, row-major: `pin_counts[e * k + b]`.
-    pin_counts: Vec<AtomicU32>,
+    /// Bit-packed pin counts, row-major: entry `e * k + b`.
+    pin_counts: PackedPinCounts,
     connectivity: Vec<AtomicU32>,
+    /// Attributed `(λ−1)(Π)` — maintained at the λ transitions.
+    km1_attr: AtomicI64,
+    journal: MoveJournal,
 }
 
 impl<'a> PartitionedHypergraph<'a> {
     /// Build from an assignment vector (entries must be `< k`).
     pub fn new(hg: &'a Hypergraph, k: usize, part: Vec<BlockId>) -> Self {
+        Self::new_with_scratch(hg, k, part, PartitionScratch::default())
+    }
+
+    /// Like [`new`](Self::new), reusing the backing buffers of a previous
+    /// level's state (see [`into_scratch`](Self::into_scratch)).
+    pub fn new_with_scratch(
+        hg: &'a Hypergraph,
+        k: usize,
+        part: Vec<BlockId>,
+        scratch: PartitionScratch,
+    ) -> Self {
         assert_eq!(part.len(), hg.num_vertices());
         assert!(k >= 1);
         debug_assert!(part.iter().all(|&b| (b as usize) < k));
+        let n = hg.num_vertices();
+        let PartitionScratch {
+            part: mut part_buf,
+            block_weights: mut bw,
+            pin_words,
+            connectivity: mut conn,
+            journal_from: mut jfrom,
+            journal_moved: mut jmoved,
+        } = scratch;
+        part_buf.clear();
+        part_buf.extend(part.iter().map(|&b| AtomicU32::new(b)));
+        bw.clear();
+        bw.resize_with(k, || AtomicI64::new(0));
+        conn.clear();
+        conn.resize_with(hg.num_edges(), || AtomicU32::new(0));
+        jfrom.clear();
+        jfrom.resize_with(n, || AtomicU32::new(NO_BLOCK));
+        jmoved.clear();
+        jmoved.resize_with(n, || AtomicU32::new(0));
         let p = PartitionedHypergraph {
             hg,
             k,
-            part: part.into_iter().map(AtomicU32::new).collect(),
-            block_weights: (0..k).map(|_| AtomicI64::new(0)).collect(),
-            pin_counts: (0..hg.num_edges() * k).map(|_| AtomicU32::new(0)).collect(),
-            connectivity: (0..hg.num_edges()).map(|_| AtomicU32::new(0)).collect(),
+            part: part_buf,
+            block_weights: bw,
+            pin_counts: PackedPinCounts::new_in(
+                hg.num_edges() * k,
+                hg.max_edge_size() as u64,
+                pin_words,
+            ),
+            connectivity: conn,
+            km1_attr: AtomicI64::new(0),
+            journal: MoveJournal {
+                first_from: jfrom,
+                moved: jmoved,
+                moved_len: AtomicUsize::new(0),
+            },
         };
         // Block weights.
         crate::par::for_each_chunk(hg.num_vertices(), |_c, r| {
@@ -87,20 +265,38 @@ impl<'a> PartitionedHypergraph<'a> {
                 p.block_weights[b].fetch_add(hg.vertex_weight(v as VertexId), Ordering::Relaxed);
             }
         });
-        // Pin counts + connectivity.
+        // Pin counts + connectivity + initial km1.
         crate::par::for_each_chunk(hg.num_edges(), |_c, r| {
+            let mut km1 = 0 as Weight;
             for e in r {
                 let mut lambda = 0;
                 for &v in hg.pins(e as EdgeId) {
                     let b = p.part(v) as usize;
-                    if p.pin_counts[e * k + b].fetch_add(1, Ordering::Relaxed) == 0 {
+                    if p.pin_counts.fetch_inc(e * k + b) == 0 {
                         lambda += 1;
                     }
                 }
                 p.connectivity[e].store(lambda, Ordering::Relaxed);
+                km1 += (lambda as Weight - 1) * hg.edge_weight(e as EdgeId);
             }
+            p.km1_attr.fetch_add(km1, Ordering::Relaxed);
         });
         p
+    }
+
+    /// Tear down into the final assignment plus the reusable backing
+    /// buffers (for the next level's [`new_with_scratch`](Self::new_with_scratch)).
+    pub fn into_scratch(self) -> (Vec<BlockId>, PartitionScratch) {
+        let snap = self.snapshot();
+        let scratch = PartitionScratch {
+            part: self.part,
+            block_weights: self.block_weights,
+            pin_words: self.pin_counts.words,
+            connectivity: self.connectivity,
+            journal_from: self.journal.first_from,
+            journal_moved: self.journal.moved,
+        };
+        (snap, scratch)
     }
 
     #[inline]
@@ -130,7 +326,7 @@ impl<'a> PartitionedHypergraph<'a> {
 
     #[inline]
     pub fn pin_count(&self, e: EdgeId, b: BlockId) -> u32 {
-        self.pin_counts[e as usize * self.k + b as usize].load(Ordering::Relaxed)
+        self.pin_counts.get(e as usize * self.k + b as usize)
     }
 
     #[inline]
@@ -143,15 +339,32 @@ impl<'a> PartitionedHypergraph<'a> {
         self.connectivity(e) > 1
     }
 
+    /// Bits per packed pin-count entry (`⌈log₂(max|e|+1)⌉`).
+    pub fn pin_count_bits(&self) -> u32 {
+        self.pin_counts.bits()
+    }
+
+    /// Actual pin-count memory in bytes (packed representation).
+    pub fn pin_count_memory_bytes(&self) -> usize {
+        self.pin_counts.memory_bytes()
+    }
+
+    /// Hypothetical pin-count memory of the dense `u32` representation
+    /// this engine replaced (for the before/after bench note).
+    pub fn dense_pin_count_memory_bytes(&self) -> usize {
+        self.hg.num_edges() * self.k * std::mem::size_of::<u32>()
+    }
+
     /// Perfectly balanced block weight `⌈c(V)/k⌉`.
     #[inline]
     pub fn avg_block_weight(&self) -> Weight {
-        (self.hg.total_vertex_weight() + self.k as Weight - 1) / self.k as Weight
+        crate::metrics::block_weight_target(self.hg.total_vertex_weight(), self.k)
     }
 
-    /// Maximum allowed block weight `L_max = (1+ε)·⌈c(V)/k⌉`.
+    /// Maximum allowed block weight `L_max = ⌊(1+ε)·⌈c(V)/k⌉⌋` (the
+    /// shared rule of [`crate::metrics::max_block_weight`]).
     pub fn max_block_weight(&self, eps: f64) -> Weight {
-        ((1.0 + eps) * self.avg_block_weight() as f64).floor() as Weight
+        crate::metrics::max_block_weight(self.avg_block_weight(), eps)
     }
 
     /// `max_i c(V_i) / ⌈c(V)/k⌉ − 1`.
@@ -167,8 +380,17 @@ impl<'a> PartitionedHypergraph<'a> {
         (0..self.k).all(|b| self.block_weight(b as BlockId) <= lmax)
     }
 
-    /// Connectivity metric `(λ−1)(Π) = Σ_e (λ(e)−1)·ω(e)`.
+    /// Connectivity metric `(λ−1)(Π) = Σ_e (λ(e)−1)·ω(e)` — O(1), read
+    /// from the attributed counter.
+    #[inline]
     pub fn km1(&self) -> Weight {
+        self.km1_attr.load(Ordering::Relaxed)
+    }
+
+    /// Full `O(E)` recompute of km1 from the connectivity array — the
+    /// debug oracle for the incremental counter (cross-checked in
+    /// [`validate`](Self::validate) and the property tests).
+    pub fn km1_scratch(&self) -> Weight {
         crate::par::parallel_reduce(
             self.hg.num_edges(),
             || 0 as Weight,
@@ -204,22 +426,32 @@ impl<'a> PartitionedHypergraph<'a> {
     /// concurrently for *distinct* vertices. Returns false if `v` was
     /// already in `to`.
     pub fn apply_move(&self, v: VertexId, to: BlockId) -> bool {
+        self.apply_move_inner(v, to, true)
+    }
+
+    fn apply_move_inner(&self, v: VertexId, to: BlockId, journal: bool) -> bool {
         let from = self.part[v as usize].swap(to, Ordering::Relaxed);
         if from == to {
             return false;
+        }
+        if journal {
+            self.journal.record(v, from);
         }
         let w = self.hg.vertex_weight(v);
         self.block_weights[from as usize].fetch_sub(w, Ordering::Relaxed);
         self.block_weights[to as usize].fetch_add(w, Ordering::Relaxed);
         for &e in self.hg.incident_edges(v) {
             let base = e as usize * self.k;
-            // Leaving `from`: last pin out ⇒ λ -= 1.
-            if self.pin_counts[base + from as usize].fetch_sub(1, Ordering::Relaxed) == 1 {
+            let we = self.hg.edge_weight(e);
+            // Leaving `from`: last pin out ⇒ λ -= 1, km1 -= ω(e).
+            if self.pin_counts.fetch_dec(base + from as usize) == 1 {
                 self.connectivity[e as usize].fetch_sub(1, Ordering::Relaxed);
+                self.km1_attr.fetch_sub(we, Ordering::Relaxed);
             }
-            // Entering `to`: first pin in ⇒ λ += 1.
-            if self.pin_counts[base + to as usize].fetch_add(1, Ordering::Relaxed) == 0 {
+            // Entering `to`: first pin in ⇒ λ += 1, km1 += ω(e).
+            if self.pin_counts.fetch_inc(base + to as usize) == 0 {
                 self.connectivity[e as usize].fetch_add(1, Ordering::Relaxed);
+                self.km1_attr.fetch_add(we, Ordering::Relaxed);
             }
         }
         true
@@ -232,6 +464,38 @@ impl<'a> PartitionedHypergraph<'a> {
             for i in r {
                 let (v, t) = moves[i];
                 self.apply_move(v, t);
+            }
+        });
+    }
+
+    /// Number of vertices moved since the last journal commit.
+    pub fn journal_len(&self) -> usize {
+        self.journal.moved_len.load(Ordering::Relaxed)
+    }
+
+    /// Accept the current state as the rollback baseline: clear the move
+    /// journal. O(#moved).
+    pub fn commit_journal(&self) {
+        let len = self.journal.moved_len.swap(0, Ordering::Relaxed);
+        for slot in &self.journal.moved[..len] {
+            let v = slot.load(Ordering::Relaxed) as usize;
+            self.journal.first_from[v].store(NO_BLOCK, Ordering::Relaxed);
+        }
+    }
+
+    /// Restore the state of the last [`commit_journal`](Self::commit_journal)
+    /// by applying inverse moves for exactly the vertices moved since —
+    /// O(#moved), no O(n) snapshot diff. Must not run concurrently with
+    /// other mutation.
+    pub fn revert_journal(&self) {
+        let len = self.journal.moved_len.swap(0, Ordering::Relaxed);
+        crate::par::for_each_chunk(len, |_c, r| {
+            for i in r {
+                let v = self.journal.moved[i].load(Ordering::Relaxed);
+                let from = self.journal.first_from[v as usize].swap(NO_BLOCK, Ordering::Relaxed);
+                if from != NO_BLOCK {
+                    self.apply_move_inner(v, from, false);
+                }
             }
         });
     }
@@ -287,7 +551,7 @@ impl<'a> PartitionedHypergraph<'a> {
             if self.connectivity(e) > 1 {
                 let base = e as usize * self.k;
                 for b in 0..self.k as BlockId {
-                    if b != s && self.pin_counts[base + b as usize].load(Ordering::Relaxed) > 0 {
+                    if b != s && self.pin_counts.get(base + b as usize) > 0 {
                         buf.add(b, w);
                     }
                 }
@@ -296,13 +560,15 @@ impl<'a> PartitionedHypergraph<'a> {
         (w_total, benefit, internal)
     }
 
-    /// Current assignment as a plain vector (snapshot for rollback).
+    /// Current assignment as a plain vector (final extraction, and the
+    /// O(n) oracle the journal is tested against).
     pub fn snapshot(&self) -> Vec<BlockId> {
         (0..self.hg.num_vertices()).map(|v| self.part(v as VertexId)).collect()
     }
 
     /// Roll back to a snapshot by applying inverse moves for every vertex
-    /// whose block differs (cheap when few vertices moved).
+    /// whose block differs — the O(n) oracle for
+    /// [`revert_journal`](Self::revert_journal); hot paths use the journal.
     pub fn rollback_to(&self, snap: &[BlockId]) {
         assert_eq!(snap.len(), self.hg.num_vertices());
         crate::par::for_each_chunk(snap.len(), |_c, r| {
@@ -315,6 +581,8 @@ impl<'a> PartitionedHypergraph<'a> {
     }
 
     /// Recompute everything from scratch and compare — test/debug oracle.
+    /// Covers block weights, (packed) pin counts vs a dense recount,
+    /// connectivity, the attributed km1 counter, and (optionally) balance.
     pub fn validate(&self, eps_check: Option<f64>) -> Result<(), String> {
         let mut bw = vec![0 as Weight; self.k];
         for v in 0..self.hg.num_vertices() {
@@ -333,6 +601,7 @@ impl<'a> PartitionedHypergraph<'a> {
                 ));
             }
         }
+        let mut km1 = 0 as Weight;
         for e in 0..self.hg.num_edges() {
             let mut counts = vec![0u32; self.k];
             for &v in self.hg.pins(e as EdgeId) {
@@ -350,6 +619,17 @@ impl<'a> PartitionedHypergraph<'a> {
                     return Err(format!("edge {e} pin count for block {b} stale"));
                 }
             }
+            km1 += (lambda as Weight - 1) * self.hg.edge_weight(e as EdgeId);
+        }
+        if km1 != self.km1() {
+            return Err(format!("km1 counter stale: stored {} real {km1}", self.km1()));
+        }
+        if self.km1_scratch() != self.km1() {
+            return Err(format!(
+                "km1 counter diverges from connectivity reduce: {} vs {}",
+                self.km1(),
+                self.km1_scratch()
+            ));
         }
         if let Some(eps) = eps_check {
             if !self.is_balanced(eps) {
@@ -385,6 +665,7 @@ mod tests {
         assert_eq!(p.connectivity(2), 1);
         assert_eq!(p.connectivity(3), 2);
         assert_eq!(p.km1(), 2 + 3); // edges 1 and 3 are cut
+        assert_eq!(p.km1(), p.km1_scratch());
         assert_eq!(p.cut(), 5);
         assert_eq!(p.pin_count(0, 0), 3);
         assert_eq!(p.pin_count(1, 1), 1);
@@ -475,6 +756,128 @@ mod tests {
         assert_eq!(p.snapshot(), snap);
         assert_eq!(p.km1(), km1);
         p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn journal_revert_restores_committed_state() {
+        let h = hg();
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 1, 1, 1]);
+        let base = p.snapshot();
+        let base_km1 = p.km1();
+        assert_eq!(p.journal_len(), 0);
+        p.apply_moves(&[(0, 1), (4, 0)]);
+        assert_eq!(p.journal_len(), 2);
+        // Moving a vertex twice journals it once (first origin wins).
+        p.apply_move(0, 0);
+        p.apply_move(0, 1);
+        assert_eq!(p.journal_len(), 2);
+        p.revert_journal();
+        assert_eq!(p.journal_len(), 0);
+        assert_eq!(p.snapshot(), base);
+        assert_eq!(p.km1(), base_km1);
+        p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn journal_commit_moves_baseline() {
+        let h = hg();
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 1, 1, 1]);
+        p.apply_moves(&[(0, 1)]);
+        p.commit_journal();
+        assert_eq!(p.journal_len(), 0);
+        let committed = p.snapshot();
+        let committed_km1 = p.km1();
+        p.apply_moves(&[(0, 0), (3, 0), (5, 0)]);
+        p.revert_journal();
+        assert_eq!(p.snapshot(), committed);
+        assert_eq!(p.km1(), committed_km1);
+        p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn journal_revert_deterministic_across_threads() {
+        let h = crate::gen::sat_hypergraph(300, 900, 8, 5);
+        let part: Vec<BlockId> = (0..300).map(|v| (v % 4) as BlockId).collect();
+        let batches: Vec<Vec<(u32, u32)>> = (0..3)
+            .map(|b| {
+                (0..300u32)
+                    .filter(|&v| crate::util::rng::hash64(b, v as u64) % 3 == 0)
+                    .map(|v| (v, (crate::util::rng::hash64(b ^ 7, v as u64) % 4) as u32))
+                    .collect()
+            })
+            .collect();
+        let mut outs = Vec::new();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let p = PartitionedHypergraph::new(&h, 4, part.clone());
+                for batch in &batches {
+                    p.apply_moves(batch);
+                }
+                let moved = p.snapshot();
+                p.revert_journal();
+                p.validate(None).unwrap();
+                outs.push((moved, p.snapshot(), p.km1()));
+            });
+        }
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+        assert_eq!(outs[0].1, part);
+    }
+
+    #[test]
+    fn packed_pin_counts_widths_and_bounds() {
+        // One edge of each size class: widths 1, 2, 4 bits etc.; entries
+        // at their maximum value must not leak into neighbors.
+        for size in [2usize, 3, 4, 7, 8, 15, 16, 100] {
+            let pins: Vec<VertexId> = (0..size as VertexId).collect();
+            let h = Hypergraph::new(size, &[pins.clone()], None, None);
+            let p = PartitionedHypergraph::new(&h, 3, vec![0; size]);
+            let expect_bits = usize::BITS - size.leading_zeros();
+            assert_eq!(p.pin_count_bits(), expect_bits, "size {size}");
+            assert_eq!(p.pin_count(0, 0), size as u32);
+            assert_eq!(p.pin_count(0, 1), 0);
+            assert_eq!(p.pin_count(0, 2), 0);
+            // Drain the edge pin by pin into block 1 and back.
+            for v in 0..size as VertexId {
+                p.apply_move(v, 1);
+            }
+            assert_eq!(p.pin_count(0, 0), 0);
+            assert_eq!(p.pin_count(0, 1), size as u32);
+            p.validate(None).unwrap();
+        }
+    }
+
+    #[test]
+    fn packed_memory_beats_dense() {
+        let h = crate::gen::sat_hypergraph(400, 1200, 8, 3);
+        let p = PartitionedHypergraph::new(&h, 16, vec![0; 400]);
+        assert!(
+            p.pin_count_memory_bytes() * 4 <= p.dense_pin_count_memory_bytes() + 64,
+            "packed {} vs dense {}",
+            p.pin_count_memory_bytes(),
+            p.dense_pin_count_memory_bytes()
+        );
+    }
+
+    #[test]
+    fn scratch_reuse_across_instances() {
+        // Simulate uncoarsening: small instance, then a bigger one reusing
+        // the buffers; state must be as if freshly built.
+        let small = crate::gen::sat_hypergraph(50, 150, 5, 1);
+        let p1 = PartitionedHypergraph::new(&small, 3, vec![0; 50]);
+        p1.apply_moves(&[(0, 1), (7, 2), (13, 1)]);
+        let (_snap, scratch) = p1.into_scratch();
+        let big = crate::gen::sat_hypergraph(200, 600, 7, 2);
+        let part: Vec<BlockId> = (0..200).map(|v| (v % 3) as BlockId).collect();
+        let p2 = PartitionedHypergraph::new_with_scratch(&big, 3, part.clone(), scratch);
+        p2.validate(None).unwrap();
+        assert_eq!(p2.snapshot(), part);
+        assert_eq!(p2.journal_len(), 0);
+        assert_eq!(p2.km1(), crate::metrics::km1(&big, &part, 3));
+        // And the journal still works on the reused buffers.
+        p2.apply_moves(&[(5, 0), (6, 1)]);
+        p2.revert_journal();
+        assert_eq!(p2.snapshot(), part);
+        p2.validate(None).unwrap();
     }
 
     #[test]

@@ -122,9 +122,10 @@ pub fn flat_bipartition(
     let total = hg.total_vertex_weight();
     let target0 = (total as f64 * frac0).ceil() as Weight;
     let target1 = total - target0;
+    // Shared L_max rule — same ⌊(1+ε)·target⌋ convention as everywhere.
     let lmax = [
-        ((1.0 + eps) * target0 as f64).ceil() as Weight,
-        ((1.0 + eps) * target1 as f64).ceil() as Weight,
+        crate::metrics::max_block_weight(target0, eps),
+        crate::metrics::max_block_weight(target1, eps),
     ];
     let attempts = cfg.attempts.max(1);
     // Parallel attempts, combined by index order (deterministic).

@@ -9,7 +9,8 @@
 
 use crate::datastructures::{Hypergraph, HypergraphBuilder};
 use crate::{VertexId, Weight};
-use anyhow::{bail, Context, Result};
+use crate::util::{Context, Result};
+use crate::bail;
 use std::path::Path;
 
 pub fn read_graph(path: &Path) -> Result<Hypergraph> {

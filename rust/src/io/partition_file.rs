@@ -3,7 +3,8 @@
 //! byte-level artifact our determinism checks compare.
 
 use crate::BlockId;
-use anyhow::{bail, Context, Result};
+use crate::util::{Context, Result};
+use crate::bail;
 use std::path::Path;
 
 pub fn write_partition(part: &[BlockId], path: &Path) -> Result<()> {

@@ -50,6 +50,22 @@ fn objective_impl(
     .0
 }
 
+/// Per-block weight target `⌈c(V)/k⌉` (perfect balance).
+#[inline]
+pub fn block_weight_target(total: Weight, k: usize) -> Weight {
+    (total + k as Weight - 1) / k as Weight
+}
+
+/// The crate-wide `L_max` rule: `⌊(1+ε)·target⌋` for an (integer,
+/// already ⌈·⌉-rounded) per-block weight target. Used identically by the
+/// incremental partition state, this assignment-vector oracle, the
+/// recursive-bipartitioning driver and initial partitioning — one helper,
+/// one rounding convention (see DESIGN.md §2).
+#[inline]
+pub fn max_block_weight(target: Weight, eps: f64) -> Weight {
+    ((1.0 + eps) * target as f64).floor() as Weight
+}
+
 /// Block weights of an assignment.
 pub fn block_weights(hg: &Hypergraph, part: &[BlockId], k: usize) -> Vec<Weight> {
     let mut bw = vec![0 as Weight; k];
@@ -61,16 +77,14 @@ pub fn block_weights(hg: &Hypergraph, part: &[BlockId], k: usize) -> Vec<Weight>
 
 /// `max_i c(V_i)/⌈c(V)/k⌉ − 1`.
 pub fn imbalance(hg: &Hypergraph, part: &[BlockId], k: usize) -> f64 {
-    let avg = ((hg.total_vertex_weight() + k as Weight - 1) / k as Weight) as f64;
+    let avg = block_weight_target(hg.total_vertex_weight(), k) as f64;
     let max = block_weights(hg, part, k).into_iter().max().unwrap_or(0);
     max as f64 / avg - 1.0
 }
 
-/// True iff every block obeys `c(V_i) ≤ (1+ε)·⌈c(V)/k⌉`.
+/// True iff every block obeys `c(V_i) ≤ L_max`.
 pub fn is_balanced(hg: &Hypergraph, part: &[BlockId], k: usize, eps: f64) -> bool {
-    let lmax = ((1.0 + eps)
-        * ((hg.total_vertex_weight() + k as Weight - 1) / k as Weight) as f64)
-        .floor() as Weight;
+    let lmax = max_block_weight(block_weight_target(hg.total_vertex_weight(), k), eps);
     block_weights(hg, part, k).into_iter().all(|w| w <= lmax)
 }
 
@@ -116,6 +130,26 @@ mod tests {
         assert!(is_balanced(&h, &[0, 0, 0, 1, 1, 1], 2, 0.0));
         assert!(!is_balanced(&h, &[0, 0, 0, 0, 1, 1], 2, 0.1));
         assert_eq!(block_weights(&h, &[0, 0, 0, 0, 1, 1], 2), vec![4, 2]);
+    }
+
+    #[test]
+    fn lmax_helper_consistent_everywhere() {
+        let h = hg();
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 1, 1, 1]);
+        for eps in [0.0, 0.03, 0.1, 0.5] {
+            assert_eq!(
+                p.max_block_weight(eps),
+                max_block_weight(block_weight_target(h.total_vertex_weight(), 2), eps)
+            );
+            assert_eq!(
+                is_balanced(&h, &p.snapshot(), 2, eps),
+                p.is_balanced(eps),
+                "eps={eps}"
+            );
+        }
+        assert_eq!(block_weight_target(7, 2), 4);
+        assert_eq!(max_block_weight(4, 0.03), 4);
+        assert_eq!(max_block_weight(100, 0.03), 103);
     }
 
     #[test]

@@ -2,10 +2,16 @@
 //! preprocessing → coarsening → initial partitioning → uncoarsening with
 //! refinement (LP / Jet / +Flows per config), all phases timed for the
 //! component-share experiment (Fig. 12).
+//!
+//! The uncoarsening driver owns one [`RefinementContext`] scratch arena
+//! and one set of partition-state backing buffers for the whole
+//! hierarchy, pre-reserved at the finest level's size, so per-level
+//! refinement reuses allocations instead of reallocating (DESIGN.md §2).
 
 use crate::config::{Config, RefinementAlgo};
 use crate::datastructures::{Hypergraph, PartitionedHypergraph};
 use crate::refinement::jet::candidates::TileSelector;
+use crate::refinement::RefinementContext;
 use crate::util::rng::hash64;
 use crate::util::timer::PhaseTimer;
 use crate::{BlockId, Weight};
@@ -19,6 +25,9 @@ pub struct PartitionResult {
     pub cut: Weight,
     pub imbalance: f64,
     pub balanced: bool,
+    /// Number of hierarchy levels refinement ran on (coarsest + one per
+    /// uncontraction); for recursive bipartitioning, the deepest
+    /// hierarchy among all splits.
     pub levels: usize,
     pub timings: PhaseTimer,
     pub total_s: f64,
@@ -39,10 +48,11 @@ pub fn partition_with_selector(
 ) -> PartitionResult {
     let t0 = Instant::now();
     let mut timings = PhaseTimer::new();
+    let mut levels = 0usize;
     let part = if cfg.recursive_bipartitioning {
-        recursive_bipartitioning_driver(hg, k, cfg, &mut timings)
+        recursive_bipartitioning_driver(hg, k, cfg, &mut timings, &mut levels)
     } else {
-        direct_kway(hg, k, cfg, selector, &mut timings)
+        direct_kway(hg, k, cfg, selector, &mut timings, &mut levels)
     };
     let km1 = crate::metrics::km1(hg, &part, k);
     let cut = crate::metrics::cut(hg, &part, k);
@@ -54,7 +64,7 @@ pub fn partition_with_selector(
         cut,
         imbalance,
         balanced,
-        levels: 0,
+        levels,
         timings,
         total_s: t0.elapsed().as_secs_f64(),
     }
@@ -66,6 +76,7 @@ fn direct_kway(
     cfg: &Config,
     selector: Option<&dyn TileSelector>,
     timings: &mut PhaseTimer,
+    levels_out: &mut usize,
 ) -> Vec<BlockId> {
     // --- Preprocessing ---
     let communities = timings.scope("preprocessing", || {
@@ -86,19 +97,29 @@ fn direct_kway(
         crate::coarsening::coarsen(hg, communities.as_deref(), &cfg.coarsening, k, cfg.seed)
     });
     let coarsest = hier.coarsest(hg);
+    *levels_out = hier.levels.len() + 1;
 
     // --- Initial partitioning ---
     let mut part = timings.scope("initial", || {
         crate::initial::initial_partition(coarsest, k, cfg.eps, &cfg.initial, cfg.seed ^ 0x1217)
     });
 
+    // One scratch arena for the whole uncoarsening, pre-reserved at the
+    // finest level's dimensions so no level reallocates.
+    let mut ctx = RefinementContext::new(k, hg.num_vertices());
+    {
+        let mut scratch = ctx.take_partition_scratch();
+        scratch.reserve_for(hg, k);
+        ctx.put_partition_scratch(scratch);
+    }
+
     // Refine at the coarsest level, then uncoarsen level by level.
-    refine_level(coarsest, k, &mut part, cfg, selector, timings, 0, hier.levels.is_empty());
+    refine_level(coarsest, k, &mut part, cfg, selector, timings, 0, hier.levels.is_empty(), &mut ctx);
     for li in (0..hier.levels.len()).rev() {
         let fine_hg: &Hypergraph =
             if li == 0 { hg } else { &hier.levels[li - 1].coarse };
         part = hier.levels[li].map.iter().map(|&cv| part[cv as usize]).collect();
-        refine_level(fine_hg, k, &mut part, cfg, selector, timings, li as u64 + 1, li == 0);
+        refine_level(fine_hg, k, &mut part, cfg, selector, timings, li as u64 + 1, li == 0, &mut ctx);
     }
     part
 }
@@ -113,8 +134,14 @@ fn refine_level(
     timings: &mut PhaseTimer,
     level_tag: u64,
     is_finest: bool,
+    ctx: &mut RefinementContext,
 ) {
-    let p = PartitionedHypergraph::new(hg, k, part.clone());
+    let p = PartitionedHypergraph::new_with_scratch(
+        hg,
+        k,
+        std::mem::take(part),
+        ctx.take_partition_scratch(),
+    );
     match cfg.refinement.algo {
         RefinementAlgo::Jet => {
             // Fig. 4's τ_c/τ_f split: optionally swap in the fine-level
@@ -126,23 +153,26 @@ fn refine_level(
                 }
             }
             timings.scope("refinement-jet", || {
-                crate::refinement::jet::refine_jet(
+                crate::refinement::jet::refine_jet_in(
                     &p,
                     cfg.eps,
                     &jet_cfg,
                     hash64(cfg.seed, level_tag),
                     selector,
+                    ctx,
                 );
             });
         }
         RefinementAlgo::LabelPropagation => {
             timings.scope("refinement-lp", || {
                 let lmax = vec![p.max_block_weight(cfg.eps); k];
-                crate::refinement::lp::refine_lp(&p, &lmax, &cfg.refinement.lp);
+                crate::refinement::lp::refine_lp_in(&p, &lmax, &cfg.refinement.lp, ctx);
                 // LP cannot repair imbalance by itself; reuse the Jet
                 // rebalancer as the balance backstop (as SDet does).
                 if !p.is_balanced(cfg.eps) {
-                    crate::refinement::jet::rebalance::rebalance(&p, cfg.eps, 0.1, 100);
+                    crate::refinement::jet::rebalance::rebalance_with_priority_in(
+                        &p, cfg.eps, 0.1, 100, true, ctx,
+                    );
                 }
             });
         }
@@ -153,20 +183,23 @@ fn refine_level(
     // (Mt-KaHyPar runs flows per level on huge inputs where the effect
     // washes out; at our instance scale finest-only both preserves the
     // "DetFlows ≥ DetJet" guarantee and keeps the runtime ratio in the
-    // paper's ballpark — see DESIGN.md).
+    // paper's ballpark — see DESIGN.md §4).
     if let Some(fcfg) = &cfg.refinement.flows {
         if is_finest && hg.num_pins() <= fcfg.max_pins {
             timings.scope("refinement-flow", || {
-                crate::refinement::flow::refine_kway_flows(
+                crate::refinement::flow::refine_kway_flows_in(
                     &p,
                     cfg.eps,
                     fcfg,
                     hash64(cfg.seed ^ 0xF10F, level_tag),
+                    ctx,
                 );
             });
         }
     }
-    *part = p.snapshot();
+    let (snap, scratch) = p.into_scratch();
+    *part = snap;
+    ctx.put_partition_scratch(scratch);
 }
 
 /// BiPart-style driver: recursive bipartitioning all the way down, each
@@ -176,13 +209,14 @@ fn recursive_bipartitioning_driver(
     k: usize,
     cfg: &Config,
     timings: &mut PhaseTimer,
+    levels_out: &mut usize,
 ) -> Vec<BlockId> {
     let mut part = vec![0 as BlockId; hg.num_vertices()];
     // Imbalance accumulates multiplicatively over ⌈log₂ k⌉ splits; use
     // the standard adaptive ε′ = (1+ε)^(1/⌈log₂ k⌉) − 1 per split.
     let depth = (k.max(2) as f64).log2().ceil();
     let eps_split = (1.0 + cfg.eps).powf(1.0 / depth) - 1.0;
-    rb_recurse(hg, k, cfg, eps_split, timings, 0, &mut part, 0);
+    rb_recurse(hg, k, cfg, eps_split, timings, 0, &mut part, 0, levels_out);
     // Explicit final balancing step (as BiPart does): the accumulated
     // slack can still overshoot ε on small blocks.
     let p = PartitionedHypergraph::new(hg, k, part);
@@ -204,6 +238,7 @@ fn rb_recurse(
     block_base: BlockId,
     part: &mut [BlockId],
     depth: u64,
+    levels_out: &mut usize,
 ) {
     if k <= 1 {
         for b in part.iter_mut() {
@@ -213,13 +248,23 @@ fn rb_recurse(
     }
     let k1 = k.div_ceil(2);
     let frac0 = k1 as f64 / k as f64;
-    let bip = bipartition_multilevel(hg, frac0, eps_split, cfg, depth, timings);
+    let bip = bipartition_multilevel(hg, frac0, eps_split, cfg, depth, timings, levels_out);
     for (side, kk, base) in
         [(0u32, k1, block_base), (1u32, k - k1, block_base + k1 as BlockId)]
     {
         let (sub, sub_to_orig) = crate::initial::extract_side(hg, &bip, side);
         let mut sub_part = vec![0 as BlockId; sub.num_vertices()];
-        rb_recurse(&sub, kk, cfg, eps_split, timings, 0, &mut sub_part, depth * 2 + side as u64 + 1);
+        rb_recurse(
+            &sub,
+            kk,
+            cfg,
+            eps_split,
+            timings,
+            0,
+            &mut sub_part,
+            depth * 2 + side as u64 + 1,
+            levels_out,
+        );
         for (sv, &ov) in sub_to_orig.iter().enumerate() {
             part[ov as usize] = base + sub_part[sv];
         }
@@ -228,6 +273,7 @@ fn rb_recurse(
 
 /// Multilevel 2-way partition with asymmetric target weights
 /// (side 0 gets `frac0` of the total) and LP refinement.
+#[allow(clippy::too_many_arguments)]
 fn bipartition_multilevel(
     hg: &Hypergraph,
     frac0: f64,
@@ -235,34 +281,47 @@ fn bipartition_multilevel(
     cfg: &Config,
     depth: u64,
     timings: &mut PhaseTimer,
+    levels_out: &mut usize,
 ) -> Vec<BlockId> {
     let seed = hash64(cfg.seed, depth ^ 0xB1BA);
     let hier = timings.scope("coarsening", || {
         crate::coarsening::coarsen(hg, None, &cfg.coarsening, 2, seed)
     });
     let coarsest = hier.coarsest(hg);
+    *levels_out = (*levels_out).max(hier.levels.len() + 1);
     let mut part = timings.scope("initial", || {
         crate::initial::flat_bipartition(coarsest, frac0, eps_split, &cfg.initial, seed)
     });
     let total = hg.total_vertex_weight();
     let target0 = (total as f64 * frac0).ceil() as Weight;
+    // Shared L_max rule (crate::metrics::max_block_weight) — the same
+    // ⌊(1+ε)·target⌋ convention the k-way state and metrics use.
     let lmax = [
-        ((1.0 + eps_split) * target0 as f64).ceil() as Weight,
-        ((1.0 + eps_split) * (total - target0) as f64).ceil() as Weight,
+        crate::metrics::max_block_weight(target0, eps_split),
+        crate::metrics::max_block_weight(total - target0, eps_split),
     ];
-    let refine2 = |h: &Hypergraph, pt: &mut Vec<BlockId>, timings: &mut PhaseTimer| {
-        let p = PartitionedHypergraph::new(h, 2, pt.clone());
-        timings.scope("refinement-lp", || {
-            crate::refinement::lp::refine_lp(&p, &lmax, &cfg.refinement.lp);
-        });
-        *pt = p.snapshot();
-    };
-    refine2(coarsest, &mut part, timings);
+    let mut ctx = RefinementContext::new(2, hg.num_vertices());
+    let mut refine2 =
+        |h: &Hypergraph, pt: &mut Vec<BlockId>, timings: &mut PhaseTimer, ctx: &mut RefinementContext| {
+            let p = PartitionedHypergraph::new_with_scratch(
+                h,
+                2,
+                std::mem::take(pt),
+                ctx.take_partition_scratch(),
+            );
+            timings.scope("refinement-lp", || {
+                crate::refinement::lp::refine_lp_in(&p, &lmax, &cfg.refinement.lp, ctx);
+            });
+            let (snap, scratch) = p.into_scratch();
+            *pt = snap;
+            ctx.put_partition_scratch(scratch);
+        };
+    refine2(coarsest, &mut part, timings, &mut ctx);
     for li in (0..hier.levels.len()).rev() {
         let fine_hg: &Hypergraph =
             if li == 0 { hg } else { &hier.levels[li - 1].coarse };
         part = hier.levels[li].map.iter().map(|&cv| part[cv as usize]).collect();
-        refine2(fine_hg, &mut part, timings);
+        refine2(fine_hg, &mut part, timings, &mut ctx);
     }
     part
 }
@@ -338,5 +397,11 @@ mod tests {
         assert!(r.timings.get_s("initial") > 0.0);
         assert!(r.timings.get_s("refinement-jet") > 0.0);
         assert!(r.total_s > 0.0);
+        // 1024 vertices against a contraction limit of 160·k ⇒ the
+        // hierarchy has at least one contraction level below the input.
+        assert!(r.levels >= 2, "levels not populated: {}", r.levels);
+        // The RB driver reports the deepest split hierarchy.
+        let rb = partition(&h, 4, &Config::bipart(2));
+        assert!(rb.levels >= 1, "rb levels not populated");
     }
 }

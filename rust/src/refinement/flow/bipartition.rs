@@ -18,6 +18,7 @@
 //!    piercing, skipping flow computation) is kept behind
 //!    `term_check_before_piercing = false` for demonstration.
 
+use super::super::BufferPool;
 use super::dinic::{INF, SINK, SOURCE};
 use super::lawler::{build_network, LawlerNetwork};
 use super::region::{grow_region, Region};
@@ -35,6 +36,8 @@ pub struct PairResult {
 }
 
 /// Refine the bipartition between blocks `b0` and `b1` in place.
+/// Allocates its own scratch — the k-way scheduler's concurrent pair
+/// refinements share a [`BufferPool`] via [`refine_pair_in`].
 pub fn refine_pair(
     p: &PartitionedHypergraph,
     b0: BlockId,
@@ -42,6 +45,22 @@ pub fn refine_pair(
     eps: f64,
     cfg: &FlowConfig,
     seed: u64,
+) -> PairResult {
+    refine_pair_in(p, b0, b1, eps, cfg, seed, &BufferPool::new())
+}
+
+/// [`refine_pair`] taking terminal-membership scratch from a shared
+/// buffer pool (safe from parallel callers — the pool only recycles
+/// allocations, all state is re-initialized here).
+#[allow(clippy::too_many_arguments)]
+pub fn refine_pair_in(
+    p: &PartitionedHypergraph,
+    b0: BlockId,
+    b1: BlockId,
+    eps: f64,
+    cfg: &FlowConfig,
+    seed: u64,
+    pool: &BufferPool<Vec<bool>>,
 ) -> PairResult {
     let hg = p.hypergraph();
     let lmax = p.max_block_weight(eps);
@@ -59,8 +78,12 @@ pub fn refine_pair(
     let mut lw = build_network(p, &region);
     let nr = region.vertices.len();
     // Terminal membership of region vertices (grows by piercing).
-    let mut in_s = vec![false; nr];
-    let mut in_t = vec![false; nr];
+    let mut in_s = pool.take();
+    in_s.clear();
+    in_s.resize(nr, false);
+    let mut in_t = pool.take();
+    in_t.clear();
+    in_t.resize(nr, false);
 
     let mut accepted: Option<(Vec<bool>, Weight)> = None; // (side0 flags, cut)
     let max_iters = 4 * nr + 16;
@@ -168,19 +191,24 @@ pub fn refine_pair(
         }
     }
 
-    let Some((side0, new_cut)) = accepted else {
-        return PairResult { improved: false, moved_vertices: 0, old_cut, new_cut: old_cut };
-    };
-    // Apply: region vertices whose side changed move blocks.
-    let mut moved = 0usize;
-    for (i, &v) in region.vertices.iter().enumerate() {
-        let target = if side0[i] { b0 } else { b1 };
-        if p.part(v) != target {
-            p.apply_move(v, target);
-            moved += 1;
+    let result = match accepted {
+        None => PairResult { improved: false, moved_vertices: 0, old_cut, new_cut: old_cut },
+        Some((side0, new_cut)) => {
+            // Apply: region vertices whose side changed move blocks.
+            let mut moved = 0usize;
+            for (i, &v) in region.vertices.iter().enumerate() {
+                let target = if side0[i] { b0 } else { b1 };
+                if p.part(v) != target {
+                    p.apply_move(v, target);
+                    moved += 1;
+                }
+            }
+            PairResult { improved: moved > 0, moved_vertices: moved, old_cut, new_cut }
         }
-    }
-    PairResult { improved: moved > 0, moved_vertices: moved, old_cut, new_cut }
+    };
+    pool.put(in_s);
+    pool.put(in_t);
+    result
 }
 
 /// Σ weight of region vertices selected by `f`.

@@ -17,4 +17,4 @@ pub mod lawler;
 pub mod region;
 pub mod scheduler;
 
-pub use scheduler::refine_kway_flows;
+pub use scheduler::{refine_kway_flows, refine_kway_flows_in};

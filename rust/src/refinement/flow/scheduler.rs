@@ -9,19 +9,36 @@
 //! blocks are matched first. Blocks that contributed no improvement in a
 //! round are deactivated (active block scheduling, Sanders & Schulz).
 
-use super::bipartition::refine_pair;
+use super::super::RefinementContext;
+use super::bipartition::refine_pair_in;
 use crate::config::FlowConfig;
 use crate::datastructures::{PartitionedHypergraph, QuotientGraph};
 use crate::util::rng::hash64;
 use crate::{BlockId, Weight};
 
 /// Run k-way flow refinement; returns the total objective improvement.
+/// Allocates a throwaway scratch arena — the partitioner uses
+/// [`refine_kway_flows_in`] with the cross-level one.
 pub fn refine_kway_flows(
     p: &PartitionedHypergraph,
     eps: f64,
     cfg: &FlowConfig,
     seed: u64,
 ) -> Weight {
+    let mut ctx = RefinementContext::new(p.k(), p.hypergraph().num_vertices());
+    refine_kway_flows_in(p, eps, cfg, seed, &mut ctx)
+}
+
+/// [`refine_kway_flows`] drawing the shared pair-refinement buffer pool
+/// from the caller's [`RefinementContext`].
+pub fn refine_kway_flows_in(
+    p: &PartitionedHypergraph,
+    eps: f64,
+    cfg: &FlowConfig,
+    seed: u64,
+    ctx: &mut RefinementContext,
+) -> Weight {
+    let pool = &ctx.flow_bools;
     let k = p.k();
     if k < 2 {
         return 0;
@@ -70,13 +87,14 @@ pub fn refine_kway_flows(
             // results are per-pair deterministic, synchronize after.
             let results: Vec<bool> = crate::par::map_indexed(matching.len(), |m| {
                 let (i, j) = matching[m];
-                let r = refine_pair(
+                let r = refine_pair_in(
                     p,
                     i,
                     j,
                     eps,
                     cfg,
                     hash64(seed, (round as u64) << 32 | (i as u64) << 16 | j as u64),
+                    pool,
                 );
                 r.improved
             });

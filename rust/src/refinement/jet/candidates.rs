@@ -21,7 +21,7 @@
 //!   [`crate::runtime`]). Tiles use f32; all quantities in scope are
 //!   integers far below 2^24, so f32 arithmetic is exact.
 
-use super::super::MoveCandidate;
+use super::super::{MoveCandidate, RefinementContext};
 use crate::datastructures::{AffinityBuffer, PartitionedHypergraph};
 use crate::util::Bitset;
 use crate::{BlockId, VertexId, Weight};
@@ -104,16 +104,35 @@ impl TileSelector for NativeTileSelector {
 /// `locked` marks vertices excluded this iteration (moved last iteration).
 /// With `selector = None`, the exact i64 native path is used; otherwise
 /// affinities are marshaled into `TILE_ROWS × k` tiles and dispatched to
-/// the given backend.
+/// the given backend. Allocates a throwaway scratch arena — the Jet
+/// driver loop uses [`collect_candidates_in`] with its level-shared one.
 pub fn collect_candidates(
     p: &PartitionedHypergraph,
     locked: &Bitset,
     tau: f64,
     selector: Option<&dyn TileSelector>,
 ) -> Vec<MoveCandidate> {
+    let mut ctx = RefinementContext::new(p.k(), p.hypergraph().num_vertices());
+    let mut out = Vec::new();
+    collect_candidates_in(p, locked, tau, selector, &mut ctx, &mut out);
+    out
+}
+
+/// [`collect_candidates`] writing into `out` and drawing all scratch
+/// (boundary marks, per-worker affinity buffers, per-chunk vectors) from
+/// the caller's [`RefinementContext`].
+pub fn collect_candidates_in(
+    p: &PartitionedHypergraph,
+    locked: &Bitset,
+    tau: f64,
+    selector: Option<&dyn TileSelector>,
+    ctx: &mut RefinementContext,
+    out: &mut Vec<MoveCandidate>,
+) {
+    out.clear();
     match selector {
-        None => collect_native(p, locked, tau),
-        Some(s) => collect_tiled(p, locked, tau, s),
+        None => collect_native(p, locked, tau, ctx, out),
+        Some(s) => out.extend(collect_tiled(p, locked, tau, s)),
     }
 }
 
@@ -121,32 +140,32 @@ fn collect_native(
     p: &PartitionedHypergraph,
     locked: &Bitset,
     tau: f64,
-) -> Vec<MoveCandidate> {
+    ctx: &mut RefinementContext,
+    out: &mut Vec<MoveCandidate>,
+) {
     // Perf: only boundary vertices can have a non-empty affinity row
     // (an interior vertex's incident edges are all single-block), so the
     // scan is restricted to them — semantically identical, and far
     // cheaper once the partition tightens (see EXPERIMENTS.md §Perf).
-    let boundary = crate::refinement::boundary_vertices(p);
+    let boundary = crate::refinement::boundary_vertices_in(p, ctx.vertex_marks());
     let nt = crate::par::num_threads().max(1);
     let ranges = crate::par::pool::chunk_ranges(boundary.len(), nt);
-    let mut outs: Vec<Vec<MoveCandidate>> = Vec::new();
-    for _ in 0..ranges.len() {
-        outs.push(Vec::new());
-    }
+    let n_chunks = ranges.len();
+    let (bufs, chunk_outs) = ctx.scan_scratch(n_chunks);
     {
         let boundary = &boundary;
-        let slots: Vec<_> = outs.iter_mut().zip(ranges).collect();
+        let slots: Vec<_> =
+            chunk_outs.iter_mut().zip(bufs.iter_mut()).zip(ranges).collect();
         std::thread::scope(|s| {
-            for (slot, range) in slots {
+            for ((slot, buf), range) in slots {
                 s.spawn(move || {
-                    let mut buf = AffinityBuffer::new(p.k());
                     for i in range {
                         let v = boundary[i];
                         if locked.get(v as usize) {
                             continue;
                         }
                         buf.reset();
-                        let (w_total, benefit, internal) = p.collect_affinities(v, &mut buf);
+                        let (w_total, benefit, internal) = p.collect_affinities(v, buf);
                         let leave_cost = w_total - benefit;
                         // First maximum over ascending block id == kernel
                         // argmax semantics.
@@ -172,7 +191,10 @@ fn collect_native(
             }
         });
     }
-    outs.into_iter().flatten().collect()
+    // Concatenate in chunk order → deterministic.
+    for c in chunk_outs.iter_mut() {
+        out.append(c);
+    }
 }
 
 /// Tile-based path: same outputs, dispatched through a [`TileSelector`].

@@ -7,17 +7,27 @@
 //! balanced partition observed. A run of a temperature ends after
 //! `max_iterations_without_improvement` non-improving iterations.
 //!
+//! Bookkeeping is fully incremental: `km1()` reads the attributed O(1)
+//! counter, and "rollback to the incumbent" is the partition state's move
+//! journal (`commit_journal` on improvement, `revert_journal` to land on
+//! the incumbent) — the inner loop performs no O(E) objective reduces
+//! and no O(n) snapshots. The journal has a single baseline shared by the
+//! temperature loop and the per-temperature loop; this nests correctly
+//! because an inner commit is always a state the outer loop accepts too
+//! (strictly better than the incumbent it started from) — see
+//! DESIGN.md §2.
+//!
 //! The `asynchronous` flag switches to the simulated non-deterministic
 //! mode (Mt-KaHyPar-Default stand-in): moves apply immediately in a
 //! seed-shuffled order — same gain machinery, racy semantics.
 
 use super::afterburner::afterburner;
-use super::candidates::{collect_candidates, TileSelector};
-use super::rebalance::rebalance_with_priority;
+use super::candidates::{collect_candidates_in, TileSelector};
+use super::rebalance::rebalance_with_priority_in;
+use super::super::RefinementContext;
 use crate::config::JetConfig;
-use crate::datastructures::{AffinityBuffer, PartitionedHypergraph};
+use crate::datastructures::PartitionedHypergraph;
 use crate::util::rng::hash64;
-use crate::util::Bitset;
 use crate::{BlockId, VertexId, Weight};
 
 /// Outcome of a Jet refinement run.
@@ -29,7 +39,7 @@ pub struct JetStats {
     pub balanced: bool,
 }
 
-/// Acceptance predicate for "best" snapshots: ε-balanced and no block
+/// Acceptance predicate for "best" states: ε-balanced and no block
 /// drained empty (unconstrained moves can empty small blocks at large k;
 /// an empty block is legal under the balance constraint but useless to a
 /// downstream consumer, so we never *return* one).
@@ -39,6 +49,8 @@ fn acceptable(p: &PartitionedHypergraph, eps: f64) -> bool {
 
 /// Run deterministic Jet refinement in-place. `selector` optionally
 /// routes the dense candidate selection through the XLA backend.
+/// Allocates a throwaway scratch arena — the partitioner uses
+/// [`refine_jet_in`] with the cross-level one.
 pub fn refine_jet(
     p: &PartitionedHypergraph,
     eps: f64,
@@ -46,35 +58,47 @@ pub fn refine_jet(
     seed: u64,
     selector: Option<&dyn TileSelector>,
 ) -> JetStats {
+    let mut ctx = RefinementContext::new(p.k(), p.hypergraph().num_vertices());
+    refine_jet_in(p, eps, cfg, seed, selector, &mut ctx)
+}
+
+/// [`refine_jet`] drawing all scratch from the caller's
+/// [`RefinementContext`].
+pub fn refine_jet_in(
+    p: &PartitionedHypergraph,
+    eps: f64,
+    cfg: &JetConfig,
+    seed: u64,
+    selector: Option<&dyn TileSelector>,
+    ctx: &mut RefinementContext,
+) -> JetStats {
     let mut stats = JetStats {
         initial_km1: p.km1(),
         ..Default::default()
     };
     // Repair balance first if the projected partition is over.
     if !p.is_balanced(eps) {
-        rebalance_with_priority(p, eps, cfg.deadzone, 100, cfg.weight_aware_rebalance);
+        rebalance_with_priority_in(p, eps, cfg.deadzone, 100, cfg.weight_aware_rebalance, ctx);
     }
-    let mut best_snapshot = p.snapshot();
+    // The (possibly repaired) entry state is the rollback baseline.
+    p.commit_journal();
     let mut best_km1 = if acceptable(p, eps) { p.km1() } else { Weight::MAX };
 
     for (ti, &tau) in cfg.temperatures.iter().enumerate() {
-        let tau_seed = hash64(seed, ti as u64);
         if cfg.asynchronous {
-            run_async_temperature(p, eps, cfg, tau, tau_seed, &mut stats);
+            let tau_seed = hash64(seed, ti as u64);
+            run_async_temperature(p, eps, cfg, tau, tau_seed, &mut stats, ctx);
         } else {
-            run_temperature(p, eps, cfg, tau, tau_seed, selector, &mut stats);
+            run_temperature(p, eps, cfg, tau, selector, &mut stats, ctx);
         }
-        // Track the best balanced partition across temperatures.
+        // Track the best acceptable partition across temperatures: commit
+        // improvements, revert everything else to the incumbent.
         if acceptable(p, eps) && p.km1() < best_km1 {
             best_km1 = p.km1();
-            best_snapshot = p.snapshot();
+            p.commit_journal();
         } else {
-            p.rollback_to(&best_snapshot);
+            p.revert_journal();
         }
-    }
-    if best_km1 < Weight::MAX {
-        // Land on the incumbent.
-        p.rollback_to(&best_snapshot);
     }
     stats.final_km1 = p.km1();
     stats.balanced = p.is_balanced(eps);
@@ -86,20 +110,22 @@ fn run_temperature(
     eps: f64,
     cfg: &JetConfig,
     tau: f64,
-    seed: u64,
     selector: Option<&dyn TileSelector>,
     stats: &mut JetStats,
+    ctx: &mut RefinementContext,
 ) {
     let n = p.hypergraph().num_vertices();
-    let mut locked = Bitset::new(n);
-    let mut best_snapshot = p.snapshot();
+    let mut locked = std::mem::take(&mut ctx.locked);
+    locked.reset(n);
+    let mut candidates = std::mem::take(&mut ctx.candidates);
+    // Entry state == the journal baseline (the caller committed/reverted
+    // right before); commits below advance it only on strict improvement.
     let mut best_km1 = if acceptable(p, eps) { p.km1() } else { Weight::MAX };
     let mut no_improve = 0usize;
-    let _ = seed;
 
     for _iter in 0..cfg.max_iterations {
         stats.iterations += 1;
-        let candidates = collect_candidates(p, &locked, tau, selector);
+        collect_candidates_in(p, &locked, tau, selector, ctx, &mut candidates);
         let moves = if cfg.use_afterburner {
             afterburner(p, &candidates)
         } else {
@@ -119,13 +145,20 @@ fn run_temperature(
         }
         // Repair balance.
         if !p.is_balanced(eps) {
-            rebalance_with_priority(p, eps, cfg.deadzone, 100, cfg.weight_aware_rebalance);
+            rebalance_with_priority_in(
+                p,
+                eps,
+                cfg.deadzone,
+                100,
+                cfg.weight_aware_rebalance,
+                ctx,
+            );
         }
-        // Bookkeeping: improvement = strictly better balanced solution.
+        // Bookkeeping: improvement = strictly better acceptable solution.
         let cur = p.km1();
         if acceptable(p, eps) && cur < best_km1 {
             best_km1 = cur;
-            best_snapshot = p.snapshot();
+            p.commit_journal();
             no_improve = 0;
         } else {
             no_improve += 1;
@@ -135,8 +168,13 @@ fn run_temperature(
         }
     }
     if best_km1 < Weight::MAX {
-        p.rollback_to(&best_snapshot);
+        // Land on the best committed state of this temperature (or the
+        // entry state if nothing improved). If nothing was acceptable,
+        // keep the current state — the caller's revert handles it.
+        p.revert_journal();
     }
+    ctx.locked = locked;
+    ctx.candidates = candidates;
 }
 
 /// Simulated non-deterministic mode: asynchronous greedy execution in a
@@ -150,10 +188,10 @@ fn run_async_temperature(
     tau: f64,
     seed: u64,
     stats: &mut JetStats,
+    ctx: &mut RefinementContext,
 ) {
     let n = p.hypergraph().num_vertices();
     let lmax = p.max_block_weight(eps);
-    let mut best_snapshot = p.snapshot();
     let mut best_km1 = if acceptable(p, eps) { p.km1() } else { Weight::MAX };
     let mut no_improve = 0usize;
 
@@ -161,11 +199,12 @@ fn run_async_temperature(
         stats.iterations += 1;
         let mut order: Vec<VertexId> = (0..n as VertexId).collect();
         order.sort_unstable_by_key(|&v| (hash64(seed ^ iter as u64, v as u64), v));
-        let mut buf = AffinityBuffer::new(p.k());
+        let bufs = ctx.affinity_buffers(1);
+        let buf = &mut bufs[0];
         let mut moved = 0usize;
         for &v in &order {
             buf.reset();
-            let (w_total, benefit, internal) = p.collect_affinities(v, &mut buf);
+            let (w_total, benefit, internal) = p.collect_affinities(v, buf);
             let leave_cost = w_total - benefit;
             let mut best: Option<(Weight, BlockId)> = None;
             for &b in buf.touched() {
@@ -185,12 +224,19 @@ fn run_async_temperature(
             }
         }
         if !p.is_balanced(eps) {
-            rebalance_with_priority(p, eps, cfg.deadzone, 100, cfg.weight_aware_rebalance);
+            rebalance_with_priority_in(
+                p,
+                eps,
+                cfg.deadzone,
+                100,
+                cfg.weight_aware_rebalance,
+                ctx,
+            );
         }
         let cur = p.km1();
         if acceptable(p, eps) && cur < best_km1 {
             best_km1 = cur;
-            best_snapshot = p.snapshot();
+            p.commit_journal();
             no_improve = 0;
         } else {
             no_improve += 1;
@@ -203,7 +249,7 @@ fn run_async_temperature(
         }
     }
     if best_km1 < Weight::MAX {
-        p.rollback_to(&best_snapshot);
+        p.revert_journal();
     }
 }
 
@@ -281,6 +327,24 @@ mod tests {
         let stats = refine_jet(&p, 0.03, &JetConfig::default(), 5, None);
         outs.push((p.snapshot(), stats.final_km1));
         assert!(outs.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn shared_context_matches_throwaway_context() {
+        // refine_jet_in with a reused arena must be bit-identical to the
+        // self-contained wrapper (cross-level reuse cannot leak state).
+        let h = crate::gen::vlsi_netlist(20, 1.2, 9);
+        let n = h.num_vertices();
+        let p1 = PartitionedHypergraph::new(&h, 4, bad_partition(n, 4));
+        let s1 = refine_jet(&p1, 0.03, &JetConfig::default(), 5, None);
+        let mut ctx = RefinementContext::new(4, n);
+        let p2 = PartitionedHypergraph::new(&h, 4, bad_partition(n, 4));
+        // Dirty the arena with an unrelated run first.
+        refine_jet_in(&p2, 0.03, &JetConfig::default(), 5, None, &mut ctx);
+        let p3 = PartitionedHypergraph::new(&h, 4, bad_partition(n, 4));
+        let s3 = refine_jet_in(&p3, 0.03, &JetConfig::default(), 5, None, &mut ctx);
+        assert_eq!(p1.snapshot(), p3.snapshot());
+        assert_eq!(s1.final_km1, s3.final_km1);
     }
 
     #[test]

@@ -8,4 +8,4 @@ pub mod candidates;
 pub mod rebalance;
 
 mod driver;
-pub use driver::{refine_jet, JetStats};
+pub use driver::{refine_jet, refine_jet_in, JetStats};

@@ -14,7 +14,8 @@
 //!   blocks from being refilled (targets inside it are ineligible);
 //! * vertices with `c(v) > 3/2·(c(V_b) − ⌈c(V)/k⌉)` are never moved.
 
-use crate::datastructures::{AffinityBuffer, PartitionedHypergraph};
+use super::super::RefinementContext;
+use crate::datastructures::PartitionedHypergraph;
 use crate::{BlockId, VertexId, Weight};
 use std::cmp::Ordering;
 
@@ -65,7 +66,8 @@ pub fn rebalance(p: &PartitionedHypergraph, eps: f64, deadzone_d: f64, max_round
 }
 
 /// Like [`rebalance`], with the weight-aware priority as an ablation
-/// knob (`false` = Jet's original plain-gain priority).
+/// knob (`false` = Jet's original plain-gain priority). Allocates a
+/// throwaway scratch arena — hot paths use [`rebalance_with_priority_in`].
 pub fn rebalance_with_priority(
     p: &PartitionedHypergraph,
     eps: f64,
@@ -73,10 +75,26 @@ pub fn rebalance_with_priority(
     max_rounds: usize,
     weight_aware: bool,
 ) -> bool {
+    let mut ctx = RefinementContext::new(p.k(), p.hypergraph().num_vertices());
+    rebalance_with_priority_in(p, eps, deadzone_d, max_rounds, weight_aware, &mut ctx)
+}
+
+/// [`rebalance_with_priority`] drawing the per-worker affinity buffers
+/// from the caller's [`RefinementContext`].
+pub fn rebalance_with_priority_in(
+    p: &PartitionedHypergraph,
+    eps: f64,
+    deadzone_d: f64,
+    max_rounds: usize,
+    weight_aware: bool,
+    ctx: &mut RefinementContext,
+) -> bool {
     let k = p.k();
     let lmax = p.max_block_weight(eps);
     let avg = p.avg_block_weight();
     let dz = (deadzone_d * eps * avg as f64).ceil() as Weight;
+    // Per-chunk collection scratch, reused across blocks and rounds.
+    let mut chunk_moves: Vec<Vec<RebalanceMove>> = Vec::new();
 
     for _round in 0..max_rounds {
         let weights = p.block_weights();
@@ -92,7 +110,7 @@ pub fn rebalance_with_priority(
             if shed_target <= 0 {
                 continue; // an earlier shed this round may have landed here
             }
-            let moves = collect_block_moves(p, b, lmax, dz, avg);
+            let moves = collect_block_moves(p, b, lmax, dz, avg, ctx, &mut chunk_moves);
             if moves.is_empty() {
                 continue;
             }
@@ -140,12 +158,15 @@ pub fn rebalance_with_priority(
 /// All movable vertices of overloaded block `b` with their preferred
 /// eligible target (max gain; untouched eligible blocks count with
 /// affinity 0; deterministic lowest-id tie-break).
+#[allow(clippy::too_many_arguments)]
 fn collect_block_moves(
     p: &PartitionedHypergraph,
     b: BlockId,
     lmax: Weight,
     dz: Weight,
     avg: Weight,
+    ctx: &mut RefinementContext,
+    chunk_moves: &mut Vec<Vec<RebalanceMove>>,
 ) -> Vec<RebalanceMove> {
     let hg = p.hypergraph();
     let n = hg.num_vertices();
@@ -155,17 +176,20 @@ fn collect_block_moves(
 
     let nt = crate::par::num_threads().max(1);
     let ranges = crate::par::pool::chunk_ranges(n, nt);
-    let mut outs: Vec<Vec<RebalanceMove>> = Vec::new();
-    for _ in 0..ranges.len() {
-        outs.push(Vec::new());
+    let bufs = ctx.affinity_buffers(ranges.len());
+    while chunk_moves.len() < ranges.len() {
+        chunk_moves.push(Vec::new());
+    }
+    let outs = &mut chunk_moves[..ranges.len()];
+    for o in outs.iter_mut() {
+        o.clear();
     }
     {
-        let slots: Vec<_> = outs.iter_mut().zip(ranges).collect();
+        let slots: Vec<_> = outs.iter_mut().zip(bufs.iter_mut()).zip(ranges).collect();
         let weights = &weights;
         std::thread::scope(|s| {
-            for (slot, range) in slots {
+            for ((slot, buf), range) in slots {
                 s.spawn(move || {
-                    let mut buf = AffinityBuffer::new(k);
                     for v in range {
                         let v = v as VertexId;
                         if p.part(v) != b {
@@ -176,7 +200,7 @@ fn collect_block_moves(
                             continue; // heavy-vertex exclusion
                         }
                         buf.reset();
-                        let (w_total, benefit, _internal) = p.collect_affinities(v, &mut buf);
+                        let (w_total, benefit, _internal) = p.collect_affinities(v, buf);
                         let leave_cost = w_total - benefit;
                         let eligible = |t: BlockId| -> bool {
                             t != b
@@ -213,7 +237,13 @@ fn collect_block_moves(
             }
         });
     }
-    outs.into_iter().flatten().collect()
+    // Concatenate in chunk order → deterministic; chunk vectors stay
+    // allocated for the next block/round.
+    let mut flat = Vec::new();
+    for o in outs.iter_mut() {
+        flat.extend(o.iter().copied());
+    }
+    flat
 }
 
 #[cfg(test)]

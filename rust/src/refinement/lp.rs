@@ -9,30 +9,46 @@
 //! gets stuck in the local minima Jet escapes — exactly the quality gap
 //! the paper quantifies.
 
-use super::{approve_and_apply, boundary_vertices, MoveCandidate};
+use super::{approve_and_apply, boundary_vertices_in, MoveCandidate, RefinementContext};
 use crate::config::LpConfig;
-use crate::datastructures::{AffinityBuffer, PartitionedHypergraph};
+use crate::datastructures::PartitionedHypergraph;
 use crate::{BlockId, Weight};
 
 /// Run LP refinement until convergence or `cfg.max_rounds`. Returns the
 /// total objective improvement (non-negative — worsening rounds are
-/// rolled back).
+/// rolled back). Allocates a throwaway scratch arena — the partitioner
+/// uses [`refine_lp_in`] with the cross-level one.
 pub fn refine_lp(
     p: &PartitionedHypergraph,
     max_block_weights: &[Weight],
     cfg: &LpConfig,
 ) -> Weight {
+    let mut ctx = RefinementContext::new(p.k(), p.hypergraph().num_vertices());
+    refine_lp_in(p, max_block_weights, cfg, &mut ctx)
+}
+
+/// [`refine_lp`] drawing all scratch from the caller's
+/// [`RefinementContext`]. Round rollback uses the partition state's move
+/// journal (commit at the round barrier, revert on a worsened round) —
+/// no O(n) snapshots; `km1()` reads the O(1) attributed counter.
+pub fn refine_lp_in(
+    p: &PartitionedHypergraph,
+    max_block_weights: &[Weight],
+    cfg: &LpConfig,
+    ctx: &mut RefinementContext,
+) -> Weight {
     let mut total_gain = 0;
     let subrounds = cfg.subrounds.max(1) as u64;
     for round in 0..cfg.max_rounds {
         let before = p.km1();
-        let snap = p.snapshot();
+        // This round's rollback baseline.
+        p.commit_journal();
         let mut applied_any = false;
         for sub in 0..subrounds {
             // Hash-scattered subround membership: deterministic and
             // decorrelated from vertex locality, so adjacent vertices
             // rarely move at the same barrier (oscillation guard).
-            let active: Vec<crate::VertexId> = boundary_vertices(p)
+            let active: Vec<crate::VertexId> = boundary_vertices_in(p, ctx.vertex_marks())
                 .into_iter()
                 .filter(|&v| {
                     crate::util::rng::hash64(round as u64, v as u64) % subrounds == sub
@@ -41,7 +57,7 @@ pub fn refine_lp(
             if active.is_empty() {
                 continue;
             }
-            let candidates = collect_positive_candidates(p, &active, max_block_weights);
+            let candidates = collect_positive_candidates(p, &active, max_block_weights, ctx);
             if candidates.is_empty() {
                 continue;
             }
@@ -55,7 +71,7 @@ pub fn refine_lp(
         if after >= before {
             // Synchronous conflicts worsened (or stalled) the objective:
             // revert the round and stop.
-            p.rollback_to(&snap);
+            p.revert_journal();
             break;
         }
         total_gain += before - after;
@@ -69,23 +85,20 @@ fn collect_positive_candidates(
     p: &PartitionedHypergraph,
     active: &[crate::VertexId],
     max_block_weights: &[Weight],
+    ctx: &mut RefinementContext,
 ) -> Vec<MoveCandidate> {
-    let per_chunk: Vec<Vec<MoveCandidate>> = {
+    {
         let nt = crate::par::num_threads().max(1);
         let ranges = crate::par::pool::chunk_ranges(active.len(), nt);
-        let mut outs: Vec<Vec<MoveCandidate>> = Vec::new();
-        for _ in 0..ranges.len() {
-            outs.push(Vec::new());
-        }
-        let slots: Vec<_> = outs.iter_mut().zip(ranges).collect();
+        let (bufs, outs) = ctx.scan_scratch(ranges.len());
+        let slots: Vec<_> = outs.iter_mut().zip(bufs.iter_mut()).zip(ranges).collect();
         std::thread::scope(|s| {
-            for (slot, range) in slots {
+            for ((slot, buf), range) in slots {
                 s.spawn(move || {
-                    let mut buf = AffinityBuffer::new(p.k());
                     for i in range {
                         let v = active[i];
                         buf.reset();
-                        let (w_total, benefit, _internal) = p.collect_affinities(v, &mut buf);
+                        let (w_total, benefit, _internal) = p.collect_affinities(v, buf);
                         let s_block = p.part(v);
                         let leave_cost = w_total - benefit;
                         let mut best: Option<(Weight, BlockId)> = None;
@@ -118,10 +131,13 @@ fn collect_positive_candidates(
                 });
             }
         });
-        outs
-    };
-    // Concatenate in chunk order → deterministic.
-    per_chunk.into_iter().flatten().collect()
+        // Concatenate in chunk order → deterministic.
+        let mut flat = Vec::new();
+        for c in outs.iter_mut() {
+            flat.append(c);
+        }
+        flat
+    }
 }
 
 #[cfg(test)]

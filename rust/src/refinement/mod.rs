@@ -7,16 +7,20 @@
 //!   afterburner + deterministic rebalancing.
 //! * [`flow`] — deterministic flow-based refinement (Section 5).
 //!
-//! Shared infrastructure lives here: boundary-vertex collection and the
-//! deterministic *grouped move approval* that turns a set of racy move
-//! wishes into a schedule-independent applied subset.
+//! Shared infrastructure lives here: the [`RefinementContext`] scratch
+//! arena threaded through every refiner, boundary-vertex collection and
+//! the deterministic *grouped move approval* that turns a set of racy
+//! move wishes into a schedule-independent applied subset.
 
 pub mod jet;
 pub mod lp;
 pub mod flow;
 
-use crate::datastructures::PartitionedHypergraph;
+use crate::datastructures::{AffinityBuffer, PartitionScratch, PartitionedHypergraph};
+use crate::util::bitset::AtomicBitset;
+use crate::util::Bitset;
 use crate::{BlockId, VertexId, Weight};
+use std::sync::Mutex;
 
 /// A proposed vertex move with its (precomputed) gain.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -26,11 +30,145 @@ pub struct MoveCandidate {
     pub gain: Weight,
 }
 
+/// Shared pool of reusable buffers for *parallel* consumers (the flow
+/// scheduler's concurrent pair refinements): each worker takes a buffer
+/// and returns it when done. The pool only hands out buffers — all
+/// deterministic state lives elsewhere, so hand-out order is irrelevant.
+pub struct BufferPool<T> {
+    items: Mutex<Vec<T>>,
+}
+
+impl<T: Default> BufferPool<T> {
+    pub fn new() -> Self {
+        BufferPool { items: Mutex::new(Vec::new()) }
+    }
+
+    pub fn take(&self) -> T {
+        self.items.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    pub fn put(&self, item: T) {
+        self.items.lock().unwrap().push(item);
+    }
+}
+
+impl<T: Default> Default for BufferPool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Scratch arena for one `(k, |V|)` refinement campaign, owned by the
+/// partitioner's uncoarsening driver and threaded through every refiner,
+/// so all levels reuse allocations instead of reallocating per level:
+/// per-worker affinity buffers, per-chunk candidate vectors, Jet's
+/// oscillation-lock bitset, the boundary-collection mark bitset, the
+/// partition-state backing buffers, and the flow buffer pool.
+pub struct RefinementContext {
+    k: usize,
+    /// Per-worker dense affinity scratch.
+    affinity: Vec<AffinityBuffer>,
+    /// Per-chunk candidate output vectors for parallel scans.
+    chunk_candidates: Vec<Vec<MoveCandidate>>,
+    /// Jet's oscillation-lock bitset (take with `mem::take`, put back).
+    pub locked: Bitset,
+    /// Reusable candidate vector for the Jet driver loop.
+    pub candidates: Vec<MoveCandidate>,
+    /// Mark bitset reused by boundary-vertex collection.
+    vertex_marks: AtomicBitset,
+    /// Reusable backing buffers for the per-level partition state.
+    partition_scratch: Option<PartitionScratch>,
+    /// Buffer pool for the parallel two-way flow refinements.
+    pub flow_bools: BufferPool<Vec<bool>>,
+}
+
+impl RefinementContext {
+    pub fn new(k: usize, max_vertices: usize) -> Self {
+        RefinementContext {
+            k,
+            affinity: Vec::new(),
+            chunk_candidates: Vec::new(),
+            locked: Bitset::new(max_vertices),
+            candidates: Vec::new(),
+            vertex_marks: AtomicBitset::new(max_vertices),
+            partition_scratch: Some(PartitionScratch::default()),
+            flow_bools: BufferPool::new(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// At least `parts` reset per-worker affinity buffers (k blocks each).
+    pub fn affinity_buffers(&mut self, parts: usize) -> &mut [AffinityBuffer] {
+        while self.affinity.len() < parts {
+            self.affinity.push(AffinityBuffer::new(self.k));
+        }
+        for b in self.affinity[..parts].iter_mut() {
+            b.reset();
+        }
+        &mut self.affinity[..parts]
+    }
+
+    /// Disjoint per-worker scratch for candidate scans: `parts` reset
+    /// affinity buffers plus `parts` cleared candidate output vectors.
+    pub fn scan_scratch(
+        &mut self,
+        parts: usize,
+    ) -> (&mut [AffinityBuffer], &mut [Vec<MoveCandidate>]) {
+        while self.affinity.len() < parts {
+            self.affinity.push(AffinityBuffer::new(self.k));
+        }
+        while self.chunk_candidates.len() < parts {
+            self.chunk_candidates.push(Vec::new());
+        }
+        for b in self.affinity[..parts].iter_mut() {
+            b.reset();
+        }
+        for c in self.chunk_candidates[..parts].iter_mut() {
+            c.clear();
+        }
+        (&mut self.affinity[..parts], &mut self.chunk_candidates[..parts])
+    }
+
+    /// The boundary-collection mark bitset.
+    pub fn vertex_marks(&mut self) -> &mut AtomicBitset {
+        &mut self.vertex_marks
+    }
+
+    /// Take the partition-state backing buffers (return them with
+    /// [`put_partition_scratch`](Self::put_partition_scratch)).
+    pub fn take_partition_scratch(&mut self) -> PartitionScratch {
+        self.partition_scratch.take().unwrap_or_default()
+    }
+
+    pub fn put_partition_scratch(&mut self, s: PartitionScratch) {
+        self.partition_scratch = Some(s);
+    }
+}
+
 /// Collect all boundary vertices (incident to at least one cut edge), in
-/// increasing id order — deterministic by construction.
+/// increasing id order — deterministic by construction. Allocates its
+/// mark bitset; hot paths use [`boundary_vertices_in`].
 pub fn boundary_vertices(p: &PartitionedHypergraph) -> Vec<VertexId> {
+    let mut marks = AtomicBitset::new(p.hypergraph().num_vertices());
+    boundary_vertices_in(p, &mut marks)
+}
+
+/// [`boundary_vertices`] with a caller-provided mark bitset (reused
+/// across rounds/levels via [`RefinementContext`]). Fully parallel: the
+/// mark phase is the usual atomic mark-once sweep; the collection phase
+/// counts marks per chunk, `exclusive_prefix_sum`s the counts and writes
+/// each chunk at its offset — deterministic by chunk order.
+pub fn boundary_vertices_in(
+    p: &PartitionedHypergraph,
+    marks: &mut AtomicBitset,
+) -> Vec<VertexId> {
     let hg = p.hypergraph();
-    let marks = crate::util::bitset::AtomicBitset::new(hg.num_vertices());
+    let n = hg.num_vertices();
+    marks.reset(n);
+    let marks = &*marks;
     crate::par::for_each_chunk(hg.num_edges(), |_c, r| {
         for e in r {
             if p.is_cut_edge(e as crate::EdgeId) {
@@ -40,11 +178,46 @@ pub fn boundary_vertices(p: &PartitionedHypergraph) -> Vec<VertexId> {
             }
         }
     });
-    let mut out = Vec::new();
-    for v in 0..hg.num_vertices() {
-        if marks.get(v) {
-            out.push(v as VertexId);
+    let nt = crate::par::num_threads().max(1);
+    let ranges = crate::par::pool::chunk_ranges(n, nt);
+    let counts: Vec<i64> = crate::par::map_indexed(ranges.len(), |ci| {
+        let mut c = 0i64;
+        for v in ranges[ci].clone() {
+            if marks.get(v) {
+                c += 1;
+            }
         }
+        c
+    });
+    let (prefix, total) = crate::par::exclusive_prefix_sum(&counts);
+    let mut out: Vec<VertexId> = Vec::with_capacity(total as usize);
+    // SAFETY: every slot is written exactly once below before use — chunk
+    // `ci` fills `out[prefix[ci] .. prefix[ci] + counts[ci]]`.
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        out.set_len(total as usize);
+    }
+    {
+        struct Ptr(*mut VertexId);
+        unsafe impl Sync for Ptr {}
+        let ptr = Ptr(out.as_mut_ptr());
+        let pref = &ptr;
+        let ranges = &ranges;
+        let prefix = &prefix;
+        crate::par::for_each_chunk(ranges.len(), move |_c, r| {
+            for ci in r {
+                let mut at = prefix[ci] as usize;
+                for v in ranges[ci].clone() {
+                    if marks.get(v) {
+                        // SAFETY: disjoint destination ranges per chunk.
+                        unsafe {
+                            std::ptr::write(pref.0.add(at), v as VertexId);
+                        }
+                        at += 1;
+                    }
+                }
+            }
+        });
     }
     out
 }
@@ -96,6 +269,40 @@ mod tests {
         let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 1, 1, 1]);
         // Only edge {1,2} is cut → boundary = {1, 2}.
         assert_eq!(boundary_vertices(&p), vec![1, 2]);
+    }
+
+    #[test]
+    fn boundary_collection_parallel_matches_serial_reference() {
+        let h = crate::gen::sat_hypergraph(600, 1800, 8, 17);
+        let part: Vec<u32> = (0..600).map(|v| (v % 5) as u32).collect();
+        let mut outs = Vec::new();
+        for nt in [1usize, 2, 4, 8] {
+            crate::par::with_num_threads(nt, || {
+                let p = PartitionedHypergraph::new(&h, 5, part.clone());
+                let b = boundary_vertices(&p);
+                // Serial reference: increasing-id scan.
+                let mut expect = Vec::new();
+                for v in 0..600u32 {
+                    if h.incident_edges(v).iter().any(|&e| p.is_cut_edge(e)) {
+                        expect.push(v);
+                    }
+                }
+                assert_eq!(b, expect);
+                outs.push(b);
+            });
+        }
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn buffer_pool_recycles() {
+        let pool: BufferPool<Vec<bool>> = BufferPool::new();
+        let mut a = pool.take();
+        a.resize(10, true);
+        pool.put(a);
+        let b = pool.take();
+        assert_eq!(b.len(), 10); // recycled, caller re-initializes
+        assert!(pool.take().is_empty()); // pool empty → fresh default
     }
 
     #[test]

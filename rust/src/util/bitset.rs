@@ -48,6 +48,13 @@ impl Bitset {
         self.words.fill(0);
     }
 
+    /// Clear and resize to `len` bits, reusing the word buffer.
+    pub fn reset(&mut self, len: usize) {
+        self.words.fill(0);
+        self.words.resize(len.div_ceil(64), 0);
+        self.len = len;
+    }
+
     /// Number of set bits.
     pub fn count(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
@@ -115,6 +122,15 @@ impl AtomicBitset {
         for w in &self.words {
             w.store(0, Ordering::Relaxed);
         }
+    }
+
+    /// Clear and resize to `len` bits, reusing the word buffer.
+    pub fn reset(&mut self, len: usize) {
+        for w in &mut self.words {
+            *w.get_mut() = 0;
+        }
+        self.words.resize_with(len.div_ceil(64), || AtomicU64::new(0));
+        self.len = len;
     }
 }
 

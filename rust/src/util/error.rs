@@ -1,0 +1,93 @@
+//! Minimal std-only error plumbing — the crate builds with **zero
+//! external dependencies**, so this stands in for the `anyhow` surface
+//! the IO/CLI layers use: a boxed dynamic [`Error`], a [`Context`]
+//! extension for `Result`/`Option`, and the [`err!`](crate::err) /
+//! [`bail!`](crate::bail) / [`ensure!`](crate::ensure) macros.
+
+use std::fmt::Display;
+
+/// Boxed dynamic error.
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Crate-wide result type for fallible IO/CLI paths.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors / missing values, `anyhow::Context`-style.
+pub trait Context<T> {
+    fn context(self, msg: impl Display) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Display) -> Result<T> {
+        self.map_err(|e| Error::from(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::from(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Display) -> Result<T> {
+        self.ok_or_else(|| Error::from(msg.to_string()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::from(f()))
+    }
+}
+
+/// Format arguments into an [`Error`] (the `anyhow!` stand-in).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => { $crate::util::error::Error::from(format!($($arg)*)) };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::err!($($arg)*)) };
+}
+
+/// Bail unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse().context("bad number")?;
+        ensure!(v < 100, "{v} out of range");
+        Ok(v)
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").unwrap_err().to_string().starts_with("bad number"));
+        assert!(parse("200").unwrap_err().to_string().contains("out of range"));
+        let missing: Option<u32> = None;
+        let e = missing.with_context(|| "nothing here".to_string()).unwrap_err();
+        assert_eq!(e.to_string(), "nothing here");
+        let some = Some(3).context("unused").unwrap();
+        assert_eq!(some, 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io_path() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io_path().is_err());
+    }
+}

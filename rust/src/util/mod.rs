@@ -4,11 +4,13 @@
 //! determinism substrate: all randomness in the partitioner flows through
 //! [`rng`], which is seeded and scheduling-independent.
 
+pub mod error;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 pub mod bitset;
 
 pub use bitset::Bitset;
+pub use error::{Context, Error, Result};
 pub use rng::Rng;
 pub use timer::Timer;

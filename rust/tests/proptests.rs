@@ -43,6 +43,65 @@ fn prop_incremental_state_survives_random_move_batches() {
 }
 
 #[test]
+fn prop_journal_and_incremental_km1_match_snapshot_oracle() {
+    // The incremental-engine property: random parallel move batches
+    // followed by journal commits/reverts, across 1/2/4 threads, must
+    // bit-match (a) the from-scratch validate() recompute (packed pin
+    // counts vs dense recount + attributed km1 vs O(E) reduce) and
+    // (b) an O(n) snapshot oracle for the journal-restored state.
+    for_random_instances(1111, 15, &P, |seed, hg, rng| {
+        let k = rng.next_in(2, 9) as usize;
+        let n = hg.num_vertices();
+        let part = random_partition(rng, n, k);
+        // Pre-draw all batches so every thread count replays them.
+        let batches: Vec<Vec<(u32, u32)>> = (0..4)
+            .map(|b| {
+                (0..n as u32)
+                    .filter(|&v| detpart::util::rng::hash64(seed ^ b, v as u64) % 3 == 0)
+                    .map(|v| {
+                        (v, (detpart::util::rng::hash64(seed ^ (b + 7), v as u64) % k as u64) as u32)
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut outs = Vec::new();
+        for nt in [1usize, 2, 4] {
+            detpart::par::with_num_threads(nt, || {
+                let p = PartitionedHypergraph::new(hg, k, part.clone());
+                let base = p.snapshot();
+                let base_km1 = p.km1();
+                // Epoch 1: move, check incremental state, revert.
+                p.apply_moves(&batches[0]);
+                p.apply_moves(&batches[1]);
+                check_partition_state(&p);
+                check_metrics_agree(hg, &p);
+                assert_eq!(p.km1(), p.km1_scratch(), "seed {seed}");
+                p.revert_journal();
+                assert_eq!(p.snapshot(), base, "seed {seed}: journal revert != oracle");
+                assert_eq!(p.km1(), base_km1, "seed {seed}");
+                check_partition_state(&p);
+                // Epoch 2: move, commit, move again, revert to the commit.
+                p.apply_moves(&batches[2]);
+                p.commit_journal();
+                let committed = p.snapshot();
+                let committed_km1 = p.km1();
+                p.apply_moves(&batches[3]);
+                check_partition_state(&p);
+                p.revert_journal();
+                assert_eq!(p.snapshot(), committed, "seed {seed}: commit baseline lost");
+                assert_eq!(p.km1(), committed_km1, "seed {seed}");
+                check_partition_state(&p);
+                outs.push((p.snapshot(), p.km1()));
+            });
+        }
+        assert!(
+            outs.windows(2).all(|w| w[0] == w[1]),
+            "seed {seed}: journal state depends on thread count"
+        );
+    });
+}
+
+#[test]
 fn prop_gain_equals_objective_delta() {
     for_random_instances(202, 25, &P, |_seed, hg, rng| {
         let k = rng.next_in(2, 6) as usize;
