@@ -13,6 +13,136 @@
 
 use detpart::experiments::{figures, ExpCtx};
 
+/// Counting wrapper around the system allocator: lets the contraction
+/// micro report allocations-per-level and live-byte peaks for the old
+/// HashMap path vs the new CSR pipeline.
+mod alloc_counter {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+    pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    pub static CURRENT: AtomicI64 = AtomicI64::new(0);
+    pub static PEAK: AtomicI64 = AtomicI64::new(0);
+    pub static BASELINE: AtomicI64 = AtomicI64::new(0);
+
+    pub struct Counting;
+
+    unsafe impl GlobalAlloc for Counting {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            let cur =
+                CURRENT.fetch_add(layout.size() as i64, Ordering::Relaxed) + layout.size() as i64;
+            PEAK.fetch_max(cur, Ordering::Relaxed);
+            unsafe { System.alloc(layout) }
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            CURRENT.fetch_sub(layout.size() as i64, Ordering::Relaxed);
+            unsafe { System.dealloc(ptr, layout) }
+        }
+    }
+
+    /// Reset the epoch counters (live bytes keep running — the peak is
+    /// rebased and the epoch's starting level saved as the baseline).
+    pub fn reset_epoch() {
+        ALLOCS.store(0, Ordering::Relaxed);
+        let cur = CURRENT.load(Ordering::Relaxed);
+        PEAK.store(cur, Ordering::Relaxed);
+        BASELINE.store(cur, Ordering::Relaxed);
+    }
+
+    pub fn allocs() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+
+    /// Peak live bytes above the epoch baseline (not above the *current*
+    /// level — bytes still retained at read time must not hide the peak).
+    pub fn peak_extra_bytes() -> i64 {
+        (PEAK.load(Ordering::Relaxed) - BASELINE.load(Ordering::Relaxed)).max(0)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: alloc_counter::Counting = alloc_counter::Counting;
+
+/// The PR-2 contraction micro: per level of a real coarsening hierarchy,
+/// wall time + allocation count of the old sequential-merge HashMap path
+/// (`contract_reference`) vs the new CSR pipeline (`contract_in` with a
+/// reused scratch), plus the scratch arena's byte footprint. Emits
+/// `BENCH_contraction.json` next to the bench's working directory so the
+/// perf trajectory is machine-readable.
+fn contraction_micro() {
+    use detpart::coarsening::{
+        cluster_vertices, contract_in, contract_reference, CoarseningScratch,
+    };
+    use detpart::util::Timer;
+
+    println!("== micro: contraction (old HashMap merge vs new CSR pipeline) ==");
+    let cfg = detpart::config::CoarseningConfig::default();
+    let mut scratch = CoarseningScratch::new();
+    let mut current = detpart::gen::vlsi_netlist(100, 1.2, 7);
+    let reps = 3usize;
+    let mut rows: Vec<String> = Vec::new();
+    for level in 0..6u64 {
+        let clusters = cluster_vertices(&current, None, &cfg, 60, level);
+        let (n, e) = (current.num_vertices(), current.num_edges());
+
+        // Old path: per-edge Vec keys through HashMaps, sequential merge.
+        alloc_counter::reset_epoch();
+        let t = Timer::start();
+        for _ in 0..reps {
+            let _ = contract_reference(&current, &clusters);
+        }
+        let old_ms = t.elapsed_s() * 1e3 / reps as f64;
+        let old_allocs = alloc_counter::allocs() / reps as u64;
+
+        // New path: flat CSR pipeline, scratch reused across levels —
+        // level 0 sizes the arenas; levels ≥ 1 are the steady state where
+        // only the outputs allocate.
+        alloc_counter::reset_epoch();
+        let t = Timer::start();
+        let mut out = None;
+        for _ in 0..reps {
+            out = Some(contract_in(&current, &clusters, &mut scratch));
+        }
+        let new_ms = t.elapsed_s() * 1e3 / reps as f64;
+        let new_allocs = alloc_counter::allocs() / reps as u64;
+        let peak = alloc_counter::peak_extra_bytes();
+        let scratch_bytes = scratch.memory_bytes();
+
+        let (coarse, _map) = out.unwrap();
+        println!(
+            "  level {level}: {n} V / {e} E → {} V / {} E | old {old_ms:.3} ms, {old_allocs} allocs | new {new_ms:.3} ms, {new_allocs} allocs ({:.1}x) | scratch {} KiB, peak {} KiB",
+            coarse.num_vertices(),
+            coarse.num_edges(),
+            old_ms / new_ms.max(1e-9),
+            scratch_bytes / 1024,
+            peak / 1024,
+        );
+        rows.push(format!(
+            "{{\"level\":{level},\"vertices\":{n},\"edges\":{e},\"coarse_vertices\":{},\"coarse_edges\":{},\"old_ms\":{old_ms:.4},\"new_ms\":{new_ms:.4},\"old_allocs\":{old_allocs},\"new_allocs\":{new_allocs},\"scratch_bytes\":{scratch_bytes},\"peak_extra_bytes\":{peak}}}",
+            coarse.num_vertices(),
+            coarse.num_edges(),
+        ));
+        let done = coarse.num_vertices() < 300
+            || coarse.num_vertices() as f64 > 0.98 * current.num_vertices() as f64;
+        current = coarse;
+        if done {
+            break;
+        }
+    }
+    let json = format!(
+        "{{\"bench\":\"contraction\",\"instance\":\"vlsi-100\",\"threads\":{},\"reps\":{reps},\"levels\":[{}]}}\n",
+        detpart::par::num_threads(),
+        rows.join(",")
+    );
+    let path = "BENCH_contraction.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+}
+
 fn micro_benchmarks() {
     use detpart::config::JetConfig;
     use detpart::datastructures::PartitionedHypergraph;
@@ -139,13 +269,19 @@ fn main() {
     if names.is_empty() {
         figures::run_all(&ctx);
         micro_benchmarks();
+        contraction_micro();
         return;
     }
     for name in names {
         if name == "micro" {
             micro_benchmarks();
+            contraction_micro();
+        } else if name == "contraction" {
+            contraction_micro();
         } else if !figures::run_by_name(&ctx, name) {
-            eprintln!("unknown experiment {name:?} — try fig1..fig12, tab1, micro, all");
+            eprintln!(
+                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, all"
+            );
             std::process::exit(1);
         }
     }

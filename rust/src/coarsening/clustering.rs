@@ -13,6 +13,7 @@
 //! (100 sequential singleton steps, then doubling sizes up to 1% of |V|)
 //! or the old fixed-r split (ablation).
 
+use super::scratch::CoarseningScratch;
 use crate::config::CoarseningConfig;
 use crate::datastructures::Hypergraph;
 use crate::util::rng::hash64;
@@ -23,6 +24,8 @@ use crate::{VertexId, Weight};
 const SCALE: i64 = 1 << 20;
 
 /// Compute a clustering. Returns `cluster_of[v] = representative vertex id`.
+/// Convenience wrapper around [`cluster_vertices_in`] with a throwaway
+/// scratch arena.
 pub fn cluster_vertices(
     hg: &Hypergraph,
     communities: Option<&[u32]>,
@@ -30,28 +33,53 @@ pub fn cluster_vertices(
     max_cluster_weight: Weight,
     seed: u64,
 ) -> Vec<VertexId> {
+    let mut scratch = CoarseningScratch::default();
+    cluster_vertices_in(hg, communities, cfg, max_cluster_weight, seed, &mut scratch)
+}
+
+/// [`cluster_vertices`] with caller-owned scratch: the visit order,
+/// cluster weights and all per-subround buffers (proposals, approval
+/// moves, swap/chain indices) are reused across subrounds *and* levels.
+pub fn cluster_vertices_in(
+    hg: &Hypergraph,
+    communities: Option<&[u32]>,
+    cfg: &CoarseningConfig,
+    max_cluster_weight: Weight,
+    seed: u64,
+    scratch: &mut CoarseningScratch,
+) -> Vec<VertexId> {
     let n = hg.num_vertices();
     let mut cluster_of: Vec<VertexId> = (0..n as VertexId).collect();
-    let mut cluster_weight: Vec<Weight> =
-        (0..n).map(|v| hg.vertex_weight(v as VertexId)).collect();
+    scratch.cluster_weight.clear();
+    scratch.cluster_weight.extend((0..n).map(|v| hg.vertex_weight(v as VertexId)));
 
-    // Deterministic hash-shuffled visit order.
-    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
-    crate::par::par_sort_by_key(&mut order, |&v| (hash64(seed, v as u64), v));
+    // Deterministic hash-shuffled visit order: (hash, id) is a total
+    // order, so the scratch-buffer unstable sort is thread-count
+    // independent.
+    scratch.order.clear();
+    scratch.order.extend(0..n as VertexId);
+    {
+        let (order, buf) = (&mut scratch.order, &mut scratch.sort_u32);
+        crate::par::par_sort_unstable_by_in(order, buf, move |&a, &b| {
+            (hash64(seed, a as u64), a).cmp(&(hash64(seed, b as u64), b))
+        });
+    }
 
+    // The batch slices alias `scratch.order`, so take it out for the loop.
+    let order = std::mem::take(&mut scratch.order);
     for batch in subround_batches(n, cfg) {
-        let batch = &order[batch];
         process_subround(
             hg,
             communities,
             cfg,
             max_cluster_weight,
             seed,
-            batch,
+            &order[batch],
             &mut cluster_of,
-            &mut cluster_weight,
+            scratch,
         );
     }
+    scratch.order = order;
     cluster_of
 }
 
@@ -94,75 +122,86 @@ fn process_subround(
     seed: u64,
     batch: &[VertexId],
     cluster_of: &mut [VertexId],
-    cluster_weight: &mut [Weight],
+    scratch: &mut CoarseningScratch,
 ) {
     // --- Phase 1: parallel proposals against frozen labels (per-thread
     // rating scratch; a per-vertex HashMap was the top allocation cost in
-    // profiles — see EXPERIMENTS.md §Perf). ---
+    // profiles — see EXPERIMENTS.md §Perf). The proposal buffer itself
+    // lives in the coarsening scratch: zero per-subround allocation.
     let cluster_of_frozen: &[VertexId] = cluster_of;
-    let cluster_weight_frozen: &[Weight] = cluster_weight;
-    let mut proposals: Vec<VertexId> = vec![0; batch.len()];
+    let cluster_weight_frozen: &[Weight] = &scratch.cluster_weight;
+    scratch.proposals.clear();
+    scratch.proposals.resize(batch.len(), 0);
     {
+        let proposals = &mut scratch.proposals;
+        let propose = |out: &mut VertexId, u: VertexId, rs: &mut RatingScratch| {
+            *out = if cluster_of_frozen[u as usize] != u
+                || cluster_weight_frozen[u as usize] != hg.vertex_weight(u)
+            {
+                u // not a singleton — stays
+            } else {
+                best_rated_cluster(
+                    hg,
+                    communities,
+                    cfg,
+                    max_cluster_weight,
+                    seed,
+                    u,
+                    cluster_of_frozen,
+                    cluster_weight_frozen,
+                    rs,
+                )
+            };
+        };
         let nt = crate::par::num_threads().max(1);
-        let ranges = crate::par::pool::chunk_ranges(batch.len(), nt);
-        let mut slices: Vec<&mut [VertexId]> = Vec::new();
-        let mut rest = proposals.as_mut_slice();
-        for r in &ranges {
-            let (head, tail) = rest.split_at_mut(r.len());
-            slices.push(head);
-            rest = tail;
-        }
-        std::thread::scope(|s| {
-            for (slice, range) in slices.into_iter().zip(ranges) {
-                s.spawn(move || {
-                    let mut scratch = RatingScratch::default();
-                    for (out, i) in slice.iter_mut().zip(range) {
-                        let u = batch[i];
-                        *out = if cluster_of_frozen[u as usize] != u
-                            || cluster_weight_frozen[u as usize] != hg.vertex_weight(u)
-                        {
-                            u // not a singleton — stays
-                        } else {
-                            best_rated_cluster(
-                                hg,
-                                communities,
-                                cfg,
-                                max_cluster_weight,
-                                seed,
-                                u,
-                                cluster_of_frozen,
-                                cluster_weight_frozen,
-                                &mut scratch,
-                            )
-                        };
-                    }
-                });
+        if nt <= 1 || batch.len() < 2 {
+            let mut rs = RatingScratch::default();
+            for (i, out) in proposals.iter_mut().enumerate() {
+                propose(out, batch[i], &mut rs);
             }
-        });
+        } else {
+            let nchunks = crate::par::pool::num_chunks(batch.len(), nt);
+            std::thread::scope(|s| {
+                let mut rest = proposals.as_mut_slice();
+                let propose = &propose;
+                for ci in 0..nchunks {
+                    let range = crate::par::pool::nth_chunk(batch.len(), nt, ci);
+                    let (slice, tail) = rest.split_at_mut(range.len());
+                    rest = tail;
+                    s.spawn(move || {
+                        let mut rs = RatingScratch::default();
+                        for (out, i) in slice.iter_mut().zip(range) {
+                            propose(out, batch[i], &mut rs);
+                        }
+                    });
+                }
+            });
+        }
     }
 
     // --- Phase 2: swap prevention (paper improvement #2). ---
     if cfg.prevent_swaps {
         // position of each vertex within the batch
-        let mut pos_of: std::collections::HashMap<VertexId, usize> =
-            std::collections::HashMap::with_capacity(batch.len());
+        let pos_of = &mut scratch.pos_of;
+        pos_of.clear();
         for (i, &u) in batch.iter().enumerate() {
             pos_of.insert(u, i);
         }
         for i in 0..batch.len() {
             let u = batch[i];
-            let v = proposals[i];
+            let v = scratch.proposals[i];
             if v == u {
                 continue;
             }
-            if let Some(&j) = pos_of.get(&v) {
-                if proposals[j] == u && u < v {
+            if let Some(&j) = scratch.pos_of.get(&v) {
+                if scratch.proposals[j] == u && u < v {
                     // Merge the pair: the heavier current cluster hosts.
-                    let (wu, wv) = (cluster_weight[u as usize], cluster_weight[v as usize]);
+                    let (wu, wv) =
+                        (scratch.cluster_weight[u as usize], scratch.cluster_weight[v as usize]);
                     if wu >= wv {
-                        proposals[i] = u; // u stays; v (proposal j) joins u
+                        scratch.proposals[i] = u; // u stays; v (proposal j) joins u
                     } else {
-                        proposals[j] = v; // v stays; u (proposal i) joins v
+                        scratch.proposals[j] = v; // v stays; u (proposal i) joins v
                     }
                 }
             }
@@ -175,30 +214,39 @@ fn process_subround(
     // this subround; the canceled vertex can re-propose in a later
     // subround against the updated labels.
     {
-        let moving: std::collections::HashSet<VertexId> = batch
-            .iter()
-            .zip(proposals.iter())
-            .filter(|&(&u, &t)| t != u)
-            .map(|(&u, _)| u)
-            .collect();
+        let moving = &mut scratch.moving;
+        moving.clear();
+        moving.extend(
+            batch
+                .iter()
+                .zip(scratch.proposals.iter())
+                .filter(|&(&u, &t)| t != u)
+                .map(|(&u, _)| u),
+        );
         for (i, &u) in batch.iter().enumerate() {
-            let t = proposals[i];
-            if t != u && moving.contains(&t) {
-                proposals[i] = u;
+            let t = scratch.proposals[i];
+            if t != u && scratch.moving.contains(&t) {
+                scratch.proposals[i] = u;
             }
         }
     }
 
     // --- Phase 3: grouped approval, lightest-first (deterministic). ---
     // moves sorted by (target, weight, id) → per-target prefix admission.
-    let mut moves: Vec<(VertexId, Weight, VertexId)> = Vec::new();
+    scratch.moves.clear();
     for (i, &u) in batch.iter().enumerate() {
-        let t = proposals[i];
+        let t = scratch.proposals[i];
         if t != u {
-            moves.push((t, hg.vertex_weight(u), u));
+            scratch.moves.push((t, hg.vertex_weight(u), u));
         }
     }
-    crate::par::par_sort_by_key(&mut moves, |&(t, w, u)| (t, w, u));
+    {
+        // (target, weight, vertex) is a total order (vertex ids unique).
+        let (moves, buf) = (&mut scratch.moves, &mut scratch.sort_moves);
+        crate::par::par_sort_unstable_by_in(moves, buf, |a, b| a.cmp(b));
+    }
+    let moves: &[(VertexId, Weight, VertexId)] = &scratch.moves;
+    let cluster_weight = &mut scratch.cluster_weight;
     let mut idx = 0;
     while idx < moves.len() {
         let target = moves[idx].0;

@@ -1,21 +1,422 @@
 //! Cluster contraction: build the coarse hypergraph from a clustering.
 //!
-//! Coarse vertices are the cluster representatives, renumbered densely in
-//! increasing rep-id order (deterministic). Each hyperedge maps its pins
-//! to coarse ids, deduplicates, drops size-1 edges, and **identical nets
-//! are merged** with summed weights (the standard multilevel optimization:
-//! contraction creates many parallel nets).
+//! An allocation-free, fully parallel, deterministic CSR pipeline (the
+//! Mt-KaHyPar construction):
+//!
+//! 1. **Renumbering** — representatives are marked with a mark-once
+//!    atomic bitset, densely renumbered in increasing id order via
+//!    per-chunk counts + an exclusive prefix sum, and coarse vertex
+//!    weights accumulate through commutative `fetch_add`.
+//! 2. **Pin remapping** — each hyperedge's pins are mapped into a flat
+//!    scratch arena at the edge's own (fine) offset range, then sorted and
+//!    deduplicated in place; no per-edge `Vec` is ever allocated.
+//! 3. **Identical-net merging** — per-edge fingerprints
+//!    `hash(coarse_size, sorted pins)`, a parallel sort by
+//!    `(fingerprint, edge id)`, and exact pin comparison only within
+//!    fingerprint buckets. Weights are summed in bucket order (= ascending
+//!    fine edge id), so the merge is bit-identical across thread counts.
+//! 4. **Bulk construction** — surviving nets are compacted into
+//!    (offsets, pins, weights) arrays in lexicographic pin order (the same
+//!    total order the old sequential path produced, so downstream results
+//!    are unchanged) and ingested by [`HypergraphBuilder::from_csr`]'s
+//!    parallel counting sort.
+//!
+//! All intermediate buffers live in [`CoarseningScratch`], owned by the
+//! multilevel driver and reused across levels; steady-state contraction
+//! allocates only its outputs. The old sequential-merge HashMap
+//! implementation survives as [`contract_reference`] — the property-test
+//! and bench oracle.
 
+use super::scratch::CoarseningScratch;
 use crate::datastructures::{Hypergraph, HypergraphBuilder};
-use crate::{VertexId, Weight};
+use crate::par::pool::{nth_chunk, num_chunks, SendPtr};
+use crate::util::rng::hash64;
+use crate::{EdgeId, VertexId, Weight};
 use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicI64, Ordering};
+
+/// Order-dependent hash of a sorted pin slice, length mixed in first.
+/// 64-bit, so distinct pin sets collide (and fall back to the exact
+/// within-bucket comparison) with probability ≈ m²/2⁶⁵ per level.
+#[inline]
+fn fingerprint(pins: &[VertexId]) -> u64 {
+    let mut h = hash64(0xF1A6_ED9E, pins.len() as u64);
+    for &p in pins {
+        h = hash64(h, p as u64);
+    }
+    h
+}
+
+/// Per-chunk counts over `[0, len)` under `nt`-way chunking, exclusive
+/// prefix sum in place (`counts[ci]` becomes chunk `ci`'s write offset);
+/// returns the total. `counts` is a reused scratch vector; the prefix sum
+/// over ≤ `nt` entries takes the sequential (allocation-free) path.
+fn chunk_prefix(
+    len: usize,
+    nt: usize,
+    counts: &mut Vec<i64>,
+    count_fn: impl Fn(Range<usize>) -> i64 + Sync,
+) -> i64 {
+    let nchunks = num_chunks(len, nt);
+    counts.clear();
+    counts.resize(nchunks, 0);
+    {
+        let count_fn = &count_fn;
+        crate::par::for_each_chunk_mut(counts, |start, slots| {
+            for (j, slot) in slots.iter_mut().enumerate() {
+                *slot = count_fn(nth_chunk(len, nt, start + j));
+            }
+        });
+    }
+    crate::par::exclusive_prefix_sum_in_place(counts)
+}
+
+#[inline]
+fn edge_span(hg: &Hypergraph, new_size: &[u32], e: u32) -> (usize, usize) {
+    (hg.pin_offset(e as EdgeId), new_size[e as usize] as usize)
+}
 
 /// Contract `hg` under `cluster_of` (rep-rooted: `cluster_of[rep] = rep`).
 /// Returns the coarse hypergraph and the fine→coarse vertex map.
+/// Convenience wrapper around [`contract_in`] with a throwaway scratch.
 pub fn contract(hg: &Hypergraph, cluster_of: &[VertexId]) -> (Hypergraph, Vec<VertexId>) {
+    let mut scratch = CoarseningScratch::default();
+    contract_in(hg, cluster_of, &mut scratch)
+}
+
+/// [`contract`] with caller-owned scratch arenas (reused across levels).
+pub fn contract_in(
+    hg: &Hypergraph,
+    cluster_of: &[VertexId],
+    scratch: &mut CoarseningScratch,
+) -> (Hypergraph, Vec<VertexId>) {
     let n = hg.num_vertices();
     assert_eq!(cluster_of.len(), n);
-    // Dense renumbering of reps in increasing id order.
+    let nt = crate::par::num_threads().max(1);
+
+    // --- Phase 1: dense rep renumbering + coarse weights. ---
+    scratch.rep_marks.reset(n);
+    {
+        let marks = &scratch.rep_marks;
+        crate::par::for_each_chunk(n, |_c, r| {
+            for v in r {
+                let rep = cluster_of[v] as usize;
+                debug_assert_eq!(cluster_of[rep], cluster_of[v], "cluster forest not rooted");
+                marks.test_and_set(rep);
+            }
+        });
+    }
+    let num_coarse = {
+        let marks = &scratch.rep_marks;
+        chunk_prefix(n, nt, &mut scratch.chunk_counts, |r| {
+            let mut c = 0i64;
+            for v in r {
+                if marks.get(v) {
+                    c += 1;
+                }
+            }
+            c
+        }) as usize
+    };
+    scratch.coarse_id.clear();
+    scratch.coarse_id.resize(n, VertexId::MAX);
+    {
+        let ptr = SendPtr(scratch.coarse_id.as_mut_ptr());
+        let pref = &ptr;
+        let marks = &scratch.rep_marks;
+        let offs: &[i64] = &scratch.chunk_counts;
+        crate::par::for_each_chunk(num_chunks(n, nt), move |_c, r| {
+            for ci in r {
+                let mut next = offs[ci] as VertexId;
+                for v in nth_chunk(n, nt, ci) {
+                    if marks.get(v) {
+                        // SAFETY: disjoint vertex ranges per chunk.
+                        unsafe {
+                            *pref.0.add(v) = next;
+                        }
+                        next += 1;
+                    }
+                }
+            }
+        });
+    }
+    let map: Vec<VertexId> = {
+        let coarse_id: &[VertexId] = &scratch.coarse_id;
+        crate::par::map_indexed(n, |v| coarse_id[cluster_of[v] as usize])
+    };
+    {
+        let cw = &mut scratch.coarse_weight;
+        cw.truncate(num_coarse);
+        crate::par::for_each_chunk_mut(cw.as_mut_slice(), |_s, ws| {
+            for w in ws {
+                *w.get_mut() = 0;
+            }
+        });
+        cw.resize_with(num_coarse, || AtomicI64::new(0));
+    }
+    {
+        let cw: &[AtomicI64] = &scratch.coarse_weight;
+        let map_ref: &[VertexId] = &map;
+        crate::par::for_each_chunk(n, |_c, r| {
+            for v in r {
+                cw[map_ref[v] as usize]
+                    .fetch_add(hg.vertex_weight(v as VertexId), Ordering::Relaxed);
+            }
+        });
+    }
+    let weights: Vec<Weight> = {
+        let cw: &[AtomicI64] = &scratch.coarse_weight;
+        crate::par::map_indexed(num_coarse, |c| cw[c].load(Ordering::Relaxed))
+    };
+
+    // --- Phase 2: pin remapping into the flat arena, in-place sort+dedup. ---
+    let num_edges = hg.num_edges();
+    scratch.arena.clear();
+    scratch.arena.resize(hg.num_pins(), 0);
+    scratch.new_size.clear();
+    scratch.new_size.resize(num_edges, 0);
+    {
+        let arena_ptr = SendPtr(scratch.arena.as_mut_ptr());
+        let size_ptr = SendPtr(scratch.new_size.as_mut_ptr());
+        let aref = &arena_ptr;
+        let sref = &size_ptr;
+        let map_ref: &[VertexId] = &map;
+        crate::par::for_each_chunk(num_edges, move |_c, r| {
+            for e in r {
+                let pins = hg.pins(e as EdgeId);
+                let off = hg.pin_offset(e as EdgeId);
+                let sz = pins.len();
+                // SAFETY: [off, off+sz) ranges are disjoint per edge.
+                let dst = unsafe { std::slice::from_raw_parts_mut(aref.0.add(off), sz) };
+                for (d, &p) in dst.iter_mut().zip(pins) {
+                    *d = map_ref[p as usize];
+                }
+                dst.sort_unstable();
+                let mut k = if sz == 0 { 0 } else { 1 };
+                for i in 1..sz {
+                    if dst[i] != dst[i - 1] {
+                        dst[k] = dst[i];
+                        k += 1;
+                    }
+                }
+                // SAFETY: one slot per edge.
+                unsafe {
+                    *sref.0.add(e) = if k >= 2 { k as u32 } else { 0 };
+                }
+            }
+        });
+    }
+
+    // --- Phase 3: fingerprints, survivor compaction, parallel sort. ---
+    let m = {
+        let new_size: &[u32] = &scratch.new_size;
+        chunk_prefix(num_edges, nt, &mut scratch.chunk_counts, |r| {
+            r.filter(|&e| new_size[e] > 0).count() as i64
+        }) as usize
+    };
+    scratch.keys.clear();
+    scratch.keys.resize(m, (0, 0));
+    {
+        let keys_ptr = SendPtr(scratch.keys.as_mut_ptr());
+        let kref = &keys_ptr;
+        let offs: &[i64] = &scratch.chunk_counts;
+        let arena: &[VertexId] = &scratch.arena;
+        let new_size: &[u32] = &scratch.new_size;
+        crate::par::for_each_chunk(num_chunks(num_edges, nt), move |_c, r| {
+            for ci in r {
+                let mut at = offs[ci] as usize;
+                for e in nth_chunk(num_edges, nt, ci) {
+                    let sz = new_size[e] as usize;
+                    if sz > 0 {
+                        let off = hg.pin_offset(e as EdgeId);
+                        let fp = fingerprint(&arena[off..off + sz]);
+                        // SAFETY: disjoint destination ranges per chunk.
+                        unsafe {
+                            std::ptr::write(kref.0.add(at), (fp, e as u32));
+                        }
+                        at += 1;
+                    }
+                }
+            }
+        });
+    }
+    {
+        // (fingerprint, edge id) is a total order (edge ids are unique),
+        // so the unstable sort is thread-count independent.
+        let (keys, buf) = (&mut scratch.keys, &mut scratch.sort_keys);
+        crate::par::par_sort_unstable_by_in(keys, buf, |a, b| a.cmp(b));
+    }
+
+    // --- Phase 4: identical-net merging within fingerprint buckets. ---
+    {
+        let keys: &[(u64, u32)] = &scratch.keys;
+        crate::par::bucket_boundaries_in(
+            keys,
+            |k| k.0,
+            &mut scratch.bucket_bounds,
+            &mut scratch.chunk_counts,
+        );
+    }
+    let nb = scratch.bucket_bounds.len() - 1;
+    scratch.leader_of.clear();
+    scratch.leader_of.resize(m, 0);
+    scratch.group_weight.clear();
+    scratch.group_weight.resize(m, 0);
+    {
+        let lead_ptr = SendPtr(scratch.leader_of.as_mut_ptr());
+        let gw_ptr = SendPtr(scratch.group_weight.as_mut_ptr());
+        let lref = &lead_ptr;
+        let gref = &gw_ptr;
+        let bounds: &[u32] = &scratch.bucket_bounds;
+        let keys: &[(u64, u32)] = &scratch.keys;
+        let arena: &[VertexId] = &scratch.arena;
+        let new_size: &[u32] = &scratch.new_size;
+        crate::par::for_each_chunk(nb, move |_c, r| {
+            for b in r {
+                let (lo, hi) = (bounds[b] as usize, bounds[b + 1] as usize);
+                // A bucket is processed by exactly one chunk iteration, in
+                // ascending position (= ascending fine edge id) order, so
+                // the weight sums are schedule-independent.
+                for i in lo..hi {
+                    let e = keys[i].1;
+                    let (off, sz) = edge_span(hg, new_size, e);
+                    let pins_i = &arena[off..off + sz];
+                    let w = hg.edge_weight(e as EdgeId);
+                    let mut leader = i;
+                    // Probe earlier leaders in the bucket. With 64-bit
+                    // fingerprints a bucket is almost always a single
+                    // identical-net group, so the first probe hits.
+                    for p in lo..i {
+                        // SAFETY: positions [lo, hi) are owned by this
+                        // bucket; p < i was written earlier this loop.
+                        let lp = unsafe { *lref.0.add(p) } as usize;
+                        if lp != p {
+                            continue;
+                        }
+                        let (poff, psz) = edge_span(hg, new_size, keys[p].1);
+                        if psz == sz && arena[poff..poff + psz] == *pins_i {
+                            leader = p;
+                            break;
+                        }
+                    }
+                    // SAFETY: as above — single-owner bucket range.
+                    unsafe {
+                        *lref.0.add(i) = leader as u32;
+                        if leader == i {
+                            *gref.0.add(i) = w;
+                        } else {
+                            *gref.0.add(leader) += w;
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    // --- Phase 5: leader compaction + lexicographic final order. ---
+    {
+        let leader_of: &[u32] = &scratch.leader_of;
+        crate::par::collect_indices_where_into(
+            m,
+            |i| leader_of[i] as usize == i,
+            &mut scratch.leaders,
+            &mut scratch.chunk_counts,
+        );
+    }
+    let num_coarse_edges = scratch.leaders.len();
+    {
+        // Distinct leaders have distinct pin sets (identical sets share a
+        // fingerprint and were merged above), so slice comparison is a
+        // total order and the unstable sort is deterministic.
+        let leaders = &mut scratch.leaders;
+        let buf = &mut scratch.sort_u32;
+        let keys: &[(u64, u32)] = &scratch.keys;
+        let arena: &[VertexId] = &scratch.arena;
+        let new_size: &[u32] = &scratch.new_size;
+        crate::par::par_sort_unstable_by_in(leaders, buf, move |&a, &b| {
+            let (oa, sa) = edge_span(hg, new_size, keys[a as usize].1);
+            let (ob, sb) = edge_span(hg, new_size, keys[b as usize].1);
+            arena[oa..oa + sa].cmp(&arena[ob..ob + sb])
+        });
+    }
+
+    // --- Phase 6: output CSR + bulk construction. ---
+    let pin_total = {
+        let leaders: &[u32] = &scratch.leaders;
+        let keys: &[(u64, u32)] = &scratch.keys;
+        let new_size: &[u32] = &scratch.new_size;
+        chunk_prefix(num_coarse_edges, nt, &mut scratch.chunk_counts, |r| {
+            let mut s = 0i64;
+            for j in r {
+                s += new_size[keys[leaders[j] as usize].1 as usize] as i64;
+            }
+            s
+        }) as usize
+    };
+    let mut edge_offsets = vec![0usize; num_coarse_edges + 1];
+    let mut pins_out: Vec<VertexId> = Vec::with_capacity(pin_total);
+    // SAFETY: every slot is written exactly once below before use.
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        pins_out.set_len(pin_total);
+    }
+    let mut edge_weights: Vec<Weight> = vec![0; num_coarse_edges];
+    {
+        let eo_ptr = SendPtr(edge_offsets.as_mut_ptr());
+        let po_ptr = SendPtr(pins_out.as_mut_ptr());
+        let ew_ptr = SendPtr(edge_weights.as_mut_ptr());
+        let (eo, po, ew) = (&eo_ptr, &po_ptr, &ew_ptr);
+        let offs: &[i64] = &scratch.chunk_counts;
+        let leaders: &[u32] = &scratch.leaders;
+        let keys: &[(u64, u32)] = &scratch.keys;
+        let arena: &[VertexId] = &scratch.arena;
+        let new_size: &[u32] = &scratch.new_size;
+        let group_weight: &[Weight] = &scratch.group_weight;
+        crate::par::for_each_chunk(num_chunks(num_coarse_edges, nt), move |_c, r| {
+            for ci in r {
+                let mut pin_at = offs[ci] as usize;
+                for j in nth_chunk(num_coarse_edges, nt, ci) {
+                    let pos = leaders[j] as usize;
+                    let (off, sz) = edge_span(hg, new_size, keys[pos].1);
+                    // SAFETY: destination ranges are disjoint per edge.
+                    unsafe {
+                        *eo.0.add(j) = pin_at;
+                        std::ptr::copy_nonoverlapping(
+                            arena.as_ptr().add(off),
+                            po.0.add(pin_at),
+                            sz,
+                        );
+                        *ew.0.add(j) = group_weight[pos];
+                    }
+                    pin_at += sz;
+                }
+            }
+        });
+    }
+    edge_offsets[num_coarse_edges] = pin_total;
+    let coarse = HypergraphBuilder::from_csr(
+        num_coarse,
+        edge_offsets,
+        pins_out,
+        edge_weights,
+        weights,
+        &mut scratch.counting,
+    );
+    (coarse, map)
+}
+
+/// The pre-PR-2 sequential-merge implementation, kept as the debug oracle:
+/// per-edge `Vec` keys funneled through per-chunk `HashMap`s, merged
+/// sequentially, globally sorted by pin vector. Property tests assert the
+/// CSR pipeline matches it pin-for-pin and weight-for-weight; the bench
+/// micro measures the wall-time and allocation delta against it.
+pub fn contract_reference(
+    hg: &Hypergraph,
+    cluster_of: &[VertexId],
+) -> (Hypergraph, Vec<VertexId>) {
+    let n = hg.num_vertices();
+    assert_eq!(cluster_of.len(), n);
     let mut is_rep = vec![false; n];
     for v in 0..n {
         let r = cluster_of[v] as usize;
@@ -24,24 +425,20 @@ pub fn contract(hg: &Hypergraph, cluster_of: &[VertexId]) -> (Hypergraph, Vec<Ve
     }
     let mut coarse_id = vec![VertexId::MAX; n];
     let mut next = 0 as VertexId;
-    for v in 0..n {
-        if is_rep[v] {
+    for (v, &rep) in is_rep.iter().enumerate() {
+        if rep {
             coarse_id[v] = next;
             next += 1;
         }
     }
     let num_coarse = next as usize;
-    let map: Vec<VertexId> =
-        (0..n).map(|v| coarse_id[cluster_of[v] as usize]).collect();
+    let map: Vec<VertexId> = (0..n).map(|v| coarse_id[cluster_of[v] as usize]).collect();
 
-    // Coarse vertex weights.
     let mut weights = vec![0 as Weight; num_coarse];
     for v in 0..n {
         weights[map[v] as usize] += hg.vertex_weight(v as VertexId);
     }
 
-    // Coarse edges: map pins, dedup, drop singles, merge identical nets.
-    // Parallel per-chunk collection, deterministic merge via sorted keys.
     let coarse_edges: Vec<(Vec<VertexId>, Weight)> = {
         let partial: Vec<HashMap<Vec<VertexId>, Weight>> = {
             let nchunks = crate::par::num_threads().max(1);
@@ -60,15 +457,13 @@ pub fn contract(hg: &Hypergraph, cluster_of: &[VertexId]) -> (Hypergraph, Vec<Ve
                             for e in range {
                                 pins.clear();
                                 pins.extend(
-                                    hg.pins(e as crate::EdgeId)
-                                        .iter()
-                                        .map(|&p| map_ref[p as usize]),
+                                    hg.pins(e as EdgeId).iter().map(|&p| map_ref[p as usize]),
                                 );
                                 pins.sort_unstable();
                                 pins.dedup();
                                 if pins.len() >= 2 {
                                     *slot.entry(pins.clone()).or_insert(0) +=
-                                        hg.edge_weight(e as crate::EdgeId);
+                                        hg.edge_weight(e as EdgeId);
                                 }
                             }
                         });
@@ -77,8 +472,6 @@ pub fn contract(hg: &Hypergraph, cluster_of: &[VertexId]) -> (Hypergraph, Vec<Ve
             }
             maps
         };
-        // Merge chunk maps (chunk order irrelevant: addition commutes) and
-        // sort keys for deterministic edge ids.
         let mut merged: HashMap<Vec<VertexId>, Weight> = HashMap::new();
         for m in partial {
             for (k, w) in m {
@@ -165,5 +558,80 @@ mod tests {
         assert!(c.num_pins() <= h.num_pins());
         assert!(map.iter().all(|&m| (m as usize) < c.num_vertices()));
         c.validate().unwrap();
+    }
+
+    /// The CSR pipeline must agree with the HashMap oracle exactly —
+    /// same edge order (lexicographic), pins, weights, map, and vertex
+    /// weights — including when the same scratch is reused across calls.
+    #[test]
+    fn csr_pipeline_matches_reference_oracle() {
+        let mut scratch = CoarseningScratch::default();
+        let cfg = crate::config::CoarseningConfig::default();
+        for (hi, h) in [
+            crate::gen::sat_hypergraph(250, 800, 7, 11),
+            crate::gen::vlsi_netlist(14, 1.3, 3),
+            crate::gen::rmat_graph(8, 6, 21),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let clusters = super::super::cluster_vertices(h, None, &cfg, 25, hi as u64);
+            let (c_ref, map_ref) = contract_reference(h, &clusters);
+            for nt in [1usize, 2, 4] {
+                crate::par::with_num_threads(nt, || {
+                    let (c, map) = contract_in(h, &clusters, &mut scratch);
+                    assert_eq!(map, map_ref, "instance {hi} nt={nt}");
+                    assert_eq!(c.num_vertices(), c_ref.num_vertices());
+                    assert_eq!(c.num_edges(), c_ref.num_edges(), "instance {hi} nt={nt}");
+                    for e in 0..c.num_edges() as EdgeId {
+                        assert_eq!(c.pins(e), c_ref.pins(e), "instance {hi} nt={nt} e={e}");
+                        assert_eq!(c.edge_weight(e), c_ref.edge_weight(e));
+                    }
+                    for v in 0..c.num_vertices() as VertexId {
+                        assert_eq!(c.vertex_weight(v), c_ref.vertex_weight(v));
+                        assert_eq!(c.incident_edges(v), c_ref.incident_edges(v));
+                    }
+                    c.validate().unwrap();
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn edge_cases_giant_cluster_and_empty() {
+        // One giant cluster: every edge collapses to a single pin → all
+        // dropped; one coarse vertex carries the total weight.
+        let h = crate::gen::sat_hypergraph(50, 120, 5, 2);
+        let clusters = vec![0 as VertexId; 50];
+        let (c, map) = contract(&h, &clusters);
+        assert_eq!(c.num_vertices(), 1);
+        assert_eq!(c.num_edges(), 0);
+        assert_eq!(c.total_vertex_weight(), h.total_vertex_weight());
+        assert!(map.iter().all(|&m| m == 0));
+        c.validate().unwrap();
+        // Empty hypergraph.
+        let empty = Hypergraph::new(0, &[], None, None);
+        let (c, map) = contract(&empty, &[]);
+        assert_eq!(c.num_vertices(), 0);
+        assert_eq!(c.num_edges(), 0);
+        assert!(map.is_empty());
+        c.validate().unwrap();
+    }
+
+    /// Satellite guard: the module's hot path must stay fully parallel —
+    /// no serial `for v in 0..n`-style sweeps outside the reference
+    /// oracle and tests.
+    #[test]
+    fn no_serial_vertex_loops_on_hot_path() {
+        let src = include_str!("contraction.rs");
+        let hot_path = &src[..src.find("pub fn contract_reference").unwrap()];
+        // Build the needles at runtime so this test doesn't match itself.
+        for var in ["v", "e", "i"] {
+            let needle = format!("for {var} in 0..");
+            assert!(
+                !hot_path.contains(&needle),
+                "serial sweep `{needle}` found on the contraction hot path"
+            );
+        }
     }
 }

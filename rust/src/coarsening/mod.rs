@@ -7,13 +7,15 @@
 
 pub mod clustering;
 pub mod contraction;
+pub mod scratch;
 
 use crate::config::CoarseningConfig;
 use crate::datastructures::Hypergraph;
 use crate::{BlockId, VertexId};
 
-pub use clustering::cluster_vertices;
-pub use contraction::contract;
+pub use clustering::{cluster_vertices, cluster_vertices_in};
+pub use contraction::{contract, contract_in, contract_reference};
+pub use scratch::CoarseningScratch;
 
 /// One coarsening level: the coarse hypergraph plus the fine→coarse map.
 pub struct Level {
@@ -46,12 +48,28 @@ impl Hierarchy {
 
 /// Run the coarsening phase. `communities` (optional) restricts clustering
 /// to within-community merges; it is projected through each level.
+/// Convenience wrapper around [`coarsen_in`] with a throwaway scratch.
 pub fn coarsen(
     input: &Hypergraph,
     communities: Option<&[u32]>,
     cfg: &CoarseningConfig,
     k: usize,
     seed: u64,
+) -> Hierarchy {
+    let mut scratch = CoarseningScratch::default();
+    coarsen_in(input, communities, cfg, k, seed, &mut scratch)
+}
+
+/// [`coarsen`] with a caller-owned [`CoarseningScratch`]: all clustering
+/// and contraction arenas are reused across levels (levels only shrink,
+/// so after level 0 the steady state allocates only per-level outputs).
+pub fn coarsen_in(
+    input: &Hypergraph,
+    communities: Option<&[u32]>,
+    cfg: &CoarseningConfig,
+    k: usize,
+    seed: u64,
+    scratch: &mut CoarseningScratch,
 ) -> Hierarchy {
     let contraction_limit = (cfg.contraction_limit_per_k * k).max(4 * k);
     let max_cluster_weight = ((cfg.max_cluster_weight_factor
@@ -69,14 +87,15 @@ pub fn coarsen(
         if n <= contraction_limit {
             break;
         }
-        let clusters = cluster_vertices(
+        let clusters = cluster_vertices_in(
             current,
             communities.as_deref(),
             cfg,
             max_cluster_weight,
             seed ^ (pass.wrapping_mul(0x9E3779B97F4A7C15)),
+            scratch,
         );
-        let (coarse, map) = contract(current, &clusters);
+        let (coarse, map) = contract_in(current, &clusters, scratch);
         let shrunk = coarse.num_vertices();
         if shrunk as f64 > cfg.min_shrink_factor * n as f64 {
             break; // converged — contraction no longer effective

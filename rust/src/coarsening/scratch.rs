@@ -1,0 +1,99 @@
+//! The cross-level scratch arena for coarsening — the coarsening-phase
+//! counterpart of PR 1's `RefinementContext`.
+//!
+//! Every intermediate buffer of clustering and contraction lives here.
+//! The multilevel driver creates one arena per partitioning run and passes
+//! it through [`super::coarsen_in`]; each level's clustering and
+//! contraction then reuse the previous level's allocations (levels only
+//! shrink, so after the first level the buffers never grow), which is what
+//! makes steady-state contraction allocation-free on the hot path — the
+//! only heap traffic left is the per-level *outputs* (the coarse
+//! hypergraph's arrays and the fine→coarse map).
+
+use crate::par::CountingScratch;
+use crate::util::bitset::AtomicBitset;
+use crate::{VertexId, Weight};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::AtomicI64;
+
+/// Reusable buffers for one coarsening campaign (all levels).
+#[derive(Default)]
+pub struct CoarseningScratch {
+    // --- contraction (see contraction.rs phase numbering) ---
+    /// Phase 1: representative mark bitset.
+    pub(crate) rep_marks: AtomicBitset,
+    /// Phase 1: fine vertex → dense coarse id (reps only).
+    pub(crate) coarse_id: Vec<VertexId>,
+    /// Phase 1: coarse vertex weight accumulators (commutative fetch_add).
+    pub(crate) coarse_weight: Vec<AtomicI64>,
+    /// Phase 2: flat pin arena — edge `e`'s remapped pins live at the
+    /// fine hypergraph's own offset range for `e`.
+    pub(crate) arena: Vec<VertexId>,
+    /// Phase 2: deduplicated coarse pin count per fine edge (0 = dropped).
+    pub(crate) new_size: Vec<u32>,
+    /// Phase 3: `(fingerprint, fine edge id)` per surviving edge.
+    pub(crate) keys: Vec<(u64, u32)>,
+    /// Phase 3: merge buffer for the parallel key sort.
+    pub(crate) sort_keys: Vec<(u64, u32)>,
+    /// Phase 4: fingerprint-bucket boundaries (positions into `keys`).
+    pub(crate) bucket_bounds: Vec<u32>,
+    /// Phase 4: per key-position, the position of its identical-net group
+    /// leader (`leader_of[i] == i` ⇔ position `i` is a group leader).
+    pub(crate) leader_of: Vec<u32>,
+    /// Phase 4: per leader position, the summed net weight.
+    pub(crate) group_weight: Vec<Weight>,
+    /// Phase 5: kept leader positions, lexicographically ordered.
+    pub(crate) leaders: Vec<u32>,
+    /// Merge buffer for u32 sorts (leaders, clustering visit order).
+    pub(crate) sort_u32: Vec<u32>,
+    /// Per-chunk count / prefix-offset buffer for compaction passes.
+    pub(crate) chunk_counts: Vec<i64>,
+    /// Counting-sort buffers for `HypergraphBuilder::from_csr`.
+    pub(crate) counting: CountingScratch,
+    // --- clustering (per-subround buffers) ---
+    /// Per-subround proposal targets (`proposals[i]` for `batch[i]`).
+    pub(crate) proposals: Vec<VertexId>,
+    /// Hash-shuffled visit order.
+    pub(crate) order: Vec<VertexId>,
+    /// Current cluster weights (0 for absorbed members).
+    pub(crate) cluster_weight: Vec<Weight>,
+    /// Approval-phase move list `(target, vertex weight, vertex)`.
+    pub(crate) moves: Vec<(VertexId, Weight, VertexId)>,
+    /// Merge buffer for the approval move sort.
+    pub(crate) sort_moves: Vec<(VertexId, Weight, VertexId)>,
+    /// Swap-prevention index of the current batch.
+    pub(crate) pos_of: HashMap<VertexId, usize>,
+    /// Chain-breaking set of vertices moving this subround.
+    pub(crate) moving: HashSet<VertexId>,
+}
+
+impl CoarseningScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total bytes currently reserved across all arenas — the bench
+    /// harness reports this as the pipeline's peak scratch footprint.
+    pub fn memory_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.rep_marks.len().div_ceil(64) * 8
+            + self.coarse_id.capacity() * size_of::<VertexId>()
+            + self.coarse_weight.capacity() * size_of::<AtomicI64>()
+            + self.arena.capacity() * size_of::<VertexId>()
+            + self.new_size.capacity() * size_of::<u32>()
+            + (self.keys.capacity() + self.sort_keys.capacity()) * size_of::<(u64, u32)>()
+            + self.bucket_bounds.capacity() * size_of::<u32>()
+            + self.leader_of.capacity() * size_of::<u32>()
+            + self.group_weight.capacity() * size_of::<Weight>()
+            + (self.leaders.capacity() + self.sort_u32.capacity()) * size_of::<u32>()
+            + self.chunk_counts.capacity() * size_of::<i64>()
+            + self.counting.memory_bytes()
+            + self.proposals.capacity() * size_of::<VertexId>()
+            + self.order.capacity() * size_of::<VertexId>()
+            + self.cluster_weight.capacity() * size_of::<Weight>()
+            + (self.moves.capacity() + self.sort_moves.capacity())
+                * size_of::<(VertexId, Weight, VertexId)>()
+            + self.pos_of.capacity() * size_of::<(VertexId, usize)>()
+            + self.moving.capacity() * size_of::<VertexId>()
+    }
+}

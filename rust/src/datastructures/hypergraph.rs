@@ -61,6 +61,15 @@ impl Hypergraph {
         &self.pins[self.edge_offsets[e as usize]..self.edge_offsets[e as usize + 1]]
     }
 
+    /// CSR offset of hyperedge `e`'s pins within the flat pin array —
+    /// `pins(e)` is `pin_array[pin_offset(e)..pin_offset(e) + edge_size(e)]`.
+    /// The contraction pipeline uses this to address its flat scratch
+    /// arena with the fine hypergraph's own offsets.
+    #[inline]
+    pub fn pin_offset(&self, e: EdgeId) -> usize {
+        self.edge_offsets[e as usize]
+    }
+
     /// Hyperedges incident to vertex `v`, in increasing edge-id order.
     #[inline]
     pub fn incident_edges(&self, v: VertexId) -> &[EdgeId] {
@@ -166,6 +175,81 @@ pub struct HypergraphBuilder {
 }
 
 impl HypergraphBuilder {
+    /// Bulk constructor from ready-made CSR arrays: `edge_offsets` (len
+    /// `E+1`), `pins` (edge-major, each edge's pins deduplicated), per-edge
+    /// `edge_weights` and per-vertex `vertex_weights`. The vertex→edge
+    /// direction is built with a deterministic **parallel counting sort**
+    /// ([`crate::par::stable_counting_scatter`]): because the pin array is
+    /// in increasing edge order, stability makes every incidence list
+    /// sorted by edge id — the same invariant the sequential
+    /// [`build`](Self::build) produces. Intermediate buffers come from
+    /// `scratch`, so steady-state calls allocate only the output arrays.
+    pub fn from_csr(
+        num_vertices: usize,
+        edge_offsets: Vec<usize>,
+        pins: Vec<VertexId>,
+        edge_weights: Vec<Weight>,
+        vertex_weights: Vec<Weight>,
+        scratch: &mut crate::par::CountingScratch,
+    ) -> Hypergraph {
+        assert_eq!(edge_offsets.len(), edge_weights.len() + 1);
+        assert_eq!(*edge_offsets.last().unwrap(), pins.len());
+        assert_eq!(vertex_weights.len(), num_vertices);
+        debug_assert!(edge_offsets.windows(2).all(|w| w[0] < w[1]), "empty edge");
+        debug_assert!(pins.iter().all(|&p| (p as usize) < num_vertices));
+        let total_vertex_weight = crate::par::parallel_reduce(
+            num_vertices,
+            || 0 as Weight,
+            |r, mut acc| {
+                for v in r {
+                    acc += vertex_weights[v];
+                }
+                acc
+            },
+            |a, b| a + b,
+        );
+        // Per-pin edge ids (scratch buffer): chunk over edges, each chunk
+        // fills its contiguous, disjoint pin range.
+        let mut edge_of = std::mem::take(&mut scratch.values);
+        edge_of.clear();
+        edge_of.resize(pins.len(), 0);
+        {
+            let ptr = crate::par::pool::SendPtr(edge_of.as_mut_ptr());
+            let pref = &ptr;
+            let offs: &[usize] = &edge_offsets;
+            crate::par::for_each_chunk(edge_weights.len(), move |_c, r| {
+                for e in r {
+                    for i in offs[e]..offs[e + 1] {
+                        // SAFETY: pin ranges are disjoint per edge.
+                        unsafe {
+                            *pref.0.add(i) = e as EdgeId;
+                        }
+                    }
+                }
+            });
+        }
+        let mut vertex_offsets = Vec::new();
+        let mut incidence = Vec::new();
+        crate::par::stable_counting_scatter(
+            &pins,
+            num_vertices,
+            &edge_of,
+            &mut vertex_offsets,
+            &mut incidence,
+            scratch,
+        );
+        scratch.values = edge_of;
+        Hypergraph {
+            edge_offsets,
+            pins,
+            vertex_offsets,
+            incidence,
+            vertex_weights,
+            edge_weights,
+            total_vertex_weight,
+        }
+    }
+
     pub fn new(num_vertices: usize) -> Self {
         HypergraphBuilder {
             num_vertices,
@@ -308,6 +392,62 @@ mod tests {
         let h = b.build();
         assert_eq!(h.num_edges(), 1);
         assert_eq!(h.pins(0), &[0, 2]);
+    }
+
+    #[test]
+    fn from_csr_matches_incremental_builder() {
+        let g = crate::gen::sat_hypergraph(150, 500, 8, 5);
+        // Re-extract the edge list and rebuild through both constructors.
+        let edges: Vec<Vec<VertexId>> =
+            (0..g.num_edges()).map(|e| g.pins(e as EdgeId).to_vec()).collect();
+        let eweights: Vec<Weight> =
+            (0..g.num_edges()).map(|e| g.edge_weight(e as EdgeId)).collect();
+        let vweights: Vec<Weight> =
+            (0..g.num_vertices()).map(|v| g.vertex_weight(v as VertexId)).collect();
+        let mut offsets = vec![0usize];
+        let mut pins = Vec::new();
+        for e in &edges {
+            pins.extend_from_slice(e);
+            offsets.push(pins.len());
+        }
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let mut scratch = crate::par::CountingScratch::default();
+                let h = HypergraphBuilder::from_csr(
+                    g.num_vertices(),
+                    offsets.clone(),
+                    pins.clone(),
+                    eweights.clone(),
+                    vweights.clone(),
+                    &mut scratch,
+                );
+                h.validate().unwrap();
+                assert_eq!(h.total_vertex_weight(), g.total_vertex_weight());
+                for e in 0..g.num_edges() as EdgeId {
+                    assert_eq!(h.pins(e), g.pins(e));
+                    assert_eq!(h.edge_weight(e), g.edge_weight(e));
+                }
+                for v in 0..g.num_vertices() as VertexId {
+                    assert_eq!(h.incident_edges(v), g.incident_edges(v), "v={v} nt={nt}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn from_csr_empty() {
+        let mut scratch = crate::par::CountingScratch::default();
+        let h = HypergraphBuilder::from_csr(
+            0,
+            vec![0],
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+            &mut scratch,
+        );
+        assert_eq!(h.num_vertices(), 0);
+        assert_eq!(h.num_edges(), 0);
+        h.validate().unwrap();
     }
 
     #[test]

@@ -1,0 +1,248 @@
+//! Deterministic parallel counting sort and bucket-boundary detection —
+//! the backbone of the allocation-free contraction pipeline.
+//!
+//! [`stable_counting_scatter`] is the classic two-pass chunked counting
+//! sort: each chunk counts key occurrences into its own row of a
+//! `chunks × num_keys` matrix, a column-wise exclusive scan (in chunk
+//! order) turns the rows into per-chunk write cursors, and each chunk
+//! scatters its items at those cursors. Items with equal keys end up in
+//! increasing index order (stable) for **every** thread count, because the
+//! column scan follows chunk index order, never completion order.
+//!
+//! [`bucket_boundaries_in`] finds the run starts of a sorted slice in
+//! parallel, so bucket-local work (identical-net merging within a
+//! fingerprint bucket) can be distributed without a sequential scan —
+//! the contraction pipeline runs it on its sorted
+//! `(fingerprint, edge id)` keys each level.
+
+use super::pool::{for_each_chunk, nth_chunk, num_chunks, num_threads, SendPtr};
+
+/// Reusable buffers for [`stable_counting_scatter`] (and callers that need
+/// a per-item value array): owned by a higher-level scratch arena so
+/// steady-state calls allocate nothing.
+#[derive(Debug, Default)]
+pub struct CountingScratch {
+    /// `chunks × num_keys` count matrix, row-major.
+    counts: Vec<u32>,
+    /// Caller-usable per-item u32 buffer (e.g. the edge id of each pin).
+    pub values: Vec<u32>,
+}
+
+impl CountingScratch {
+    /// Bytes currently reserved (bench metric).
+    pub fn memory_bytes(&self) -> usize {
+        (self.counts.capacity() + self.values.capacity()) * std::mem::size_of::<u32>()
+    }
+}
+
+/// Deterministic parallel counting sort of `values` by `keys`
+/// (`keys[i] ∈ [0, num_keys)`, `values.len() == keys.len()`).
+///
+/// Writes group offsets into `offsets_out` (resized to `num_keys + 1`,
+/// `offsets_out[k]..offsets_out[k+1]` is group `k`) and the scattered
+/// values into `out` (resized to `keys.len()`). Within a group, values
+/// appear in increasing input-index order (stable) for every thread count.
+pub fn stable_counting_scatter(
+    keys: &[u32],
+    num_keys: usize,
+    values: &[u32],
+    offsets_out: &mut Vec<usize>,
+    out: &mut Vec<u32>,
+    scratch: &mut CountingScratch,
+) {
+    assert_eq!(keys.len(), values.len());
+    let len = keys.len();
+    offsets_out.clear();
+    offsets_out.resize(num_keys + 1, 0);
+    out.clear();
+    out.resize(len, 0);
+    let nt = num_threads().max(1);
+    let nchunks = num_chunks(len, nt);
+    if nchunks <= 1 {
+        // Sequential counting sort.
+        for &k in keys {
+            offsets_out[k as usize + 1] += 1;
+        }
+        for k in 0..num_keys {
+            offsets_out[k + 1] += offsets_out[k];
+        }
+        // Reuse the count row as the running cursor.
+        let counts = &mut scratch.counts;
+        counts.clear();
+        counts.resize(num_keys, 0);
+        for (i, &k) in keys.iter().enumerate() {
+            let pos = offsets_out[k as usize] + counts[k as usize] as usize;
+            counts[k as usize] += 1;
+            out[pos] = values[i];
+        }
+        return;
+    }
+    // Phase 1: per-chunk key counts (disjoint matrix rows).
+    let counts = &mut scratch.counts;
+    counts.clear();
+    counts.resize(nchunks * num_keys, 0);
+    {
+        let counts_ptr = SendPtr(counts.as_mut_ptr());
+        let cref = &counts_ptr;
+        for_each_chunk(nchunks, move |_c, r| {
+            for ci in r {
+                // SAFETY: row `ci` is owned exclusively by this iteration
+                // (chunk index sets are disjoint).
+                let row = unsafe {
+                    std::slice::from_raw_parts_mut(cref.0.add(ci * num_keys), num_keys)
+                };
+                for i in nth_chunk(len, nt, ci) {
+                    row[keys[i] as usize] += 1;
+                }
+            }
+        });
+    }
+    // Phase 2: column-wise exclusive scan over chunks (parallel over
+    // keys); totals land in offsets_out[k + 1].
+    {
+        let counts_ptr = SendPtr(counts.as_mut_ptr());
+        let offs_ptr = SendPtr(offsets_out.as_mut_ptr());
+        let cref = &counts_ptr;
+        let oref = &offs_ptr;
+        for_each_chunk(num_keys, move |_c, r| {
+            for k in r {
+                let mut acc = 0u32;
+                for ci in 0..nchunks {
+                    // SAFETY: column k is touched only by this iteration
+                    // (key chunks are disjoint).
+                    unsafe {
+                        let p = cref.0.add(ci * num_keys + k);
+                        let v = *p;
+                        *p = acc;
+                        acc += v;
+                    }
+                }
+                unsafe {
+                    *oref.0.add(k + 1) = acc as usize;
+                }
+            }
+        });
+    }
+    // offsets_out is now [0, t_0, …, t_{K-1}] (slot k+1 holds key k's
+    // total); an inclusive scan turns it into the group offset array
+    // [0, t_0, t_0+t_1, …, Σt].
+    inclusive_prefix_sum_usize(offsets_out);
+    // Phase 3: scatter. Each chunk's cursor for key k is
+    // offsets_out[k] + counts[chunk][k] (its exclusive rank), advanced
+    // locally — rows are disjoint per chunk, destinations are unique.
+    {
+        let counts_ptr = SendPtr(counts.as_mut_ptr());
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let cref = &counts_ptr;
+        let oref = &out_ptr;
+        let offsets: &[usize] = offsets_out;
+        for_each_chunk(nchunks, move |_c, r| {
+            for ci in r {
+                for i in nth_chunk(len, nt, ci) {
+                    let k = keys[i] as usize;
+                    // SAFETY: row ci is owned by this chunk iteration;
+                    // each destination index is written exactly once.
+                    unsafe {
+                        let cur = cref.0.add(ci * num_keys + k);
+                        let pos = offsets[k] + *cur as usize;
+                        *cur += 1;
+                        *oref.0.add(pos) = values[i];
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// In-place inclusive prefix sum over `usize` — the one sequential pass
+/// left in [`stable_counting_scatter`] (a single add-and-store sweep over
+/// `num_keys + 1` slots; the counts, column scan and scatter around it
+/// are parallel). Known Amdahl tradeoff: a chunked usize scan mirroring
+/// `exclusive_prefix_sum_in_place` would remove it if coarse-vertex
+/// counts ever make this pass show up in profiles.
+fn inclusive_prefix_sum_usize(xs: &mut [usize]) {
+    let mut acc = 0usize;
+    for x in xs.iter_mut() {
+        acc += *x;
+        *x = acc;
+    }
+}
+
+/// Find the run starts of the sorted slice `sorted` under `key`, writing
+/// `[0, b_1, …, b_m, sorted.len()]` into `out` (cleared first): each `b`
+/// is an index whose key differs from its predecessor's, and the trailing
+/// sentinel makes `sorted[out[j]..out[j+1]]` bucket `j`. Fully parallel
+/// (counts → prefix → scatter via
+/// [`super::prefix::collect_indices_where_into`]) and deterministic;
+/// `counts` is the per-chunk scratch, so warm calls allocate nothing.
+pub fn bucket_boundaries_in<T: Sync, K: PartialEq>(
+    sorted: &[T],
+    key: impl Fn(&T) -> K + Sync,
+    out: &mut Vec<u32>,
+    counts: &mut Vec<i64>,
+) {
+    super::prefix::collect_indices_where_into(
+        sorted.len(),
+        |i| i == 0 || key(&sorted[i]) != key(&sorted[i - 1]),
+        out,
+        counts,
+    );
+    out.push(sorted.len() as u32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::with_num_threads;
+    use crate::util::Rng;
+
+    #[test]
+    fn counting_scatter_matches_stable_sort() {
+        let mut rng = Rng::new(31);
+        for (n, num_keys) in [(0usize, 1usize), (1, 4), (500, 7), (20_000, 113)] {
+            let keys: Vec<u32> = (0..n).map(|_| rng.next_range(num_keys as u64) as u32).collect();
+            let values: Vec<u32> = (0..n as u32).collect();
+            // Reference: stable sort of (key, index) pairs.
+            let mut pairs: Vec<(u32, u32)> =
+                keys.iter().zip(&values).map(|(&k, &v)| (k, v)).collect();
+            pairs.sort_by_key(|&(k, _)| k);
+            let expect: Vec<u32> = pairs.iter().map(|&(_, v)| v).collect();
+            let mut expect_offsets = vec![0usize; num_keys + 1];
+            for &k in &keys {
+                expect_offsets[k as usize + 1] += 1;
+            }
+            for k in 0..num_keys {
+                expect_offsets[k + 1] += expect_offsets[k];
+            }
+            for nt in [1usize, 2, 4, 8] {
+                with_num_threads(nt, || {
+                    let mut offsets = Vec::new();
+                    let mut out = Vec::new();
+                    let mut scratch = CountingScratch::default();
+                    stable_counting_scatter(
+                        &keys, num_keys, &values, &mut offsets, &mut out, &mut scratch,
+                    );
+                    assert_eq!(offsets, expect_offsets, "n={n} nt={nt}");
+                    assert_eq!(out, expect, "n={n} nt={nt}");
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_boundaries_find_runs() {
+        let sorted = [1u32, 1, 1, 4, 4, 9, 10, 10, 10, 10];
+        let mut counts = Vec::new();
+        for nt in [1usize, 2, 4] {
+            with_num_threads(nt, || {
+                let mut out = Vec::new();
+                bucket_boundaries_in(&sorted, |&x| x, &mut out, &mut counts);
+                assert_eq!(out, vec![0, 3, 5, 6, 10]);
+            });
+        }
+        let empty: [u32; 0] = [];
+        let mut out = Vec::new();
+        bucket_boundaries_in(&empty, |&x| x, &mut out, &mut counts);
+        assert_eq!(out, vec![0]);
+    }
+}

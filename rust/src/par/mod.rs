@@ -16,13 +16,18 @@
 //! `--threads` flag and the scaling benchmark (Fig. 7) control it, and so
 //! tests can assert bit-identical results across different values.
 
+pub mod counting;
 pub mod pool;
 pub mod prefix;
 pub mod sort;
 
+pub use counting::{bucket_boundaries_in, stable_counting_scatter, CountingScratch};
 pub use pool::{
     for_each_chunk, for_each_chunk_mut, map_indexed, num_threads, parallel_reduce,
     set_num_threads, with_num_threads,
 };
-pub use prefix::{exclusive_prefix_sum, exclusive_prefix_sum_in_place};
-pub use sort::{par_sort_by, par_sort_by_key};
+pub use prefix::{
+    collect_indices_where, collect_indices_where_into, exclusive_prefix_sum,
+    exclusive_prefix_sum_in_place,
+};
+pub use sort::{par_sort_by, par_sort_by_key, par_sort_unstable_by_in};

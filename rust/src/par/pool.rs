@@ -56,6 +56,38 @@ pub fn chunk_ranges(len: usize, parts: usize) -> Vec<Range<usize>> {
     out
 }
 
+/// Raw-pointer wrapper asserting cross-thread shareability for the
+/// disjoint-write scatter pattern (chunked compactions, counting sorts,
+/// merge rounds). Soundness is the **call site's** obligation: every
+/// parallel task must write a disjoint index set through the pointer,
+/// and every slot must be written before any read. One audited `unsafe
+/// impl` here replaces per-module copies.
+pub(crate) struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Number of chunks [`chunk_ranges`]`(len, parts)` would produce, without
+/// allocating the range vector.
+#[inline]
+pub fn num_chunks(len: usize, parts: usize) -> usize {
+    if len == 0 {
+        0
+    } else {
+        parts.clamp(1, len)
+    }
+}
+
+/// The `i`-th range of [`chunk_ranges`]`(len, parts)` without allocating.
+/// `i` must be `< num_chunks(len, parts)`.
+#[inline]
+pub fn nth_chunk(len: usize, parts: usize, i: usize) -> Range<usize> {
+    let parts = parts.clamp(1, len.max(1));
+    debug_assert!(i < parts);
+    let base = len / parts;
+    let extra = len % parts;
+    let start = i * base + i.min(extra);
+    start..start + base + usize::from(i < extra)
+}
+
 /// Parallel for over index chunks: `f(chunk_index, range)`.
 ///
 /// `f` must only touch state that is disjoint per chunk or atomically
@@ -63,8 +95,8 @@ pub fn chunk_ranges(len: usize, parts: usize) -> Vec<Range<usize>> {
 pub fn for_each_chunk(len: usize, f: impl Fn(usize, Range<usize>) + Sync) {
     let nt = num_threads();
     if nt <= 1 || len < 2 {
-        for (ci, r) in chunk_ranges(len, 1).into_iter().enumerate() {
-            f(ci, r);
+        if len > 0 {
+            f(0, 0..len);
         }
         return;
     }
@@ -124,10 +156,8 @@ pub fn map_indexed<U: Send>(len: usize, f: impl Fn(usize) -> U + Sync) -> Vec<U>
     }
     {
         let out_slice = out.as_mut_slice();
-        // Disjoint writes per chunk through a raw pointer wrapper.
-        struct Ptr<U>(*mut U);
-        unsafe impl<U> Sync for Ptr<U> {}
-        let ptr = Ptr(out_slice.as_mut_ptr());
+        // Disjoint writes per chunk through the shared raw-pointer wrapper.
+        let ptr = SendPtr(out_slice.as_mut_ptr());
         let pref = &ptr;
         for_each_chunk(len, move |_ci, r| {
             for i in r {
@@ -202,6 +232,19 @@ mod tests {
                     assert_eq!(r.start, expect);
                     assert!(!r.is_empty());
                     expect = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nth_chunk_matches_chunk_ranges() {
+        for len in [0usize, 1, 5, 64, 1000] {
+            for parts in [1usize, 2, 3, 7, 64] {
+                let rs = chunk_ranges(len, parts);
+                assert_eq!(rs.len(), num_chunks(len, parts));
+                for (i, r) in rs.iter().enumerate() {
+                    assert_eq!(nth_chunk(len, parts, i), *r, "len={len} parts={parts} i={i}");
                 }
             }
         }

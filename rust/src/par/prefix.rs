@@ -57,9 +57,7 @@ pub fn exclusive_prefix_sum_in_place(xs: &mut [i64]) -> i64 {
     let total = acc;
     // Phase 3: rewrite each chunk with its offset.
     {
-        struct Ptr(*mut i64);
-        unsafe impl Sync for Ptr {}
-        let ptr = Ptr(xs.as_mut_ptr());
+        let ptr = super::pool::SendPtr(xs.as_mut_ptr());
         let pref = &ptr;
         let chunks_ref = &chunks;
         let offsets_ref = &offsets;
@@ -79,6 +77,88 @@ pub fn exclusive_prefix_sum_in_place(xs: &mut [i64]) -> i64 {
         });
     }
     total
+}
+
+/// Deterministic parallel compaction: collect all `i ∈ [0, len)` with
+/// `pred(i)`, in increasing order. Per-chunk counts, an exclusive prefix
+/// sum over them, then each chunk writes at its offset — the standard
+/// pattern behind boundary-vertex collection, the afterburner's
+/// touched-edge drain and the contraction pipeline's compactions.
+/// Allocating convenience wrapper around [`collect_indices_where_into`].
+pub fn collect_indices_where(len: usize, pred: impl Fn(usize) -> bool + Sync) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut counts = Vec::new();
+    collect_indices_where_into(len, pred, &mut out, &mut counts);
+    out
+}
+
+/// [`collect_indices_where`] into caller-owned buffers: `out` is cleared
+/// and filled with the matching indices, `counts` is the per-chunk
+/// count/offset scratch. With warm buffers this allocates nothing — the
+/// form the contraction hot path uses for bucket boundaries and leader
+/// compaction.
+pub fn collect_indices_where_into(
+    len: usize,
+    pred: impl Fn(usize) -> bool + Sync,
+    out: &mut Vec<u32>,
+    counts: &mut Vec<i64>,
+) {
+    debug_assert!(len <= u32::MAX as usize);
+    let nt = num_threads().max(1);
+    let nchunks = super::pool::num_chunks(len, nt);
+    out.clear();
+    if nchunks <= 1 {
+        for i in 0..len {
+            if pred(i) {
+                out.push(i as u32);
+            }
+        }
+        return;
+    }
+    counts.clear();
+    counts.resize(nchunks, 0);
+    {
+        let pred = &pred;
+        super::pool::for_each_chunk_mut(counts, |start, slots| {
+            for (j, slot) in slots.iter_mut().enumerate() {
+                let mut c = 0i64;
+                for i in super::pool::nth_chunk(len, nt, start + j) {
+                    if pred(i) {
+                        c += 1;
+                    }
+                }
+                *slot = c;
+            }
+        });
+    }
+    let total = exclusive_prefix_sum_in_place(counts);
+    out.reserve(total as usize);
+    // SAFETY: chunk `ci` writes exactly `out[counts[ci]..counts[ci+1]]`
+    // below before any read; ranges are disjoint and cover the vector.
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        out.set_len(total as usize);
+    }
+    {
+        let ptr = super::pool::SendPtr(out.as_mut_ptr());
+        let pref = &ptr;
+        let counts = &*counts;
+        let pred = &pred;
+        super::pool::for_each_chunk(nchunks, move |_c, r| {
+            for ci in r {
+                let mut at = counts[ci] as usize;
+                for i in super::pool::nth_chunk(len, nt, ci) {
+                    if pred(i) {
+                        // SAFETY: disjoint destination ranges per chunk.
+                        unsafe {
+                            std::ptr::write(pref.0.add(at), i as u32);
+                        }
+                        at += 1;
+                    }
+                }
+            }
+        });
+    }
 }
 
 #[cfg(test)]
@@ -111,6 +191,23 @@ mod tests {
                 assert_eq!(p, expect);
                 assert_eq!(t, acc);
             });
+        }
+    }
+
+    #[test]
+    fn collect_indices_matches_sequential_filter() {
+        for len in [0usize, 1, 100, 10_000] {
+            let expect: Vec<u32> = (0..len as u32)
+                .filter(|&i| crate::util::rng::hash64(5, i as u64) % 3 == 0)
+                .collect();
+            for nt in [1usize, 2, 4, 8] {
+                with_num_threads(nt, || {
+                    let got = collect_indices_where(len, |i| {
+                        crate::util::rng::hash64(5, i as u64) % 3 == 0
+                    });
+                    assert_eq!(got, expect, "len={len} nt={nt}");
+                });
+            }
         }
     }
 }

@@ -74,9 +74,7 @@ pub fn par_sort_by<T: Copy + Send + Sync>(
         }
         new_bounds.push(n);
         {
-            struct Ptr<T>(*mut T);
-            unsafe impl<T> Sync for Ptr<T> {}
-            let dptr = Ptr(dst.as_mut_ptr());
+            let dptr = super::pool::SendPtr(dst.as_mut_ptr());
             let src_ref: &[T] = src;
             std::thread::scope(|s| {
                 let dref = &dptr;
@@ -143,6 +141,98 @@ pub fn par_sort_by_key<T: Copy + Send + Sync, K: Ord>(
     par_sort_by(v, move |a, b| key(a).cmp(&key(b)));
 }
 
+/// Allocation-free parallel sort: chunk-local `sort_unstable_by`, then the
+/// same pairwise merge rounds as [`par_sort_by`], with the merge buffer
+/// taken from `scratch` (grown once, reused across calls).
+///
+/// Because the chunk sorts are *unstable* and chunk boundaries move with
+/// the thread count, `cmp` must be a **total order** (no two elements
+/// compare `Equal`) for the result to be identical across thread counts —
+/// the contraction pipeline's sort keys all embed a unique id to satisfy
+/// this. Debug builds assert the output matches for the caller via tests.
+pub fn par_sort_unstable_by_in<T: Copy + Send + Sync>(
+    v: &mut [T],
+    scratch: &mut Vec<T>,
+    cmp: impl Fn(&T, &T) -> Ordering + Send + Sync + Copy,
+) {
+    let n = v.len();
+    let nt = num_threads();
+    if nt <= 1 || n < 8192 {
+        v.sort_unstable_by(cmp);
+        return;
+    }
+    // Phase 1: unstable chunk sorts in parallel.
+    let chunks = chunk_ranges(n, nt);
+    let mut bounds: Vec<usize> = chunks.iter().map(|r| r.start).collect();
+    bounds.push(n);
+    {
+        std::thread::scope(|s| {
+            let mut rest = &mut *v;
+            let mut iter = chunks.iter();
+            let first = iter.next();
+            let mut head0: Option<&mut [T]> = None;
+            if let Some(r) = first {
+                let (h, t) = rest.split_at_mut(r.len());
+                head0 = Some(h);
+                rest = t;
+            }
+            for r in iter {
+                let (h, t) = rest.split_at_mut(r.len());
+                rest = t;
+                s.spawn(move || h.sort_unstable_by(cmp));
+            }
+            if let Some(h) = head0 {
+                h.sort_unstable_by(cmp);
+            }
+        });
+    }
+    // Phase 2: pairwise merge rounds through the caller's scratch buffer.
+    if scratch.len() < n {
+        scratch.resize_with(n, || v[0]);
+    }
+    let scratch = &mut scratch[..n];
+    let mut src_is_v = true;
+    while bounds.len() > 2 {
+        let (src, dst): (&mut [T], &mut [T]) =
+            if src_is_v { (&mut *v, &mut *scratch) } else { (&mut *scratch, &mut *v) };
+        let mut new_bounds = Vec::with_capacity(bounds.len() / 2 + 2);
+        let n_runs = bounds.len() - 1;
+        let mut jobs = Vec::new();
+        let mut i = 0;
+        while i < n_runs {
+            new_bounds.push(bounds[i]);
+            if i + 1 < n_runs {
+                jobs.push((bounds[i], bounds[i + 1], bounds[i + 2]));
+                i += 2;
+            } else {
+                jobs.push((bounds[i], bounds[i + 1], bounds[i + 1]));
+                i += 1;
+            }
+        }
+        new_bounds.push(n);
+        {
+            let dptr = super::pool::SendPtr(dst.as_mut_ptr());
+            let src_ref: &[T] = src;
+            std::thread::scope(|s| {
+                let dref = &dptr;
+                let mut jiter = jobs.iter();
+                let first = jiter.next();
+                for &(lo, mid, hi) in jiter {
+                    s.spawn(move || unsafe { merge_into(src_ref, lo, mid, hi, dref.0, cmp) });
+                }
+                if let Some(&(lo, mid, hi)) = first {
+                    unsafe { merge_into(src_ref, lo, mid, hi, dptr.0, cmp) }
+                }
+            });
+        }
+        bounds = new_bounds;
+        src_is_v = !src_is_v;
+    }
+    if !src_is_v {
+        v.copy_from_slice(scratch);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +251,26 @@ mod tests {
                 with_num_threads(nt, || {
                     let mut got = base.clone();
                     par_sort_by_key(&mut got, |&(k, _)| k);
+                    assert_eq!(got, expect, "n={n} nt={nt}");
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn unstable_in_matches_std_on_total_order() {
+        let mut rng = Rng::new(99);
+        for n in [0usize, 1, 100, 9000, 40_000] {
+            // Unique second component → total order under the full key.
+            let base: Vec<(u32, u32)> =
+                (0..n).map(|i| (rng.next_range(50) as u32, i as u32)).collect();
+            let mut expect = base.clone();
+            expect.sort_unstable();
+            for nt in [1usize, 2, 3, 8] {
+                with_num_threads(nt, || {
+                    let mut got = base.clone();
+                    let mut scratch: Vec<(u32, u32)> = Vec::new();
+                    par_sort_unstable_by_in(&mut got, &mut scratch, |a, b| a.cmp(b));
                     assert_eq!(got, expect, "n={n} nt={nt}");
                 });
             }

@@ -7,6 +7,9 @@
 //! and one set of partition-state backing buffers for the whole
 //! hierarchy, pre-reserved at the finest level's size, so per-level
 //! refinement reuses allocations instead of reallocating (DESIGN.md §2).
+//! Symmetrically, the coarsening phase runs against one
+//! `CoarseningScratch` arena reused across all contraction levels
+//! (DESIGN.md §6).
 
 use crate::config::{Config, RefinementAlgo};
 use crate::datastructures::{Hypergraph, PartitionedHypergraph};
@@ -92,10 +95,19 @@ fn direct_kway(
         }
     });
 
-    // --- Coarsening ---
+    // --- Coarsening (one scratch arena reused across all levels) ---
+    let mut cscratch = crate::coarsening::CoarseningScratch::new();
     let hier = timings.scope("coarsening", || {
-        crate::coarsening::coarsen(hg, communities.as_deref(), &cfg.coarsening, k, cfg.seed)
+        crate::coarsening::coarsen_in(
+            hg,
+            communities.as_deref(),
+            &cfg.coarsening,
+            k,
+            cfg.seed,
+            &mut cscratch,
+        )
     });
+    drop(cscratch);
     let coarsest = hier.coarsest(hg);
     *levels_out = hier.levels.len() + 1;
 
@@ -284,9 +296,11 @@ fn bipartition_multilevel(
     levels_out: &mut usize,
 ) -> Vec<BlockId> {
     let seed = hash64(cfg.seed, depth ^ 0xB1BA);
+    let mut cscratch = crate::coarsening::CoarseningScratch::new();
     let hier = timings.scope("coarsening", || {
-        crate::coarsening::coarsen(hg, None, &cfg.coarsening, 2, seed)
+        crate::coarsening::coarsen_in(hg, None, &cfg.coarsening, 2, seed, &mut cscratch)
     });
+    drop(cscratch);
     let coarsest = hier.coarsest(hg);
     *levels_out = (*levels_out).max(hier.levels.len() + 1);
     let mut part = timings.scope("initial", || {

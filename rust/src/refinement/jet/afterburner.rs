@@ -39,9 +39,12 @@ pub fn afterburner(
 
     let hg = p.hypergraph();
     // Perf: only edges incident to a candidate can contribute; gather
-    // them once (mark-once atomic bitset, drained in id order) instead of
-    // scanning all |E| edges per iteration.
-    let touched = {
+    // them once (mark-once atomic bitset) instead of scanning all |E|
+    // edges per iteration. The drain is fully parallel: per-chunk counts
+    // + an exclusive prefix sum, writing each chunk at its offset — the
+    // same pattern as boundary-vertex collection, replacing the old
+    // sequential O(|E|) bitset sweep.
+    let touched: Vec<EdgeId> = {
         let marks = crate::util::bitset::AtomicBitset::new(hg.num_edges());
         crate::par::for_each_chunk(by_rank.len(), |_c, r| {
             for i in r {
@@ -50,13 +53,7 @@ pub fn afterburner(
                 }
             }
         });
-        let mut v: Vec<EdgeId> = Vec::new();
-        for e in 0..hg.num_edges() {
-            if marks.get(e) {
-                v.push(e as EdgeId);
-            }
-        }
-        v
+        crate::par::collect_indices_where(hg.num_edges(), |e| marks.get(e))
     };
     crate::par::for_each_chunk(touched.len(), |_c, r| {
         // (rank, source, target) triples of moved pins, scratch per chunk.

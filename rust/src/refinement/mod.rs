@@ -159,8 +159,9 @@ pub fn boundary_vertices(p: &PartitionedHypergraph) -> Vec<VertexId> {
 /// [`boundary_vertices`] with a caller-provided mark bitset (reused
 /// across rounds/levels via [`RefinementContext`]). Fully parallel: the
 /// mark phase is the usual atomic mark-once sweep; the collection phase
-/// counts marks per chunk, `exclusive_prefix_sum`s the counts and writes
-/// each chunk at its offset — deterministic by chunk order.
+/// is [`crate::par::collect_indices_where`] — per-chunk counts, an
+/// exclusive prefix sum, per-chunk writes at the prefix offsets —
+/// deterministic by chunk order.
 pub fn boundary_vertices_in(
     p: &PartitionedHypergraph,
     marks: &mut AtomicBitset,
@@ -178,48 +179,7 @@ pub fn boundary_vertices_in(
             }
         }
     });
-    let nt = crate::par::num_threads().max(1);
-    let ranges = crate::par::pool::chunk_ranges(n, nt);
-    let counts: Vec<i64> = crate::par::map_indexed(ranges.len(), |ci| {
-        let mut c = 0i64;
-        for v in ranges[ci].clone() {
-            if marks.get(v) {
-                c += 1;
-            }
-        }
-        c
-    });
-    let (prefix, total) = crate::par::exclusive_prefix_sum(&counts);
-    let mut out: Vec<VertexId> = Vec::with_capacity(total as usize);
-    // SAFETY: every slot is written exactly once below before use — chunk
-    // `ci` fills `out[prefix[ci] .. prefix[ci] + counts[ci]]`.
-    #[allow(clippy::uninit_vec)]
-    unsafe {
-        out.set_len(total as usize);
-    }
-    {
-        struct Ptr(*mut VertexId);
-        unsafe impl Sync for Ptr {}
-        let ptr = Ptr(out.as_mut_ptr());
-        let pref = &ptr;
-        let ranges = &ranges;
-        let prefix = &prefix;
-        crate::par::for_each_chunk(ranges.len(), move |_c, r| {
-            for ci in r {
-                let mut at = prefix[ci] as usize;
-                for v in ranges[ci].clone() {
-                    if marks.get(v) {
-                        // SAFETY: disjoint destination ranges per chunk.
-                        unsafe {
-                            std::ptr::write(pref.0.add(at), v as VertexId);
-                        }
-                        at += 1;
-                    }
-                }
-            }
-        });
-    }
-    out
+    crate::par::collect_indices_where(n, |v| marks.get(v))
 }
 
 /// Deterministic grouped approval: admit candidate moves per target block

@@ -102,6 +102,66 @@ fn prop_journal_and_incremental_km1_match_snapshot_oracle() {
 }
 
 #[test]
+fn prop_csr_contraction_matches_hashmap_oracle_across_threads() {
+    use detpart::coarsening::{cluster_vertices, contract_in, contract_reference, CoarseningScratch};
+    use detpart::datastructures::Hypergraph;
+
+    // Canonical comparison: (pins, weight) per edge in edge-id order —
+    // the CSR pipeline must be *pin-for-pin, weight-for-weight* identical
+    // to the HashMap oracle (same lexicographic edge order).
+    fn edge_list(h: &Hypergraph) -> Vec<(Vec<u32>, i64)> {
+        (0..h.num_edges() as u32)
+            .map(|e| (h.pins(e).to_vec(), h.edge_weight(e)))
+            .collect()
+    }
+
+    fn check(h: &Hypergraph, clusters: &[u32], scratch: &mut CoarseningScratch, tag: &str) {
+        let (c_ref, map_ref) = contract_reference(h, clusters);
+        let ref_edges = edge_list(&c_ref);
+        let ref_weights: Vec<i64> =
+            (0..c_ref.num_vertices() as u32).map(|v| c_ref.vertex_weight(v)).collect();
+        let mut outs = Vec::new();
+        for nt in [1usize, 2, 4] {
+            detpart::par::with_num_threads(nt, || {
+                let (c, map) = contract_in(h, clusters, scratch);
+                c.validate().unwrap();
+                assert_eq!(map, map_ref, "{tag} nt={nt}: fine→coarse map diverged");
+                assert_eq!(edge_list(&c), ref_edges, "{tag} nt={nt}: edges diverged");
+                let w: Vec<i64> =
+                    (0..c.num_vertices() as u32).map(|v| c.vertex_weight(v)).collect();
+                assert_eq!(w, ref_weights, "{tag} nt={nt}: vertex weights diverged");
+                outs.push((map, edge_list(&c)));
+            });
+        }
+        assert!(
+            outs.windows(2).all(|w| w[0] == w[1]),
+            "{tag}: contraction depends on thread count"
+        );
+    }
+
+    let mut scratch = CoarseningScratch::default();
+    let cfg = detpart::config::CoarseningConfig::default();
+    let instances: Vec<(Hypergraph, &str)> = vec![
+        (detpart::gen::sat_hypergraph(220, 700, 7, 13), "sat"),
+        (detpart::gen::vlsi_netlist(13, 1.25, 4), "vlsi"),
+        (detpart::gen::rmat_graph(8, 5, 17), "rmat"),
+    ];
+    for (i, (h, tag)) in instances.iter().enumerate() {
+        // A real clustering, plus the three structural edge cases.
+        let clusters = cluster_vertices(h, None, &cfg, 30, 100 + i as u64);
+        check(h, &clusters, &mut scratch, &format!("{tag}/clustered"));
+        let n = h.num_vertices();
+        let identity: Vec<u32> = (0..n as u32).collect();
+        check(h, &identity, &mut scratch, &format!("{tag}/all-singletons"));
+        let giant = vec![0u32; n];
+        check(h, &giant, &mut scratch, &format!("{tag}/one-giant-cluster"));
+    }
+    // Empty hypergraph.
+    let empty = Hypergraph::new(0, &[], None, None);
+    check(&empty, &[], &mut scratch, "empty");
+}
+
+#[test]
 fn prop_gain_equals_objective_delta() {
     for_random_instances(202, 25, &P, |_seed, hg, rng| {
         let k = rng.next_in(2, 6) as usize;
