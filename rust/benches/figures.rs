@@ -143,6 +143,85 @@ fn contraction_micro() {
     }
 }
 
+/// The PR-3 selection micro: serial oracle vs the unified segmented-
+/// parallel approval pipeline on a realistic Jet candidate set — wall
+/// time and allocations per round (steady state, warm scratch), plus the
+/// selection scratch footprint. Emits `BENCH_refinement.json`.
+fn selection_micro() {
+    use detpart::datastructures::PartitionedHypergraph;
+    use detpart::refinement::select::{self, SelectionScratch};
+    use detpart::util::Timer;
+
+    println!("== micro: move selection (serial oracle vs segmented-parallel core) ==");
+    let n = 30_000usize;
+    let k = 8usize;
+    let h = detpart::gen::sat_hypergraph(n, 90_000, 12, 5);
+    let part: Vec<u32> = (0..n)
+        .map(|v| (detpart::util::rng::hash64(3, v as u64) % k as u64) as u32)
+        .collect();
+    let p = PartitionedHypergraph::new(&h, k, part);
+    let locked = detpart::util::Bitset::new(n);
+    let cands = detpart::refinement::jet::candidates::collect_candidates(
+        &p, &locked, 0.75, None,
+    );
+    // Tight budgets so the cutoffs actually bind.
+    let lmax: Vec<i64> = (0..k as u32).map(|b| p.block_weight(b) + n as i64 / 64).collect();
+    p.commit_journal();
+    let reps = 10usize;
+
+    // Serial oracle (the retained reference): sequential sort + budget
+    // walk + copy-vector apply.
+    alloc_counter::reset_epoch();
+    let t = Timer::start();
+    let mut n_serial = 0usize;
+    for _ in 0..reps {
+        n_serial = select::approve_and_apply_serial(&p, cands.clone(), &lmax).len();
+        p.revert_journal();
+    }
+    let serial_ms = t.elapsed_s() * 1e3 / reps as f64;
+    let serial_allocs = alloc_counter::allocs() / reps as u64;
+
+    // Parallel pipeline, warm scratch (steady state of the uncoarsening
+    // loop: stage → sort → segments → segmented prefix → cutoffs →
+    // compaction → zero-copy bulk apply).
+    let mut scratch = SelectionScratch::default();
+    scratch.stage(&cands);
+    let _ = select::approve_and_apply_in(&p, &lmax, &mut scratch); // warmup sizes the arenas
+    p.revert_journal();
+    alloc_counter::reset_epoch();
+    let t = Timer::start();
+    let mut n_parallel = 0usize;
+    for _ in 0..reps {
+        scratch.stage(&cands);
+        n_parallel = select::approve_and_apply_in(&p, &lmax, &mut scratch).len();
+        p.revert_journal();
+    }
+    let parallel_ms = t.elapsed_s() * 1e3 / reps as f64;
+    let parallel_allocs = alloc_counter::allocs() / reps as u64;
+    let scratch_bytes = scratch.memory_bytes();
+    assert_eq!(n_serial, n_parallel, "selection pipelines disagree");
+
+    println!(
+        "  {} candidates → {} approved | serial {serial_ms:.3} ms, {serial_allocs} allocs | parallel {parallel_ms:.3} ms, {parallel_allocs} allocs ({:.1}x) | scratch {} KiB | {} threads",
+        cands.len(),
+        n_parallel,
+        serial_ms / parallel_ms.max(1e-9),
+        scratch_bytes / 1024,
+        detpart::par::num_threads(),
+    );
+    let json = format!(
+        "{{\"bench\":\"refinement-selection\",\"instance\":\"sat-30k\",\"threads\":{},\"reps\":{reps},\"candidates\":{},\"approved\":{},\"serial_ms\":{serial_ms:.4},\"parallel_ms\":{parallel_ms:.4},\"serial_allocs\":{serial_allocs},\"parallel_allocs\":{parallel_allocs},\"scratch_bytes\":{scratch_bytes}}}\n",
+        detpart::par::num_threads(),
+        cands.len(),
+        n_parallel,
+    );
+    let path = "BENCH_refinement.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+}
+
 fn micro_benchmarks() {
     use detpart::config::JetConfig;
     use detpart::datastructures::PartitionedHypergraph;
@@ -270,17 +349,21 @@ fn main() {
         figures::run_all(&ctx);
         micro_benchmarks();
         contraction_micro();
+        selection_micro();
         return;
     }
     for name in names {
         if name == "micro" {
             micro_benchmarks();
             contraction_micro();
+            selection_micro();
         } else if name == "contraction" {
             contraction_micro();
+        } else if name == "selection" {
+            selection_micro();
         } else if !figures::run_by_name(&ctx, name) {
             eprintln!(
-                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, all"
+                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, selection, all"
             );
             std::process::exit(1);
         }

@@ -56,6 +56,15 @@ impl AffinityBuffer {
         &self.touched
     }
 
+    /// Sort the touched list ascending in place, so
+    /// [`touched`](Self::touched) yields the deterministic iteration
+    /// order the candidate scans need — without the per-vertex `to_vec`
+    /// + sort they used to pay.
+    #[inline]
+    pub fn sort_touched(&mut self) {
+        self.touched.sort_unstable();
+    }
+
     pub fn reset(&mut self) {
         for &b in &self.touched {
             self.values[b as usize] = 0;
@@ -460,9 +469,22 @@ impl<'a> PartitionedHypergraph<'a> {
     /// Apply a batch of moves in parallel. Each vertex may appear at most
     /// once; the final state is interleaving-independent.
     pub fn apply_moves(&self, moves: &[(VertexId, BlockId)]) {
-        crate::par::for_each_chunk(moves.len(), |_c, r| {
+        self.apply_moves_with(moves.len(), |i| moves[i]);
+    }
+
+    /// Bulk-apply `len` moves produced by `f(i)` — the zero-copy form the
+    /// selection pipeline uses to feed `MoveCandidate` slices straight
+    /// into the engine without materializing a `(vertex, target)` vector.
+    /// Same determinism contract as [`apply_moves`](Self::apply_moves):
+    /// the final state is interleaving-independent.
+    pub fn apply_moves_with(
+        &self,
+        len: usize,
+        f: impl Fn(usize) -> (VertexId, BlockId) + Sync,
+    ) {
+        crate::par::for_each_chunk(len, |_c, r| {
             for i in r {
-                let (v, t) = moves[i];
+                let (v, t) = f(i);
                 self.apply_move(v, t);
             }
         });

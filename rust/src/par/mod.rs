@@ -28,6 +28,6 @@ pub use pool::{
 };
 pub use prefix::{
     collect_indices_where, collect_indices_where_into, exclusive_prefix_sum,
-    exclusive_prefix_sum_in_place,
+    exclusive_prefix_sum_in_place, segmented_inclusive_prefix_sum_in_place,
 };
 pub use sort::{par_sort_by, par_sort_by_key, par_sort_unstable_by_in};

@@ -79,6 +79,118 @@ pub fn exclusive_prefix_sum_in_place(xs: &mut [i64]) -> i64 {
     total
 }
 
+/// In-place **segmented inclusive** prefix sum: for every segment
+/// `bounds[j]..bounds[j+1]` independently, `xs[i]` becomes
+/// `sum(xs[bounds[j]..=i])`. `bounds` is the
+/// [`super::counting::bucket_boundaries_in`] format — ascending, starting
+/// at 0, ending at `xs.len()` — so a sorted candidate array's per-target
+/// segments feed straight in. This is the selection pipeline's workhorse
+/// (`refinement::select`): per-target budget cutoffs binary-search these
+/// monotone per-segment prefixes.
+///
+/// Chunked three-phase scan, exact integer arithmetic, all combination in
+/// chunk index order — the result is a pure function of `(xs, bounds)`
+/// for every thread count.
+pub fn segmented_inclusive_prefix_sum_in_place(xs: &mut [i64], bounds: &[u32]) {
+    let n = xs.len();
+    debug_assert_eq!(*bounds.last().unwrap_or(&0) as usize, n);
+    debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+    if n == 0 {
+        return;
+    }
+    debug_assert_eq!(bounds[0], 0);
+    let nt = num_threads();
+    if nt <= 1 || n < 4096 {
+        for w in bounds.windows(2) {
+            let mut acc = 0i64;
+            for x in xs[w[0] as usize..w[1] as usize].iter_mut() {
+                acc += *x;
+                *x = acc;
+            }
+        }
+        return;
+    }
+    let chunks = chunk_ranges(n, nt);
+    let nchunks = chunks.len();
+    // Phase 1: local inclusive scans per chunk, restarting at every
+    // boundary inside the chunk; record each chunk's tail sum (since its
+    // last restart, or since its start if none).
+    let mut tails = vec![0i64; nchunks];
+    {
+        let xs_ptr = super::pool::SendPtr(xs.as_mut_ptr());
+        let xref = &xs_ptr;
+        let chunks_ref = &chunks;
+        super::pool::for_each_chunk_mut(&mut tails, move |start, slots| {
+            for (j, tail) in slots.iter_mut().enumerate() {
+                let r = chunks_ref[start + j].clone();
+                // First boundary strictly inside the chunk (boundaries at
+                // the chunk start are no-op resets: acc starts at 0).
+                let mut bi = bounds.partition_point(|&b| (b as usize) <= r.start);
+                let mut acc = 0i64;
+                for i in r {
+                    if bi < bounds.len() && bounds[bi] as usize == i {
+                        acc = 0;
+                        while bi < bounds.len() && bounds[bi] as usize == i {
+                            bi += 1;
+                        }
+                    }
+                    // SAFETY: chunk ranges are disjoint index sets.
+                    unsafe {
+                        let p = xref.0.add(i);
+                        acc += *p;
+                        *p = acc;
+                    }
+                }
+                *tail = acc;
+            }
+        });
+    }
+    // Phase 2: sequential carry scan over the (few) chunks. The carry
+    // into chunk c is the sum of its first segment's elements that live
+    // in earlier chunks; a boundary at or before a chunk's end resets it.
+    let mut carries = vec![0i64; nchunks];
+    let mut carry = 0i64;
+    for (c, r) in chunks.iter().enumerate() {
+        carries[c] = carry;
+        // Largest boundary in (start, end] if any: the chunk's last
+        // segment starts there, so the outgoing carry is the tail since
+        // it (zero when the boundary is exactly the chunk end).
+        let hi = bounds.partition_point(|&b| (b as usize) <= r.end);
+        let lastb = bounds[hi - 1] as usize;
+        if lastb > r.start {
+            carry = if lastb == r.end { 0 } else { tails[c] };
+        } else {
+            carry += tails[c];
+        }
+    }
+    // Phase 3: each chunk adds its carry to the head positions belonging
+    // to the segment that started in an earlier chunk.
+    {
+        let xs_ptr = super::pool::SendPtr(xs.as_mut_ptr());
+        let xref = &xs_ptr;
+        let chunks_ref = &chunks;
+        let carries_ref = &carries;
+        for_each_chunk(nchunks, move |_c, cr| {
+            for ci in cr {
+                let add = carries_ref[ci];
+                if add == 0 {
+                    continue;
+                }
+                let r = chunks_ref[ci].clone();
+                let firstb = bounds.partition_point(|&b| (b as usize) <= r.start);
+                let head_end =
+                    bounds.get(firstb).map_or(r.end, |&b| (b as usize).min(r.end));
+                for i in r.start..head_end {
+                    // SAFETY: chunk head ranges are disjoint index sets.
+                    unsafe {
+                        *xref.0.add(i) += add;
+                    }
+                }
+            }
+        });
+    }
+}
+
 /// Deterministic parallel compaction: collect all `i ∈ [0, len)` with
 /// `pred(i)`, in increasing order. Per-chunk counts, an exclusive prefix
 /// sum over them, then each chunk writes at its offset — the standard
@@ -192,6 +304,60 @@ mod tests {
                 assert_eq!(t, acc);
             });
         }
+    }
+
+    #[test]
+    fn segmented_prefix_matches_sequential_reference() {
+        // Random values with random segment boundaries (including empty
+        // segments), across thread counts and sizes straddling the
+        // serial-path threshold.
+        for (len, nseg) in [(0usize, 0usize), (1, 1), (100, 7), (5000, 3), (20_000, 257), (20_000, 1)] {
+            let xs: Vec<i64> =
+                (0..len).map(|i| ((i * 7919) % 113) as i64 - 56).collect();
+            let mut bounds: Vec<u32> = vec![0];
+            for j in 1..nseg {
+                bounds.push((crate::util::rng::hash64(9, j as u64) % (len as u64 + 1)) as u32);
+            }
+            bounds.push(len as u32);
+            bounds.sort_unstable();
+            // Sequential reference.
+            let mut expect = xs.clone();
+            for w in bounds.windows(2) {
+                let mut acc = 0i64;
+                for x in expect[w[0] as usize..w[1] as usize].iter_mut() {
+                    acc += *x;
+                    *x = acc;
+                }
+            }
+            for nt in [1usize, 2, 3, 4, 8] {
+                with_num_threads(nt, || {
+                    let mut got = xs.clone();
+                    segmented_inclusive_prefix_sum_in_place(&mut got, &bounds);
+                    assert_eq!(got, expect, "len={len} nseg={nseg} nt={nt}");
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_prefix_boundary_at_chunk_edges() {
+        // Segments aligned exactly to chunk edges exercise the carry
+        // reset cases (boundary == chunk start / chunk end).
+        let len = 16_384usize;
+        let xs: Vec<i64> = (0..len).map(|i| (i % 10) as i64 + 1).collect();
+        with_num_threads(4, || {
+            let quarter = (len / 4) as u32;
+            let bounds = vec![0, quarter, 2 * quarter, 3 * quarter, len as u32];
+            let mut got = xs.clone();
+            segmented_inclusive_prefix_sum_in_place(&mut got, &bounds);
+            for (s, seg) in bounds.windows(2).enumerate() {
+                let mut acc = 0i64;
+                for i in seg[0] as usize..seg[1] as usize {
+                    acc += xs[i];
+                    assert_eq!(got[i], acc, "segment {s} index {i}");
+                }
+            }
+        });
     }
 
     #[test]

@@ -117,12 +117,14 @@ fn direct_kway(
     });
 
     // One scratch arena for the whole uncoarsening, pre-reserved at the
-    // finest level's dimensions so no level reallocates.
+    // finest level's dimensions so no level reallocates — including the
+    // selection pipeline's candidate arena and vertex→rank map.
     let mut ctx = RefinementContext::new(k, hg.num_vertices());
     {
         let mut scratch = ctx.take_partition_scratch();
         scratch.reserve_for(hg, k);
         ctx.put_partition_scratch(scratch);
+        ctx.selection_mut().reserve(hg.num_vertices(), hg.num_edges());
     }
 
     // Refine at the coarsest level, then uncoarsen level by level.

@@ -51,7 +51,8 @@ pub fn refine_pair(
 
 /// [`refine_pair`] taking terminal-membership scratch from a shared
 /// buffer pool (safe from parallel callers — the pool only recycles
-/// allocations, all state is re-initialized here).
+/// allocations, all state is re-initialized here; the RAII guards return
+/// the buffers on every exit path, including panics).
 #[allow(clippy::too_many_arguments)]
 pub fn refine_pair_in(
     p: &PartitionedHypergraph,
@@ -206,8 +207,8 @@ pub fn refine_pair_in(
             PairResult { improved: moved > 0, moved_vertices: moved, old_cut, new_cut }
         }
     };
-    pool.put(in_s);
-    pool.put(in_t);
+    // `in_s` / `in_t` return to the pool when their guards drop — even
+    // if a panic unwinds through this refinement.
     result
 }
 

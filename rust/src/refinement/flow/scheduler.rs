@@ -46,6 +46,10 @@ pub fn refine_kway_flows_in(
     let before = p.km1();
     let mut active = vec![true; k];
     let mut rounds_without_improvement = 0usize;
+    // Per-matching-round scratch, hoisted out of the loops and reused.
+    let mut deg = vec![0usize; k];
+    let mut matched_block = vec![false; k];
+    let mut matching: Vec<(BlockId, BlockId)> = Vec::new();
 
     for round in 0..cfg.max_rounds {
         let q = QuotientGraph::build(p);
@@ -60,28 +64,35 @@ pub fn refine_kway_flows_in(
         let mut improved_blocks = vec![false; k];
         while !remaining.is_empty() {
             // Degrees in the remaining quotient graph.
-            let mut deg = vec![0usize; k];
+            deg.fill(0);
             for &(i, j) in &remaining {
                 deg[i as usize] += 1;
                 deg[j as usize] += 1;
             }
             // High-degree-first greedy maximal matching (deterministic:
-            // sorted by (max-degree desc, cut weight desc, ids)).
-            let mut order = remaining.clone();
-            order.sort_by_key(|&(i, j)| {
+            // sorted by (max-degree desc, cut weight desc, ids) — a total
+            // order, edges are unique). Sorting `remaining` in place is
+            // fine: the next iteration re-sorts under fresh degrees.
+            remaining.sort_unstable_by_key(|&(i, j)| {
                 let d = deg[i as usize].max(deg[j as usize]);
                 let w = q.cut_weight(i, j);
                 (std::cmp::Reverse(d), std::cmp::Reverse(w), i, j)
             });
-            let mut matched_block = vec![false; k];
-            let mut matching: Vec<(BlockId, BlockId)> = Vec::new();
-            for &(i, j) in &order {
+            // One ordered pass both selects the matching and filters it
+            // out of `remaining` in place, via the matched-block flags —
+            // no cloned order vector, no hash-set membership pass.
+            matched_block.fill(false);
+            matching.clear();
+            remaining.retain(|&(i, j)| {
                 if !matched_block[i as usize] && !matched_block[j as usize] {
                     matched_block[i as usize] = true;
                     matched_block[j as usize] = true;
                     matching.push((i, j));
+                    false // scheduled now → drop from the remaining set
+                } else {
+                    true
                 }
-            }
+            });
             // Run the matching in parallel (blocks are disjoint, so the
             // concurrent two-way refinements touch disjoint vertex sets);
             // results are per-pair deterministic, synchronize after.
@@ -104,9 +115,6 @@ pub fn refine_kway_flows_in(
                     improved_blocks[j as usize] = true;
                 }
             }
-            let in_matching: std::collections::HashSet<(BlockId, BlockId)> =
-                matching.into_iter().collect();
-            remaining.retain(|e| !in_matching.contains(e));
         }
         if improved_blocks.iter().any(|&b| b) {
             rounds_without_improvement = 0;

@@ -10,103 +10,175 @@
 //! Specialized paths handle `|e ∩ M| ∈ {1,2,3}` without sorting — the
 //! dominant cases in practice.
 
+use super::super::select::{retain_map_in, SelectionScratch};
 use super::super::MoveCandidate;
 use crate::datastructures::PartitionedHypergraph;
 use crate::{BlockId, EdgeId};
 use std::sync::atomic::{AtomicI64, Ordering};
 
 /// Filter `candidates` through the afterburner; returns the surviving
-/// moves with their recomputed gains, in rank order.
+/// moves with their recomputed gains, in rank order. Convenience wrapper
+/// allocating a throwaway scratch — the Jet driver uses
+/// [`afterburner_in`] with the level-shared selection arena.
 pub fn afterburner(
     p: &PartitionedHypergraph,
     candidates: &[MoveCandidate],
 ) -> Vec<MoveCandidate> {
-    let n = p.hypergraph().num_vertices();
-    if candidates.is_empty() {
-        return Vec::new();
-    }
-    // Rank candidates by the FM-like execution order.
-    let mut by_rank: Vec<MoveCandidate> = candidates.to_vec();
-    crate::par::par_sort_by_key(&mut by_rank, |c| (-c.gain, c.vertex));
-    // vertex → rank (u32::MAX = not a candidate).
-    let mut rank_of = vec![u32::MAX; n];
-    for (r, c) in by_rank.iter().enumerate() {
-        rank_of[c.vertex as usize] = r as u32;
-    }
+    let mut scratch = SelectionScratch::default();
+    afterburner_in(p, candidates, &mut scratch).to_vec()
+}
 
-    // Recomputed gain accumulators, indexed by rank.
-    let recomputed: Vec<AtomicI64> = (0..by_rank.len()).map(|_| AtomicI64::new(0)).collect();
-
+/// [`afterburner`] drawing every buffer (rank arena, sort scratch,
+/// vertex→rank map, recomputed-gain accumulators, touched-edge marks and
+/// list) from the caller's [`SelectionScratch`] — allocation-free with
+/// warm buffers. The survivors land in the scratch arena, ready for the
+/// driver's bulk apply; the vertex→rank map uses a sparse-reset
+/// discipline (only candidate slots are written and cleared, never the
+/// full array).
+pub fn afterburner_in<'a>(
+    p: &PartitionedHypergraph,
+    candidates: &[MoveCandidate],
+    s: &'a mut SelectionScratch,
+) -> &'a [MoveCandidate] {
     let hg = p.hypergraph();
+    let n = hg.num_vertices();
+    s.arena.clear();
+    if candidates.is_empty() {
+        return &s.arena;
+    }
+    // Rank candidates by the FM-like execution order (gain desc, vertex
+    // asc — vertices are unique, so the key is a total order).
+    s.arena.extend_from_slice(candidates);
+    crate::par::par_sort_unstable_by_in(&mut s.arena, &mut s.aux, |a, b| {
+        b.gain.cmp(&a.gain).then(a.vertex.cmp(&b.vertex))
+    });
+    let m = s.arena.len();
+    // vertex → rank (u32::MAX = not a candidate); candidate vertices are
+    // unique → disjoint writes.
+    if s.rank_of.len() < n {
+        s.rank_of.resize(n, u32::MAX);
+    }
+    {
+        let arena = &s.arena;
+        let ptr = crate::par::pool::SendPtr(s.rank_of.as_mut_ptr());
+        let pref = &ptr;
+        crate::par::for_each_chunk(m, move |_c, r| {
+            for i in r {
+                // SAFETY: one write per unique candidate vertex.
+                unsafe {
+                    *pref.0.add(arena[i].vertex as usize) = i as u32;
+                }
+            }
+        });
+    }
+    // Recomputed gain accumulators, indexed by rank (zeroed prefix).
+    if s.recomputed.len() < m {
+        s.recomputed.resize_with(m, || AtomicI64::new(0));
+    }
+    crate::par::for_each_chunk_mut(&mut s.recomputed[..m], |_start, slots| {
+        for a in slots {
+            *a.get_mut() = 0;
+        }
+    });
     // Perf: only edges incident to a candidate can contribute; gather
     // them once (mark-once atomic bitset) instead of scanning all |E|
     // edges per iteration. The drain is fully parallel: per-chunk counts
     // + an exclusive prefix sum, writing each chunk at its offset — the
-    // same pattern as boundary-vertex collection, replacing the old
-    // sequential O(|E|) bitset sweep.
-    let touched: Vec<EdgeId> = {
-        let marks = crate::util::bitset::AtomicBitset::new(hg.num_edges());
-        crate::par::for_each_chunk(by_rank.len(), |_c, r| {
+    // same pattern as boundary-vertex collection.
+    s.edge_marks.reset(hg.num_edges());
+    {
+        let marks = &s.edge_marks;
+        let arena = &s.arena;
+        crate::par::for_each_chunk(m, |_c, r| {
             for i in r {
-                for &e in hg.incident_edges(by_rank[i].vertex) {
+                for &e in hg.incident_edges(arena[i].vertex) {
                     marks.test_and_set(e as usize);
                 }
             }
         });
-        crate::par::collect_indices_where(hg.num_edges(), |e| marks.get(e))
-    };
-    crate::par::for_each_chunk(touched.len(), |_c, r| {
-        // (rank, source, target) triples of moved pins, scratch per chunk.
-        let mut moved: Vec<(u32, BlockId, BlockId)> = Vec::new();
-        for ei in r {
-            let e = touched[ei];
-            moved.clear();
-            for &v in hg.pins(e) {
-                let rk = rank_of[v as usize];
-                if rk != u32::MAX {
-                    let c = &by_rank[rk as usize];
-                    moved.push((rk, p.part(v), c.target));
-                }
-            }
-            match moved.len() {
-                0 => {}
-                1 => simulate_1(p, e, moved[0], &recomputed),
-                2 => {
-                    if moved[0].0 > moved[1].0 {
-                        moved.swap(0, 1);
-                    }
-                    simulate_general(p, e, &moved, &recomputed);
-                }
-                3 => {
-                    // 3-element sorting network.
-                    if moved[0].0 > moved[1].0 {
-                        moved.swap(0, 1);
-                    }
-                    if moved[1].0 > moved[2].0 {
-                        moved.swap(1, 2);
-                    }
-                    if moved[0].0 > moved[1].0 {
-                        moved.swap(0, 1);
-                    }
-                    simulate_general(p, e, &moved, &recomputed);
-                }
-                _ => {
-                    moved.sort_unstable_by_key(|&(rk, _, _)| rk);
-                    simulate_general(p, e, &moved, &recomputed);
-                }
-            }
-        }
-    });
-
-    // Keep positive recomputed gains, in rank order.
-    let mut out = Vec::new();
-    for (rk, c) in by_rank.iter().enumerate() {
-        let g = recomputed[rk].load(Ordering::Relaxed);
-        if g > 0 {
-            out.push(MoveCandidate { vertex: c.vertex, target: c.target, gain: g });
-        }
     }
-    out
+    {
+        let marks = &s.edge_marks;
+        crate::par::collect_indices_where_into(
+            hg.num_edges(),
+            |e| marks.get(e),
+            &mut s.touched,
+            &mut s.counts,
+        );
+    }
+    {
+        let touched: &[EdgeId] = &s.touched;
+        let rank_of: &[u32] = &s.rank_of;
+        let by_rank: &[MoveCandidate] = &s.arena;
+        let recomputed: &[AtomicI64] = &s.recomputed[..m];
+        crate::par::for_each_chunk(touched.len(), |_c, r| {
+            // (rank, source, target) triples of moved pins, per-chunk
+            // stack scratch (≤ threads tiny vectors per call).
+            let mut moved: Vec<(u32, BlockId, BlockId)> = Vec::new();
+            for ei in r {
+                let e = touched[ei];
+                moved.clear();
+                for &v in hg.pins(e) {
+                    let rk = rank_of[v as usize];
+                    if rk != u32::MAX {
+                        let c = &by_rank[rk as usize];
+                        moved.push((rk, p.part(v), c.target));
+                    }
+                }
+                match moved.len() {
+                    0 => {}
+                    1 => simulate_1(p, e, moved[0], recomputed),
+                    2 => {
+                        if moved[0].0 > moved[1].0 {
+                            moved.swap(0, 1);
+                        }
+                        simulate_general(p, e, &moved, recomputed);
+                    }
+                    3 => {
+                        // 3-element sorting network.
+                        if moved[0].0 > moved[1].0 {
+                            moved.swap(0, 1);
+                        }
+                        if moved[1].0 > moved[2].0 {
+                            moved.swap(1, 2);
+                        }
+                        if moved[0].0 > moved[1].0 {
+                            moved.swap(0, 1);
+                        }
+                        simulate_general(p, e, &moved, recomputed);
+                    }
+                    _ => {
+                        moved.sort_unstable_by_key(|&(rk, _, _)| rk);
+                        simulate_general(p, e, &moved, recomputed);
+                    }
+                }
+            }
+        });
+    }
+    // Sparse-reset the vertex → rank map (before compaction, while the
+    // full rank order is still in the arena).
+    {
+        let arena = &s.arena;
+        let ptr = crate::par::pool::SendPtr(s.rank_of.as_mut_ptr());
+        let pref = &ptr;
+        crate::par::for_each_chunk(m, move |_c, r| {
+            for i in r {
+                // SAFETY: one write per unique candidate vertex.
+                unsafe {
+                    *pref.0.add(arena[i].vertex as usize) = u32::MAX;
+                }
+            }
+        });
+    }
+    // Keep positive recomputed gains, in rank order (order-preserving
+    // parallel compaction through the resident ping-pong buffer).
+    let recomputed = std::mem::take(&mut s.recomputed);
+    retain_map_in(s, |rk, c| {
+        let g = recomputed[rk].load(Ordering::Relaxed);
+        (g > 0).then_some(MoveCandidate { vertex: c.vertex, target: c.target, gain: g })
+    });
+    s.recomputed = recomputed;
+    &s.arena
 }
 
 /// `|e ∩ M| = 1`: the simulated gain equals the static gain contribution.

@@ -151,8 +151,8 @@ fn collect_native(
     let nt = crate::par::num_threads().max(1);
     let ranges = crate::par::pool::chunk_ranges(boundary.len(), nt);
     let n_chunks = ranges.len();
-    let (bufs, chunk_outs) = ctx.scan_scratch(n_chunks);
     {
+        let (bufs, chunk_outs) = ctx.scan_scratch(n_chunks);
         let boundary = &boundary;
         let slots: Vec<_> =
             chunk_outs.iter_mut().zip(bufs.iter_mut()).zip(ranges).collect();
@@ -168,11 +168,11 @@ fn collect_native(
                         let (w_total, benefit, internal) = p.collect_affinities(v, buf);
                         let leave_cost = w_total - benefit;
                         // First maximum over ascending block id == kernel
-                        // argmax semantics.
+                        // argmax semantics (sorted in place — no per-vertex
+                        // allocation).
+                        buf.sort_touched();
                         let mut best: Option<(Weight, BlockId)> = None;
-                        let mut touched: Vec<BlockId> = buf.touched().to_vec();
-                        touched.sort_unstable();
-                        for &b in &touched {
+                        for &b in buf.touched() {
                             let gain = buf.get(b) - leave_cost;
                             if best.map_or(true, |(bg, _)| gain > bg) {
                                 best = Some((gain, b));
@@ -191,10 +191,9 @@ fn collect_native(
             }
         });
     }
-    // Concatenate in chunk order → deterministic.
-    for c in chunk_outs.iter_mut() {
-        out.append(c);
-    }
+    // Flatten in chunk order at chunked-prefix offsets — the parallel,
+    // deterministic replacement for the old sequential `append` loop.
+    ctx.flatten_chunks_to(n_chunks, out);
 }
 
 /// Tile-based path: same outputs, dispatched through a [`TileSelector`].

@@ -21,10 +21,10 @@
 //! mode (Mt-KaHyPar-Default stand-in): moves apply immediately in a
 //! seed-shuffled order — same gain machinery, racy semantics.
 
-use super::afterburner::afterburner;
+use super::afterburner::afterburner_in;
 use super::candidates::{collect_candidates_in, TileSelector};
 use super::rebalance::rebalance_with_priority_in;
-use super::super::RefinementContext;
+use super::super::{select, RefinementContext};
 use crate::config::JetConfig;
 use crate::datastructures::PartitionedHypergraph;
 use crate::util::rng::hash64;
@@ -126,22 +126,36 @@ fn run_temperature(
     for _iter in 0..cfg.max_iterations {
         stats.iterations += 1;
         collect_candidates_in(p, &locked, tau, selector, ctx, &mut candidates);
-        let moves = if cfg.use_afterburner {
-            afterburner(p, &candidates)
-        } else {
-            candidates.iter().copied().filter(|c| c.gain > 0).collect()
+        // Route the move flow through the shared selection arena: the
+        // afterburner (or the positive-gain filter) leaves the surviving
+        // moves staged there, and the bulk apply feeds them to the
+        // engine without an intermediate `(vertex, target)` copy vector.
+        let n_moved = {
+            let moves = if cfg.use_afterburner {
+                afterburner_in(p, &candidates, ctx.selection_mut())
+            } else {
+                let sel = ctx.selection_mut();
+                sel.stage(&candidates);
+                select::filter_positive_in(sel);
+                sel.staged()
+            };
+            if moves.is_empty() {
+                0
+            } else {
+                // Unconstrained synchronous execution (may violate
+                // balance).
+                p.apply_moves_with(moves.len(), |i| (moves[i].vertex, moves[i].target));
+                // Lock moved vertices for the next iteration
+                // (oscillation guard).
+                locked.clear();
+                for m in moves {
+                    locked.set(m.vertex as usize);
+                }
+                moves.len()
+            }
         };
-        if moves.is_empty() {
+        if n_moved == 0 {
             break;
-        }
-        // Unconstrained synchronous execution (may violate balance).
-        let batch: Vec<(VertexId, BlockId)> =
-            moves.iter().map(|m| (m.vertex, m.target)).collect();
-        p.apply_moves(&batch);
-        // Lock moved vertices for the next iteration (oscillation guard).
-        locked.clear();
-        for &(v, _) in &batch {
-            locked.set(v as usize);
         }
         // Repair balance.
         if !p.is_balanced(eps) {

@@ -7,30 +7,26 @@
 //! * priority includes the vertex weight: `gain(v)/c(v)` for negative
 //!   gains, `gain(v)·c(v)` for positive (higher = better) — compared with
 //!   exact integer cross-multiplication, no floats;
-//! * selection is a deterministic parallel sort + prefix sum + binary
-//!   search instead of Jet's bucket ordering (whose final-bucket subset
-//!   is non-deterministic);
+//! * selection is the unified deterministic pipeline
+//!   ([`crate::refinement::select::shed_and_apply_in`]: parallel sort,
+//!   segmented prefix sum, binary-search cutoff) instead of Jet's bucket
+//!   ordering (whose final-bucket subset is non-deterministic) — and
+//!   instead of the per-block sort + weight-vector + prefix-sum pipeline
+//!   with fresh `Vec`s this module used to re-derive each round;
 //! * a *deadzone* of size `d·ε·⌈c(V)/k⌉` below `L_max` keeps just-fixed
 //!   blocks from being refilled (targets inside it are ineligible);
 //! * vertices with `c(v) > 3/2·(c(V_b) − ⌈c(V)/k⌉)` are never moved.
 
-use super::super::RefinementContext;
-use crate::datastructures::PartitionedHypergraph;
+use super::super::{select, MoveCandidate, RefinementContext};
+use crate::datastructures::{Hypergraph, PartitionedHypergraph};
 use crate::{BlockId, VertexId, Weight};
 use std::cmp::Ordering;
 
-/// One shed candidate.
-#[derive(Clone, Copy, Debug)]
-struct RebalanceMove {
-    vertex: VertexId,
-    target: BlockId,
-    gain: Weight,
-    weight: Weight,
-}
-
 /// Descending priority order (then ascending id): positive gains first
 /// (larger `g·c` first), then zero, then negative (larger `g/c` first).
-fn priority_cmp(a: &RebalanceMove, b: &RebalanceMove) -> Ordering {
+/// Weights come straight from the hypergraph — candidates carry only
+/// `(vertex, target, gain)`, the selection core's shared currency.
+fn priority_cmp(hg: &Hypergraph, a: &MoveCandidate, b: &MoveCandidate) -> Ordering {
     let class = |g: Weight| -> u8 {
         match g.cmp(&0) {
             Ordering::Greater => 2,
@@ -42,17 +38,18 @@ fn priority_cmp(a: &RebalanceMove, b: &RebalanceMove) -> Ordering {
     if ca != cb {
         return cb.cmp(&ca); // higher class first
     }
+    let (wa, wb) = (hg.vertex_weight(a.vertex), hg.vertex_weight(b.vertex));
     let ord = match ca {
         2 => {
             // gain·c, larger first — exact in i128.
-            let pa = a.gain as i128 * a.weight as i128;
-            let pb = b.gain as i128 * b.weight as i128;
+            let pa = a.gain as i128 * wa as i128;
+            let pb = b.gain as i128 * wb as i128;
             pb.cmp(&pa)
         }
         0 => {
             // gain/c, larger first ⟺ a.g·b.c > b.g·a.c (weights > 0).
-            let pa = a.gain as i128 * b.weight as i128;
-            let pb = b.gain as i128 * a.weight as i128;
+            let pa = a.gain as i128 * wb as i128;
+            let pb = b.gain as i128 * wa as i128;
             pb.cmp(&pa)
         }
         _ => Ordering::Equal,
@@ -79,8 +76,10 @@ pub fn rebalance_with_priority(
     rebalance_with_priority_in(p, eps, deadzone_d, max_rounds, weight_aware, &mut ctx)
 }
 
-/// [`rebalance_with_priority`] drawing the per-worker affinity buffers
-/// from the caller's [`RefinementContext`].
+/// [`rebalance_with_priority`] drawing the per-worker affinity buffers,
+/// per-chunk emission vectors and the selection pipeline's arenas from
+/// the caller's [`RefinementContext`] — steady-state rounds allocate
+/// nothing.
 pub fn rebalance_with_priority_in(
     p: &PartitionedHypergraph,
     eps: f64,
@@ -90,11 +89,10 @@ pub fn rebalance_with_priority_in(
     ctx: &mut RefinementContext,
 ) -> bool {
     let k = p.k();
+    let hg = p.hypergraph();
     let lmax = p.max_block_weight(eps);
     let avg = p.avg_block_weight();
     let dz = (deadzone_d * eps * avg as f64).ceil() as Weight;
-    // Per-chunk collection scratch, reused across blocks and rounds.
-    let mut chunk_moves: Vec<Vec<RebalanceMove>> = Vec::new();
 
     for _round in 0..max_rounds {
         let weights = p.block_weights();
@@ -110,43 +108,29 @@ pub fn rebalance_with_priority_in(
             if shed_target <= 0 {
                 continue; // an earlier shed this round may have landed here
             }
-            let moves = collect_block_moves(p, b, lmax, dz, avg, ctx, &mut chunk_moves);
-            if moves.is_empty() {
-                continue;
-            }
-            // Minimal prefix by priority whose weight covers the overload:
-            // sort, prefix-sum, binary-search (all deterministic).
-            let mut sorted = moves;
-            if weight_aware {
-                crate::par::par_sort_by(&mut sorted, priority_cmp);
+            stage_block_moves(p, b, lmax, dz, avg, ctx);
+            // Minimal prefix by priority whose weight covers the
+            // overload — the selection core's shed mode (deterministic
+            // sort + segmented prefix sum + binary-search cutoff).
+            let applied = if weight_aware {
+                select::shed_and_apply_in(
+                    p,
+                    shed_target,
+                    |x, y| priority_cmp(hg, x, y),
+                    ctx.selection_mut(),
+                )
+                .len()
             } else {
                 // Ablation: Jet's original plain-gain priority.
-                crate::par::par_sort_by_key(&mut sorted, |m| (-m.gain, m.vertex));
-            }
-            let w: Vec<Weight> = sorted.iter().map(|m| m.weight).collect();
-            let (prefix, total) = crate::par::exclusive_prefix_sum(&w);
-            if total < shed_target {
-                // shed everything we can
-            }
-            // smallest idx with prefix[idx] + w[idx] >= shed_target
-            let cut = match prefix.binary_search_by(|&ps| {
-                if ps >= shed_target {
-                    Ordering::Greater
-                } else {
-                    Ordering::Less
-                }
-            }) {
-                Ok(i) => i,
-                Err(i) => i,
+                select::shed_and_apply_in(
+                    p,
+                    shed_target,
+                    |x, y| y.gain.cmp(&x.gain).then(x.vertex.cmp(&y.vertex)),
+                    ctx.selection_mut(),
+                )
+                .len()
             };
-            let selected = &sorted[..cut.min(sorted.len())];
-            if selected.is_empty() {
-                continue;
-            }
-            progressed = true;
-            let batch: Vec<(VertexId, BlockId)> =
-                selected.iter().map(|m| (m.vertex, m.target)).collect();
-            p.apply_moves(&batch);
+            progressed |= applied > 0;
         }
         if !progressed {
             return false;
@@ -155,19 +139,19 @@ pub fn rebalance_with_priority_in(
     p.is_balanced(eps)
 }
 
-/// All movable vertices of overloaded block `b` with their preferred
-/// eligible target (max gain; untouched eligible blocks count with
-/// affinity 0; deterministic lowest-id tie-break).
-#[allow(clippy::too_many_arguments)]
-fn collect_block_moves(
+/// Stage all movable vertices of overloaded block `b` with their
+/// preferred eligible target (max gain; untouched eligible blocks count
+/// with affinity 0; deterministic lowest-id tie-break) into the
+/// selection arena — per-chunk emission, flattened at chunked-prefix
+/// offsets.
+fn stage_block_moves(
     p: &PartitionedHypergraph,
     b: BlockId,
     lmax: Weight,
     dz: Weight,
     avg: Weight,
     ctx: &mut RefinementContext,
-    chunk_moves: &mut Vec<Vec<RebalanceMove>>,
-) -> Vec<RebalanceMove> {
+) {
     let hg = p.hypergraph();
     let n = hg.num_vertices();
     let heavy_cap_num = 3 * (p.block_weight(b) - avg); // c(v) > 3/2·(..) ⇔ 2c(v) > 3·(..)
@@ -176,15 +160,9 @@ fn collect_block_moves(
 
     let nt = crate::par::num_threads().max(1);
     let ranges = crate::par::pool::chunk_ranges(n, nt);
-    let bufs = ctx.affinity_buffers(ranges.len());
-    while chunk_moves.len() < ranges.len() {
-        chunk_moves.push(Vec::new());
-    }
-    let outs = &mut chunk_moves[..ranges.len()];
-    for o in outs.iter_mut() {
-        o.clear();
-    }
+    let n_chunks = ranges.len();
     {
+        let (bufs, outs) = ctx.scan_scratch(n_chunks);
         let slots: Vec<_> = outs.iter_mut().zip(bufs.iter_mut()).zip(ranges).collect();
         let weights = &weights;
         std::thread::scope(|s| {
@@ -207,11 +185,11 @@ fn collect_block_moves(
                                 && weights[t as usize] + cv <= lmax
                                 && weights[t as usize] < lmax - dz
                         };
-                        // Best touched eligible target.
+                        // Best touched eligible target (sorted in place —
+                        // no per-vertex allocation).
+                        buf.sort_touched();
                         let mut best: Option<(Weight, BlockId)> = None;
-                        let mut touched: Vec<BlockId> = buf.touched().to_vec();
-                        touched.sort_unstable();
-                        for &t in &touched {
+                        for &t in buf.touched() {
                             if !eligible(t) {
                                 continue;
                             }
@@ -230,20 +208,15 @@ fn collect_block_moves(
                             }
                         }
                         if let Some((gain, target)) = best {
-                            slot.push(RebalanceMove { vertex: v, target, gain, weight: cv });
+                            slot.push(MoveCandidate { vertex: v, target, gain });
                         }
                     }
                 });
             }
         });
     }
-    // Concatenate in chunk order → deterministic; chunk vectors stay
-    // allocated for the next block/round.
-    let mut flat = Vec::new();
-    for o in outs.iter_mut() {
-        flat.extend(o.iter().copied());
-    }
-    flat
+    // Flatten in chunk order at chunked-prefix offsets → deterministic.
+    ctx.stage_selection_from_chunks(n_chunks);
 }
 
 #[cfg(test)]
@@ -251,23 +224,26 @@ mod tests {
     use super::*;
     use crate::datastructures::Hypergraph;
 
+    /// Compare two candidates under the weight-aware priority on a
+    /// two-vertex hypergraph carrying the given weights.
+    fn cmp_case(g0: Weight, c0: Weight, g1: Weight, c1: Weight) -> Ordering {
+        let h = Hypergraph::new(2, &[vec![0, 1]], Some(vec![c0, c1]), None);
+        let a = MoveCandidate { vertex: 0, target: 0, gain: g0 };
+        let b = MoveCandidate { vertex: 1, target: 0, gain: g1 };
+        priority_cmp(&h, &a, &b)
+    }
+
     #[test]
     fn priority_ordering_rules() {
-        let m = |g: Weight, c: Weight, v: VertexId| RebalanceMove {
-            vertex: v,
-            target: 0,
-            gain: g,
-            weight: c,
-        };
         // positive beats zero beats negative
-        assert_eq!(priority_cmp(&m(1, 1, 0), &m(0, 1, 1)), Ordering::Less);
-        assert_eq!(priority_cmp(&m(0, 1, 0), &m(-1, 1, 1)), Ordering::Less);
+        assert_eq!(cmp_case(1, 1, 0, 1), Ordering::Less);
+        assert_eq!(cmp_case(0, 1, -1, 1), Ordering::Less);
         // positive: g·c larger first → (2,3)=6 before (5,1)=5
-        assert_eq!(priority_cmp(&m(2, 3, 0), &m(5, 1, 1)), Ordering::Less);
+        assert_eq!(cmp_case(2, 3, 5, 1), Ordering::Less);
         // negative: g/c larger first → (-1, 4) = -0.25 before (-1, 2) = -0.5
-        assert_eq!(priority_cmp(&m(-1, 4, 0), &m(-1, 2, 1)), Ordering::Less);
+        assert_eq!(cmp_case(-1, 4, -1, 2), Ordering::Less);
         // ties → lower id first
-        assert_eq!(priority_cmp(&m(-1, 2, 0), &m(-2, 4, 1)), Ordering::Less);
+        assert_eq!(cmp_case(-1, 2, -2, 4), Ordering::Less);
     }
 
     #[test]
@@ -333,5 +309,40 @@ mod tests {
         }
         assert!(outs.windows(2).all(|w| w[0] == w[1]));
         assert!(outs[0].0);
+    }
+
+    #[test]
+    fn shared_selection_core_matches_reference_pipeline() {
+        // The shed selection routed through refinement::select must pick
+        // exactly the minimal covering prefix the old hand-rolled
+        // sort + exclusive-prefix + binary-search pipeline picked:
+        // replicate that reference here and compare applied move sets.
+        let h = crate::gen::sat_hypergraph(300, 900, 7, 19);
+        let part: Vec<BlockId> = (0..300).map(|v| u32::from(v >= 260)).collect();
+        let p = PartitionedHypergraph::new(&h, 2, part.clone());
+        let lmax = p.max_block_weight(0.05);
+        let shed_target = p.block_weight(0) - lmax;
+        assert!(shed_target > 0, "instance not overloaded");
+        let mut ctx = RefinementContext::new(2, 300);
+        stage_block_moves(&p, 0, lmax, 0, p.avg_block_weight(), &mut ctx);
+        let mut reference: Vec<MoveCandidate> = ctx.selection_mut().staged().to_vec();
+        let hg = p.hypergraph();
+        reference.sort_by(|a, b| priority_cmp(hg, a, b));
+        let w: Vec<Weight> =
+            reference.iter().map(|m| hg.vertex_weight(m.vertex)).collect();
+        let (prefix, _total) = crate::par::exclusive_prefix_sum(&w);
+        let cut = prefix.partition_point(|&ps| ps < shed_target).min(reference.len());
+        let expect = &reference[..cut];
+        let selected = select::shed_and_apply_in(
+            &p,
+            shed_target,
+            |a, b| priority_cmp(hg, a, b),
+            ctx.selection_mut(),
+        );
+        assert_eq!(selected, expect);
+        // And the moves were actually applied.
+        for m in expect {
+            assert_eq!(p.part(m.vertex), m.target);
+        }
     }
 }

@@ -3,13 +3,15 @@
 //! The refinement class of the prior deterministic partitioners
 //! (Mt-KaHyPar-SDet, BiPart): rounds of synchronous positive-gain moves.
 //! Each round (1) computes, for every boundary vertex, the best strictly
-//! positive-gain target block (deterministic tie-break by block id), and
-//! (2) applies the deterministic grouped approval of
-//! [`super::approve_and_apply`]. Unable to take negative-gain moves, it
-//! gets stuck in the local minima Jet escapes — exactly the quality gap
-//! the paper quantifies.
+//! positive-gain target block (deterministic tie-break by block id),
+//! staged straight into the shared selection arena, and (2) admits and
+//! applies them through the unified pipeline
+//! ([`super::select::approve_and_apply_in`]) — no intermediate flat
+//! candidate vector and no serial approval scan. Unable to take
+//! negative-gain moves, it gets stuck in the local minima Jet escapes —
+//! exactly the quality gap the paper quantifies.
 
-use super::{approve_and_apply, boundary_vertices_in, MoveCandidate, RefinementContext};
+use super::{boundary_vertices_in, select, MoveCandidate, RefinementContext};
 use crate::config::LpConfig;
 use crate::datastructures::PartitionedHypergraph;
 use crate::{BlockId, Weight};
@@ -57,11 +59,9 @@ pub fn refine_lp_in(
             if active.is_empty() {
                 continue;
             }
-            let candidates = collect_positive_candidates(p, &active, max_block_weights, ctx);
-            if candidates.is_empty() {
-                continue;
-            }
-            let applied = approve_and_apply(p, candidates, max_block_weights);
+            stage_positive_candidates(p, &active, max_block_weights, ctx);
+            let applied =
+                select::approve_and_apply_in(p, max_block_weights, ctx.selection_mut());
             applied_any |= !applied.is_empty();
         }
         let after = p.km1();
@@ -80,17 +80,19 @@ pub fn refine_lp_in(
 }
 
 /// For each active vertex: the best strictly-positive-gain move into a
-/// block with remaining capacity.
-fn collect_positive_candidates(
+/// block with remaining capacity, staged into the selection arena
+/// (per-chunk emission, flattened at chunked-prefix offsets).
+fn stage_positive_candidates(
     p: &PartitionedHypergraph,
     active: &[crate::VertexId],
     max_block_weights: &[Weight],
     ctx: &mut RefinementContext,
-) -> Vec<MoveCandidate> {
+) {
+    let nt = crate::par::num_threads().max(1);
+    let ranges = crate::par::pool::chunk_ranges(active.len(), nt);
+    let n_chunks = ranges.len();
     {
-        let nt = crate::par::num_threads().max(1);
-        let ranges = crate::par::pool::chunk_ranges(active.len(), nt);
-        let (bufs, outs) = ctx.scan_scratch(ranges.len());
+        let (bufs, outs) = ctx.scan_scratch(n_chunks);
         let slots: Vec<_> = outs.iter_mut().zip(bufs.iter_mut()).zip(ranges).collect();
         std::thread::scope(|s| {
             for ((slot, buf), range) in slots {
@@ -131,13 +133,8 @@ fn collect_positive_candidates(
                 });
             }
         });
-        // Concatenate in chunk order → deterministic.
-        let mut flat = Vec::new();
-        for c in outs.iter_mut() {
-            flat.append(c);
-        }
-        flat
     }
+    ctx.stage_selection_from_chunks(n_chunks);
 }
 
 #[cfg(test)]

@@ -10,11 +10,14 @@
 //! Shared infrastructure lives here: the [`RefinementContext`] scratch
 //! arena threaded through every refiner, boundary-vertex collection and
 //! the deterministic *grouped move approval* that turns a set of racy
-//! move wishes into a schedule-independent applied subset.
+//! move wishes into a schedule-independent applied subset. The approval
+//! itself — and every other refiner's move selection — runs on the
+//! unified parallel pipeline in [`select`] (DESIGN.md §7).
 
 pub mod jet;
 pub mod lp;
 pub mod flow;
+pub mod select;
 
 use crate::datastructures::{AffinityBuffer, PartitionScratch, PartitionedHypergraph};
 use crate::util::bitset::AtomicBitset;
@@ -32,8 +35,9 @@ pub struct MoveCandidate {
 
 /// Shared pool of reusable buffers for *parallel* consumers (the flow
 /// scheduler's concurrent pair refinements): each worker takes a buffer
-/// and returns it when done. The pool only hands out buffers — all
-/// deterministic state lives elsewhere, so hand-out order is irrelevant.
+/// and it returns to the pool when the guard drops. The pool only hands
+/// out buffers — all deterministic state lives elsewhere, so hand-out
+/// order is irrelevant.
 pub struct BufferPool<T> {
     items: Mutex<Vec<T>>,
 }
@@ -43,11 +47,15 @@ impl<T: Default> BufferPool<T> {
         BufferPool { items: Mutex::new(Vec::new()) }
     }
 
-    pub fn take(&self) -> T {
-        self.items.lock().unwrap().pop().unwrap_or_default()
+    /// Take a (recycled or fresh) buffer. The returned RAII guard puts
+    /// it back on drop — including during unwinding, so a panicking pair
+    /// refinement can't leak pool buffers.
+    pub fn take(&self) -> PoolGuard<'_, T> {
+        let item = self.items.lock().unwrap().pop().unwrap_or_default();
+        PoolGuard { pool: self, item: Some(item) }
     }
 
-    pub fn put(&self, item: T) {
+    fn put(&self, item: T) {
         self.items.lock().unwrap().push(item);
     }
 }
@@ -55,6 +63,36 @@ impl<T: Default> BufferPool<T> {
 impl<T: Default> Default for BufferPool<T> {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// RAII handle to a pooled buffer: derefs to the buffer, returns it to
+/// the pool on drop. Callers must re-initialize contents (the pool
+/// recycles allocations, not state).
+pub struct PoolGuard<'a, T: Default> {
+    pool: &'a BufferPool<T>,
+    item: Option<T>,
+}
+
+impl<T: Default> std::ops::Deref for PoolGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.item.as_ref().unwrap()
+    }
+}
+
+impl<T: Default> std::ops::DerefMut for PoolGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.item.as_mut().unwrap()
+    }
+}
+
+impl<T: Default> Drop for PoolGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some(item) = self.item.take() {
+            self.pool.put(item);
+        }
     }
 }
 
@@ -80,6 +118,9 @@ pub struct RefinementContext {
     partition_scratch: Option<PartitionScratch>,
     /// Buffer pool for the parallel two-way flow refinements.
     pub flow_bools: BufferPool<Vec<bool>>,
+    /// The unified move-selection pipeline's buffers (candidate arena,
+    /// sort scratch, segment bounds, prefix arrays — see [`select`]).
+    selection: select::SelectionScratch,
 }
 
 impl RefinementContext {
@@ -93,6 +134,7 @@ impl RefinementContext {
             vertex_marks: AtomicBitset::new(max_vertices),
             partition_scratch: Some(PartitionScratch::default()),
             flow_bools: BufferPool::new(),
+            selection: select::SelectionScratch::default(),
         }
     }
 
@@ -135,6 +177,34 @@ impl RefinementContext {
     /// The boundary-collection mark bitset.
     pub fn vertex_marks(&mut self) -> &mut AtomicBitset {
         &mut self.vertex_marks
+    }
+
+    /// The selection pipeline's scratch buffers.
+    pub fn selection_mut(&mut self) -> &mut select::SelectionScratch {
+        &mut self.selection
+    }
+
+    /// Stage the first `parts` per-chunk candidate vectors (filled by a
+    /// preceding [`scan_scratch`](Self::scan_scratch) scan) into the
+    /// selection arena at chunked-prefix offsets — parallel and
+    /// allocation-free with warm buffers.
+    pub fn stage_selection_from_chunks(&mut self, parts: usize) {
+        select::flatten_chunks_into(
+            &self.chunk_candidates[..parts.min(self.chunk_candidates.len())],
+            &mut self.selection.arena,
+            &mut self.selection.counts,
+        );
+    }
+
+    /// Flatten the first `parts` per-chunk candidate vectors into a
+    /// caller-owned vector (same parallel compaction, for consumers that
+    /// keep their own staging vector, e.g. Jet's candidate collection).
+    pub(crate) fn flatten_chunks_to(&mut self, parts: usize, out: &mut Vec<MoveCandidate>) {
+        select::flatten_chunks_into(
+            &self.chunk_candidates[..parts.min(self.chunk_candidates.len())],
+            out,
+            &mut self.selection.counts,
+        );
     }
 
     /// Take the partition-state backing buffers (return them with
@@ -182,40 +252,27 @@ pub fn boundary_vertices_in(
     crate::par::collect_indices_where(n, |v| marks.get(v))
 }
 
-/// Deterministic grouped approval: admit candidate moves per target block
-/// in priority order (gain desc, vertex id asc) while the target's weight
-/// budget `max_block_weights[t] − c(V_t)` lasts. Departures during the
-/// same round are deliberately *not* credited (conservative, keeps the
-/// admission independent of other blocks' decisions). Returns the applied
-/// moves.
+/// Deterministic grouped approval: admit, per target block, the maximal
+/// priority-order prefix (gain desc, vertex id asc) whose cumulative
+/// weight fits the target's budget `max_block_weights[t] − c(V_t)` — the
+/// synchronous-move framework's admission rule, computed by the unified
+/// selection pipeline ([`select::approve_and_apply_in`]). Departures
+/// during the same round are deliberately *not* credited (conservative,
+/// keeps the admission independent of other blocks' decisions). Returns
+/// the applied moves.
+///
+/// Convenience wrapper that allocates a throwaway scratch; hot paths
+/// stage candidates in the [`RefinementContext`]'s selection arena and
+/// call the `_in` form. The serial reference semantics live in
+/// [`select::approve_and_apply_serial`] (the property-test oracle).
 pub fn approve_and_apply(
     p: &PartitionedHypergraph,
-    mut candidates: Vec<MoveCandidate>,
+    candidates: Vec<MoveCandidate>,
     max_block_weights: &[Weight],
 ) -> Vec<MoveCandidate> {
-    debug_assert_eq!(max_block_weights.len(), p.k());
-    let hg = p.hypergraph();
-    // (target, -gain, id): per-target segments in priority order.
-    crate::par::par_sort_by_key(&mut candidates, |m| (m.target, -m.gain, m.vertex));
-    let mut applied = Vec::new();
-    let mut i = 0;
-    while i < candidates.len() {
-        let t = candidates[i].target;
-        let mut budget = max_block_weights[t as usize] - p.block_weight(t);
-        let mut j = i;
-        while j < candidates.len() && candidates[j].target == t {
-            let m = candidates[j];
-            let w = hg.vertex_weight(m.vertex);
-            if w <= budget {
-                budget -= w;
-                applied.push(m);
-            }
-            j += 1;
-        }
-        i = j;
-    }
-    p.apply_moves(&applied.iter().map(|m| (m.vertex, m.target)).collect::<Vec<_>>());
-    applied
+    let mut scratch = select::SelectionScratch::default();
+    scratch.stage(&candidates);
+    select::approve_and_apply_in(p, max_block_weights, &mut scratch).to_vec()
 }
 
 #[cfg(test)]
@@ -257,12 +314,30 @@ mod tests {
     #[test]
     fn buffer_pool_recycles() {
         let pool: BufferPool<Vec<bool>> = BufferPool::new();
-        let mut a = pool.take();
-        a.resize(10, true);
-        pool.put(a);
+        {
+            let mut a = pool.take();
+            a.resize(10, true);
+        } // guard drop returns the buffer
         let b = pool.take();
         assert_eq!(b.len(), 10); // recycled, caller re-initializes
-        assert!(pool.take().is_empty()); // pool empty → fresh default
+        assert!(pool.take().is_empty()); // pool drained → fresh default
+        drop(b);
+        assert_eq!(pool.take().len(), 10); // b returned on drop too
+    }
+
+    #[test]
+    fn buffer_pool_survives_panicking_holder() {
+        // A panicking pair refinement must not leak its pool buffers:
+        // the RAII guard returns them during unwinding.
+        let pool: BufferPool<Vec<bool>> = BufferPool::new();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = pool.take();
+            g.resize(7, true);
+            panic!("simulated pair-refinement failure");
+        }));
+        assert!(result.is_err());
+        let g = pool.take();
+        assert_eq!(g.len(), 7, "buffer leaked by panicking holder");
     }
 
     #[test]
@@ -309,5 +384,25 @@ mod tests {
             });
         }
         assert!(outs.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn approval_wrapper_matches_serial_oracle() {
+        let h = crate::gen::sat_hypergraph(150, 450, 6, 8);
+        let part: Vec<u32> = (0..150).map(|v| (v % 3) as u32).collect();
+        let cands: Vec<MoveCandidate> = (0..150u32)
+            .map(|v| MoveCandidate {
+                vertex: v,
+                target: ((v + 1) % 3) as BlockId,
+                gain: (v % 5) as Weight - 2,
+            })
+            .collect();
+        let lmax = vec![60 as Weight; 3];
+        let p1 = PartitionedHypergraph::new(&h, 3, part.clone());
+        let a1 = approve_and_apply(&p1, cands.clone(), &lmax);
+        let p2 = PartitionedHypergraph::new(&h, 3, part);
+        let a2 = select::approve_and_apply_serial(&p2, cands, &lmax);
+        assert_eq!(a1, a2);
+        assert_eq!(p1.snapshot(), p2.snapshot());
     }
 }

@@ -1,0 +1,626 @@
+//! The unified deterministic move-selection core.
+//!
+//! Every refiner used to funnel its move wishes through its own serial,
+//! allocation-heavy selection code: a sequential budget scan in the
+//! grouped approval, a per-block sort + weight vector + prefix sum +
+//! binary search with fresh `Vec`s in the rebalancer, and sequential
+//! per-chunk flattening in LP and Jet. The paper's deterministic Jet
+//! (§4) and its predecessor's synchronous-move framework reduce all of
+//! them to **one** primitive, implemented here as a fully parallel,
+//! allocation-free pipeline over a shared scratch arena:
+//!
+//! 1. **Stage** — per-chunk candidate emission is compacted into the
+//!    arena at chunked-prefix offsets ([`flatten_chunks_into`]), the
+//!    `par::collect`-style pattern, replacing sequential `append` loops.
+//! 2. **Sort** — a parallel sort by `(target, gain desc, vertex)`
+//!    ([`crate::par::par_sort_unstable_by_in`] through the arena's
+//!    resident merge buffer). Vertex ids are unique per round, so the
+//!    key is a *total* order and the result is thread-count independent.
+//! 3. **Segment** — per-target segment boundaries via
+//!    [`crate::par::bucket_boundaries_in`].
+//! 4. **Prefix** — a segmented parallel inclusive prefix sum of the move
+//!    weights ([`crate::par::segmented_inclusive_prefix_sum_in_place`]).
+//! 5. **Cut** — per-target binary-search budget cutoffs on the monotone
+//!    per-segment prefixes: each target admits the maximal priority
+//!    prefix whose cumulative weight fits its remaining budget
+//!    (the synchronous-move framework's admission rule).
+//! 6. **Apply** — the kept prefixes are compacted (again at chunked
+//!    prefix offsets) and fed to the partition engine through
+//!    [`PartitionedHypergraph::apply_moves_with`] — no intermediate
+//!    `(vertex, target)` copy vector.
+//!
+//! The rebalancer reuses stages 2/4/6 with its own priority order and an
+//! inverted cutoff (*minimal* prefix covering the overload,
+//! [`shed_and_apply_in`]); Jet's afterburner and positive-gain filter
+//! reuse the arena and the order-preserving parallel filter
+//! ([`retain_map_in`]). All buffers live in [`SelectionScratch`], owned
+//! by the [`super::RefinementContext`], so uncoarsening reuses them
+//! across levels like `CoarseningScratch` does.
+//!
+//! **Determinism argument** (DESIGN.md §7): every stage's output is a
+//! pure function of the staged data — the sort key is total, segment
+//! boundaries and compaction offsets are exclusive prefixes of
+//! per-chunk counts (combined in chunk index order, never completion
+//! order), the segmented prefix sums are exact integer arithmetic, and
+//! the budget reads happen before any move of the round is applied. The
+//! serial reference [`approve_and_apply_serial`] survives below as the
+//! property-test oracle; `prop_parallel_selection_matches_serial_oracle`
+//! asserts bit-identical applied-move sets at 1/2/4 threads.
+
+use super::MoveCandidate;
+use crate::datastructures::PartitionedHypergraph;
+use crate::par::pool::SendPtr;
+use crate::util::bitset::AtomicBitset;
+use crate::Weight;
+use std::cmp::Ordering;
+use std::sync::atomic::AtomicI64;
+
+const ZERO_CAND: MoveCandidate = MoveCandidate { vertex: 0, target: 0, gain: 0 };
+
+/// All buffers of the selection pipeline, reused across rounds and
+/// levels (owned by [`super::RefinementContext`]). Steady-state calls
+/// allocate nothing: the arena, merge buffer, segment bounds, prefix
+/// array and per-chunk counts are grown once at the finest level.
+#[derive(Default)]
+pub struct SelectionScratch {
+    /// The staged candidates: emission → sort → selection, in place.
+    pub(crate) arena: Vec<MoveCandidate>,
+    /// Merge buffer for the parallel sort, doubling as the ping-pong
+    /// destination of the order-preserving compactions.
+    pub(crate) aux: Vec<MoveCandidate>,
+    /// Per-target segment boundaries (`[0, b_1, …, len]`).
+    pub(crate) seg_bounds: Vec<u32>,
+    /// Per-chunk count/offset scratch shared by all compactions.
+    pub(crate) counts: Vec<i64>,
+    /// Move weights → segmented inclusive prefix sums.
+    pub(crate) prefix: Vec<i64>,
+    /// Per-segment kept counts → destination offsets.
+    pub(crate) cuts: Vec<i64>,
+    /// Afterburner: vertex → rank map (`u32::MAX` outside calls; only
+    /// candidate slots are written and reset, never the full array).
+    pub(crate) rank_of: Vec<u32>,
+    /// Afterburner: recomputed-gain accumulators, indexed by rank.
+    pub(crate) recomputed: Vec<AtomicI64>,
+    /// Afterburner: mark-once bitset over edges incident to candidates.
+    pub(crate) edge_marks: AtomicBitset,
+    /// Afterburner: compacted touched-edge list.
+    pub(crate) touched: Vec<u32>,
+}
+
+impl SelectionScratch {
+    /// Pre-reserve for up to `vertices` candidates over a hypergraph
+    /// with `vertices` vertices and `edges` edges (the uncoarsening
+    /// driver calls this once at the finest level so no level regrows
+    /// the buffers — including the sort/compaction ping-pong buffer,
+    /// the afterburner accumulators and the touched-edge gather; the
+    /// tiny per-chunk/per-segment vectors grow on first use and never
+    /// after).
+    pub fn reserve(&mut self, vertices: usize, edges: usize) {
+        self.arena.reserve(vertices.saturating_sub(self.arena.len()));
+        self.aux.reserve(vertices.saturating_sub(self.aux.len()));
+        self.prefix.reserve(vertices.saturating_sub(self.prefix.len()));
+        self.recomputed.reserve(vertices.saturating_sub(self.recomputed.len()));
+        self.touched.reserve(edges.saturating_sub(self.touched.len()));
+        if self.edge_marks.len() < edges {
+            self.edge_marks.reset(edges);
+        }
+        if self.rank_of.len() < vertices {
+            self.rank_of.resize(vertices, u32::MAX);
+        }
+    }
+
+    /// Stage a candidate slice into the arena (copy; the hot paths stage
+    /// via [`flatten_chunks_into`] instead).
+    pub fn stage(&mut self, cands: &[MoveCandidate]) {
+        self.arena.clear();
+        self.arena.extend_from_slice(cands);
+    }
+
+    /// The currently staged (or, after a pipeline call, selected) moves.
+    pub fn staged(&self) -> &[MoveCandidate] {
+        &self.arena
+    }
+
+    /// Bytes currently reserved across all buffers (bench metric).
+    pub fn memory_bytes(&self) -> usize {
+        (self.arena.capacity() + self.aux.capacity())
+            * std::mem::size_of::<MoveCandidate>()
+            + (self.counts.capacity() + self.prefix.capacity() + self.cuts.capacity()) * 8
+            + (self.seg_bounds.capacity() + self.rank_of.capacity() + self.touched.capacity())
+                * 4
+            + self.recomputed.capacity() * 8
+    }
+}
+
+/// Flatten per-chunk emission vectors into `out` at chunked-prefix
+/// offsets: per-chunk lengths → exclusive prefix sum → each chunk block
+/// copies at its offset. The parallel, deterministic replacement for the
+/// sequential `out.append(chunk)` loops the refiners used to run; with
+/// warm buffers it allocates nothing.
+pub(crate) fn flatten_chunks_into(
+    chunks: &[Vec<MoveCandidate>],
+    out: &mut Vec<MoveCandidate>,
+    counts: &mut Vec<i64>,
+) {
+    counts.clear();
+    counts.extend(chunks.iter().map(|c| c.len() as i64));
+    let total = crate::par::exclusive_prefix_sum_in_place(counts) as usize;
+    out.clear();
+    out.reserve(total);
+    // SAFETY: chunk `ci` writes exactly `out[counts[ci]..counts[ci]+len]`
+    // below before any read; the ranges are disjoint and cover the vector.
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        out.set_len(total);
+    }
+    {
+        let ptr = SendPtr(out.as_mut_ptr());
+        let pref = &ptr;
+        let counts: &[i64] = counts;
+        crate::par::for_each_chunk(chunks.len(), move |_c, r| {
+            for ci in r {
+                let src = &chunks[ci];
+                // SAFETY: disjoint destination ranges per chunk.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        src.as_ptr(),
+                        pref.0.add(counts[ci] as usize),
+                        src.len(),
+                    );
+                }
+            }
+        });
+    }
+}
+
+/// Budget mode — the deterministic grouped approval shared by LP and the
+/// 2-way polish: sort the staged arena into per-target priority segments,
+/// admit per target the **maximal priority prefix** (gain desc, vertex id
+/// asc) whose cumulative weight fits the target's remaining budget
+/// `max_block_weights[t] − c(V_t)`, apply the admitted moves, and return
+/// them (in `(target, priority)` order). Departures during the round are
+/// deliberately not credited — admission stays independent of other
+/// blocks' decisions. Budgets are read before any move is applied.
+pub fn approve_and_apply_in<'a>(
+    p: &PartitionedHypergraph,
+    max_block_weights: &[Weight],
+    s: &'a mut SelectionScratch,
+) -> &'a [MoveCandidate] {
+    debug_assert_eq!(max_block_weights.len(), p.k());
+    let hg = p.hypergraph();
+    let n = s.arena.len();
+    if n == 0 {
+        return &s.arena;
+    }
+    // (target, gain desc, vertex): per-target segments in priority
+    // order. Vertices are unique per round → total order → the unstable
+    // chunk sorts cannot introduce thread-count dependence.
+    crate::par::par_sort_unstable_by_in(&mut s.arena, &mut s.aux, |a, b| {
+        a.target
+            .cmp(&b.target)
+            .then(b.gain.cmp(&a.gain))
+            .then(a.vertex.cmp(&b.vertex))
+    });
+    crate::par::bucket_boundaries_in(&s.arena, |m| m.target, &mut s.seg_bounds, &mut s.counts);
+    // Move weights, then segmented inclusive prefix sums per target.
+    s.prefix.clear();
+    s.prefix.resize(n, 0);
+    {
+        let arena = &s.arena;
+        crate::par::for_each_chunk_mut(&mut s.prefix, |start, slice| {
+            for (j, w) in slice.iter_mut().enumerate() {
+                *w = hg.vertex_weight(arena[start + j].vertex);
+            }
+        });
+    }
+    crate::par::segmented_inclusive_prefix_sum_in_place(&mut s.prefix, &s.seg_bounds);
+    // Per-target binary-search cutoff on the monotone prefix: the kept
+    // count is the partition point of `cumulative ≤ budget`.
+    let nseg = s.seg_bounds.len() - 1;
+    s.cuts.clear();
+    s.cuts.resize(nseg, 0);
+    {
+        let SelectionScratch { ref arena, ref seg_bounds, ref prefix, ref mut cuts, .. } = *s;
+        crate::par::for_each_chunk_mut(cuts, |start, slice| {
+            for (j, cut) in slice.iter_mut().enumerate() {
+                let seg = start + j;
+                let (lo, hi) = (seg_bounds[seg] as usize, seg_bounds[seg + 1] as usize);
+                let t = arena[lo].target;
+                let budget = max_block_weights[t as usize] - p.block_weight(t);
+                *cut = prefix[lo..hi].partition_point(|&ps| ps <= budget) as i64;
+            }
+        });
+    }
+    let total = compact_kept_prefixes(s);
+    apply_staged(p, s);
+    &s.arena[..total]
+}
+
+/// Shed mode — the rebalancer's selection for one overloaded block: sort
+/// the staged arena by `cmp` (must be a total order), prefix-sum the
+/// move weights, binary-search the **minimal prefix** whose weight
+/// covers `shed_target` (everything available if the total falls
+/// short), apply it and return it.
+pub fn shed_and_apply_in<'a>(
+    p: &PartitionedHypergraph,
+    shed_target: Weight,
+    cmp: impl Fn(&MoveCandidate, &MoveCandidate) -> Ordering + Send + Sync + Copy,
+    s: &'a mut SelectionScratch,
+) -> &'a [MoveCandidate] {
+    debug_assert!(shed_target > 0);
+    let hg = p.hypergraph();
+    let n = s.arena.len();
+    if n == 0 {
+        return &s.arena;
+    }
+    crate::par::par_sort_unstable_by_in(&mut s.arena, &mut s.aux, cmp);
+    s.prefix.clear();
+    s.prefix.resize(n, 0);
+    {
+        let arena = &s.arena;
+        crate::par::for_each_chunk_mut(&mut s.prefix, |start, slice| {
+            for (j, w) in slice.iter_mut().enumerate() {
+                *w = hg.vertex_weight(arena[start + j].vertex);
+            }
+        });
+    }
+    s.seg_bounds.clear();
+    s.seg_bounds.extend([0, n as u32]);
+    crate::par::segmented_inclusive_prefix_sum_in_place(&mut s.prefix, &s.seg_bounds);
+    // Minimal prefix covering the target: smallest c ≥ 1 with
+    // `sum(first c) ≥ shed_target`, i.e. the partition point of
+    // `cumulative < shed_target` plus one, clamped to "shed everything
+    // we can" when even the total falls short.
+    let cut = (s.prefix.partition_point(|&ps| ps < shed_target) + 1).min(n);
+    s.arena.truncate(cut);
+    apply_staged(p, s);
+    &s.arena
+}
+
+/// Order-preserving parallel filter-map over the staged arena: keep
+/// `f(i, arena[i])` for every index where it is `Some`, compacted at
+/// chunked-prefix offsets into the resident ping-pong buffer. `f` must
+/// be cheap and pure — it runs twice per index (count pass + write
+/// pass), the price of an allocation-free two-pass compaction.
+pub(crate) fn retain_map_in(
+    s: &mut SelectionScratch,
+    f: impl Fn(usize, MoveCandidate) -> Option<MoveCandidate> + Sync,
+) {
+    let n = s.arena.len();
+    if n == 0 {
+        return;
+    }
+    let nt = crate::par::num_threads().max(1);
+    let nchunks = crate::par::pool::num_chunks(n, nt);
+    s.counts.clear();
+    s.counts.resize(nchunks, 0);
+    {
+        let arena = &s.arena;
+        let f = &f;
+        crate::par::for_each_chunk_mut(&mut s.counts, |start, slots| {
+            for (j, slot) in slots.iter_mut().enumerate() {
+                let mut c = 0i64;
+                for i in crate::par::pool::nth_chunk(n, nt, start + j) {
+                    if f(i, arena[i]).is_some() {
+                        c += 1;
+                    }
+                }
+                *slot = c;
+            }
+        });
+    }
+    let total = crate::par::exclusive_prefix_sum_in_place(&mut s.counts) as usize;
+    if s.aux.len() < n {
+        s.aux.resize(n, ZERO_CAND);
+    }
+    {
+        let arena = &s.arena;
+        let counts: &[i64] = &s.counts;
+        let f = &f;
+        let ptr = SendPtr(s.aux.as_mut_ptr());
+        let pref = &ptr;
+        crate::par::for_each_chunk(nchunks, move |_c, r| {
+            for ci in r {
+                let mut at = counts[ci] as usize;
+                for i in crate::par::pool::nth_chunk(n, nt, ci) {
+                    if let Some(m) = f(i, arena[i]) {
+                        // SAFETY: disjoint destination ranges per chunk,
+                        // within the initialized `aux[..n]`.
+                        unsafe {
+                            std::ptr::write(pref.0.add(at), m);
+                        }
+                        at += 1;
+                    }
+                }
+            }
+        });
+    }
+    std::mem::swap(&mut s.arena, &mut s.aux);
+    s.arena.truncate(total);
+}
+
+/// Keep only strictly-positive-gain staged candidates (Jet's
+/// no-afterburner path), order-preserving and parallel.
+pub fn filter_positive_in(s: &mut SelectionScratch) {
+    retain_map_in(s, |_i, m| (m.gain > 0).then_some(m));
+}
+
+/// Bulk-apply the staged arena to the partition engine — zero-copy via
+/// [`PartitionedHypergraph::apply_moves_with`].
+pub(crate) fn apply_staged(p: &PartitionedHypergraph, s: &SelectionScratch) {
+    let sel = &s.arena;
+    p.apply_moves_with(sel.len(), |i| (sel[i].vertex, sel[i].target));
+}
+
+/// Compact each segment's kept prefix (`s.cuts[seg]` entries from
+/// `s.seg_bounds[seg]`) to the front of the arena, preserving segment
+/// order: exclusive prefix of kept counts → parallel per-segment copies
+/// into the ping-pong buffer → swap. Returns the total kept.
+fn compact_kept_prefixes(s: &mut SelectionScratch) -> usize {
+    let n = s.arena.len();
+    let nseg = s.cuts.len();
+    let total = crate::par::exclusive_prefix_sum_in_place(&mut s.cuts) as usize;
+    if s.aux.len() < n {
+        s.aux.resize(n, ZERO_CAND);
+    }
+    {
+        let SelectionScratch { ref arena, ref seg_bounds, ref cuts, ref mut aux, .. } = *s;
+        let ptr = SendPtr(aux.as_mut_ptr());
+        let pref = &ptr;
+        crate::par::for_each_chunk(nseg, move |_c, r| {
+            for seg in r {
+                let lo = seg_bounds[seg] as usize;
+                let next = if seg + 1 < nseg { cuts[seg + 1] } else { total as i64 };
+                let dst = cuts[seg] as usize;
+                let kept = (next - cuts[seg]) as usize;
+                // SAFETY: destination ranges `[dst, dst+kept)` are
+                // disjoint per segment and within the initialized
+                // `aux[..n]`; sources are read-only.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        arena.as_ptr().add(lo),
+                        pref.0.add(dst),
+                        kept,
+                    );
+                }
+            }
+        });
+    }
+    std::mem::swap(&mut s.arena, &mut s.aux);
+    s.arena.truncate(total);
+    total
+}
+
+// ---------------------------------------------------------------------
+// Serial oracle — everything above this marker is the hot path and must
+// stay free of serial per-candidate sweeps (see the source guard below).
+// ---------------------------------------------------------------------
+
+/// The retained serial reference for the budget mode: same admission
+/// rule as [`approve_and_apply_in`] — per target, walk the priority
+/// order and admit until the cumulative weight would overflow the
+/// budget — implemented as a plain sequential scan. The property tests
+/// assert the parallel pipeline is bit-identical to this at every
+/// thread count.
+pub fn approve_and_apply_serial(
+    p: &PartitionedHypergraph,
+    mut candidates: Vec<MoveCandidate>,
+    max_block_weights: &[Weight],
+) -> Vec<MoveCandidate> {
+    debug_assert_eq!(max_block_weights.len(), p.k());
+    let hg = p.hypergraph();
+    candidates.sort_by(|a, b| {
+        a.target
+            .cmp(&b.target)
+            .then(b.gain.cmp(&a.gain))
+            .then(a.vertex.cmp(&b.vertex))
+    });
+    let mut applied = Vec::new();
+    let mut i = 0;
+    while i < candidates.len() {
+        let t = candidates[i].target;
+        let budget = max_block_weights[t as usize] - p.block_weight(t);
+        let mut used = 0;
+        let mut j = i;
+        while j < candidates.len() && candidates[j].target == t {
+            let m = candidates[j];
+            let w = hg.vertex_weight(m.vertex);
+            if used + w > budget {
+                break; // maximal prefix reached for this target
+            }
+            used += w;
+            applied.push(m);
+            j += 1;
+        }
+        // Skip the rest of this target's segment.
+        while j < candidates.len() && candidates[j].target == t {
+            j += 1;
+        }
+        i = j;
+    }
+    p.apply_moves(&applied.iter().map(|m| (m.vertex, m.target)).collect::<Vec<_>>());
+    applied
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastructures::Hypergraph;
+    use crate::refinement::MoveCandidate;
+    use crate::{BlockId, VertexId};
+
+    fn cand(vertex: VertexId, target: BlockId, gain: Weight) -> MoveCandidate {
+        MoveCandidate { vertex, target, gain }
+    }
+
+    #[test]
+    fn budget_mode_admits_maximal_priority_prefix() {
+        // Weights 2 each; block 1 budget fits exactly one → the
+        // higher-gain candidate wins.
+        let h = Hypergraph::new(
+            4,
+            &[vec![0, 1], vec![1, 2], vec![2, 3]],
+            Some(vec![2, 2, 2, 2]),
+            None,
+        );
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 1, 1]);
+        let mut s = SelectionScratch::default();
+        s.stage(&[cand(0, 1, 1), cand(1, 1, 5)]);
+        let applied = approve_and_apply_in(&p, &[10, 6], &mut s);
+        assert_eq!(applied, &[cand(1, 1, 5)]);
+        assert_eq!(p.part(1), 1);
+        assert_eq!(p.part(0), 0);
+        p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn budget_mode_cutoff_is_a_prefix() {
+        // A heavy high-priority candidate that overflows the budget
+        // blocks the whole tail of its segment — the admission is a
+        // prefix of the priority order, exactly what the binary search
+        // computes (and what the synchronous-move framework prescribes).
+        let h = Hypergraph::new(
+            4,
+            &[vec![0, 1], vec![1, 2], vec![2, 3]],
+            Some(vec![1, 5, 1, 1]),
+            None,
+        );
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 1, 1]);
+        let mut s = SelectionScratch::default();
+        // Priority order in block 1's segment: v1 (gain 9, weight 5),
+        // v0 (gain 1, weight 1). Budget 4 − 2 = 2: v1 overflows → tail
+        // blocked, nothing admitted.
+        s.stage(&[cand(0, 1, 1), cand(1, 1, 9)]);
+        let applied = approve_and_apply_in(&p, &[10, 4], &mut s);
+        assert!(applied.is_empty());
+        // The serial oracle agrees.
+        let p2 = PartitionedHypergraph::new(&h, 2, vec![0, 0, 1, 1]);
+        let oracle =
+            approve_and_apply_serial(&p2, vec![cand(0, 1, 1), cand(1, 1, 9)], &[10, 4]);
+        assert!(oracle.is_empty());
+    }
+
+    #[test]
+    fn budget_mode_matches_serial_oracle_across_threads() {
+        // Adversarial mix: equal-gain ties, a zero-budget block, a tight
+        // block and loose blocks, across thread counts.
+        let h = crate::gen::sat_hypergraph(300, 900, 8, 23);
+        let part: Vec<BlockId> = (0..300).map(|v| (v % 4) as BlockId).collect();
+        let k = 4;
+        let cands: Vec<MoveCandidate> = (0..300u32)
+            .map(|v| cand(v, ((v + 1 + v / 7) % k) as BlockId, (v % 3) as Weight - 1))
+            .collect();
+        let p0 = PartitionedHypergraph::new(&h, k as usize, part.clone());
+        let lmax: Vec<Weight> = (0..k)
+            .map(|b| match b {
+                0 => p0.block_weight(0), // zero budget
+                1 => p0.block_weight(1) + 3, // tight
+                _ => p0.block_weight(b as BlockId) + 1000,
+            })
+            .collect();
+        let oracle = {
+            let p = PartitionedHypergraph::new(&h, k as usize, part.clone());
+            let a = approve_and_apply_serial(&p, cands.clone(), &lmax);
+            (a, p.snapshot(), p.km1())
+        };
+        assert!(!oracle.0.is_empty());
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let p = PartitionedHypergraph::new(&h, k as usize, part.clone());
+                let mut s = SelectionScratch::default();
+                s.stage(&cands);
+                let a = approve_and_apply_in(&p, &lmax, &mut s).to_vec();
+                assert_eq!(a, oracle.0, "nt={nt}");
+                assert_eq!(p.snapshot(), oracle.1, "nt={nt}");
+                assert_eq!(p.km1(), oracle.2, "nt={nt}");
+                p.validate(None).unwrap();
+            });
+        }
+    }
+
+    #[test]
+    fn shed_mode_takes_minimal_covering_prefix() {
+        let h = Hypergraph::new(
+            6,
+            &[vec![0, 1], vec![2, 3], vec![4, 5]],
+            Some(vec![3, 3, 3, 3, 3, 3]),
+            None,
+        );
+        let p = PartitionedHypergraph::new(&h, 2, vec![0, 0, 0, 0, 1, 1]);
+        let mut s = SelectionScratch::default();
+        // Priority = gain desc; shed 5 → two moves (3 + 3 ≥ 5) suffice,
+        // the third is not taken.
+        s.stage(&[cand(0, 1, 7), cand(1, 1, 5), cand(2, 1, 3)]);
+        let cmp = |a: &MoveCandidate, b: &MoveCandidate| {
+            b.gain.cmp(&a.gain).then(a.vertex.cmp(&b.vertex))
+        };
+        let applied = shed_and_apply_in(&p, 5, cmp, &mut s);
+        assert_eq!(applied, &[cand(0, 1, 7), cand(1, 1, 5)]);
+        assert_eq!(p.part(0), 1);
+        assert_eq!(p.part(1), 1);
+        assert_eq!(p.part(2), 0);
+        // Total short of the target → shed everything available.
+        let mut s2 = SelectionScratch::default();
+        s2.stage(&[cand(2, 1, 3), cand(3, 1, 1)]);
+        let applied = shed_and_apply_in(&p, 100, cmp, &mut s2);
+        assert_eq!(applied.len(), 2);
+        p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn positive_filter_preserves_order_across_threads() {
+        let cands: Vec<MoveCandidate> = (0..20_000u32)
+            .map(|v| cand(v, (v % 3) as BlockId, (v % 5) as Weight - 2))
+            .collect();
+        let expect: Vec<MoveCandidate> =
+            cands.iter().copied().filter(|m| m.gain > 0).collect();
+        for nt in [1usize, 2, 4, 8] {
+            crate::par::with_num_threads(nt, || {
+                let mut s = SelectionScratch::default();
+                s.stage(&cands);
+                filter_positive_in(&mut s);
+                assert_eq!(s.staged(), &expect[..], "nt={nt}");
+            });
+        }
+    }
+
+    #[test]
+    fn flatten_matches_sequential_append_across_threads() {
+        let chunks: Vec<Vec<MoveCandidate>> = (0..13)
+            .map(|c| {
+                (0..(c * 7) % 23)
+                    .map(|j| cand((c * 100 + j) as VertexId, (c % 4) as BlockId, j as Weight))
+                    .collect()
+            })
+            .collect();
+        let mut expect = Vec::new();
+        for c in &chunks {
+            expect.extend_from_slice(c);
+        }
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let mut out = Vec::new();
+                let mut counts = Vec::new();
+                flatten_chunks_into(&chunks, &mut out, &mut counts);
+                assert_eq!(out, expect, "nt={nt}");
+            });
+        }
+    }
+
+    /// Satellite guard (mirrors contraction's): the selection hot path
+    /// must stay fully parallel — no serial `for x in 0..n`-style sweeps
+    /// outside the serial oracle and tests.
+    #[test]
+    fn no_serial_candidate_loops_on_hot_path() {
+        let src = include_str!("select.rs");
+        let hot_path = &src[..src.find("pub fn approve_and_apply_serial").unwrap()];
+        // Build the needles at runtime so this test doesn't match itself.
+        for var in ["v", "e", "i", "j", "seg"] {
+            let needle = format!("for {var} in 0..");
+            assert!(
+                !hot_path.contains(&needle),
+                "serial sweep `{needle}` found on the selection hot path"
+            );
+        }
+    }
+}

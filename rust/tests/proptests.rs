@@ -267,6 +267,79 @@ fn prop_afterburner_matches_sequential_simulation() {
 }
 
 #[test]
+fn prop_parallel_selection_matches_serial_oracle() {
+    // The unified selection core (sort → segments → segmented prefix →
+    // binary-search cutoffs → compaction → bulk apply) must produce a
+    // bit-identical applied-move set — and identical partition state and
+    // km1 — to the retained serial oracle, on every generator class, for
+    // adversarial equal-gain ties and zero-budget blocks, at 1/2/4
+    // threads.
+    use detpart::datastructures::Hypergraph;
+    use detpart::refinement::{approve_and_apply, select, MoveCandidate};
+    use detpart::util::rng::hash64;
+
+    let instances: Vec<(Hypergraph, &str)> = vec![
+        (detpart::gen::sat_hypergraph(350, 1000, 8, 41), "sat"),
+        (detpart::gen::vlsi_netlist(20, 1.2, 33), "vlsi"),
+        (detpart::gen::rmat_graph(8, 6, 27), "rmat"),
+    ];
+    for (gi, (h, tag)) in instances.iter().enumerate() {
+        let n = h.num_vertices();
+        let k = 4usize;
+        let part: Vec<u32> =
+            (0..n).map(|v| (hash64(gi as u64, v as u64) % k as u64) as u32).collect();
+        let p0 = PartitionedHypergraph::new(h, k, part.clone());
+        // Budgets: block 0 zero budget, block 1 tight, the rest loose.
+        let lmax: Vec<i64> = (0..k as u32)
+            .map(|b| match b {
+                0 => p0.block_weight(0),
+                1 => p0.block_weight(1) + 4,
+                _ => p0.block_weight(b) + n as i64,
+            })
+            .collect();
+        // Candidate families: real Jet candidates (warm temperature) and
+        // an adversarial synthetic set with massive equal-gain ties.
+        let locked = Bitset::new(n);
+        let real = detpart::refinement::jet::candidates::collect_candidates(
+            &p0, &locked, 0.75, None,
+        );
+        let ties: Vec<MoveCandidate> = (0..n as u32)
+            .map(|v| MoveCandidate {
+                vertex: v,
+                target: (part[v as usize] + 1 + v % 3) % k as u32,
+                gain: (v % 2) as i64, // huge tie classes: gains ∈ {0, 1}
+            })
+            .collect();
+        for (fam, cands) in [("real", real), ("ties", ties)] {
+            let oracle = {
+                let p = PartitionedHypergraph::new(h, k, part.clone());
+                let a = select::approve_and_apply_serial(&p, cands.clone(), &lmax);
+                (a, p.snapshot(), p.km1())
+            };
+            // Zero-budget block must admit nothing.
+            assert!(
+                oracle.0.iter().all(|m| m.target != 0),
+                "{tag}/{fam}: zero-budget block admitted a move"
+            );
+            for nt in [1usize, 2, 4] {
+                detpart::par::with_num_threads(nt, || {
+                    let p = PartitionedHypergraph::new(h, k, part.clone());
+                    let a = approve_and_apply(&p, cands.clone(), &lmax);
+                    assert_eq!(a, oracle.0, "{tag}/{fam} nt={nt}: applied set diverged");
+                    assert_eq!(
+                        p.snapshot(),
+                        oracle.1,
+                        "{tag}/{fam} nt={nt}: partition state diverged"
+                    );
+                    assert_eq!(p.km1(), oracle.2, "{tag}/{fam} nt={nt}: km1 diverged");
+                    p.validate(None).unwrap();
+                });
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_flow_pair_refinement_sound() {
     for_random_instances(707, 15, &P, |seed, hg, rng| {
         let k = 2usize;
