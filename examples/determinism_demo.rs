@@ -1,17 +1,19 @@
-//! Determinism demonstration: the paper's core property, made visible.
+//! Determinism demonstration: the paper's core property, made visible
+//! through the session-engine API.
 //!
 //! Runs the same instance under adversarial conditions — different
-//! thread counts, different max-flow seeds, repeated invocations — and
-//! prints the partition hashes. Also shows the *contrast*: the simulated
-//! non-deterministic mode (Mt-KaHyPar-Default stand-in) produces
-//! different results under different "interleaving" seeds.
+//! thread counts, different max-flow seeds, repeated invocations on a
+//! *warm* engine whose scratch arenas are reused between requests — and
+//! prints the partition fingerprints. Also shows the *contrast*: the
+//! simulated non-deterministic mode (Mt-KaHyPar-Default stand-in)
+//! produces different results under different "interleaving" seeds.
 //!
 //! ```text
 //! cargo run --release --example determinism_demo
 //! ```
 
-use detpart::config::Config;
-use detpart::partitioner::partition;
+use detpart::config::{ConfigBuilder, Preset};
+use detpart::engine::{PartitionRequest, Partitioner};
 use detpart::util::rng::hash64;
 
 fn fingerprint(part: &[u32]) -> u64 {
@@ -27,10 +29,12 @@ fn main() {
     let k = 8;
     println!("instance sat-8k: n={} m={}\n", hg.num_vertices(), hg.num_edges());
 
-    println!("DetJet under varying thread counts (must all match):");
+    println!("DetJet on one warm engine, varying thread counts (must all match):");
+    let mut engine = Partitioner::from_preset(Preset::DetJet, 7);
+    let req = PartitionRequest::new(k, 7);
     let mut fps = Vec::new();
     for nt in [1usize, 2, 3, 4, 8] {
-        let r = detpart::par::with_num_threads(nt, || partition(&hg, k, &Config::detjet(7)));
+        let r = detpart::par::with_num_threads(nt, || engine.partition(&hg, &req).unwrap());
         let fp = fingerprint(&r.part);
         println!("  threads={nt}: λ−1={} fingerprint={fp:016x}", r.km1);
         fps.push(fp);
@@ -40,9 +44,14 @@ fn main() {
     println!("\nDetFlows under varying max-flow seeds (must all match):");
     let mut fps = Vec::new();
     for flow_seed in [0u64, 17, 123456789] {
-        let mut cfg = Config::detflows(7);
-        cfg.refinement.flows.as_mut().unwrap().flow_seed = flow_seed;
-        let r = partition(&hg, k, &cfg);
+        let cfg = ConfigBuilder::new(Preset::DetFlows)
+            .tweak(|c| c.refinement.flows.as_mut().unwrap().flow_seed = flow_seed)
+            .build()
+            .unwrap();
+        let r = Partitioner::new(cfg)
+            .unwrap()
+            .partition(&hg, &PartitionRequest::new(k, 7))
+            .unwrap();
         let fp = fingerprint(&r.part);
         println!("  flow_seed={flow_seed}: λ−1={} fingerprint={fp:016x}", r.km1);
         fps.push(fp);
@@ -50,8 +59,9 @@ fn main() {
     assert!(fps.windows(2).all(|w| w[0] == w[1]));
 
     println!("\nsimulated non-deterministic mode (interleaving seeds differ):");
+    let mut nondet = Partitioner::from_preset(Preset::NonDetJet, 0);
     for s in 0..3u64 {
-        let r = partition(&hg, k, &Config::nondet_jet(s));
+        let r = nondet.partition(&hg, &PartitionRequest::new(k, s)).unwrap();
         println!(
             "  interleaving={s}: λ−1={} fingerprint={:016x}",
             r.km1,

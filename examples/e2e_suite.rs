@@ -1,6 +1,9 @@
 //! **End-to-end validation driver** (EXPERIMENTS.md §E2E).
 //!
-//! Exercises the full three-layer system on the real benchmark suite:
+//! Exercises the full three-layer system on the real benchmark suite,
+//! through the production serving surface — one warm
+//! [`detpart::engine::Partitioner`] session engine per preset, reused
+//! across every instance, k and thread-count sweep:
 //!
 //! * builds every suite instance (all three classes),
 //! * partitions with all presets (SDet-LP, BiPart-like, DetJet,
@@ -10,7 +13,8 @@
 //!   asserts bit-equality with the native path — proving all layers
 //!   compose,
 //! * verifies determinism of every deterministic preset across thread
-//!   counts on every instance,
+//!   counts on every instance — with *warm* scratch, the serving-path
+//!   configuration,
 //! * reports the paper's headline metrics: quality ratios vs SDet and
 //!   BiPart, DetFlows' extra quality, and relative running times.
 //!
@@ -18,8 +22,8 @@
 //! make artifacts && cargo run --release --example e2e_suite
 //! ```
 
-use detpart::config::Config;
-use detpart::partitioner::{partition, partition_with_selector};
+use detpart::config::Preset;
+use detpart::engine::{PartitionRequest, Partitioner};
 use detpart::util::stats::geometric_mean;
 use std::collections::BTreeMap;
 
@@ -34,8 +38,13 @@ fn main() {
         Err(e) => println!("XLA backend unavailable ({e}); native-only run"),
     }
 
-    let presets = ["sdet", "bipart", "detjet", "nondet-jet", "detflows"];
+    let presets =
+        [Preset::SDet, Preset::BiPart, Preset::DetJet, Preset::NonDetJet, Preset::DetFlows];
     let ks = [4usize, 8];
+    let mut engines: BTreeMap<&str, Partitioner> = presets
+        .iter()
+        .map(|&p| (p.name(), Partitioner::from_preset(p, 1)))
+        .collect();
     let mut km1: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
     let mut time: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
     let mut xla_checked = 0usize;
@@ -52,28 +61,35 @@ fn main() {
         );
         for k in ks {
             for preset in presets {
-                let cfg = Config::preset(preset, 1).unwrap();
-                let r = partition(&hg, k, &cfg);
+                let name = preset.name();
+                let req = PartitionRequest::new(k, 1);
+                let engine = engines.get_mut(name).unwrap();
+                let r = engine.partition(&hg, &req).expect("valid request");
                 println!(
-                    "  k={k} {preset:<12} λ−1={:<7} imb={:.3} {:>7.2}s {}",
+                    "  k={k} {name:<12} λ−1={:<7} imb={:.3} {:>7.2}s {}",
                     r.km1,
                     r.imbalance,
                     r.total_s,
                     if r.balanced { "" } else { "UNBALANCED" }
                 );
-                km1.entry(preset).or_default().push((r.km1 + 1) as f64);
-                time.entry(preset).or_default().push(r.total_s.max(1e-6));
+                km1.entry(name).or_default().push((r.km1 + 1) as f64);
+                time.entry(name).or_default().push(r.total_s.max(1e-6));
 
-                // Determinism spot check across thread counts.
-                if preset != "nondet-jet" && preset != "nondet-flows" {
-                    let r2 = detpart::par::with_num_threads(4, || partition(&hg, k, &cfg));
-                    assert_eq!(r.part, r2.part, "{preset} non-deterministic on {}", inst.name);
+                // Determinism spot check across thread counts, on the
+                // warm engine.
+                if preset != Preset::NonDetJet && preset != Preset::NonDetFlows {
+                    let r2 = detpart::par::with_num_threads(4, || {
+                        engine.partition(&hg, &req).expect("valid request")
+                    });
+                    assert_eq!(r.part, r2.part, "{name} non-deterministic on {}", inst.name);
                 }
 
                 // L1/L2/L3 composition: XLA backend must be bit-identical.
-                if preset == "detjet" && k == 8 {
+                if preset == Preset::DetJet && k == 8 {
                     if let Ok(s) = &xla {
-                        let rx = partition_with_selector(&hg, k, &cfg, Some(s));
+                        let rx = engine
+                            .partition_with_selector(&hg, &req, Some(s), None)
+                            .expect("valid request");
                         assert_eq!(
                             r.part, rx.part,
                             "XLA backend diverged from native on {}",
@@ -92,18 +108,20 @@ fn main() {
     println!("quality (geomean λ−1+1, lower better):");
     for p in presets {
         println!(
-            "  {p:<12} {:>10.1}  ({:.2}x vs detjet)",
-            gm(&km1, p),
-            gm(&km1, p) / dj
+            "  {:<12} {:>10.1}  ({:.2}x vs detjet)",
+            p.name(),
+            gm(&km1, p.name()),
+            gm(&km1, p.name()) / dj
         );
     }
     let tj = gm(&time, "detjet");
     println!("running time (geomean s):");
     for p in presets {
         println!(
-            "  {p:<12} {:>10.3}  ({:.2}x vs detjet)",
-            gm(&time, p),
-            gm(&time, p) / tj
+            "  {:<12} {:>10.3}  ({:.2}x vs detjet)",
+            p.name(),
+            gm(&time, p.name()),
+            gm(&time, p.name()) / tj
         );
     }
     println!("\npaper shape checks:");

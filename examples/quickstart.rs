@@ -1,13 +1,15 @@
-//! Quickstart: generate a small hypergraph, partition it with DetJet,
-//! inspect the result, and verify determinism — the 60-second tour of
-//! the public API.
+//! Quickstart: generate a small hypergraph, build a validated config
+//! with [`detpart::config::ConfigBuilder`], stand up a
+//! [`detpart::engine::Partitioner`] session engine, serve a few
+//! requests, and verify determinism — the 60-second tour of the public
+//! API.
 //!
 //! ```text
 //! cargo run --release --example quickstart
 //! ```
 
-use detpart::config::Config;
-use detpart::partitioner::partition;
+use detpart::config::{ConfigBuilder, Preset};
+use detpart::engine::{PartitionRequest, Partitioner};
 
 fn main() {
     // 1. An instance: a SuiteSparse-like sparse-matrix hypergraph
@@ -20,34 +22,51 @@ fn main() {
         hg.num_pins()
     );
 
-    // 2. Partition into k = 8 blocks with the paper's DetJet preset
-    //    (ε = 0.03, three Jet temperatures, improved det. coarsening).
-    let cfg = Config::detjet(42);
-    let result = partition(&hg, 8, &cfg);
+    // 2. A validated configuration (preset + fluent overrides) and a
+    //    long-lived session engine that owns all scratch arenas. k and
+    //    seed are per-request; an invalid override would surface here as
+    //    a typed ConfigError instead of a panic mid-pipeline.
+    let cfg = ConfigBuilder::new(Preset::DetJet)
+        .eps(0.03)
+        .build()
+        .expect("preset configs validate");
+    let mut engine = Partitioner::new(cfg).expect("validated above");
+
+    // 3. Serve a request: partition into k = 8 blocks under seed 42.
+    let result = engine
+        .partition(&hg, &PartitionRequest::new(8, 42))
+        .expect("k and input are valid");
     println!(
         "DetJet:  connectivity (λ−1) = {}, cut = {}, imbalance = {:.4}, {:.3}s",
         result.km1, result.cut, result.imbalance, result.total_s
     );
     assert!(result.balanced);
 
-    // 3. Compare against the previous deterministic state of the art
+    // 4. Bad requests come back as typed errors, not panics.
+    let err = engine.partition(&hg, &PartitionRequest::new(0, 42)).unwrap_err();
+    println!("typed error for k = 0: {err}");
+
+    // 5. Compare against the previous deterministic state of the art
     //    (synchronous label propagation à la Mt-KaHyPar-SDet).
-    let lp = partition(&hg, 8, &Config::sdet(42));
+    let lp = Partitioner::from_preset(Preset::SDet, 42)
+        .partition(&hg, &PartitionRequest::new(8, 42))
+        .expect("valid request");
     println!(
         "SDet-LP: connectivity (λ−1) = {} ({:+.1}% vs DetJet)",
         lp.km1,
         100.0 * (lp.km1 as f64 / result.km1 as f64 - 1.0)
     );
 
-    // 4. Determinism: same seed, different thread counts → identical
-    //    partition, bit for bit.
-    let p2 = detpart::par::with_num_threads(2, || partition(&hg, 8, &cfg));
-    let p4 = detpart::par::with_num_threads(4, || partition(&hg, 8, &cfg));
+    // 6. Determinism on the *warm* engine: same seed, different thread
+    //    counts → identical partition, bit for bit, with reused scratch.
+    let req = PartitionRequest::new(8, 42);
+    let p2 = detpart::par::with_num_threads(2, || engine.partition(&hg, &req).unwrap());
+    let p4 = detpart::par::with_num_threads(4, || engine.partition(&hg, &req).unwrap());
     assert_eq!(result.part, p2.part);
     assert_eq!(result.part, p4.part);
     println!("determinism: identical partitions across 1/2/4 threads ✓");
 
-    // 5. The result is a plain block vector; write it in the standard
+    // 7. The result is a plain block vector; write it in the standard
     //    partition-file format.
     let out = std::env::temp_dir().join("quickstart.part");
     detpart::io::write_partition(&result.part, &out).unwrap();

@@ -5,26 +5,30 @@
 //! connectivity metric *exactly* the communication volume of parallel
 //! SpMV: a column's net spanning λ blocks costs λ−1 vector-entry
 //! transfers per iteration. This example partitions 2D/3D stencil
-//! matrices across processor counts, reports the communication volume
-//! against the theoretical lower bound shape, and shows what the
-//! flow-based refinement adds on top of Jet.
+//! matrices across processor counts through two warm session engines
+//! (DetJet and DetFlows), reports the communication volume against the
+//! theoretical lower bound shape, and shows what the flow-based
+//! refinement adds on top of Jet.
 //!
 //! ```text
 //! cargo run --release --example spmv_rowwise
 //! ```
 
-use detpart::config::Config;
-use detpart::partitioner::partition;
+use detpart::config::Preset;
+use detpart::engine::{PartitionRequest, Partitioner};
 
 fn main() {
     println!("SpMV partitioning (column-net model; λ−1 = communication volume)\n");
+    let mut jet_engine = Partitioner::from_preset(Preset::DetJet, 7);
+    let mut flow_engine = Partitioner::from_preset(Preset::DetFlows, 7);
     for (name, hg, k) in [
         ("2D 5-pt 96x96", detpart::gen::spm_hypergraph_2d(96, 96), 8usize),
         ("3D 7-pt 22^3", detpart::gen::spm_hypergraph_3d(22, 22, 22), 8),
     ] {
         let n = hg.num_vertices();
-        let detjet = partition(&hg, k, &Config::detjet(7));
-        let detflows = partition(&hg, k, &Config::detflows(7));
+        let req = PartitionRequest::new(k, 7);
+        let detjet = jet_engine.partition(&hg, &req).expect("valid request");
+        let detflows = flow_engine.partition(&hg, &req).expect("valid request");
         // Perimeter-style reference: a perfect square/cube decomposition
         // of an s-point stencil has O(k · n^{(d-1)/d}) boundary volume.
         let dims = if name.starts_with("2D") { 2.0 } else { 3.0 };

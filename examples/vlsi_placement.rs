@@ -4,25 +4,30 @@
 //! length / congestion proxy), (b) balance (die area), and crucially
 //! (c) **reproducibility**: engineers hand-tune downstream steps against
 //! a specific partition, so the tool must return the identical partition
-//! on every invocation. This example partitions Rent's-rule netlists at
-//! increasing k, compares DetJet with the BiPart-like baseline, and
-//! demonstrates the reproducibility contract.
+//! on every invocation. This example drives one warm
+//! [`detpart::engine::Partitioner`] per preset — the long-lived-tool
+//! deployment shape — over Rent's-rule netlists at increasing k,
+//! compares DetJet with the BiPart-like baseline, and demonstrates the
+//! reproducibility contract.
 //!
 //! ```text
 //! cargo run --release --example vlsi_placement
 //! ```
 
-use detpart::config::Config;
-use detpart::partitioner::partition;
+use detpart::config::Preset;
+use detpart::engine::{PartitionRequest, Partitioner};
 use detpart::util::stats::geometric_mean;
 
 fn main() {
     println!("VLSI netlist partitioning (Rent's-rule synthetic netlists)\n");
+    let mut detjet_engine = Partitioner::from_preset(Preset::DetJet, 1);
+    let mut bipart_engine = Partitioner::from_preset(Preset::BiPart, 1);
     let mut ratios = Vec::new();
     for (side, k) in [(48usize, 4usize), (72, 8), (96, 16)] {
         let netlist = detpart::gen::vlsi_netlist(side, 1.15, 0xD1E + side as u64);
-        let detjet = partition(&netlist, k, &Config::detjet(1));
-        let bipart = partition(&netlist, k, &Config::bipart(1));
+        let req = PartitionRequest::new(k, 1);
+        let detjet = detjet_engine.partition(&netlist, &req).expect("valid request");
+        let bipart = bipart_engine.partition(&netlist, &req).expect("valid request");
         let ratio = (bipart.km1 + 1) as f64 / (detjet.km1 + 1) as f64;
         ratios.push(ratio);
         println!(
@@ -41,8 +46,11 @@ fn main() {
         );
 
         // The reproducibility contract: re-running the tool (any thread
-        // count) returns the identical partition for the same seed.
-        let rerun = detpart::par::with_num_threads(4, || partition(&netlist, k, &Config::detjet(1)));
+        // count, warm or cold scratch) returns the identical partition
+        // for the same seed.
+        let rerun = detpart::par::with_num_threads(4, || {
+            detjet_engine.partition(&netlist, &req).expect("valid request")
+        });
         assert_eq!(detjet.part, rerun.part, "VLSI flow broken: partition changed!");
     }
     println!(

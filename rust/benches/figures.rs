@@ -24,12 +24,21 @@ mod alloc_counter {
     pub static CURRENT: AtomicI64 = AtomicI64::new(0);
     pub static PEAK: AtomicI64 = AtomicI64::new(0);
     pub static BASELINE: AtomicI64 = AtomicI64::new(0);
+    pub static LARGE: AtomicU64 = AtomicU64::new(0);
+
+    /// "Large buffer" cutoff for the engine micro: session scratch
+    /// arenas (e.g. the packed pin-count matrix) sit above it, per-level
+    /// outputs and sub-hypergraphs of the chosen workload below it.
+    pub const LARGE_THRESHOLD: usize = 2 << 20;
 
     pub struct Counting;
 
     unsafe impl GlobalAlloc for Counting {
         unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
+            if layout.size() >= LARGE_THRESHOLD {
+                LARGE.fetch_add(1, Ordering::Relaxed);
+            }
             let cur =
                 CURRENT.fetch_add(layout.size() as i64, Ordering::Relaxed) + layout.size() as i64;
             PEAK.fetch_max(cur, Ordering::Relaxed);
@@ -46,6 +55,7 @@ mod alloc_counter {
     /// rebased and the epoch's starting level saved as the baseline).
     pub fn reset_epoch() {
         ALLOCS.store(0, Ordering::Relaxed);
+        LARGE.store(0, Ordering::Relaxed);
         let cur = CURRENT.load(Ordering::Relaxed);
         PEAK.store(cur, Ordering::Relaxed);
         BASELINE.store(cur, Ordering::Relaxed);
@@ -53,6 +63,11 @@ mod alloc_counter {
 
     pub fn allocs() -> u64 {
         ALLOCS.load(Ordering::Relaxed)
+    }
+
+    /// Allocations of at least [`LARGE_THRESHOLD`] bytes this epoch.
+    pub fn large_allocs() -> u64 {
+        LARGE.load(Ordering::Relaxed)
     }
 
     /// Peak live bytes above the epoch baseline (not above the *current*
@@ -222,6 +237,114 @@ fn selection_micro() {
     }
 }
 
+/// The PR-4 engine micro: cold (fresh `Partitioner` per request) vs warm
+/// (one session engine) request latency and allocations-per-request —
+/// the serving-path number the ROADMAP cares about. The workload is
+/// sized so the input sits below the contraction limit at k = 96: the
+/// request path is then preprocessing + initial partitioning +
+/// finest-level refinement, and the only buffers ≥ 2 MiB on it are
+/// session scratch (the packed pin-count matrix) — so warm requests must
+/// make **zero** large-buffer allocations, which this micro asserts with
+/// the counting allocator. Emits `BENCH_engine.json`.
+fn engine_micro() {
+    use detpart::config::{ConfigBuilder, Preset};
+    use detpart::engine::{PartitionRequest, Partitioner};
+    use detpart::util::Timer;
+
+    println!("== micro: session engine (cold vs warm requests) ==");
+    let k = 96usize;
+    let h = detpart::gen::sat_hypergraph(15_000, 60_000, 12, 5);
+    let cfg = ConfigBuilder::new(Preset::DetJet).build().expect("valid preset");
+    let req = PartitionRequest::new(k, 7);
+    let reqs = 4usize;
+
+    // Cold series: a fresh engine per request pays the arena builds.
+    let mut cold: Vec<(f64, u64, u64, i64, Vec<u32>)> = Vec::new();
+    for _ in 0..reqs {
+        let mut engine = Partitioner::new(cfg.clone()).expect("valid config");
+        alloc_counter::reset_epoch();
+        let t = Timer::start();
+        let r = engine.partition(&h, &req).expect("valid request");
+        cold.push((
+            t.elapsed_s() * 1e3,
+            alloc_counter::allocs(),
+            alloc_counter::large_allocs(),
+            alloc_counter::peak_extra_bytes(),
+            r.part,
+        ));
+    }
+
+    // Warm series: one session engine across all requests.
+    let mut engine = Partitioner::new(cfg.clone()).expect("valid config");
+    let mut warm: Vec<(f64, u64, u64, i64, Vec<u32>)> = Vec::new();
+    for _ in 0..reqs {
+        alloc_counter::reset_epoch();
+        let t = Timer::start();
+        let r = engine.partition(&h, &req).expect("valid request");
+        warm.push((
+            t.elapsed_s() * 1e3,
+            alloc_counter::allocs(),
+            alloc_counter::large_allocs(),
+            alloc_counter::peak_extra_bytes(),
+            r.part,
+        ));
+    }
+
+    // Warm scratch must never change the answer …
+    for (i, (c, w)) in cold.iter().zip(&warm).enumerate() {
+        assert_eq!(c.4, w.4, "request {i}: warm engine diverged from cold");
+    }
+    // … the engine must have built its refinement context exactly once …
+    assert_eq!(engine.scratch_rebuilds(), 1, "same-shape requests rebuilt scratch");
+    // … and after the first request the warm path makes zero
+    // large-buffer allocations (the acceptance criterion), strictly
+    // fewer allocations than a cold engine, with the cold path actually
+    // exercising the threshold.
+    assert!(cold[0].2 > 0, "workload too small: cold path has no large allocations");
+    for (i, w) in warm.iter().enumerate().skip(1) {
+        assert_eq!(w.2, 0, "warm request {i} made {} large allocations", w.2);
+        assert!(
+            w.1 < cold[i].1,
+            "warm request {i} allocations ({}) not below cold ({})",
+            w.1,
+            cold[i].1
+        );
+    }
+
+    let fmt = |series: &[(f64, u64, u64, i64, Vec<u32>)]| -> Vec<String> {
+        series
+            .iter()
+            .map(|(ms, allocs, large, peak, _)| {
+                format!(
+                    "{{\"ms\":{ms:.3},\"allocs\":{allocs},\"large_allocs\":{large},\"peak_extra_bytes\":{peak}}}"
+                )
+            })
+            .collect()
+    };
+    println!(
+        "  cold: {:.1} ms, {} allocs ({} large) | warm steady: {:.1} ms, {} allocs (0 large) | {} threads",
+        cold[0].0,
+        cold[0].1,
+        cold[0].2,
+        warm.last().unwrap().0,
+        warm.last().unwrap().1,
+        detpart::par::num_threads(),
+    );
+    let json = format!(
+        "{{\"bench\":\"engine\",\"instance\":\"sat-15k\",\"k\":{k},\"threads\":{},\"large_threshold_bytes\":{},\"scratch_rebuilds\":{},\"cold\":[{}],\"warm\":[{}]}}\n",
+        detpart::par::num_threads(),
+        alloc_counter::LARGE_THRESHOLD,
+        engine.scratch_rebuilds(),
+        fmt(&cold).join(","),
+        fmt(&warm).join(","),
+    );
+    let path = "BENCH_engine.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+}
+
 fn micro_benchmarks() {
     use detpart::config::JetConfig;
     use detpart::datastructures::PartitionedHypergraph;
@@ -350,6 +473,7 @@ fn main() {
         micro_benchmarks();
         contraction_micro();
         selection_micro();
+        engine_micro();
         return;
     }
     for name in names {
@@ -357,13 +481,16 @@ fn main() {
             micro_benchmarks();
             contraction_micro();
             selection_micro();
+            engine_micro();
         } else if name == "contraction" {
             contraction_micro();
         } else if name == "selection" {
             selection_micro();
+        } else if name == "engine" {
+            engine_micro();
         } else if !figures::run_by_name(&ctx, name) {
             eprintln!(
-                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, selection, all"
+                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, selection, engine, all"
             );
             std::process::exit(1);
         }

@@ -9,7 +9,9 @@
 //! detpart verify-determinism --instance <name> --k <k> [--preset ..]
 //! ```
 
-use crate::config::{Config, GainBackend};
+use crate::config::{Config, ConfigBuilder, GainBackend, Preset};
+use crate::engine::{PartitionRequest, Partitioner};
+use crate::util::timer::PhaseTimer;
 use crate::util::{Context, Result};
 use crate::{bail, err};
 use std::collections::HashMap;
@@ -105,21 +107,22 @@ fn load_input(flags: &HashMap<String, String>) -> Result<crate::datastructures::
 }
 
 fn build_config(flags: &HashMap<String, String>) -> Result<Config> {
-    let preset = flags.get("preset").map(String::as_str).unwrap_or("detjet");
+    let preset_name = flags.get("preset").map(String::as_str).unwrap_or("detjet");
+    let preset =
+        Preset::from_name(preset_name).ok_or_else(|| err!("unknown preset {preset_name:?}"))?;
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
-    let mut cfg =
-        Config::preset(preset, seed).ok_or_else(|| err!("unknown preset {preset:?}"))?;
+    let mut builder = ConfigBuilder::new(preset).seed(seed);
     if let Some(e) = flags.get("eps") {
-        cfg.eps = e.parse().context("--eps")?;
+        builder = builder.eps(e.parse().context("--eps")?);
     }
     if let Some(b) = flags.get("gain-backend") {
-        cfg.refinement.gain_backend = match b.as_str() {
+        builder = builder.gain_backend(match b.as_str() {
             "native" => GainBackend::Native,
             "xla" => GainBackend::Xla,
             other => bail!("unknown gain backend {other:?}"),
-        };
+        });
     }
-    Ok(cfg)
+    builder.build().map_err(|e| err!("invalid configuration: {e}"))
 }
 
 fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
@@ -144,16 +147,25 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
         hg.num_vertices(),
         hg.num_edges(),
         hg.num_pins(),
-        cfg.name,
+        cfg.preset,
         cfg.seed,
         crate::par::num_threads()
     );
-    let r = crate::partitioner::partition_with_selector(&hg, k, &cfg, selector);
+    let seed = cfg.seed;
+    let mut engine =
+        Partitioner::new(cfg).map_err(|e| err!("invalid configuration: {e}"))?;
+    // Phase times arrive through the progress-observer channel; the CLI
+    // no longer reaches into `PartitionResult.timings`.
+    let mut timings = PhaseTimer::new();
+    let req = PartitionRequest::new(k, seed);
+    let r = engine
+        .partition_with_selector(&hg, &req, selector, Some(&mut timings))
+        .map_err(|e| err!("partitioning failed: {e}"))?;
     println!(
         "result: km1={} cut={} imbalance={:.4} balanced={} time={:.3}s",
         r.km1, r.cut, r.imbalance, r.balanced, r.total_s
     );
-    for (phase, secs) in r.timings.phases() {
+    for (phase, secs) in timings.phases() {
         println!("  {phase:<18} {secs:>8.3}s");
     }
     if let Some(out) = flags.get("output") {
@@ -193,10 +205,16 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<()> {
     let hg = load_input(flags)?;
     let k: usize = flags.get("k").ok_or_else(|| err!("--k required"))?.parse()?;
     let cfg = build_config(flags)?;
-    println!("verifying determinism of preset {} on k={k} ...", cfg.name);
+    println!("verifying determinism of preset {} on k={k} ...", cfg.preset);
+    let seed = cfg.seed;
+    // One warm session engine across all thread counts — the determinism
+    // contract must hold for reused scratch too.
+    let mut engine = Partitioner::new(cfg).map_err(|e| err!("invalid configuration: {e}"))?;
     let mut reference: Option<(Vec<u32>, i64)> = None;
     for nt in [1usize, 2, 4, 8] {
-        let r = crate::par::with_num_threads(nt, || crate::partitioner::partition(&hg, k, &cfg));
+        let req = PartitionRequest::new(k, seed);
+        let r = crate::par::with_num_threads(nt, || engine.partition(&hg, &req))
+            .map_err(|e| err!("partitioning failed: {e}"))?;
         println!("  threads={nt}: km1={} imbalance={:.4}", r.km1, r.imbalance);
         match &reference {
             None => reference = Some((r.part, r.km1)),

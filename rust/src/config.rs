@@ -1,8 +1,20 @@
 //! Configuration system: every parameter the paper discusses is a field,
-//! and each evaluated configuration is a named preset —
-//! `detjet`, `detflows`, `sdet` (Mt-KaHyPar-SDet-like), `bipart`
-//! (BiPart-like), and the simulated non-deterministic modes
-//! `nondet-jet` / `nondet-flows`.
+//! and each evaluated configuration is a named [`Preset`] —
+//! [`Preset::DetJet`], [`Preset::DetFlows`], [`Preset::SDet`]
+//! (Mt-KaHyPar-SDet-like), [`Preset::BiPart`] (BiPart-like), and the
+//! simulated non-deterministic modes [`Preset::NonDetJet`] /
+//! [`Preset::NonDetFlows`].
+//!
+//! Configurations for the session engine ([`crate::engine::Partitioner`])
+//! are assembled by [`ConfigBuilder`] — preset base + fluent overrides —
+//! and checked by [`Config::validate`], whose typed failure modes are the
+//! [`ConfigError`] taxonomy (see DESIGN.md §8). The raw `Config` struct
+//! stays plain-old-data with public fields for the experiment harness's
+//! ablation sweeps; anything that enters a [`crate::engine::Partitioner`]
+//! is re-validated at construction.
+#![deny(missing_docs)]
+
+use std::fmt;
 
 /// Which refinement algorithm drives uncoarsening.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -24,6 +36,73 @@ pub enum GainBackend {
     /// AOT-compiled XLA executable (authored as a Pallas kernel) — the
     /// L1/L2 layers of the stack. Bit-identical to `Native` (tested).
     Xla,
+}
+
+/// The named configuration presets of the paper's evaluation. Replaces
+/// the former free-form `Config.name` string, so preset lookup, report
+/// labels and [`Preset::ALL`] cannot drift apart.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Preset {
+    /// **DetJet** — the paper's main configuration: improved
+    /// deterministic coarsening + deterministic Jet refinement.
+    DetJet,
+    /// **DetFlows** — DetJet plus deterministic flow-based refinement.
+    DetFlows,
+    /// **SDet-like** — the previous deterministic Mt-KaHyPar mode.
+    SDet,
+    /// **BiPart-like** — recursive bipartitioning + synchronous LP.
+    BiPart,
+    /// Simulated non-deterministic Jet (Mt-KaHyPar-Default stand-in).
+    NonDetJet,
+    /// Simulated non-deterministic flows (Mt-KaHyPar-Flows stand-in).
+    NonDetFlows,
+}
+
+impl Preset {
+    /// Every preset, in the canonical report order.
+    pub const ALL: [Preset; 6] = [
+        Preset::DetJet,
+        Preset::DetFlows,
+        Preset::SDet,
+        Preset::BiPart,
+        Preset::NonDetJet,
+        Preset::NonDetFlows,
+    ];
+
+    /// The preset's canonical (CLI / CSV / report) name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Preset::DetJet => "detjet",
+            Preset::DetFlows => "detflows",
+            Preset::SDet => "sdet",
+            Preset::BiPart => "bipart",
+            Preset::NonDetJet => "nondet-jet",
+            Preset::NonDetFlows => "nondet-flows",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn from_name(name: &str) -> Option<Preset> {
+        Preset::ALL.into_iter().find(|p| p.name() == name)
+    }
+
+    /// The preset's full configuration for `seed`.
+    pub fn config(self, seed: u64) -> Config {
+        match self {
+            Preset::DetJet => Config::detjet(seed),
+            Preset::DetFlows => Config::detflows(seed),
+            Preset::SDet => Config::sdet(seed),
+            Preset::BiPart => Config::bipart(seed),
+            Preset::NonDetJet => Config::nondet_jet(seed),
+            Preset::NonDetFlows => Config::nondet_flows(seed),
+        }
+    }
+}
+
+impl fmt::Display for Preset {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
 }
 
 /// Preprocessing options.
@@ -111,6 +190,7 @@ impl Default for InitialConfig {
 /// Synchronous label propagation refinement.
 #[derive(Clone, Debug)]
 pub struct LpConfig {
+    /// Maximum LP rounds per level.
     pub max_rounds: usize,
     /// Hash-based subrounds per round: moves apply at subround barriers,
     /// breaking the symmetric oscillations of fully synchronous LP
@@ -127,7 +207,7 @@ impl Default for LpConfig {
 /// Deterministic Jet refinement (Section 4).
 #[derive(Clone, Debug)]
 pub struct JetConfig {
-    /// Temperature schedule: one full Jet run per τ, decreasing
+    /// Temperature schedule: one full Jet run per τ, strictly decreasing
     /// (Section 7.3 — final configuration uses three: 0.75, 0.375, 0).
     pub temperatures: Vec<f64>,
     /// Override schedule for the finest level (Fig. 4's τ_c/τ_f split:
@@ -205,11 +285,16 @@ impl Default for FlowConfig {
 /// Refinement stack.
 #[derive(Clone, Debug)]
 pub struct RefinementConfig {
+    /// Which algorithm drives uncoarsening.
     pub algo: RefinementAlgo,
+    /// Label-propagation parameters (also the 2-way polish of initial
+    /// partitioning, so these are validated under every `algo`).
     pub lp: LpConfig,
+    /// Jet parameters.
     pub jet: JetConfig,
     /// `Some` enables flow-based refinement after Jet/LP on each level.
     pub flows: Option<FlowConfig>,
+    /// Backend for Jet's dense candidate-selection arithmetic.
     pub gain_backend: GainBackend,
 }
 
@@ -225,20 +310,101 @@ impl Default for RefinementConfig {
     }
 }
 
+/// Typed configuration-validation failures — returned by
+/// [`ConfigBuilder::build`] and [`Config::validate`] and reported by
+/// [`crate::engine::Partitioner::new`] instead of panicking deep inside
+/// the pipeline. The taxonomy is documented in DESIGN.md §8.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    /// `ε` must be finite and ≥ 0.
+    InvalidEps(
+        /// The offending imbalance value.
+        f64,
+    ),
+    /// The active Jet temperature schedule has no entries.
+    EmptyTemperatureSchedule,
+    /// A Jet temperature is negative or not finite.
+    InvalidTemperature(
+        /// The offending temperature.
+        f64,
+    ),
+    /// A Jet temperature schedule must be strictly decreasing.
+    NonDecreasingTemperatureSchedule(
+        /// The offending schedule.
+        Vec<f64>,
+    ),
+    /// LP `subrounds` or the coarsening fallback subround count is zero.
+    ZeroSubrounds,
+    /// Jet's per-temperature iteration caps are zero.
+    ZeroJetIterations,
+    /// The initial-partitioning portfolio has zero attempts.
+    ZeroInitialAttempts,
+    /// A flow-refinement parameter is out of range.
+    InvalidFlowConfig(
+        /// Which flow parameter failed.
+        &'static str,
+    ),
+    /// The coarsening contraction limit per block is zero.
+    ZeroContractionLimit,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::InvalidEps(e) => {
+                write!(f, "imbalance eps must be finite and >= 0, got {e}")
+            }
+            ConfigError::EmptyTemperatureSchedule => {
+                write!(f, "jet temperature schedule is empty")
+            }
+            ConfigError::InvalidTemperature(t) => {
+                write!(f, "jet temperature must be finite and >= 0, got {t}")
+            }
+            ConfigError::NonDecreasingTemperatureSchedule(s) => {
+                write!(f, "jet temperature schedule must be strictly decreasing, got {s:?}")
+            }
+            ConfigError::ZeroSubrounds => {
+                write!(f, "subround counts must be >= 1")
+            }
+            ConfigError::ZeroJetIterations => {
+                write!(f, "jet iteration caps must be >= 1")
+            }
+            ConfigError::ZeroInitialAttempts => {
+                write!(f, "initial-partitioning portfolio needs >= 1 attempt")
+            }
+            ConfigError::InvalidFlowConfig(what) => {
+                write!(f, "invalid flow configuration: {what}")
+            }
+            ConfigError::ZeroContractionLimit => {
+                write!(f, "coarsening contraction limit per block must be >= 1")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 /// Top-level configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Allowed imbalance ε: block weights may reach `⌊(1+ε)·⌈c(V)/k⌉⌋`.
     pub eps: f64,
+    /// Default master seed; [`crate::engine::PartitionRequest`] overrides
+    /// it per request.
     pub seed: u64,
+    /// Preprocessing options.
     pub preprocessing: PreprocessingConfig,
+    /// Coarsening options.
     pub coarsening: CoarseningConfig,
+    /// Initial-partitioning options.
     pub initial: InitialConfig,
+    /// Refinement stack.
     pub refinement: RefinementConfig,
     /// Use recursive bipartitioning all the way down (BiPart style)
     /// instead of direct k-way multilevel.
     pub recursive_bipartitioning: bool,
-    /// Preset name (for reports).
-    pub name: &'static str,
+    /// The preset this configuration started from (for reports).
+    pub preset: Preset,
 }
 
 impl Default for Config {
@@ -251,9 +417,26 @@ impl Default for Config {
             initial: InitialConfig::default(),
             refinement: RefinementConfig::default(),
             recursive_bipartitioning: false,
-            name: "detjet",
+            preset: Preset::DetJet,
         }
     }
+}
+
+/// Check one temperature schedule: entries finite, ≥ 0, strictly
+/// decreasing.
+fn validate_schedule(schedule: &[f64]) -> Result<(), ConfigError> {
+    if schedule.is_empty() {
+        return Err(ConfigError::EmptyTemperatureSchedule);
+    }
+    for &t in schedule {
+        if !t.is_finite() || t < 0.0 {
+            return Err(ConfigError::InvalidTemperature(t));
+        }
+    }
+    if schedule.windows(2).any(|w| w[1] >= w[0]) {
+        return Err(ConfigError::NonDecreasingTemperatureSchedule(schedule.to_vec()));
+    }
+    Ok(())
 }
 
 impl Config {
@@ -267,7 +450,7 @@ impl Config {
     pub fn detflows(seed: u64) -> Self {
         let mut c = Config::detjet(seed);
         c.refinement.flows = Some(FlowConfig::default());
-        c.name = "detflows";
+        c.preset = Preset::DetFlows;
         c
     }
 
@@ -280,7 +463,7 @@ impl Config {
         c.coarsening.prevent_swaps = false;
         c.coarsening.fix_rating_bug = false;
         c.refinement.algo = RefinementAlgo::LabelPropagation;
-        c.name = "sdet";
+        c.preset = Preset::SDet;
         c
     }
 
@@ -300,7 +483,7 @@ impl Config {
         c.refinement.lp.max_rounds = 2;
         c.refinement.lp.subrounds = 2;
         c.coarsening.fallback_subrounds = 2;
-        c.name = "bipart";
+        c.preset = Preset::BiPart;
         c
     }
 
@@ -310,7 +493,7 @@ impl Config {
     pub fn nondet_jet(seed: u64) -> Self {
         let mut c = Config::detjet(seed);
         c.refinement.jet.asynchronous = true;
-        c.name = "nondet-jet";
+        c.preset = Preset::NonDetJet;
         c
     }
 
@@ -318,26 +501,141 @@ impl Config {
     pub fn nondet_flows(seed: u64) -> Self {
         let mut c = Config::nondet_jet(seed);
         c.refinement.flows = Some(FlowConfig::default());
-        c.name = "nondet-flows";
+        c.preset = Preset::NonDetFlows;
         c
     }
 
-    /// Look up a preset by name.
+    /// Look up a preset by name (see [`Preset::from_name`]).
     pub fn preset(name: &str, seed: u64) -> Option<Config> {
-        match name {
-            "detjet" => Some(Config::detjet(seed)),
-            "detflows" => Some(Config::detflows(seed)),
-            "sdet" => Some(Config::sdet(seed)),
-            "bipart" => Some(Config::bipart(seed)),
-            "nondet-jet" => Some(Config::nondet_jet(seed)),
-            "nondet-flows" => Some(Config::nondet_flows(seed)),
-            _ => None,
-        }
+        Preset::from_name(name).map(|p| p.config(seed))
     }
 
-    /// All preset names.
-    pub fn preset_names() -> &'static [&'static str] {
-        &["detjet", "detflows", "sdet", "bipart", "nondet-jet", "nondet-flows"]
+    /// All preset names, in the canonical report order.
+    pub fn preset_names() -> [&'static str; 6] {
+        Preset::ALL.map(|p| p.name())
+    }
+
+    /// Validate this configuration against the [`ConfigError`] taxonomy.
+    /// Every preset validates by construction (tested); hand-mutated
+    /// configurations are checked when they enter a
+    /// [`crate::engine::Partitioner`].
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if !self.eps.is_finite() || self.eps < 0.0 {
+            return Err(ConfigError::InvalidEps(self.eps));
+        }
+        if self.refinement.lp.subrounds == 0 {
+            return Err(ConfigError::ZeroSubrounds);
+        }
+        if !self.coarsening.prefix_doubling && self.coarsening.fallback_subrounds == 0 {
+            return Err(ConfigError::ZeroSubrounds);
+        }
+        if self.coarsening.contraction_limit_per_k == 0 {
+            return Err(ConfigError::ZeroContractionLimit);
+        }
+        if self.initial.attempts == 0 {
+            return Err(ConfigError::ZeroInitialAttempts);
+        }
+        if self.refinement.algo == RefinementAlgo::Jet {
+            let jet = &self.refinement.jet;
+            validate_schedule(&jet.temperatures)?;
+            if let Some(fine) = &jet.temperatures_fine {
+                validate_schedule(fine)?;
+            }
+            if jet.max_iterations == 0 || jet.max_iterations_without_improvement == 0 {
+                return Err(ConfigError::ZeroJetIterations);
+            }
+        }
+        if let Some(flows) = &self.refinement.flows {
+            if !flows.alpha.is_finite() || flows.alpha <= 0.0 {
+                return Err(ConfigError::InvalidFlowConfig("alpha must be finite and > 0"));
+            }
+            if flows.max_rounds == 0 {
+                return Err(ConfigError::InvalidFlowConfig("max_rounds must be >= 1"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Fluent builder for validated [`Config`]s: start from a [`Preset`],
+/// override the knobs the caller cares about, and [`build`](Self::build)
+/// — which runs [`Config::validate`] and returns the typed
+/// [`ConfigError`] instead of letting a bad value panic mid-pipeline.
+///
+/// ```
+/// use detpart::config::{ConfigBuilder, Preset};
+/// let cfg = ConfigBuilder::new(Preset::DetJet)
+///     .seed(42)
+///     .eps(0.05)
+///     .build()
+///     .expect("valid configuration");
+/// assert_eq!(cfg.preset, Preset::DetJet);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ConfigBuilder {
+    cfg: Config,
+}
+
+impl ConfigBuilder {
+    /// Start from `preset`'s configuration (seed 0 until overridden).
+    pub fn new(preset: Preset) -> Self {
+        ConfigBuilder { cfg: preset.config(0) }
+    }
+
+    /// Override the default master seed (requests can override it again).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Override the allowed imbalance ε.
+    pub fn eps(mut self, eps: f64) -> Self {
+        self.cfg.eps = eps;
+        self
+    }
+
+    /// Override Jet's (coarse-level) temperature schedule.
+    pub fn temperatures(mut self, schedule: Vec<f64>) -> Self {
+        self.cfg.refinement.jet.temperatures = schedule;
+        self
+    }
+
+    /// Override Jet's finest-level temperature schedule (`None` = use the
+    /// coarse schedule everywhere).
+    pub fn fine_temperatures(mut self, schedule: Option<Vec<f64>>) -> Self {
+        self.cfg.refinement.jet.temperatures_fine = schedule;
+        self
+    }
+
+    /// Override the LP subround count.
+    pub fn lp_subrounds(mut self, subrounds: usize) -> Self {
+        self.cfg.refinement.lp.subrounds = subrounds;
+        self
+    }
+
+    /// Override the gain backend for Jet's candidate selection.
+    pub fn gain_backend(mut self, backend: GainBackend) -> Self {
+        self.cfg.refinement.gain_backend = backend;
+        self
+    }
+
+    /// Enable (`Some`) or disable (`None`) flow-based refinement.
+    pub fn flows(mut self, flows: Option<FlowConfig>) -> Self {
+        self.cfg.refinement.flows = flows;
+        self
+    }
+
+    /// Escape hatch for ablation sweeps: mutate any field directly. The
+    /// result is still validated by [`build`](Self::build).
+    pub fn tweak(mut self, f: impl FnOnce(&mut Config)) -> Self {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// Validate and return the configuration.
+    pub fn build(self) -> Result<Config, ConfigError> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
@@ -349,9 +647,19 @@ mod tests {
     fn presets_resolve() {
         for name in Config::preset_names() {
             let c = Config::preset(name, 1).unwrap();
-            assert_eq!(c.name, *name);
+            assert_eq!(c.preset.name(), name);
+            assert_eq!(c.preset.to_string(), name);
+            assert_eq!(Preset::from_name(name), Some(c.preset));
         }
         assert!(Config::preset("nope", 1).is_none());
+        assert!(Preset::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn every_preset_validates() {
+        for p in Preset::ALL {
+            p.config(3).validate().unwrap_or_else(|e| panic!("{p}: {e}"));
+        }
     }
 
     #[test]
@@ -384,5 +692,81 @@ mod tests {
         assert_eq!(c.refinement.jet.deadzone, 0.1);
         assert_eq!(c.coarsening.initial_sequential_subrounds, 100);
         assert_eq!(c.coarsening.subround_cap_frac, 0.01);
+    }
+
+    #[test]
+    fn builder_applies_overrides_and_validates() {
+        let cfg = ConfigBuilder::new(Preset::DetJet)
+            .seed(9)
+            .eps(0.1)
+            .temperatures(vec![0.5, 0.25, 0.0])
+            .lp_subrounds(3)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.eps, 0.1);
+        assert_eq!(cfg.refinement.jet.temperatures, vec![0.5, 0.25, 0.0]);
+        assert_eq!(cfg.refinement.lp.subrounds, 3);
+
+        let cfg = ConfigBuilder::new(Preset::SDet)
+            .tweak(|c| c.initial.attempts = 4)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.initial.attempts, 4);
+    }
+
+    #[test]
+    fn builder_rejects_bad_configs() {
+        assert_eq!(
+            ConfigBuilder::new(Preset::DetJet).eps(-0.1).build(),
+            Err(ConfigError::InvalidEps(-0.1))
+        );
+        assert!(matches!(
+            ConfigBuilder::new(Preset::DetJet).eps(f64::NAN).build().unwrap_err(),
+            ConfigError::InvalidEps(e) if e.is_nan()
+        ));
+        assert_eq!(
+            ConfigBuilder::new(Preset::DetJet).temperatures(vec![]).build(),
+            Err(ConfigError::EmptyTemperatureSchedule)
+        );
+        assert_eq!(
+            ConfigBuilder::new(Preset::DetJet).temperatures(vec![0.25, 0.75]).build(),
+            Err(ConfigError::NonDecreasingTemperatureSchedule(vec![0.25, 0.75]))
+        );
+        assert_eq!(
+            ConfigBuilder::new(Preset::DetJet).temperatures(vec![0.75, -0.5]).build(),
+            Err(ConfigError::InvalidTemperature(-0.5))
+        );
+        assert_eq!(
+            ConfigBuilder::new(Preset::DetJet).lp_subrounds(0).build(),
+            Err(ConfigError::ZeroSubrounds)
+        );
+        assert_eq!(
+            ConfigBuilder::new(Preset::SDet)
+                .tweak(|c| c.coarsening.fallback_subrounds = 0)
+                .build(),
+            Err(ConfigError::ZeroSubrounds)
+        );
+        assert_eq!(
+            ConfigBuilder::new(Preset::DetJet)
+                .tweak(|c| c.refinement.jet.max_iterations = 0)
+                .build(),
+            Err(ConfigError::ZeroJetIterations)
+        );
+        assert_eq!(
+            ConfigBuilder::new(Preset::DetJet)
+                .tweak(|c| c.initial.attempts = 0)
+                .build(),
+            Err(ConfigError::ZeroInitialAttempts)
+        );
+        assert_eq!(
+            ConfigBuilder::new(Preset::DetFlows)
+                .tweak(|c| c.refinement.flows.as_mut().unwrap().alpha = 0.0)
+                .build(),
+            Err(ConfigError::InvalidFlowConfig("alpha must be finite and > 0"))
+        );
+        // Error messages render.
+        let e = ConfigBuilder::new(Preset::DetJet).eps(-1.0).build().unwrap_err();
+        assert!(e.to_string().contains("eps"));
     }
 }

@@ -184,16 +184,26 @@ pub struct PartitionScratch {
 
 impl PartitionScratch {
     /// Pre-reserve for a hypergraph of this size (the finest level), so
-    /// coarser levels never reallocate on the way up.
+    /// coarser levels never reallocate on the way up. Contents are dead
+    /// scratch (the next [`PartitionedHypergraph::new_with_scratch`]
+    /// refills everything), so buffers are cleared first — `Vec::reserve`
+    /// counts from the current length, and a warm buffer still holding a
+    /// previous request's `n` elements would otherwise regrow to 2·n.
     pub fn reserve_for(&mut self, hg: &Hypergraph, k: usize) {
         let n = hg.num_vertices();
         let bits = u64::BITS - (hg.max_edge_size().max(1) as u64).leading_zeros();
         let per_word = (64 / bits) as usize;
+        self.part.clear();
         self.part.reserve(n);
+        self.block_weights.clear();
         self.block_weights.reserve(k);
+        self.pin_words.clear();
         self.pin_words.reserve((hg.num_edges() * k).div_ceil(per_word));
+        self.connectivity.clear();
         self.connectivity.reserve(hg.num_edges());
+        self.journal_from.clear();
         self.journal_from.reserve(n);
+        self.journal_moved.clear();
         self.journal_moved.reserve(n);
     }
 }

@@ -1,0 +1,604 @@
+//! The `Partitioner` **session engine** — the crate's long-lived serving
+//! surface (DESIGN.md §8).
+//!
+//! A [`Partitioner`] is built once from a validated [`Config`] (see
+//! [`crate::config::ConfigBuilder`]) and then serves an unlimited
+//! sequence of [`PartitionRequest`]s. It owns **all** scratch arenas the
+//! multilevel pipeline needs — the coarsening arena, the refinement
+//! context (affinity buffers, bitsets, the selection pipeline's arenas,
+//! the partition-state backing buffers) and the recursive-bipartitioning
+//! driver's per-split context — so a warm engine serves a request without
+//! re-allocating any of them. Determinism makes the session API
+//! meaningful: same engine, same input, same seed ⇒ bit-identical answer,
+//! warm or cold (tested in `rust/tests/determinism.rs`).
+//!
+//! Input validation happens up front with the typed [`PartitionError`]
+//! taxonomy instead of panicking deep inside initial partitioning, and a
+//! [`ProgressObserver`] can watch the pipeline through a **deterministic
+//! event stream**: the sequence of level/phase/km1 events is a pure
+//! function of (input, config, request) — only the wall-clock payloads
+//! vary between runs.
+//!
+//! ```
+//! use detpart::config::{ConfigBuilder, Preset};
+//! use detpart::engine::{Partitioner, PartitionRequest};
+//!
+//! let hg = detpart::gen::spm_hypergraph_2d(16, 16);
+//! let cfg = ConfigBuilder::new(Preset::DetJet).build().unwrap();
+//! let mut engine = Partitioner::new(cfg).unwrap();
+//! let a = engine.partition(&hg, &PartitionRequest::new(4, 42)).unwrap();
+//! let b = engine.partition(&hg, &PartitionRequest::new(4, 42)).unwrap();
+//! assert_eq!(a.part, b.part); // warm scratch never leaks state
+//! ```
+#![deny(missing_docs)]
+
+use crate::coarsening::CoarseningScratch;
+use crate::config::{Config, ConfigError, Preset};
+use crate::datastructures::Hypergraph;
+use crate::partitioner::PartitionResult;
+use crate::refinement::jet::candidates::TileSelector;
+use crate::refinement::RefinementContext;
+use crate::util::timer::PhaseTimer;
+use crate::{EdgeId, VertexId, Weight};
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// One partitioning request against a [`Partitioner`]: the number of
+/// blocks and the seed are **per-request** (the paper's determinism
+/// contract is seed-addressed), and ε can be overridden per request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PartitionRequest {
+    /// Number of blocks; must satisfy `1 ≤ k ≤ |V|`.
+    pub k: usize,
+    /// Master seed: same engine + input + request ⇒ same partition.
+    pub seed: u64,
+    /// Per-request override of the configuration's imbalance ε.
+    pub eps: Option<f64>,
+}
+
+impl PartitionRequest {
+    /// Request a `k`-way partition under `seed` with the config's ε.
+    pub fn new(k: usize, seed: u64) -> Self {
+        PartitionRequest { k, seed, eps: None }
+    }
+
+    /// Override the allowed imbalance for this request only.
+    pub fn with_eps(mut self, eps: f64) -> Self {
+        self.eps = Some(eps);
+        self
+    }
+}
+
+/// Typed request-validation failures, returned by
+/// [`Partitioner::partition`] before any pipeline work starts (the
+/// config-side taxonomy is [`ConfigError`]; see DESIGN.md §8).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PartitionError {
+    /// The input hypergraph has no vertices.
+    EmptyHypergraph,
+    /// `k` is outside `[1, |V|]`.
+    InvalidK {
+        /// The requested number of blocks.
+        k: usize,
+        /// The number of vertices in the input.
+        n: usize,
+    },
+    /// A per-request ε override is negative or not finite.
+    InvalidEps(
+        /// The offending value, formatted (ε itself may be NaN, which
+        /// would break `Eq`).
+        String,
+    ),
+    /// A vertex or hyperedge weight is negative.
+    NegativeWeight(
+        /// Which weight class is negative.
+        &'static str,
+    ),
+    /// The weight totals would overflow the `i64` gain/objective
+    /// arithmetic for this `k`.
+    WeightOverflow(
+        /// Which derived quantity would overflow.
+        &'static str,
+    ),
+}
+
+impl fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PartitionError::EmptyHypergraph => write!(f, "input hypergraph has no vertices"),
+            PartitionError::InvalidK { k, n } => {
+                write!(f, "k = {k} outside [1, {n}] for this input")
+            }
+            PartitionError::InvalidEps(e) => {
+                write!(f, "request eps must be finite and >= 0, got {e}")
+            }
+            PartitionError::NegativeWeight(what) => write!(f, "negative {what} weight"),
+            PartitionError::WeightOverflow(what) => {
+                write!(f, "{what} would overflow the i64 objective arithmetic")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
+
+/// Observer of the partitioning pipeline's progress.
+///
+/// Events are emitted at **deterministic points**: for a fixed (input,
+/// config, request) the sequence of calls — kinds, order, level shapes
+/// and km1 payloads — is identical across thread counts and reruns;
+/// only the `seconds` payload of [`phase_finished`](Self::phase_finished)
+/// carries wall-clock nondeterminism. [`PhaseTimer`] is the canonical
+/// implementation (it accumulates the phase durations); see
+/// `detpart::testing::RecordingObserver` for the determinism-checkable
+/// rendering.
+pub trait ProgressObserver {
+    /// Refinement is entering a hierarchy level (0 = coarsest, counting
+    /// up toward the input level). Direct k-way only; the RB driver
+    /// reports phases and km1 but not per-split levels.
+    fn level_entered(&mut self, level: u64, vertices: usize, edges: usize) {
+        let _ = (level, vertices, edges);
+    }
+
+    /// A pipeline phase (`preprocessing`, `coarsening`, `initial`,
+    /// `refinement-*`) finished, taking `seconds` of wall time. The
+    /// sequence of phase names is deterministic; `seconds` is not.
+    fn phase_finished(&mut self, phase: &'static str, seconds: f64) {
+        let _ = (phase, seconds);
+    }
+
+    /// The connectivity objective after a refinement round. Deterministic
+    /// payload: bit-identical across thread counts for deterministic
+    /// presets.
+    fn km1_after_round(&mut self, phase: &'static str, km1: Weight) {
+        let _ = (phase, km1);
+    }
+}
+
+/// [`PhaseTimer`] is the canonical observer: it accumulates
+/// [`phase_finished`](ProgressObserver::phase_finished) durations, which
+/// is exactly what the CLI and the experiment harness consume.
+impl ProgressObserver for PhaseTimer {
+    fn phase_finished(&mut self, phase: &'static str, seconds: f64) {
+        self.add(phase, Duration::from_secs_f64(seconds));
+    }
+}
+
+/// Internal progress channel threaded through the pipeline drivers: it
+/// both accumulates the result's own [`PhaseTimer`] and forwards events
+/// to the caller's observer (if any).
+pub(crate) struct Progress<'a> {
+    timings: PhaseTimer,
+    observer: Option<&'a mut dyn ProgressObserver>,
+}
+
+impl<'a> Progress<'a> {
+    pub(crate) fn new(observer: Option<&'a mut dyn ProgressObserver>) -> Self {
+        Progress { timings: PhaseTimer::new(), observer }
+    }
+
+    /// Time `f` under `phase`, forwarding the duration to the observer.
+    pub(crate) fn scope<R>(&mut self, phase: &'static str, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        let d = t.elapsed();
+        self.timings.add(phase, d);
+        if let Some(o) = &mut self.observer {
+            o.phase_finished(phase, d.as_secs_f64());
+        }
+        r
+    }
+
+    pub(crate) fn level_entered(&mut self, level: u64, hg: &Hypergraph) {
+        if let Some(o) = &mut self.observer {
+            o.level_entered(level, hg.num_vertices(), hg.num_edges());
+        }
+    }
+
+    pub(crate) fn km1_after_round(&mut self, phase: &'static str, km1: Weight) {
+        if let Some(o) = &mut self.observer {
+            o.km1_after_round(phase, km1);
+        }
+    }
+
+    pub(crate) fn into_timings(self) -> PhaseTimer {
+        self.timings
+    }
+}
+
+/// One cached k-way refinement context, keyed by the `k` it was built
+/// for and the largest vertex count it has been sized to.
+struct RefineEntry {
+    k: usize,
+    n: usize,
+    ctx: RefinementContext,
+}
+
+/// How many distinct request `k`s keep a warm refinement context at
+/// once (LRU beyond that). Covers the common serving pattern of a few
+/// alternating k values (e.g. the experiment matrices' k sweeps)
+/// without letting adversarial request streams grow memory unboundedly.
+const MAX_REFINE_CONTEXTS: usize = 4;
+
+/// The session-owned scratch arenas, carried across requests: the
+/// coarsening arena, a small per-`k` LRU of refinement contexts (an
+/// entry is rebuilt only when a request outgrows its sized bitsets) and
+/// the RB driver's 2-way split context. Everything handed out is fully
+/// re-initialized per use by its consumer, so reuse can never leak state
+/// between requests (DESIGN.md §8).
+pub(crate) struct SessionScratch {
+    coarsening: CoarseningScratch,
+    /// Most-recently-used first.
+    refine: Vec<RefineEntry>,
+    rb: Option<RefinementContext>,
+    rb_n: usize,
+    rebuilds: usize,
+}
+
+impl SessionScratch {
+    fn new() -> Self {
+        SessionScratch {
+            coarsening: CoarseningScratch::new(),
+            refine: Vec::new(),
+            rb: None,
+            rb_n: 0,
+            rebuilds: 0,
+        }
+    }
+
+    /// The coarsening arena (shared by the direct driver and every RB
+    /// split — splits run sequentially).
+    pub(crate) fn coarsening(&mut self) -> &mut CoarseningScratch {
+        &mut self.coarsening
+    }
+
+    /// The refinement context for a `k`-way request, pre-reserved for
+    /// `hg` (partition backing buffers and selection arena at the finest
+    /// level's size).
+    pub(crate) fn refinement(&mut self, k: usize, hg: &Hypergraph) -> &mut RefinementContext {
+        let n = hg.num_vertices();
+        match self.refine.iter().position(|e| e.k == k) {
+            Some(i) => {
+                if self.refine[i].n < n {
+                    self.refine[i] = RefineEntry { k, n, ctx: RefinementContext::new(k, n) };
+                    self.rebuilds += 1;
+                }
+                let entry = self.refine.remove(i);
+                self.refine.insert(0, entry);
+            }
+            None => {
+                let entry = RefineEntry { k, n, ctx: RefinementContext::new(k, n) };
+                self.refine.insert(0, entry);
+                self.refine.truncate(MAX_REFINE_CONTEXTS);
+                self.rebuilds += 1;
+            }
+        }
+        let ctx = &mut self.refine[0].ctx;
+        let mut ps = ctx.take_partition_scratch();
+        ps.reserve_for(hg, k);
+        ctx.put_partition_scratch(ps);
+        ctx.selection_mut().reserve(n, hg.num_edges());
+        ctx
+    }
+
+    /// The RB driver's 2-way per-split context (one for the whole
+    /// recursion; the root split is the largest, so it is sized once).
+    pub(crate) fn rb_split(&mut self, hg: &Hypergraph) -> &mut RefinementContext {
+        let n = hg.num_vertices();
+        if self.rb.is_none() || self.rb_n < n {
+            self.rb = Some(RefinementContext::new(2, n));
+            self.rb_n = n;
+            self.rebuilds += 1;
+        }
+        self.rb.as_mut().unwrap()
+    }
+
+    fn rebuilds(&self) -> usize {
+        self.rebuilds
+    }
+}
+
+/// The long-lived partitioning session engine. See the [module
+/// docs](self) for the lifecycle and `rust/benches/figures.rs`
+/// (`cargo bench -- engine`) for the cold-vs-warm request cost.
+pub struct Partitioner {
+    cfg: Config,
+    scratch: SessionScratch,
+}
+
+impl Partitioner {
+    /// Build an engine from `cfg`, validating it first (see
+    /// [`ConfigError`]). Prefer [`crate::config::ConfigBuilder`] for
+    /// assembling `cfg`.
+    pub fn new(cfg: Config) -> Result<Self, ConfigError> {
+        cfg.validate()?;
+        Ok(Partitioner { cfg, scratch: SessionScratch::new() })
+    }
+
+    /// Build an engine straight from a [`Preset`] (presets validate by
+    /// construction).
+    pub fn from_preset(preset: Preset, seed: u64) -> Self {
+        Partitioner::new(preset.config(seed)).expect("presets validate by construction")
+    }
+
+    /// The engine's (validated) configuration.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// How many times the engine (re)built a refinement context — 1 or 2
+    /// after the first request (k-way, plus the 2-way split context under
+    /// recursive bipartitioning) and unchanged while subsequent requests
+    /// keep known shapes: contexts are cached per `k` (small LRU), and an
+    /// entry is rebuilt only when a request outgrows it. The warm-path
+    /// bench asserts on this.
+    pub fn scratch_rebuilds(&self) -> usize {
+        self.scratch.rebuilds()
+    }
+
+    /// Partition `hg` according to `req`. Validates the request (typed
+    /// [`PartitionError`]s instead of panics), then runs the multilevel
+    /// pipeline with the engine's warm scratch.
+    pub fn partition(
+        &mut self,
+        hg: &Hypergraph,
+        req: &PartitionRequest,
+    ) -> Result<PartitionResult, PartitionError> {
+        self.partition_with_selector(hg, req, None, None)
+    }
+
+    /// Like [`partition`](Self::partition), streaming progress events to
+    /// `observer`.
+    pub fn partition_observed(
+        &mut self,
+        hg: &Hypergraph,
+        req: &PartitionRequest,
+        observer: &mut dyn ProgressObserver,
+    ) -> Result<PartitionResult, PartitionError> {
+        self.partition_with_selector(hg, req, None, Some(observer))
+    }
+
+    /// The full request form: optional XLA tile-selector backend for
+    /// Jet's candidate selection and optional progress observer.
+    pub fn partition_with_selector(
+        &mut self,
+        hg: &Hypergraph,
+        req: &PartitionRequest,
+        selector: Option<&dyn TileSelector>,
+        observer: Option<&mut dyn ProgressObserver>,
+    ) -> Result<PartitionResult, PartitionError> {
+        validate_request(hg, req)?;
+        let t0 = Instant::now();
+        let k = req.k;
+        let mut cfg = self.cfg.clone();
+        cfg.seed = req.seed;
+        if let Some(eps) = req.eps {
+            cfg.eps = eps;
+        }
+        let mut progress = Progress::new(observer);
+        let mut levels = 0usize;
+        let part = if cfg.recursive_bipartitioning {
+            crate::partitioner::recursive_bipartitioning_driver(
+                hg,
+                k,
+                &cfg,
+                &mut self.scratch,
+                &mut progress,
+                &mut levels,
+            )
+        } else {
+            crate::partitioner::direct_kway(
+                hg,
+                k,
+                &cfg,
+                selector,
+                &mut self.scratch,
+                &mut progress,
+                &mut levels,
+            )
+        };
+        let km1 = crate::metrics::km1(hg, &part, k);
+        let cut = crate::metrics::cut(hg, &part, k);
+        let imbalance = crate::metrics::imbalance(hg, &part, k);
+        let balanced = crate::metrics::is_balanced(hg, &part, k, cfg.eps);
+        Ok(PartitionResult {
+            part,
+            km1,
+            cut,
+            imbalance,
+            balanced,
+            levels,
+            timings: progress.into_timings(),
+            total_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Pre-flight request validation: shape limits, ε sanity, and the weight
+/// overflow pre-check (the km1 counter sums up to `Σω(e)·(k−1)` and the
+/// balance arithmetic scales `Σc(v)` by `1+ε`; both must stay far inside
+/// `i64`).
+fn validate_request(hg: &Hypergraph, req: &PartitionRequest) -> Result<(), PartitionError> {
+    let n = hg.num_vertices();
+    if n == 0 {
+        return Err(PartitionError::EmptyHypergraph);
+    }
+    if req.k < 1 || req.k > n {
+        return Err(PartitionError::InvalidK { k: req.k, n });
+    }
+    if let Some(eps) = req.eps {
+        if !eps.is_finite() || eps < 0.0 {
+            return Err(PartitionError::InvalidEps(format!("{eps}")));
+        }
+    }
+    let mut total_vw: i128 = 0;
+    for v in 0..n {
+        let w = hg.vertex_weight(v as VertexId);
+        if w < 0 {
+            return Err(PartitionError::NegativeWeight("vertex"));
+        }
+        total_vw += w as i128;
+    }
+    if 2 * total_vw > i64::MAX as i128 {
+        return Err(PartitionError::WeightOverflow("total vertex weight"));
+    }
+    let mut total_ew: i128 = 0;
+    for e in 0..hg.num_edges() {
+        let w = hg.edge_weight(e as EdgeId);
+        if w < 0 {
+            return Err(PartitionError::NegativeWeight("hyperedge"));
+        }
+        total_ew += w as i128;
+    }
+    if 2 * total_ew * req.k as i128 > i64::MAX as i128 {
+        return Err(PartitionError::WeightOverflow("connectivity objective bound"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ConfigBuilder;
+
+    #[test]
+    fn typed_errors_for_invalid_requests() {
+        let hg = crate::gen::grid::grid2d_graph(8, 8);
+        let mut engine = Partitioner::from_preset(Preset::DetJet, 1);
+        assert_eq!(
+            engine.partition(&hg, &PartitionRequest::new(0, 1)).unwrap_err(),
+            PartitionError::InvalidK { k: 0, n: 64 }
+        );
+        assert_eq!(
+            engine.partition(&hg, &PartitionRequest::new(65, 1)).unwrap_err(),
+            PartitionError::InvalidK { k: 65, n: 64 }
+        );
+        assert!(matches!(
+            engine.partition(&hg, &PartitionRequest::new(4, 1).with_eps(-0.5)).unwrap_err(),
+            PartitionError::InvalidEps(_)
+        ));
+        assert!(matches!(
+            engine.partition(&hg, &PartitionRequest::new(4, 1).with_eps(f64::NAN)).unwrap_err(),
+            PartitionError::InvalidEps(_)
+        ));
+        let empty = Hypergraph::new(0, &[], None, None);
+        assert_eq!(
+            engine.partition(&empty, &PartitionRequest::new(1, 1)).unwrap_err(),
+            PartitionError::EmptyHypergraph
+        );
+        // Errors render as messages.
+        assert!(PartitionError::InvalidK { k: 9, n: 4 }.to_string().contains('9'));
+    }
+
+    #[test]
+    fn weight_overflow_precheck() {
+        let big = i64::MAX / 3;
+        let hg =
+            Hypergraph::new(2, &[vec![0, 1]], Some(vec![big, big]), None);
+        let mut engine = Partitioner::from_preset(Preset::DetJet, 1);
+        assert_eq!(
+            engine.partition(&hg, &PartitionRequest::new(2, 1)).unwrap_err(),
+            PartitionError::WeightOverflow("total vertex weight")
+        );
+        let hg = Hypergraph::new(
+            3,
+            &[vec![0, 1], vec![1, 2]],
+            None,
+            Some(vec![i64::MAX / 4, 1]),
+        );
+        assert_eq!(
+            engine.partition(&hg, &PartitionRequest::new(3, 1)).unwrap_err(),
+            PartitionError::WeightOverflow("connectivity objective bound")
+        );
+    }
+
+    #[test]
+    fn invalid_config_rejected_at_engine_construction() {
+        let mut cfg = Config::detjet(0);
+        cfg.eps = -1.0;
+        assert_eq!(Partitioner::new(cfg).err(), Some(ConfigError::InvalidEps(-1.0)));
+    }
+
+    #[test]
+    fn warm_engine_matches_free_function_across_k_and_seed() {
+        let hg = crate::gen::sat_hypergraph(300, 900, 6, 5);
+        let mut engine = Partitioner::from_preset(Preset::DetJet, 0);
+        for (k, seed) in [(2usize, 1u64), (4, 7), (8, 1), (2, 7)] {
+            let warm = engine.partition(&hg, &PartitionRequest::new(k, seed)).unwrap();
+            let free = crate::partitioner::partition(&hg, k, &Config::detjet(seed));
+            assert_eq!(warm.part, free.part, "k={k} seed={seed}");
+            assert_eq!(warm.km1, free.km1);
+            assert_eq!(warm.levels, free.levels);
+        }
+        // Contexts are cached per k: three distinct k values were served
+        // (2, 4, 8), and the returning k=2 request reused its entry.
+        assert_eq!(engine.scratch_rebuilds(), 3, "per-k context cache missed");
+    }
+
+    #[test]
+    fn request_eps_override_is_honored() {
+        let hg = crate::gen::grid::grid2d_graph(24, 24);
+        let cfg = ConfigBuilder::new(Preset::DetJet).eps(0.03).build().unwrap();
+        let mut engine = Partitioner::new(cfg).unwrap();
+        let tight = engine.partition(&hg, &PartitionRequest::new(4, 2)).unwrap();
+        assert!(tight.balanced && tight.imbalance <= 0.03 + 1e-9);
+        let loose =
+            engine.partition(&hg, &PartitionRequest::new(4, 2).with_eps(0.25)).unwrap();
+        // `balanced` is judged against the *effective* (overridden) ε.
+        assert!(loose.balanced);
+        // And the override is per-request: the next plain request is tight
+        // again.
+        let tight2 = engine.partition(&hg, &PartitionRequest::new(4, 2)).unwrap();
+        assert_eq!(tight.part, tight2.part);
+    }
+
+    #[test]
+    fn observer_receives_deterministic_stream() {
+        let hg = crate::gen::grid::grid2d_graph(32, 32);
+        let mut engine = Partitioner::from_preset(Preset::DetJet, 3);
+        let mut streams = Vec::new();
+        for _ in 0..2 {
+            let mut rec = crate::testing::RecordingObserver::default();
+            engine.partition_observed(&hg, &PartitionRequest::new(4, 3), &mut rec).unwrap();
+            assert!(!rec.events.is_empty());
+            streams.push(rec.deterministic_view());
+        }
+        assert_eq!(streams[0], streams[1], "event stream varies between reruns");
+        // The stream contains levels, phases and km1 payloads.
+        let view = &streams[0];
+        assert!(view.iter().any(|e| e.starts_with("level ")));
+        assert!(view.iter().any(|e| e.starts_with("phase coarsening")));
+        assert!(view.iter().any(|e| e.starts_with("km1 ")));
+    }
+
+    #[test]
+    fn phase_timer_is_an_observer() {
+        let hg = crate::gen::grid::grid2d_graph(16, 16);
+        let mut engine = Partitioner::from_preset(Preset::DetJet, 1);
+        let mut timer = PhaseTimer::new();
+        let r = engine.partition_observed(&hg, &PartitionRequest::new(2, 1), &mut timer).unwrap();
+        assert!(timer.get_s("coarsening") > 0.0);
+        assert!(timer.get_s("initial") > 0.0);
+        // The observer timings agree with the result's own phase timer.
+        for (phase, s) in r.timings.phases() {
+            assert!((timer.get_s(phase) - s).abs() < 1e-9, "{phase} drifted");
+        }
+    }
+
+    #[test]
+    fn rb_engine_reuses_split_context() {
+        let hg = crate::gen::sat_hypergraph(400, 1200, 6, 9);
+        let mut engine = Partitioner::from_preset(Preset::BiPart, 5);
+        let a = engine.partition(&hg, &PartitionRequest::new(3, 5)).unwrap();
+        let rebuilds_after_first = engine.scratch_rebuilds();
+        let b = engine.partition(&hg, &PartitionRequest::new(3, 5)).unwrap();
+        assert_eq!(a.part, b.part);
+        assert_eq!(
+            engine.scratch_rebuilds(),
+            rebuilds_after_first,
+            "warm same-shape request rebuilt scratch"
+        );
+        let free = crate::partitioner::partition(&hg, 3, &Config::bipart(5));
+        assert_eq!(a.part, free.part);
+    }
+}

@@ -1,11 +1,20 @@
 //! Per-figure/table experiment implementations (see DESIGN.md §3 for the
 //! index). Each function regenerates one artifact of the paper's
 //! evaluation: a CSV under `results/` plus an ASCII rendering on stdout.
+//!
+//! All experiments run through warm [`Partitioner`] session engines —
+//! one engine per configuration, reused across the whole
+//! (instances × ks × seeds) sweep with `k`/`seed` given per request —
+//! and consume phase timings via the progress-observer channel.
 
-use super::runner::{objectives_by_preset, print_geomeans, print_profile, run_matrix, ExpCtx, RunRecord};
-use crate::config::{Config, RefinementAlgo};
-use crate::partitioner::partition;
+use super::runner::{
+    engines_for, objectives_by_preset, print_geomeans, print_profile, run_matrix, run_on_engine,
+    ExpCtx, RunRecord,
+};
+use crate::config::{Config, ConfigBuilder, Preset, RefinementAlgo};
+use crate::engine::{PartitionRequest, Partitioner};
 use crate::util::stats::{geometric_mean, rolling_geometric_mean};
+use crate::util::timer::PhaseTimer;
 
 /// Fig. 1 + Fig. 8: DetJet vs the deterministic and (simulated)
 /// non-deterministic state of the art — quality profiles and relative
@@ -63,24 +72,29 @@ pub fn fig3_fig11(ctx: &ExpCtx) {
         ("+prefix-dbl", Box::new(Config::detjet)),
     ];
     let names: Vec<&str> = variants.iter().map(|(n, _)| *n).collect();
+    // Two warm engines per variant: the full pipeline and the
+    // no-refinement one measuring initial-partition quality.
+    let mut engines: Vec<(&str, Partitioner, Partitioner)> = variants
+        .iter()
+        .map(|(name, make)| {
+            let full = Partitioner::new(make(0)).expect("ablation config");
+            let mut cfg_ip = make(0);
+            cfg_ip.refinement.algo = RefinementAlgo::None;
+            let ip = Partitioner::new(cfg_ip).expect("ablation config");
+            (*name, full, ip)
+        })
+        .collect();
     let mut final_records: Vec<RunRecord> = Vec::new();
     let mut initial_records: Vec<RunRecord> = Vec::new();
-    let threads = crate::par::num_threads();
     for inst in ctx.instances() {
         let hg = inst.build();
         for &k in &ctx.ks() {
             for &seed in &ctx.seeds() {
-                for (name, make) in &variants {
-                    let cfg = make(seed);
-                    let r = partition(&hg, k, &cfg);
-                    final_records.push(RunRecord::from_result(&inst, name, k, seed, threads, &r));
+                for (name, full, ip) in engines.iter_mut() {
+                    final_records.push(run_on_engine(full, &inst, &hg, name, k, seed));
                     // Initial-partition quality: same coarsening, no
                     // refinement (Fig. 11 right).
-                    let mut cfg_ip = make(seed);
-                    cfg_ip.refinement.algo = RefinementAlgo::None;
-                    let r_ip = partition(&hg, k, &cfg_ip);
-                    initial_records
-                        .push(RunRecord::from_result(&inst, name, k, seed, threads, &r_ip));
+                    initial_records.push(run_on_engine(ip, &inst, &hg, name, k, seed));
                 }
             }
         }
@@ -104,18 +118,24 @@ pub fn fig4(ctx: &ExpCtx) {
         ("dynamic-3", vec![0.75, 0.375, 0.0], None),
     ];
     let names: Vec<&str> = variants.iter().map(|(n, _, _)| *n).collect();
+    let mut engines: Vec<(&str, Partitioner)> = variants
+        .iter()
+        .map(|(name, coarse, fine)| {
+            let cfg = ConfigBuilder::new(Preset::DetJet)
+                .temperatures(coarse.clone())
+                .fine_temperatures(fine.clone())
+                .build()
+                .expect("temperature schedule");
+            (*name, Partitioner::new(cfg).expect("temperature config"))
+        })
+        .collect();
     let mut records = Vec::new();
-    let threads = crate::par::num_threads();
     for inst in ctx.instances() {
         let hg = inst.build();
         for &k in &ctx.ks() {
             for &seed in &ctx.seeds() {
-                for (name, coarse, fine) in &variants {
-                    let mut cfg = Config::detjet(seed);
-                    cfg.refinement.jet.temperatures = coarse.clone();
-                    cfg.refinement.jet.temperatures_fine = fine.clone();
-                    let r = partition(&hg, k, &cfg);
-                    records.push(RunRecord::from_result(&inst, name, k, seed, threads, &r));
+                for (name, engine) in engines.iter_mut() {
+                    records.push(run_on_engine(engine, &inst, &hg, name, k, seed));
                 }
             }
         }
@@ -150,19 +170,23 @@ pub fn fig5(ctx: &ExpCtx) {
         })
         .collect();
     let names: Vec<&str> = schedules.iter().map(|(n, _)| n.as_str()).collect();
+    let mut engines: Vec<(&str, Partitioner)> = schedules
+        .iter()
+        .map(|(name, temps)| {
+            let cfg = ConfigBuilder::new(Preset::DetJet)
+                .temperatures(temps.clone())
+                .build()
+                .expect("round schedule");
+            (name.as_str(), Partitioner::new(cfg).expect("round config"))
+        })
+        .collect();
     let mut records = Vec::new();
-    let threads = crate::par::num_threads();
     for inst in ctx.instances() {
         let hg = inst.build();
         for &k in &ctx.ks() {
             for &seed in &ctx.seeds() {
-                for (name, temps) in &schedules {
-                    let mut cfg = Config::detjet(seed);
-                    cfg.refinement.jet.temperatures = temps.clone();
-                    let r = partition(&hg, k, &cfg);
-                    let mut rec = RunRecord::from_result(&inst, name, k, seed, threads, &r);
-                    rec.preset = name.clone();
-                    records.push(rec);
+                for (name, engine) in engines.iter_mut() {
+                    records.push(run_on_engine(engine, &inst, &hg, name, k, seed));
                 }
             }
         }
@@ -179,17 +203,23 @@ pub fn fig6(ctx: &ExpCtx) {
     let values = [6usize, 8, 12];
     let names: Vec<String> = values.iter().map(|v| format!("iters-{v}")).collect();
     let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let mut engines: Vec<Partitioner> = values
+        .iter()
+        .map(|&v| {
+            let cfg = ConfigBuilder::new(Preset::DetJet)
+                .tweak(|c| c.refinement.jet.max_iterations_without_improvement = v)
+                .build()
+                .expect("iteration budget");
+            Partitioner::new(cfg).expect("iteration config")
+        })
+        .collect();
     let mut records = Vec::new();
-    let threads = crate::par::num_threads();
     for inst in ctx.instances() {
         let hg = inst.build();
         for &k in &ctx.ks() {
             for &seed in &ctx.seeds() {
-                for (vi, &v) in values.iter().enumerate() {
-                    let mut cfg = Config::detjet(seed);
-                    cfg.refinement.jet.max_iterations_without_improvement = v;
-                    let r = partition(&hg, k, &cfg);
-                    records.push(RunRecord::from_result(&inst, &names[vi], k, seed, threads, &r));
+                for (vi, engine) in engines.iter_mut().enumerate() {
+                    records.push(run_on_engine(engine, &inst, &hg, &names[vi], k, seed));
                 }
             }
         }
@@ -203,20 +233,26 @@ pub fn fig6(ctx: &ExpCtx) {
 /// Fig. 7: strong scaling. On this container (1 physical core) the
 /// speedups are hardware-gated; the harness still produces the paper's
 /// plot (per-instance speedup vs sequential, rolling geomean) plus the
-/// determinism invariance across thread counts.
+/// determinism invariance across thread counts — exercised on a *warm*
+/// session engine, the serving configuration the ROADMAP cares about.
 pub fn fig7(ctx: &ExpCtx) {
     println!("== fig7: strong scaling ==");
     let threads = [1usize, 2, 4, 8];
     let mut rows = Vec::new();
     let mut per_instance: Vec<(String, f64, Vec<f64>)> = Vec::new();
+    let mut engine = Partitioner::from_preset(Preset::DetJet, 1);
     for inst in ctx.instances() {
         let hg = inst.build();
         let k = 8;
+        // Untimed warm-up: sizes the engine's arenas for this instance so
+        // the one-time build cost doesn't land in the nt=1 baseline and
+        // bias the speedups.
+        engine.partition(&hg, &PartitionRequest::new(k, 1)).expect("scaling warm-up");
         let mut times = Vec::new();
         let mut parts: Vec<Vec<u32>> = Vec::new();
         for &nt in &threads {
             let r = crate::par::with_num_threads(nt, || {
-                partition(&hg, k, &Config::detjet(1))
+                engine.partition(&hg, &PartitionRequest::new(k, 1)).expect("scaling request")
             });
             times.push(r.total_s);
             parts.push(r.part);
@@ -265,8 +301,8 @@ pub fn fig9(ctx: &ExpCtx) {
 pub fn fig10(ctx: &ExpCtx) {
     println!("== fig10: DetJet vs BiPart ==");
     let presets = ["detjet", "bipart"];
+    let mut engines = engines_for(&presets, |p, s| Config::preset(p, s).unwrap());
     let mut records = Vec::new();
-    let threads = crate::par::num_threads();
     for inst in ctx.instances() {
         if inst.class != crate::gen::InstanceClass::Hypergraph {
             continue;
@@ -274,10 +310,8 @@ pub fn fig10(ctx: &ExpCtx) {
         let hg = inst.build();
         for &k in &ctx.ks() {
             for &seed in &ctx.seeds() {
-                for p in presets {
-                    let cfg = Config::preset(p, seed).unwrap();
-                    let r = partition(&hg, k, &cfg);
-                    records.push(RunRecord::from_result(&inst, p, k, seed, threads, &r));
+                for (label, engine) in engines.iter_mut() {
+                    records.push(run_on_engine(engine, &inst, &hg, label, k, seed));
                 }
             }
         }
@@ -304,25 +338,25 @@ pub fn fig10(ctx: &ExpCtx) {
     print_geomeans(&records, &presets);
 }
 
-/// Fig. 12: running-time share of the DetJet components.
+/// Fig. 12: running-time share of the DetJet components. Phase times
+/// come through the progress-observer channel of a warm engine.
 pub fn fig12(ctx: &ExpCtx) {
     println!("== fig12: component time shares ==");
     let mut rows = Vec::new();
     let mut shares: Vec<(f64, Vec<(String, f64)>)> = Vec::new();
-    let threads = crate::par::num_threads();
-    let _ = threads;
+    let mut engine = Partitioner::from_preset(Preset::DetJet, 1);
     for inst in ctx.instances() {
         let hg = inst.build();
         for &k in &ctx.ks() {
-            let r = partition(&hg, k, &Config::detjet(1));
-            let total: f64 = r.timings.total_s().max(1e-9);
-            let mut parts: Vec<(String, f64)> = r
-                .timings
-                .phases()
-                .map(|(p, s)| (p.to_string(), s / total))
-                .collect();
+            let mut timings = PhaseTimer::new();
+            engine
+                .partition_observed(&hg, &PartitionRequest::new(k, 1), &mut timings)
+                .expect("fig12 request");
+            let total: f64 = timings.total_s().max(1e-9);
+            let mut parts: Vec<(String, f64)> =
+                timings.phases().map(|(p, s)| (p.to_string(), s / total)).collect();
             parts.sort_by(|a, b| a.0.cmp(&b.0));
-            let refine_s = r.timings.get_s("refinement-jet");
+            let refine_s = timings.get_s("refinement-jet");
             rows.push(format!(
                 "{},{},{:.4},{}",
                 inst.name,
@@ -423,15 +457,17 @@ pub fn ablations(ctx: &ExpCtx) {
         })),
     ];
     let names: Vec<&str> = variants.iter().map(|(n, _)| *n).collect();
+    let mut engines: Vec<(&str, Partitioner)> = variants
+        .iter()
+        .map(|(name, make)| (*name, Partitioner::new(make(0)).expect("ablation config")))
+        .collect();
     let mut records = Vec::new();
-    let threads = crate::par::num_threads();
     for inst in ctx.instances() {
         let hg = inst.build();
         for &k in &ctx.ks() {
             for &seed in &ctx.seeds() {
-                for (name, make) in &variants {
-                    let r = partition(&hg, k, &make(seed));
-                    records.push(RunRecord::from_result(&inst, name, k, seed, threads, &r));
+                for (name, engine) in engines.iter_mut() {
+                    records.push(run_on_engine(engine, &inst, &hg, name, k, seed));
                 }
             }
         }

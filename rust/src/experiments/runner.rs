@@ -2,9 +2,12 @@
 //! ASCII renderings of the paper's plots.
 
 use crate::config::Config;
+use crate::datastructures::Hypergraph;
+use crate::engine::{PartitionRequest, Partitioner};
 use crate::gen::{Instance, InstanceClass};
-use crate::partitioner::{partition, PartitionResult};
+use crate::partitioner::PartitionResult;
 use crate::util::stats::geometric_mean;
+use crate::util::timer::PhaseTimer;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
@@ -25,6 +28,9 @@ pub struct RunRecord {
 }
 
 impl RunRecord {
+    /// Build a record from a result plus the phase timings collected via
+    /// the engine's progress-observer channel (experiments no longer
+    /// reach into `PartitionResult.timings`).
     pub fn from_result(
         inst: &Instance,
         preset: &str,
@@ -32,6 +38,7 @@ impl RunRecord {
         seed: u64,
         threads: usize,
         r: &PartitionResult,
+        timings: &PhaseTimer,
     ) -> Self {
         RunRecord {
             instance: inst.name.to_string(),
@@ -44,7 +51,7 @@ impl RunRecord {
             imbalance: r.imbalance,
             balanced: r.balanced,
             time_s: r.total_s,
-            phase_s: r.timings.phases().collect(),
+            phase_s: timings.phases().collect(),
         }
     }
 
@@ -135,26 +142,61 @@ impl ExpCtx {
     }
 }
 
-/// Run the full (instances × presets × ks × seeds) matrix.
+/// Serve one experiment request on a session engine: `k` and `seed` go
+/// in the [`PartitionRequest`], phase timings come back through the
+/// observer channel, and the record is labeled `label` (a preset name or
+/// an ablation-variant name).
+pub fn run_on_engine(
+    engine: &mut Partitioner,
+    inst: &Instance,
+    hg: &Hypergraph,
+    label: &str,
+    k: usize,
+    seed: u64,
+) -> RunRecord {
+    let mut timings = PhaseTimer::new();
+    let r = engine
+        .partition_observed(hg, &PartitionRequest::new(k, seed), &mut timings)
+        .unwrap_or_else(|e| panic!("{} k={k} seed={seed} {label}: {e}", inst.name));
+    RunRecord::from_result(inst, label, k, seed, crate::par::num_threads(), &r, &timings)
+}
+
+/// Build one warm session engine per labeled configuration (the seed is
+/// per-request, so the configs are built with seed 0).
+pub fn engines_for(
+    labels: &[&str],
+    config_of: impl Fn(&str, u64) -> Config,
+) -> Vec<(String, Partitioner)> {
+    labels
+        .iter()
+        .map(|l| {
+            let engine = Partitioner::new(config_of(l, 0))
+                .unwrap_or_else(|e| panic!("experiment config {l}: {e}"));
+            (l.to_string(), engine)
+        })
+        .collect()
+}
+
+/// Run the full (instances × presets × ks × seeds) matrix — one warm
+/// session engine per preset, reused across the whole matrix.
 pub fn run_matrix(
     ctx: &ExpCtx,
     presets: &[&str],
     config_of: impl Fn(&str, u64) -> Config,
 ) -> Vec<RunRecord> {
+    let mut engines = engines_for(presets, config_of);
     let mut records = Vec::new();
-    let threads = crate::par::num_threads();
     for inst in ctx.instances() {
         let hg = inst.build();
         for &k in &ctx.ks() {
             for &seed in &ctx.seeds() {
-                for preset in presets {
-                    let cfg = config_of(preset, seed);
-                    let r = partition(&hg, k, &cfg);
+                for (label, engine) in engines.iter_mut() {
+                    let rec = run_on_engine(engine, &inst, &hg, label, k, seed);
                     eprintln!(
-                        "    {} k={k} seed={seed} {preset}: km1={} t={:.2}s",
-                        inst.name, r.km1, r.total_s
+                        "    {} k={k} seed={seed} {label}: km1={} t={:.2}s",
+                        inst.name, rec.km1, rec.time_s
                     );
-                    records.push(RunRecord::from_result(&inst, preset, k, seed, threads, &r));
+                    records.push(rec);
                 }
             }
         }
@@ -247,9 +289,9 @@ mod tests {
         let hg = inst.build();
         let mut records = Vec::new();
         for preset in ["sdet", "detjet"] {
-            let cfg = Config::preset(preset, 1).unwrap();
-            let r = partition(&hg, 4, &cfg);
-            records.push(RunRecord::from_result(&inst, preset, 4, 1, 1, &r));
+            let mut engine =
+                Partitioner::new(Config::preset(preset, 0).unwrap()).unwrap();
+            records.push(run_on_engine(&mut engine, &inst, &hg, preset, 4, 1));
         }
         let objs = objectives_by_preset(&records, &["sdet", "detjet"]);
         assert_eq!(objs.len(), 2);

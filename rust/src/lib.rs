@@ -18,6 +18,13 @@
 //!   the uniqueness of inclusion-minimal/-maximal minimum cuts
 //!   (Picard–Queyranne) plus deterministic piercing and scheduling.
 //!
+//! The serving surface is the [`engine::Partitioner`] **session engine**:
+//! built once from a validated [`config::Config`] (via
+//! [`config::ConfigBuilder`]), it owns every scratch arena and serves an
+//! unlimited sequence of seed-addressed requests with typed errors and a
+//! deterministic progress-event stream (DESIGN.md §8). The free function
+//! [`partitioner::partition`] remains as a one-shot wrapper.
+//!
 //! Architecture: this crate is the L3 rust coordinator of a three-layer
 //! rust + JAX + Pallas stack. The dense move-selection arithmetic of Jet is
 //! also available as an AOT-compiled XLA executable (authored as a Pallas
@@ -36,6 +43,7 @@ pub mod coarsening;
 pub mod initial;
 pub mod refinement;
 pub mod partitioner;
+pub mod engine;
 pub mod config;
 pub mod runtime;
 pub mod experiments;

@@ -3,22 +3,26 @@
 //! refinement (LP / Jet / +Flows per config), all phases timed for the
 //! component-share experiment (Fig. 12).
 //!
-//! The uncoarsening driver owns one [`RefinementContext`] scratch arena
-//! and one set of partition-state backing buffers for the whole
-//! hierarchy, pre-reserved at the finest level's size, so per-level
-//! refinement reuses allocations instead of reallocating (DESIGN.md §2).
-//! Symmetrically, the coarsening phase runs against one
-//! `CoarseningScratch` arena reused across all contraction levels
-//! (DESIGN.md §6).
+//! The pipeline drivers run against the session-owned scratch arenas of
+//! a [`crate::engine::Partitioner`] (one `CoarseningScratch`, one
+//! [`RefinementContext`] with the partition-state backing buffers, and
+//! the RB driver's 2-way split context), pre-reserved at the finest
+//! level's size so neither per-level refinement nor a warm repeat
+//! request reallocates (DESIGN.md §2, §6, §8). Progress is reported
+//! through the engine's deterministic event channel.
+//!
+//! The free functions [`partition`] / [`partition_with_selector`] remain
+//! as thin one-shot wrappers (build an engine, serve one request) for
+//! callers that don't hold a session.
 
 use crate::config::{Config, RefinementAlgo};
 use crate::datastructures::{Hypergraph, PartitionedHypergraph};
+use crate::engine::{PartitionRequest, Partitioner, Progress, SessionScratch};
 use crate::refinement::jet::candidates::TileSelector;
 use crate::refinement::RefinementContext;
 use crate::util::rng::hash64;
 use crate::util::timer::PhaseTimer;
 use crate::{BlockId, Weight};
-use std::time::Instant;
 
 /// Result of a partitioning run.
 #[derive(Clone, Debug)]
@@ -37,6 +41,11 @@ pub struct PartitionResult {
 }
 
 /// Partition `hg` into `k` blocks under `cfg`.
+///
+/// One-shot convenience wrapper: builds a throwaway
+/// [`crate::engine::Partitioner`] and serves a single request seeded by
+/// `cfg.seed`. Panics on invalid configs/inputs — session callers use
+/// the engine API and get the typed errors instead.
 pub fn partition(hg: &Hypergraph, k: usize, cfg: &Config) -> PartitionResult {
     partition_with_selector(hg, k, cfg, None)
 }
@@ -49,40 +58,24 @@ pub fn partition_with_selector(
     cfg: &Config,
     selector: Option<&dyn TileSelector>,
 ) -> PartitionResult {
-    let t0 = Instant::now();
-    let mut timings = PhaseTimer::new();
-    let mut levels = 0usize;
-    let part = if cfg.recursive_bipartitioning {
-        recursive_bipartitioning_driver(hg, k, cfg, &mut timings, &mut levels)
-    } else {
-        direct_kway(hg, k, cfg, selector, &mut timings, &mut levels)
-    };
-    let km1 = crate::metrics::km1(hg, &part, k);
-    let cut = crate::metrics::cut(hg, &part, k);
-    let imbalance = crate::metrics::imbalance(hg, &part, k);
-    let balanced = crate::metrics::is_balanced(hg, &part, k, cfg.eps);
-    PartitionResult {
-        part,
-        km1,
-        cut,
-        imbalance,
-        balanced,
-        levels,
-        timings,
-        total_s: t0.elapsed().as_secs_f64(),
-    }
+    let mut engine = Partitioner::new(cfg.clone())
+        .unwrap_or_else(|e| panic!("invalid configuration: {e}"));
+    engine
+        .partition_with_selector(hg, &PartitionRequest::new(k, cfg.seed), selector, None)
+        .unwrap_or_else(|e| panic!("partitioning failed: {e}"))
 }
 
-fn direct_kway(
+pub(crate) fn direct_kway(
     hg: &Hypergraph,
     k: usize,
     cfg: &Config,
     selector: Option<&dyn TileSelector>,
-    timings: &mut PhaseTimer,
+    scratch: &mut SessionScratch,
+    progress: &mut Progress<'_>,
     levels_out: &mut usize,
 ) -> Vec<BlockId> {
     // --- Preprocessing ---
-    let communities = timings.scope("preprocessing", || {
+    let communities = progress.scope("preprocessing", || {
         if cfg.preprocessing.use_communities {
             Some(crate::preprocessing::detect_communities(
                 hg,
@@ -95,45 +88,43 @@ fn direct_kway(
         }
     });
 
-    // --- Coarsening (one scratch arena reused across all levels) ---
-    let mut cscratch = crate::coarsening::CoarseningScratch::new();
-    let hier = timings.scope("coarsening", || {
+    // --- Coarsening (the session's scratch arena, reused across levels
+    // and across requests) ---
+    let hier = progress.scope("coarsening", || {
         crate::coarsening::coarsen_in(
             hg,
             communities.as_deref(),
             &cfg.coarsening,
             k,
             cfg.seed,
-            &mut cscratch,
+            scratch.coarsening(),
         )
     });
-    drop(cscratch);
     let coarsest = hier.coarsest(hg);
     *levels_out = hier.levels.len() + 1;
 
     // --- Initial partitioning ---
-    let mut part = timings.scope("initial", || {
+    let mut part = progress.scope("initial", || {
         crate::initial::initial_partition(coarsest, k, cfg.eps, &cfg.initial, cfg.seed ^ 0x1217)
     });
 
-    // One scratch arena for the whole uncoarsening, pre-reserved at the
-    // finest level's dimensions so no level reallocates — including the
-    // selection pipeline's candidate arena and vertex→rank map.
-    let mut ctx = RefinementContext::new(k, hg.num_vertices());
-    {
-        let mut scratch = ctx.take_partition_scratch();
-        scratch.reserve_for(hg, k);
-        ctx.put_partition_scratch(scratch);
-        ctx.selection_mut().reserve(hg.num_vertices(), hg.num_edges());
-    }
+    // The session's refinement context: one scratch arena for the whole
+    // uncoarsening, pre-reserved at the finest level's dimensions so no
+    // level — and no warm repeat request — reallocates.
+    let ctx = scratch.refinement(k, hg);
 
-    // Refine at the coarsest level, then uncoarsen level by level.
-    refine_level(coarsest, k, &mut part, cfg, selector, timings, 0, hier.levels.is_empty(), &mut ctx);
+    // Refine at the coarsest level, then uncoarsen level by level. The
+    // `level_tag` seeds per-level hashing (coarsest = 0, then li + 1 —
+    // part of the deterministic seed schedule); the observer sees the
+    // 0-based uncoarsening step count.
+    progress.level_entered(0, coarsest);
+    refine_level(coarsest, k, &mut part, cfg, selector, progress, 0, hier.levels.is_empty(), ctx);
     for li in (0..hier.levels.len()).rev() {
         let fine_hg: &Hypergraph =
             if li == 0 { hg } else { &hier.levels[li - 1].coarse };
         part = hier.levels[li].map.iter().map(|&cv| part[cv as usize]).collect();
-        refine_level(fine_hg, k, &mut part, cfg, selector, timings, li as u64 + 1, li == 0, &mut ctx);
+        progress.level_entered((hier.levels.len() - li) as u64, fine_hg);
+        refine_level(fine_hg, k, &mut part, cfg, selector, progress, li as u64 + 1, li == 0, ctx);
     }
     part
 }
@@ -145,7 +136,7 @@ fn refine_level(
     part: &mut Vec<BlockId>,
     cfg: &Config,
     selector: Option<&dyn TileSelector>,
-    timings: &mut PhaseTimer,
+    progress: &mut Progress<'_>,
     level_tag: u64,
     is_finest: bool,
     ctx: &mut RefinementContext,
@@ -166,7 +157,7 @@ fn refine_level(
                     jet_cfg.temperatures = fine.clone();
                 }
             }
-            timings.scope("refinement-jet", || {
+            progress.scope("refinement-jet", || {
                 crate::refinement::jet::refine_jet_in(
                     &p,
                     cfg.eps,
@@ -176,9 +167,10 @@ fn refine_level(
                     ctx,
                 );
             });
+            progress.km1_after_round("refinement-jet", p.km1());
         }
         RefinementAlgo::LabelPropagation => {
-            timings.scope("refinement-lp", || {
+            progress.scope("refinement-lp", || {
                 let lmax = vec![p.max_block_weight(cfg.eps); k];
                 crate::refinement::lp::refine_lp_in(&p, &lmax, &cfg.refinement.lp, ctx);
                 // LP cannot repair imbalance by itself; reuse the Jet
@@ -189,6 +181,7 @@ fn refine_level(
                     );
                 }
             });
+            progress.km1_after_round("refinement-lp", p.km1());
         }
         RefinementAlgo::None => {}
     }
@@ -200,7 +193,7 @@ fn refine_level(
     // paper's ballpark — see DESIGN.md §4).
     if let Some(fcfg) = &cfg.refinement.flows {
         if is_finest && hg.num_pins() <= fcfg.max_pins {
-            timings.scope("refinement-flow", || {
+            progress.scope("refinement-flow", || {
                 crate::refinement::flow::refine_kway_flows_in(
                     &p,
                     cfg.eps,
@@ -209,6 +202,7 @@ fn refine_level(
                     ctx,
                 );
             });
+            progress.km1_after_round("refinement-flow", p.km1());
         }
     }
     let (snap, scratch) = p.into_scratch();
@@ -218,11 +212,12 @@ fn refine_level(
 
 /// BiPart-style driver: recursive bipartitioning all the way down, each
 /// split solved by a full multilevel 2-way partition (LP-refined).
-fn recursive_bipartitioning_driver(
+pub(crate) fn recursive_bipartitioning_driver(
     hg: &Hypergraph,
     k: usize,
     cfg: &Config,
-    timings: &mut PhaseTimer,
+    scratch: &mut SessionScratch,
+    progress: &mut Progress<'_>,
     levels_out: &mut usize,
 ) -> Vec<BlockId> {
     let mut part = vec![0 as BlockId; hg.num_vertices()];
@@ -230,16 +225,25 @@ fn recursive_bipartitioning_driver(
     // the standard adaptive ε′ = (1+ε)^(1/⌈log₂ k⌉) − 1 per split.
     let depth = (k.max(2) as f64).log2().ceil();
     let eps_split = (1.0 + cfg.eps).powf(1.0 / depth) - 1.0;
-    rb_recurse(hg, k, cfg, eps_split, timings, 0, &mut part, 0, levels_out);
+    rb_recurse(hg, k, cfg, eps_split, scratch, progress, 0, &mut part, 0, levels_out);
     // Explicit final balancing step (as BiPart does): the accumulated
-    // slack can still overshoot ε on small blocks.
-    let p = PartitionedHypergraph::new(hg, k, part);
+    // slack can still overshoot ε on small blocks. Routed through the
+    // session's k-way context — partition-state backing buffers and the
+    // rebalancer's selection arenas come from the engine, not fresh
+    // allocations.
+    let ctx = scratch.refinement(k, hg);
+    let p = PartitionedHypergraph::new_with_scratch(hg, k, part, ctx.take_partition_scratch());
     if !p.is_balanced(cfg.eps) {
-        timings.scope("refinement-lp", || {
-            crate::refinement::jet::rebalance::rebalance(&p, cfg.eps, 0.1, 200);
+        progress.scope("refinement-lp", || {
+            crate::refinement::jet::rebalance::rebalance_with_priority_in(
+                &p, cfg.eps, 0.1, 200, true, ctx,
+            );
         });
     }
-    p.snapshot()
+    progress.km1_after_round("rb-final", p.km1());
+    let (snap, ps) = p.into_scratch();
+    ctx.put_partition_scratch(ps);
+    snap
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -248,7 +252,8 @@ fn rb_recurse(
     k: usize,
     cfg: &Config,
     eps_split: f64,
-    timings: &mut PhaseTimer,
+    scratch: &mut SessionScratch,
+    progress: &mut Progress<'_>,
     block_base: BlockId,
     part: &mut [BlockId],
     depth: u64,
@@ -262,7 +267,8 @@ fn rb_recurse(
     }
     let k1 = k.div_ceil(2);
     let frac0 = k1 as f64 / k as f64;
-    let bip = bipartition_multilevel(hg, frac0, eps_split, cfg, depth, timings, levels_out);
+    let bip =
+        bipartition_multilevel(hg, frac0, eps_split, cfg, depth, scratch, progress, levels_out);
     for (side, kk, base) in
         [(0u32, k1, block_base), (1u32, k - k1, block_base + k1 as BlockId)]
     {
@@ -273,7 +279,8 @@ fn rb_recurse(
             kk,
             cfg,
             eps_split,
-            timings,
+            scratch,
+            progress,
             0,
             &mut sub_part,
             depth * 2 + side as u64 + 1,
@@ -286,7 +293,10 @@ fn rb_recurse(
 }
 
 /// Multilevel 2-way partition with asymmetric target weights
-/// (side 0 gets `frac0` of the total) and LP refinement.
+/// (side 0 gets `frac0` of the total) and LP refinement. Coarsening and
+/// refinement scratch come from the session (`SessionScratch::coarsening`
+/// / `SessionScratch::rb_split`) — splits run sequentially, so one 2-way
+/// context serves the whole recursion.
 #[allow(clippy::too_many_arguments)]
 fn bipartition_multilevel(
     hg: &Hypergraph,
@@ -294,18 +304,17 @@ fn bipartition_multilevel(
     eps_split: f64,
     cfg: &Config,
     depth: u64,
-    timings: &mut PhaseTimer,
+    scratch: &mut SessionScratch,
+    progress: &mut Progress<'_>,
     levels_out: &mut usize,
 ) -> Vec<BlockId> {
     let seed = hash64(cfg.seed, depth ^ 0xB1BA);
-    let mut cscratch = crate::coarsening::CoarseningScratch::new();
-    let hier = timings.scope("coarsening", || {
-        crate::coarsening::coarsen_in(hg, None, &cfg.coarsening, 2, seed, &mut cscratch)
+    let hier = progress.scope("coarsening", || {
+        crate::coarsening::coarsen_in(hg, None, &cfg.coarsening, 2, seed, scratch.coarsening())
     });
-    drop(cscratch);
     let coarsest = hier.coarsest(hg);
     *levels_out = (*levels_out).max(hier.levels.len() + 1);
-    let mut part = timings.scope("initial", || {
+    let mut part = progress.scope("initial", || {
         crate::initial::flat_bipartition(coarsest, frac0, eps_split, &cfg.initial, seed)
     });
     let total = hg.total_vertex_weight();
@@ -316,28 +325,28 @@ fn bipartition_multilevel(
         crate::metrics::max_block_weight(target0, eps_split),
         crate::metrics::max_block_weight(total - target0, eps_split),
     ];
-    let mut ctx = RefinementContext::new(2, hg.num_vertices());
+    let ctx = scratch.rb_split(hg);
     let mut refine2 =
-        |h: &Hypergraph, pt: &mut Vec<BlockId>, timings: &mut PhaseTimer, ctx: &mut RefinementContext| {
+        |h: &Hypergraph, pt: &mut Vec<BlockId>, progress: &mut Progress<'_>, ctx: &mut RefinementContext| {
             let p = PartitionedHypergraph::new_with_scratch(
                 h,
                 2,
                 std::mem::take(pt),
                 ctx.take_partition_scratch(),
             );
-            timings.scope("refinement-lp", || {
+            progress.scope("refinement-lp", || {
                 crate::refinement::lp::refine_lp_in(&p, &lmax, &cfg.refinement.lp, ctx);
             });
             let (snap, scratch) = p.into_scratch();
             *pt = snap;
             ctx.put_partition_scratch(scratch);
         };
-    refine2(coarsest, &mut part, timings, &mut ctx);
+    refine2(coarsest, &mut part, progress, ctx);
     for li in (0..hier.levels.len()).rev() {
         let fine_hg: &Hypergraph =
             if li == 0 { hg } else { &hier.levels[li - 1].coarse };
         part = hier.levels[li].map.iter().map(|&cv| part[cv as usize]).collect();
-        refine2(fine_hg, &mut part, timings, &mut ctx);
+        refine2(fine_hg, &mut part, progress, ctx);
     }
     part
 }

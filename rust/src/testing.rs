@@ -3,8 +3,76 @@
 //! `rust/tests/proptests.rs` integration suite and unit tests.
 
 use crate::datastructures::{Hypergraph, HypergraphBuilder, PartitionedHypergraph};
+use crate::engine::ProgressObserver;
 use crate::util::Rng;
 use crate::{BlockId, VertexId, Weight};
+
+/// One recorded progress event with the (non-deterministic) wall-clock
+/// payload stripped — what the determinism tests compare across thread
+/// counts and reruns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProgressRecord {
+    /// Refinement entered a hierarchy level of this shape.
+    Level {
+        /// 0-based uncoarsening step (0 = coarsest).
+        level: u64,
+        /// Vertices at that level.
+        vertices: usize,
+        /// Hyperedges at that level.
+        edges: usize,
+    },
+    /// A pipeline phase finished.
+    Phase {
+        /// The phase name.
+        phase: &'static str,
+    },
+    /// km1 after a refinement round.
+    Km1 {
+        /// The refinement phase that produced it.
+        phase: &'static str,
+        /// The connectivity objective (deterministic payload).
+        km1: Weight,
+    },
+}
+
+/// [`ProgressObserver`] that records the deterministic projection of the
+/// event stream (kinds, order, level shapes, km1 payloads — everything
+/// except wall-clock durations).
+#[derive(Clone, Debug, Default)]
+pub struct RecordingObserver {
+    /// The recorded events, in emission order.
+    pub events: Vec<ProgressRecord>,
+}
+
+impl RecordingObserver {
+    /// Human-readable rendering, handy for assertion diffs.
+    pub fn deterministic_view(&self) -> Vec<String> {
+        self.events
+            .iter()
+            .map(|e| match e {
+                ProgressRecord::Level { level, vertices, edges } => {
+                    format!("level {level}: n={vertices} m={edges}")
+                }
+                ProgressRecord::Phase { phase } => format!("phase {phase}"),
+                ProgressRecord::Km1 { phase, km1 } => format!("km1 {phase}={km1}"),
+            })
+            .collect()
+    }
+}
+
+impl ProgressObserver for RecordingObserver {
+    fn level_entered(&mut self, level: u64, vertices: usize, edges: usize) {
+        self.events.push(ProgressRecord::Level { level, vertices, edges });
+    }
+
+    fn phase_finished(&mut self, phase: &'static str, _seconds: f64) {
+        self.events.push(ProgressRecord::Phase { phase });
+    }
+
+    fn km1_after_round(&mut self, phase: &'static str, km1: Weight) {
+        self.events.push(ProgressRecord::Km1 { phase, km1 });
+    }
+}
 
 /// Parameters for random hypergraph generation.
 #[derive(Clone, Copy, Debug)]

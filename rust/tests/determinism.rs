@@ -3,10 +3,12 @@
 //! partitions** across thread counts, repeated runs, and — for DetFlows —
 //! across max-flow seeds.
 
-use detpart::config::Config;
+use detpart::config::{Config, Preset};
+use detpart::engine::{PartitionRequest, Partitioner};
 use detpart::gen;
 use detpart::par::with_num_threads;
 use detpart::partitioner::partition;
+use detpart::testing::RecordingObserver;
 
 fn assert_deterministic(hg: &detpart::datastructures::Hypergraph, k: usize, cfg: &Config) {
     let mut outs = Vec::new();
@@ -18,12 +20,12 @@ fn assert_deterministic(hg: &detpart::datastructures::Hypergraph, k: usize, cfg:
         assert_eq!(
             w[0].1, w[1].1,
             "{}: partition differs between {} and {} threads",
-            cfg.name, w[0].0, w[1].0
+            cfg.preset, w[0].0, w[1].0
         );
     }
     // Repeat run, same thread count.
     let again = partition(hg, k, cfg);
-    assert_eq!(outs.last().unwrap().1, again.part, "{}: rerun differs", cfg.name);
+    assert_eq!(outs.last().unwrap().1, again.part, "{}: rerun differs", cfg.preset);
 }
 
 #[test]
@@ -76,6 +78,85 @@ fn nondet_simulation_varies_with_seed_but_det_does_not() {
 
     let det: Vec<i64> = (0..3).map(|_| partition(&hg, 4, &Config::detjet(9)).km1).collect();
     assert!(det.windows(2).all(|w| w[0] == w[1]));
+}
+
+#[test]
+fn warm_engine_bit_identical_to_fresh_engine_across_presets_threads_k_and_seed() {
+    // The session-engine contract: one engine serving requests
+    // back-to-back with warm scratch must produce bit-identical
+    // `part`/`km1` to a fresh engine per request — reuse must never leak
+    // state between requests — for every deterministic preset, across
+    // thread counts, with k and seed varying per request.
+    let hg = gen::sat_hypergraph(500, 1500, 6, 3);
+    for preset in [Preset::DetJet, Preset::SDet, Preset::DetFlows] {
+        let requests =
+            [(2usize, 1u64), (4, 7), (8, 1), (3, 42), (2, 1)]; // incl. a repeat
+        // Reference run per request from a fresh engine, plus
+        // cross-thread-count comparison of the warm sequence.
+        let mut warm_seqs: Vec<Vec<(Vec<u32>, i64)>> = Vec::new();
+        for nt in [1usize, 2, 4] {
+            with_num_threads(nt, || {
+                let mut warm = Partitioner::from_preset(preset, 0);
+                let mut seq = Vec::new();
+                for &(k, seed) in &requests {
+                    let req = PartitionRequest::new(k, seed);
+                    let w = warm.partition(&hg, &req).unwrap();
+                    let f = Partitioner::from_preset(preset, 0)
+                        .partition(&hg, &req)
+                        .unwrap();
+                    assert_eq!(
+                        w.part, f.part,
+                        "{preset} k={k} seed={seed} nt={nt}: warm differs from fresh"
+                    );
+                    assert_eq!(w.km1, f.km1);
+                    seq.push((w.part, w.km1));
+                }
+                warm_seqs.push(seq);
+            });
+        }
+        assert!(
+            warm_seqs.windows(2).all(|w| w[0] == w[1]),
+            "{preset}: warm request sequence differs across thread counts"
+        );
+    }
+}
+
+#[test]
+fn progress_event_stream_is_deterministic_across_threads() {
+    // The observer channel is part of the determinism contract: the
+    // sequence of level/phase/km1 events (everything except wall-clock
+    // payloads) must be identical across thread counts and reruns.
+    let hg = gen::sat_hypergraph(600, 1800, 8, 17);
+    let mut views = Vec::new();
+    for nt in [1usize, 2, 4] {
+        with_num_threads(nt, || {
+            let mut engine = Partitioner::from_preset(Preset::DetJet, 0);
+            for _ in 0..2 {
+                let mut rec = RecordingObserver::default();
+                engine
+                    .partition_observed(&hg, &PartitionRequest::new(4, 5), &mut rec)
+                    .unwrap();
+                views.push(rec.deterministic_view());
+            }
+        });
+    }
+    assert!(
+        views.windows(2).all(|w| w[0] == w[1]),
+        "event stream depends on thread count or scratch warmth"
+    );
+    // The RB driver's stream is deterministic too.
+    let mut views = Vec::new();
+    for nt in [1usize, 2, 4] {
+        with_num_threads(nt, || {
+            let mut engine = Partitioner::from_preset(Preset::BiPart, 0);
+            let mut rec = RecordingObserver::default();
+            engine
+                .partition_observed(&hg, &PartitionRequest::new(4, 5), &mut rec)
+                .unwrap();
+            views.push(rec.deterministic_view());
+        });
+    }
+    assert!(views.windows(2).all(|w| w[0] == w[1]));
 }
 
 #[test]
