@@ -330,15 +330,161 @@ fn engine_micro() {
         warm.last().unwrap().1,
         detpart::par::num_threads(),
     );
+    // DetFlows coverage (PR-5): the flow subsystem's buffer pools and
+    // round scratch are session-owned too, so warm flow-refined requests
+    // must equally stay free of large-buffer allocations and beat a cold
+    // engine on total allocations — with bit-identical results.
+    let fcfg = ConfigBuilder::new(Preset::DetFlows).build().expect("valid preset");
+    let fh = detpart::gen::sat_hypergraph(8_000, 30_000, 10, 11);
+    let freq = PartitionRequest::new(8, 3);
+    let mut cold_f: Vec<(f64, u64, u64, Vec<u32>)> = Vec::new();
+    for _ in 0..2 {
+        let mut engine = Partitioner::new(fcfg.clone()).expect("valid config");
+        alloc_counter::reset_epoch();
+        let t = Timer::start();
+        let r = engine.partition(&fh, &freq).expect("valid request");
+        let (na, nl) = (alloc_counter::allocs(), alloc_counter::large_allocs());
+        cold_f.push((t.elapsed_s() * 1e3, na, nl, r.part));
+    }
+    let mut engine_f = Partitioner::new(fcfg).expect("valid config");
+    let mut warm_f: Vec<(f64, u64, u64, Vec<u32>)> = Vec::new();
+    for _ in 0..3 {
+        alloc_counter::reset_epoch();
+        let t = Timer::start();
+        let r = engine_f.partition(&fh, &freq).expect("valid request");
+        let (na, nl) = (alloc_counter::allocs(), alloc_counter::large_allocs());
+        warm_f.push((t.elapsed_s() * 1e3, na, nl, r.part));
+    }
+    for w in &warm_f {
+        assert_eq!(cold_f[0].3, w.3, "warm detflows engine diverged from cold");
+    }
+    for (i, w) in warm_f.iter().enumerate().skip(1) {
+        assert_eq!(w.2, 0, "warm detflows request {i} made {} large allocations", w.2);
+        assert!(
+            w.1 < cold_f[0].1,
+            "warm detflows request {i} allocations ({}) not below cold ({})",
+            w.1,
+            cold_f[0].1
+        );
+    }
+    println!(
+        "  detflows cold: {:.1} ms, {} allocs ({} large) | warm steady: {:.1} ms, {} allocs (0 large)",
+        cold_f[0].0,
+        cold_f[0].1,
+        cold_f[0].2,
+        warm_f.last().unwrap().0,
+        warm_f.last().unwrap().1,
+    );
+
+    let fmt_f = |series: &[(f64, u64, u64, Vec<u32>)]| -> Vec<String> {
+        series
+            .iter()
+            .map(|(ms, allocs, large, _)| {
+                format!("{{\"ms\":{ms:.3},\"allocs\":{allocs},\"large_allocs\":{large}}}")
+            })
+            .collect()
+    };
     let json = format!(
-        "{{\"bench\":\"engine\",\"instance\":\"sat-15k\",\"k\":{k},\"threads\":{},\"large_threshold_bytes\":{},\"scratch_rebuilds\":{},\"cold\":[{}],\"warm\":[{}]}}\n",
+        "{{\"bench\":\"engine\",\"instance\":\"sat-15k\",\"k\":{k},\"threads\":{},\"large_threshold_bytes\":{},\"scratch_rebuilds\":{},\"cold\":[{}],\"warm\":[{}],\"detflows_instance\":\"sat-8k\",\"detflows_cold\":[{}],\"detflows_warm\":[{}]}}\n",
         detpart::par::num_threads(),
         alloc_counter::LARGE_THRESHOLD,
         engine.scratch_rebuilds(),
         fmt(&cold).join(","),
         fmt(&warm).join(","),
+        fmt_f(&cold_f).join(","),
+        fmt_f(&warm_f).join(","),
     );
     let path = "BENCH_engine.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+}
+
+/// The PR-5 flow micro: sequential Dinic vs parallel push-relabel on
+/// Lawler networks built from detflows-preset regions (ε = 0.03,
+/// α = 16) over jagged bipartitions of three instance classes — wall
+/// time and allocations per solve (warm solver scratch), plus the
+/// falsifiability signal (do the flow *assignments* differ while the
+/// values and cuts agree?). Emits `BENCH_flow.json`.
+fn flow_micro() {
+    use detpart::config::FlowSolverKind;
+    use detpart::datastructures::PartitionedHypergraph;
+    use detpart::refinement::flow::dinic::Cap;
+    use detpart::refinement::flow::lawler::build_network;
+    use detpart::refinement::flow::region::grow_region;
+    use detpart::refinement::flow::solver::{MaxFlowSolver as _, SolverScratch};
+    use detpart::util::Timer;
+
+    println!("== micro: max-flow solvers (sequential dinic vs parallel push-relabel) ==");
+    let jagged = |n: usize, w: usize| -> Vec<u32> {
+        (0..n).map(|v| u32::from((v % w) + (v / w) % 3 >= w / 2)).collect()
+    };
+    let cases: Vec<(&str, detpart::datastructures::Hypergraph, Vec<u32>)> = vec![
+        {
+            let h = detpart::gen::grid::grid2d_graph(48, 48);
+            ("grid-48", h, jagged(48 * 48, 48))
+        },
+        {
+            let h = detpart::gen::spm_hypergraph_2d(40, 40);
+            ("spm2d-40", h, jagged(40 * 40, 40))
+        },
+        {
+            let h = detpart::gen::sat_hypergraph(3000, 9000, 8, 17);
+            ("sat-3000", h, (0..3000).map(|v| (v % 2) as u32).collect())
+        },
+    ];
+    let reps = 5usize;
+    let threads = detpart::par::num_threads();
+    let mut scratch = SolverScratch::default();
+    let mut rows: Vec<String> = Vec::new();
+    for (name, h, part) in &cases {
+        let p = PartitionedHypergraph::new(h, 2, part.clone());
+        // DetFlows-preset region parameters.
+        let region = grow_region(&p, 0, 1, 0.03, 16.0);
+        let base = build_network(&p, &region).net;
+        let (nodes, arcs) = (base.num_nodes(), base.num_arcs());
+
+        let mut stats: Vec<(f64, u64, Cap, Vec<Cap>)> = Vec::new();
+        for kind in FlowSolverKind::ALL {
+            let solver = kind.instance();
+            // Warm the scratch so steady-state allocations are measured.
+            let mut net = base.clone();
+            solver.solve(&mut net, 0, Cap::MAX, threads, &mut scratch);
+            let mut total_ms = 0.0f64;
+            let mut total_allocs = 0u64;
+            let mut flow_value = 0;
+            let mut assignment = Vec::new();
+            for rep in 0..reps {
+                let mut net = base.clone();
+                alloc_counter::reset_epoch();
+                let t = Timer::start();
+                solver.solve(&mut net, rep as u64, Cap::MAX, threads, &mut scratch);
+                total_ms += t.elapsed_s() * 1e3;
+                total_allocs += alloc_counter::allocs();
+                flow_value = net.flow_value();
+                assignment = (0..arcs as u32).map(|a| net.arc_flow(a)).collect();
+            }
+            let (avg_ms, avg_allocs) = (total_ms / reps as f64, total_allocs / reps as u64);
+            stats.push((avg_ms, avg_allocs, flow_value, assignment));
+        }
+        let (dinic_ms, dinic_allocs, dinic_flow, dinic_assign) = &stats[0];
+        let (relabel_ms, relabel_allocs, relabel_flow, relabel_assign) = &stats[1];
+        assert_eq!(dinic_flow, relabel_flow, "{name}: max-flow value must be solver-independent");
+        let differ = dinic_assign != relabel_assign;
+        println!(
+            "  {name}: {nodes} nodes / {arcs} arcs, flow {dinic_flow} | dinic {dinic_ms:.3} ms, {dinic_allocs} allocs | relabel {relabel_ms:.3} ms, {relabel_allocs} allocs ({:.1}x) | assignments differ: {differ} | {threads} threads",
+            dinic_ms / relabel_ms.max(1e-9),
+        );
+        rows.push(format!(
+            "{{\"instance\":\"{name}\",\"nodes\":{nodes},\"arcs\":{arcs},\"flow\":{dinic_flow},\"dinic_ms\":{dinic_ms:.4},\"relabel_ms\":{relabel_ms:.4},\"dinic_allocs\":{dinic_allocs},\"relabel_allocs\":{relabel_allocs},\"assignments_differ\":{differ}}}"
+        ));
+    }
+    let json = format!(
+        "{{\"bench\":\"flow\",\"threads\":{threads},\"reps\":{reps},\"cases\":[{}]}}\n",
+        rows.join(",")
+    );
+    let path = "BENCH_flow.json";
     match std::fs::write(path, &json) {
         Ok(()) => println!("  wrote {path}"),
         Err(e) => eprintln!("  could not write {path}: {e}"),
@@ -474,6 +620,7 @@ fn main() {
         contraction_micro();
         selection_micro();
         engine_micro();
+        flow_micro();
         return;
     }
     for name in names {
@@ -482,15 +629,18 @@ fn main() {
             contraction_micro();
             selection_micro();
             engine_micro();
+            flow_micro();
         } else if name == "contraction" {
             contraction_micro();
         } else if name == "selection" {
             selection_micro();
         } else if name == "engine" {
             engine_micro();
+        } else if name == "flow" {
+            flow_micro();
         } else if !figures::run_by_name(&ctx, name) {
             eprintln!(
-                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, selection, engine, all"
+                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, selection, engine, flow, all"
             );
             std::process::exit(1);
         }

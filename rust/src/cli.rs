@@ -9,7 +9,7 @@
 //! detpart verify-determinism --instance <name> --k <k> [--preset ..]
 //! ```
 
-use crate::config::{Config, ConfigBuilder, GainBackend, Preset};
+use crate::config::{Config, ConfigBuilder, FlowSolverKind, GainBackend, Preset};
 use crate::engine::{PartitionRequest, Partitioner};
 use crate::util::timer::PhaseTimer;
 use crate::util::{Context, Result};
@@ -78,7 +78,8 @@ fn print_usage() {
          USAGE:\n\
          \x20 detpart partition --input <f.hgr|f.graph> --k <k> [--preset detjet]\n\
          \x20          [--eps 0.03] [--seed 0] [--threads N]\n\
-         \x20          [--gain-backend native|xla] [--output out.part]\n\
+         \x20          [--gain-backend native|xla] [--flow-solver dinic|relabel]\n\
+         \x20          [--output out.part]\n\
          \x20 detpart partition --instance <name> --k <k> ...\n\
          \x20 detpart generate --list\n\
          \x20 detpart generate --instance <name> --output <f.hgr>\n\
@@ -110,6 +111,7 @@ fn build_config(flags: &HashMap<String, String>) -> Result<Config> {
     let preset_name = flags.get("preset").map(String::as_str).unwrap_or("detjet");
     let preset =
         Preset::from_name(preset_name).ok_or_else(|| err!("unknown preset {preset_name:?}"))?;
+    let flows_enabled = preset.config(0).refinement.flows.is_some();
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let mut builder = ConfigBuilder::new(preset).seed(seed);
     if let Some(e) = flags.get("eps") {
@@ -121,6 +123,17 @@ fn build_config(flags: &HashMap<String, String>) -> Result<Config> {
             "xla" => GainBackend::Xla,
             other => bail!("unknown gain backend {other:?}"),
         });
+    }
+    if let Some(s) = flags.get("flow-solver") {
+        let kind = FlowSolverKind::from_name(s)
+            .ok_or_else(|| err!("unknown flow solver {s:?} (want dinic|relabel)"))?;
+        if !flows_enabled {
+            bail!(
+                "--flow-solver has no effect: preset {preset_name:?} runs no flow \
+                 refinement (use --preset detflows or nondet-flows)"
+            );
+        }
+        builder = builder.flow_solver(kind);
     }
     builder.build().map_err(|e| err!("invalid configuration: {e}"))
 }
@@ -151,6 +164,9 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
         cfg.seed,
         crate::par::num_threads()
     );
+    if let Some(f) = &cfg.refinement.flows {
+        println!("flow refinement: solver={} (cuts are solver-independent)", f.solver);
+    }
     let seed = cfg.seed;
     let mut engine =
         Partitioner::new(cfg).map_err(|e| err!("invalid configuration: {e}"))?;
@@ -255,6 +271,48 @@ mod tests {
     #[test]
     fn generate_list_runs() {
         dispatch(&s(&["generate", "--list"])).unwrap();
+    }
+
+    #[test]
+    fn flow_solver_flag_selects_and_rejects() {
+        dispatch(&s(&[
+            "partition",
+            "--instance",
+            "spm2d-64",
+            "--k",
+            "2",
+            "--preset",
+            "detflows",
+            "--flow-solver",
+            "dinic",
+        ]))
+        .unwrap();
+        assert!(dispatch(&s(&[
+            "partition",
+            "--instance",
+            "spm2d-64",
+            "--k",
+            "2",
+            "--preset",
+            "detflows",
+            "--flow-solver",
+            "bogus",
+        ]))
+        .is_err());
+        // Selecting a solver for a preset that runs no flows is an error,
+        // not a silent no-op.
+        assert!(dispatch(&s(&[
+            "partition",
+            "--instance",
+            "spm2d-64",
+            "--k",
+            "2",
+            "--preset",
+            "detjet",
+            "--flow-solver",
+            "dinic",
+        ]))
+        .is_err());
     }
 
     #[test]

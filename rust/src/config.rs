@@ -248,15 +248,68 @@ impl Default for JetConfig {
     }
 }
 
+/// Which maximum-flow algorithm the two-way flow refinement runs on.
+/// The refinement's cuts are **solver-independent** (Picard–Queyranne
+/// unique cut sides, see DESIGN.md §9), so this knob trades speed, not
+/// results — asserted by the solver-independence property tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FlowSolverKind {
+    /// Sequential Dinic with seed-permuted arc exploration — the
+    /// retained oracle.
+    Dinic,
+    /// Shared-memory parallel push-relabel with genuinely
+    /// scheduling-dependent flow assignments (the default).
+    PushRelabel,
+}
+
+impl FlowSolverKind {
+    /// Every solver, oracle first.
+    pub const ALL: [FlowSolverKind; 2] = [FlowSolverKind::Dinic, FlowSolverKind::PushRelabel];
+
+    /// The solver's canonical (CLI / CSV / report) name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FlowSolverKind::Dinic => "dinic",
+            FlowSolverKind::PushRelabel => "relabel",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn from_name(name: &str) -> Option<FlowSolverKind> {
+        FlowSolverKind::ALL.into_iter().find(|s| s.name() == name)
+    }
+
+    /// The solver implementation behind this kind (solvers are
+    /// stateless; all per-solve state lives in the pooled scratch).
+    pub fn instance(self) -> &'static dyn crate::refinement::flow::solver::MaxFlowSolver {
+        static DINIC: crate::refinement::flow::solver::SequentialDinic =
+            crate::refinement::flow::solver::SequentialDinic;
+        static RELABEL: crate::refinement::flow::relabel::ParallelPushRelabel =
+            crate::refinement::flow::relabel::ParallelPushRelabel;
+        match self {
+            FlowSolverKind::Dinic => &DINIC,
+            FlowSolverKind::PushRelabel => &RELABEL,
+        }
+    }
+}
+
+impl fmt::Display for FlowSolverKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Deterministic flow-based refinement (Section 5).
 #[derive(Clone, Debug)]
 pub struct FlowConfig {
     /// Scaling parameter α for the region-growing weight budget.
     pub alpha: f64,
-    /// Seed for the (intentionally non-deterministic-order) max-flow's
-    /// augmenting path exploration. Determinism of results must hold for
+    /// Seed for the (intentionally non-deterministic) max-flow's
+    /// exploration/scheduling order. Determinism of results must hold for
     /// *any* value — tests vary it.
     pub flow_seed: u64,
+    /// The maximum-flow solver behind the two-way refinements.
+    pub solver: FlowSolverKind,
     /// Run the termination check before piercing (the paper's bug fix).
     /// `false` reproduces the subtle non-determinism for demonstration.
     pub term_check_before_piercing: bool,
@@ -274,6 +327,7 @@ impl Default for FlowConfig {
         FlowConfig {
             alpha: 16.0,
             flow_seed: 0,
+            solver: FlowSolverKind::PushRelabel,
             term_check_before_piercing: true,
             max_rounds_without_improvement: 2,
             max_rounds: 16,
@@ -625,6 +679,16 @@ impl ConfigBuilder {
         self
     }
 
+    /// Select the max-flow solver behind flow refinement. No effect
+    /// unless flows are enabled (enable them first via
+    /// [`flows`](Self::flows) or a flows preset).
+    pub fn flow_solver(mut self, solver: FlowSolverKind) -> Self {
+        if let Some(f) = &mut self.cfg.refinement.flows {
+            f.solver = solver;
+        }
+        self
+    }
+
     /// Escape hatch for ablation sweeps: mutate any field directly. The
     /// result is still validated by [`build`](Self::build).
     pub fn tweak(mut self, f: impl FnOnce(&mut Config)) -> Self {
@@ -713,6 +777,28 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(cfg.initial.attempts, 4);
+    }
+
+    #[test]
+    fn flow_solver_kinds_resolve_and_builder_applies() {
+        for s in FlowSolverKind::ALL {
+            assert_eq!(FlowSolverKind::from_name(s.name()), Some(s));
+            assert_eq!(s.to_string(), s.name());
+            assert_eq!(s.instance().name(), s.name());
+        }
+        assert!(FlowSolverKind::from_name("nope").is_none());
+        assert_eq!(FlowConfig::default().solver, FlowSolverKind::PushRelabel);
+        let cfg = ConfigBuilder::new(Preset::DetFlows)
+            .flow_solver(FlowSolverKind::Dinic)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.refinement.flows.unwrap().solver, FlowSolverKind::Dinic);
+        // No effect when flows are disabled.
+        let cfg = ConfigBuilder::new(Preset::DetJet)
+            .flow_solver(FlowSolverKind::Dinic)
+            .build()
+            .unwrap();
+        assert!(cfg.refinement.flows.is_none());
     }
 
     #[test]

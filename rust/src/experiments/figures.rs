@@ -286,11 +286,46 @@ pub fn fig7(ctx: &ExpCtx) {
     println!("  (1-core container: true parallel speedup is hardware-gated; see DESIGN.md)");
 }
 
-/// Fig. 9: deterministic vs non-deterministic flows (and DetJet baseline).
+/// Fig. 9: deterministic vs non-deterministic flows (and DetJet
+/// baseline), with the solver ablation riding along: `detflows` runs the
+/// parallel push-relabel solver, `detflows-dinic` the sequential Dinic
+/// oracle — the paper's solver-independence claim says their results
+/// must be **identical**, which this experiment asserts per
+/// (instance, k, seed) cell.
 pub fn fig9(ctx: &ExpCtx) {
     println!("== fig9: flow-based refinement ==");
-    let presets = ["detflows", "nondet-flows", "detjet"];
-    let records = run_matrix(ctx, &presets, |p, s| Config::preset(p, s).unwrap());
+    let presets = ["detflows", "detflows-dinic", "nondet-flows", "detjet"];
+    let records = run_matrix(ctx, &presets, |p, s| match p {
+        "detflows-dinic" => {
+            let mut c = Config::detflows(s);
+            c.refinement.flows.as_mut().unwrap().solver = crate::config::FlowSolverKind::Dinic;
+            c
+        }
+        _ => Config::preset(p, s).unwrap(),
+    });
+    // Solver-independence cross-check: push-relabel vs Dinic cell by cell.
+    let mut cells = 0usize;
+    for r in records.iter().filter(|r| r.preset == "detflows") {
+        let twin = records
+            .iter()
+            .find(|t| {
+                t.preset == "detflows-dinic"
+                    && t.instance == r.instance
+                    && t.k == r.k
+                    && t.seed == r.seed
+            })
+            .expect("matrix ran both solver labels");
+        assert_eq!(
+            (r.km1, r.imbalance.to_bits()),
+            (twin.km1, twin.imbalance.to_bits()),
+            "solver leaked into the result on {} k={} seed={}",
+            r.instance,
+            r.k,
+            r.seed
+        );
+        cells += 1;
+    }
+    println!("  solver-independence: push-relabel == dinic on all {cells} cells");
     ctx.write_records("fig9_flows.csv", &records);
     let objs = objectives_by_preset(&records, &presets);
     print_profile("Fig. 9 (flows quality)", &presets, &objs);

@@ -14,7 +14,10 @@
 //!   an `O(Σ|e| log |e|)` afterburner, and a deterministic weight-aware
 //!   rebalancer).
 //! * [`refinement::flow`] — **DetFlows**: deterministic flow-based
-//!   refinement built on a *non-deterministic* max-flow core, exploiting
+//!   refinement built on a genuinely *non-deterministic* max-flow core —
+//!   a shared-memory parallel push-relabel behind the pluggable
+//!   [`refinement::flow::solver::MaxFlowSolver`] abstraction (the
+//!   seed-permuted sequential Dinic stays as the oracle) — exploiting
 //!   the uniqueness of inclusion-minimal/-maximal minimum cuts
 //!   (Picard–Queyranne) plus deterministic piercing and scheduling.
 //!

@@ -14,7 +14,11 @@
 //!
 //! The worker count is a process-global ([`set_num_threads`]) so the CLI
 //! `--threads` flag and the scaling benchmark (Fig. 7) control it, and so
-//! tests can assert bit-identical results across different values.
+//! tests can assert bit-identical results across different values. Nested
+//! parallel algorithms (a flow solve inside the matching scheduler) take
+//! an **explicit budget** instead ([`for_each_chunk_in`]) — re-reading
+//! the global inside an outer parallel region would oversubscribe it.
+#![deny(missing_docs)]
 
 pub mod counting;
 pub mod pool;
@@ -23,8 +27,8 @@ pub mod sort;
 
 pub use counting::{bucket_boundaries_in, stable_counting_scatter, CountingScratch};
 pub use pool::{
-    for_each_chunk, for_each_chunk_mut, map_indexed, num_threads, parallel_reduce,
-    set_num_threads, with_num_threads,
+    for_each_chunk, for_each_chunk_in, for_each_chunk_mut, map_indexed, num_threads,
+    parallel_reduce, set_num_threads, with_num_threads,
 };
 pub use prefix::{
     collect_indices_where, collect_indices_where_into, exclusive_prefix_sum,

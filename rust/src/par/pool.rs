@@ -93,7 +93,19 @@ pub fn nth_chunk(len: usize, parts: usize, i: usize) -> Range<usize> {
 /// `f` must only touch state that is disjoint per chunk or atomically
 /// commutative; under that contract the result is schedule-independent.
 pub fn for_each_chunk(len: usize, f: impl Fn(usize, Range<usize>) + Sync) {
-    let nt = num_threads();
+    for_each_chunk_in(num_threads(), len, f);
+}
+
+/// [`for_each_chunk`] with an **explicit worker budget** instead of the
+/// process-global thread count — the nested-parallelism form. An inner
+/// parallel algorithm that runs inside an outer parallel region (e.g. a
+/// flow solve inside the matching scheduler's concurrent pair
+/// refinements) must receive its budget from the caller: re-reading the
+/// global count would oversubscribe every outer worker by a factor of
+/// `num_threads()`. Chunk shapes are a pure function of `(threads, len)`,
+/// so chunk-deterministic algorithms stay reproducible per budget.
+pub fn for_each_chunk_in(threads: usize, len: usize, f: impl Fn(usize, Range<usize>) + Sync) {
+    let nt = threads.max(1);
     if nt <= 1 || len < 2 {
         if len > 0 {
             f(0, 0..len);

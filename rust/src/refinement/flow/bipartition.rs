@@ -1,8 +1,14 @@
 //! Incremental two-way flow refinement (Algorithm 3 + Section 5.1).
 //!
 //! Solves a sequence of incremental max-flow problems whose min cuts
-//! induce increasingly balanced bipartitions. Determinism despite the
-//! seed-order max-flow rests on three measures from the paper:
+//! induce increasingly balanced bipartitions. The piercing loop is
+//! **solver-generic**: it consumes only residual-graph queries —
+//! `flow_value()` (unique: max-flow values are), `source_reachable` /
+//! `sink_reaching` (unique: Picard–Queyranne closures) and its own
+//! terminal-membership flags — never the flow assignment itself, so the
+//! derived cuts are bit-identical for *any*
+//! [`MaxFlowSolver`](super::solver::MaxFlowSolver). Determinism despite
+//! a non-deterministic max-flow rests on three measures from the paper:
 //!
 //! 1. **Unique cut sides** — we only ever inspect the inclusion-minimal
 //!    source side (`source_reachable`) and inclusion-maximal source side
@@ -18,10 +24,11 @@
 //!    piercing, skipping flow computation) is kept behind
 //!    `term_check_before_piercing = false` for demonstration.
 
-use super::super::BufferPool;
 use super::dinic::{INF, SINK, SOURCE};
 use super::lawler::{build_network, LawlerNetwork};
 use super::region::{grow_region, Region};
+use super::solver::MaxFlowSolver;
+use super::FlowPools;
 use crate::config::FlowConfig;
 use crate::datastructures::PartitionedHypergraph;
 use crate::{BlockId, VertexId, Weight};
@@ -29,15 +36,38 @@ use crate::{BlockId, VertexId, Weight};
 /// Outcome of a two-way refinement.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct PairResult {
+    /// Did the refinement change the partition?
     pub improved: bool,
+    /// Number of vertices that changed blocks.
     pub moved_vertices: usize,
+    /// The pair's cut weight before refinement.
     pub old_cut: Weight,
+    /// The pair's cut weight after refinement.
     pub new_cut: Weight,
 }
 
-/// Refine the bipartition between blocks `b0` and `b1` in place.
+/// Refine the bipartition between blocks `b0` and `b1` in place, using
+/// the solver selected by `cfg` with the full process thread budget.
 /// Allocates its own scratch — the k-way scheduler's concurrent pair
-/// refinements share a [`BufferPool`] via [`refine_pair_in`].
+/// refinements share [`FlowPools`] via [`refine_pair_in`].
+///
+/// ```
+/// use detpart::config::FlowConfig;
+/// use detpart::datastructures::PartitionedHypergraph;
+/// use detpart::refinement::flow::bipartition::refine_pair;
+///
+/// // A 10×10 grid split by a jagged vertical cut: flow refinement
+/// // straightens the boundary toward the minimal column cut.
+/// let h = detpart::gen::grid::grid2d_graph(10, 10);
+/// let part: Vec<u32> = (0..100u32)
+///     .map(|v| u32::from((v % 10) + (v / 10) % 3 >= 6))
+///     .collect();
+/// let p = PartitionedHypergraph::new(&h, 2, part);
+/// let before = p.km1();
+/// let r = refine_pair(&p, 0, 1, 0.1, &FlowConfig::default(), 1);
+/// assert!(r.improved && p.km1() < before);
+/// assert!(p.is_balanced(0.1));
+/// ```
 pub fn refine_pair(
     p: &PartitionedHypergraph,
     b0: BlockId,
@@ -46,13 +76,24 @@ pub fn refine_pair(
     cfg: &FlowConfig,
     seed: u64,
 ) -> PairResult {
-    refine_pair_in(p, b0, b1, eps, cfg, seed, &BufferPool::new())
+    refine_pair_in(
+        p,
+        b0,
+        b1,
+        eps,
+        cfg,
+        seed,
+        cfg.solver.instance(),
+        crate::par::num_threads(),
+        &FlowPools::new(),
+    )
 }
 
-/// [`refine_pair`] taking terminal-membership scratch from a shared
-/// buffer pool (safe from parallel callers — the pool only recycles
-/// allocations, all state is re-initialized here; the RAII guards return
-/// the buffers on every exit path, including panics).
+/// [`refine_pair`] with an explicit [`MaxFlowSolver`], an inner-solve
+/// thread budget (handed down by the matching scheduler's nested-budget
+/// policy) and shared buffer pools (safe from parallel callers — the
+/// pools only recycle allocations, all state is re-initialized here; the
+/// RAII guards return the buffers on every exit path, including panics).
 #[allow(clippy::too_many_arguments)]
 pub fn refine_pair_in(
     p: &PartitionedHypergraph,
@@ -61,7 +102,9 @@ pub fn refine_pair_in(
     eps: f64,
     cfg: &FlowConfig,
     seed: u64,
-    pool: &BufferPool<Vec<bool>>,
+    solver: &dyn MaxFlowSolver,
+    threads: usize,
+    pools: &FlowPools,
 ) -> PairResult {
     let hg = p.hypergraph();
     let lmax = p.max_block_weight(eps);
@@ -79,12 +122,15 @@ pub fn refine_pair_in(
     let mut lw = build_network(p, &region);
     let nr = region.vertices.len();
     // Terminal membership of region vertices (grows by piercing).
-    let mut in_s = pool.take();
+    let mut in_s = pools.bools.take();
     in_s.clear();
     in_s.resize(nr, false);
-    let mut in_t = pool.take();
+    let mut in_t = pools.bools.take();
     in_t.clear();
     in_t.resize(nr, false);
+    // The solver's per-solve state (atomic residual mirror, queues, BFS
+    // buffers) — pooled like the flag buffers, re-initialized per solve.
+    let mut solver_scratch = pools.solver.take();
 
     let mut accepted: Option<(Vec<bool>, Weight)> = None; // (side0 flags, cut)
     let max_iters = 4 * nr + 16;
@@ -106,7 +152,10 @@ pub fn refine_pair_in(
             }
         }
         // Augment to maximality, aborting early above the incumbent cut.
-        lw.net.augment(cfg.flow_seed ^ seed, old_cut);
+        // Which maximum flow the solver lands on is irrelevant: from here
+        // on the loop reads only the (unique) flow value and the (unique)
+        // Picard–Queyranne residual closures.
+        solver.solve(&mut lw.net, cfg.flow_seed ^ seed, old_cut, threads, &mut solver_scratch);
         let flow = lw.net.flow_value();
         if flow > old_cut {
             break; // can't improve (nor match) the incumbent anymore
@@ -207,8 +256,8 @@ pub fn refine_pair_in(
             PairResult { improved: moved > 0, moved_vertices: moved, old_cut, new_cut }
         }
     };
-    // `in_s` / `in_t` return to the pool when their guards drop — even
-    // if a panic unwinds through this refinement.
+    // `in_s` / `in_t` / `solver_scratch` return to their pools when the
+    // guards drop — even if a panic unwinds through this refinement.
     result
 }
 
@@ -333,20 +382,24 @@ mod tests {
     }
 
     #[test]
-    fn result_deterministic_across_flow_seeds() {
-        // THE paper property: different max-flow orders, identical result.
+    fn result_deterministic_across_flow_seeds_and_solvers() {
+        // THE paper property: different max-flow orders — and entirely
+        // different max-flow *algorithms* — yield the identical result.
+        use crate::config::FlowSolverKind;
         let h = crate::gen::spm_hypergraph_2d(12, 12);
         let part: Vec<BlockId> = (0..144).map(|v| u32::from(v % 12 >= 6)).collect();
         let mut outs = Vec::new();
-        for flow_seed in 0..6u64 {
-            let p = PartitionedHypergraph::new(&h, 2, part.clone());
-            let cfg = FlowConfig { flow_seed, ..Default::default() };
-            let r = refine_pair(&p, 0, 1, 0.1, &cfg, 0);
-            outs.push((p.snapshot(), p.km1(), r));
+        for solver in FlowSolverKind::ALL {
+            for flow_seed in 0..4u64 {
+                let p = PartitionedHypergraph::new(&h, 2, part.clone());
+                let cfg = FlowConfig { flow_seed, solver, ..Default::default() };
+                let r = refine_pair(&p, 0, 1, 0.1, &cfg, 0);
+                outs.push((p.snapshot(), p.km1(), r));
+            }
         }
         assert!(
             outs.windows(2).all(|w| w[0] == w[1]),
-            "flow seed leaked into the refinement result"
+            "flow seed or solver leaked into the refinement result"
         );
     }
 

@@ -1,15 +1,15 @@
-//! Max-flow core with *intentionally non-deterministic* exploration
-//! order.
+//! The residual [`FlowNetwork`] plus the sequential Dinic max-flow with
+//! *intentionally non-deterministic* (seed-permuted) exploration order.
 //!
 //! The paper's point (Section 5.1) is that flow-based refinement can stay
 //! deterministic **on top of a non-deterministic max-flow**, because the
 //! inclusion-minimal/-maximal min-cuts are unique regardless of the flow
-//! assignment (Picard–Queyranne). We make that property falsifiable: this
-//! Dinic implementation permutes its arc exploration order by a seed
-//! (standing in for the scheduling non-determinism of the parallel
-//! push-relabel algorithm the paper uses), so different seeds produce
-//! different max *flows* — and the test suite asserts the derived *cuts*
-//! are identical for every seed.
+//! assignment (Picard–Queyranne). This Dinic implementation permutes its
+//! arc exploration order by a seed, so different seeds produce different
+//! max *flows*; the genuinely scheduling-dependent parallel push-relabel
+//! solver lives in [`super::relabel`], and both are served to the
+//! refinement through the [`super::solver::MaxFlowSolver`] abstraction —
+//! Dinic is the retained sequential oracle.
 //!
 //! Supports incremental use: piercing adds `∞` arcs from the super
 //! source/sink, and flow is re-augmented from the existing assignment.
@@ -38,7 +38,9 @@ pub struct FlowNetwork {
     total_flow: Cap,
 }
 
+/// The super-source node id.
 pub const SOURCE: u32 = 0;
+/// The super-sink node id.
 pub const SINK: u32 = 1;
 
 impl FlowNetwork {
@@ -48,8 +50,57 @@ impl FlowNetwork {
         FlowNetwork { adj: vec![Vec::new(); n], arcs: Vec::new(), total_flow: 0 }
     }
 
+    /// Number of nodes (including the two terminals).
     pub fn num_nodes(&self) -> usize {
         self.adj.len()
+    }
+
+    /// Number of arc slots (forward arcs and their reverse stubs).
+    pub fn num_arcs(&self) -> usize {
+        self.arcs.len()
+    }
+
+    /// Head node of arc `a`.
+    #[inline]
+    pub fn arc_to(&self, a: u32) -> u32 {
+        self.arcs[a as usize].to
+    }
+
+    /// Capacity of arc `a` (reverse stubs have capacity 0).
+    #[inline]
+    pub fn arc_cap(&self, a: u32) -> Cap {
+        self.arcs[a as usize].cap
+    }
+
+    /// Current flow on arc `a` (negative on a reverse stub whose forward
+    /// arc carries flow).
+    #[inline]
+    pub fn arc_flow(&self, a: u32) -> Cap {
+        self.arcs[a as usize].flow
+    }
+
+    /// Index of `a`'s paired reverse arc.
+    #[inline]
+    pub fn arc_rev(&self, a: u32) -> u32 {
+        self.arcs[a as usize].rev
+    }
+
+    /// Indices of the arcs leaving `u` (forward arcs and reverse stubs).
+    #[inline]
+    pub fn arcs_of(&self, u: u32) -> &[u32] {
+        &self.adj[u as usize]
+    }
+
+    /// Solver write-back: overwrite the arc flows with the atomic mirror
+    /// `flow` (parallel to arc indices) and credit `added` to the running
+    /// total. Only called by [`super::solver::MaxFlowSolver`]
+    /// implementations that compute on a mirror of the residual state.
+    pub(crate) fn store_flows(&mut self, flow: &[std::sync::atomic::AtomicI64], added: Cap) {
+        debug_assert_eq!(flow.len(), self.arcs.len());
+        for (arc, f) in self.arcs.iter_mut().zip(flow) {
+            arc.flow = f.load(std::sync::atomic::Ordering::Relaxed);
+        }
+        self.total_flow += added;
     }
 
     /// Add a directed arc `u → v` with capacity `cap` (plus 0-capacity
@@ -201,24 +252,32 @@ impl FlowNetwork {
     }
 }
 
+/// Classic small test network with known max-flow value 19 and multiple
+/// optimal flow assignments — the shared fixture of the dinic, solver
+/// and relabel test suites (one definition, so the "same network"
+/// cross-solver assertions cannot silently diverge).
+#[cfg(test)]
+pub(crate) fn test_diamond() -> FlowNetwork {
+    // 0=s, 1=t, 2..6 internal.
+    let mut net = FlowNetwork::new(6);
+    net.add_arc(SOURCE, 2, 10);
+    net.add_arc(SOURCE, 3, 10);
+    net.add_arc(2, 4, 4);
+    net.add_arc(2, 5, 8);
+    net.add_arc(3, 5, 9);
+    net.add_arc(2, 3, 2);
+    net.add_arc(5, 4, 6);
+    net.add_arc(4, SINK, 10);
+    net.add_arc(5, SINK, 10);
+    net
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    /// Classic small network with known max-flow value 19.
     fn diamond() -> FlowNetwork {
-        // 0=s, 1=t, 2..6 internal.
-        let mut net = FlowNetwork::new(6);
-        net.add_arc(SOURCE, 2, 10);
-        net.add_arc(SOURCE, 3, 10);
-        net.add_arc(2, 4, 4);
-        net.add_arc(2, 5, 8);
-        net.add_arc(3, 5, 9);
-        net.add_arc(2, 3, 2);
-        net.add_arc(5, 4, 6);
-        net.add_arc(4, SINK, 10);
-        net.add_arc(5, SINK, 10);
-        net
+        test_diamond()
     }
 
     #[test]

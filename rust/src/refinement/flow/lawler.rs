@@ -14,6 +14,7 @@ use crate::VertexId;
 
 /// The built network plus node-id bookkeeping.
 pub struct LawlerNetwork {
+    /// The flow network over the region's Lawler gadget.
     pub net: FlowNetwork,
     /// `node_of[i]` = flow-network node of `region.vertices[i]`.
     pub node_of: Vec<u32>,

@@ -1,20 +1,55 @@
-//! Deterministic flow-based refinement (Section 5).
+//! Deterministic flow-based refinement (Section 5; DESIGN.md §9).
 //!
 //! Refines the k-way partition by scheduling two-way refinements on
 //! block pairs ([`scheduler`], a deterministic matching schedule on the
-//! quotient graph). Each two-way refinement ([`bipartition`]) solves a
-//! sequence of incremental max-flow problems on the flow network built
-//! from the region around the cut ([`region`], [`lawler`]) using a
-//! max-flow whose internal exploration order is intentionally
-//! non-deterministic ([`dinic`]) — results stay deterministic because the
-//! inclusion-minimal/-maximal min-cuts are unique (Picard–Queyranne;
-//! see `dinic::FlowNetwork::{source_reachable, sink_reaching}`) and
-//! piercing is order-normalized ([`bipartition`]).
+//! quotient graph with a nested thread-budget policy). Each two-way
+//! refinement ([`bipartition`]) solves a sequence of incremental
+//! max-flow problems on the flow network built from the region around
+//! the cut ([`region`], [`lawler`]) through the pluggable
+//! [`solver::MaxFlowSolver`] core: the seed-permuted sequential Dinic
+//! oracle ([`dinic`]) or the genuinely scheduling-dependent shared-memory
+//! parallel push-relabel ([`relabel`]). Results stay deterministic for
+//! **any** maximum flow because the inclusion-minimal/-maximal min-cuts
+//! are unique (Picard–Queyranne; see
+//! `dinic::FlowNetwork::{source_reachable, sink_reaching}`) and piercing
+//! is order-normalized ([`bipartition`]).
+#![deny(missing_docs)]
 
 pub mod bipartition;
 pub mod dinic;
 pub mod lawler;
 pub mod region;
+pub mod relabel;
 pub mod scheduler;
+pub mod solver;
 
 pub use scheduler::{refine_kway_flows, refine_kway_flows_in};
+
+use super::BufferPool;
+use solver::SolverScratch;
+
+/// Shared buffer pools for the scheduler's *concurrent* pair
+/// refinements: each worker takes what it needs and the RAII guards
+/// return everything on drop (panic-safe). The pools only recycle
+/// allocations — all state is re-initialized per use — so hand-out order
+/// cannot influence results. Owned by the
+/// [`RefinementContext`](super::RefinementContext) so warm engine
+/// requests reuse the pooled buffers instead of growing fresh ones
+/// (per-pair region/network construction still allocates — the engine
+/// bench bounds it to small, sub-threshold buffers).
+#[derive(Default)]
+pub struct FlowPools {
+    /// Terminal-membership flag buffers (`in_s` / `in_t` of the piercing
+    /// loop).
+    pub bools: BufferPool<Vec<bool>>,
+    /// Per-solve state of the max-flow solvers (the parallel
+    /// push-relabel's atomic residual mirror, queues and BFS buffers).
+    pub solver: BufferPool<SolverScratch>,
+}
+
+impl FlowPools {
+    /// Empty pools; buffers are created on first take and recycled after.
+    pub fn new() -> Self {
+        FlowPools::default()
+    }
+}

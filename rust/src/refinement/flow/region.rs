@@ -14,8 +14,9 @@ use crate::{BlockId, EdgeId, VertexId, Weight};
 /// The extracted two-way refinement region.
 #[derive(Debug)]
 pub struct Region {
-    /// The block pair under refinement.
+    /// First block of the pair under refinement (the source side).
     pub b0: BlockId,
+    /// Second block of the pair under refinement (the sink side).
     pub b1: BlockId,
     /// Region vertices of side 0 then side 1 (each id-sorted).
     pub vertices: Vec<VertexId>,

@@ -1,0 +1,684 @@
+//! Shared-memory **parallel push-relabel** max-flow — the genuinely
+//! scheduling-dependent solver the paper's determinism scheme runs on
+//! top of (Section 5.1; design after the synchronous parallel
+//! push-relabel of Baumstark et al. used by Mt-KaHyPar's flow
+//! refinement).
+//!
+//! The algorithm proceeds in FIFO rounds over an active-vertex queue
+//! with chunked work distribution:
+//!
+//! * **Discharge phase** — the round's active vertices are split into
+//!   index chunks; each worker discharges its chunk's vertices, pushing
+//!   excess along admissible arcs with atomic fetch-add updates to the
+//!   arc-flow mirror and the target's excess. Heights are *frozen*
+//!   during the phase, so two opposite arcs are never admissible at
+//!   once; an arc's flow is only ever *increased* by its tail's owner,
+//!   so a stale residual read can only under-push, never oversaturate.
+//!   Which vertex pushes how much along which arc depends on the actual
+//!   thread interleaving — the flow assignment is scheduling-dependent
+//!   (and the seed rotates the queue between rounds), which is exactly
+//!   what [`super::bipartition`]'s solver-independent cut extraction is
+//!   tested against.
+//! * **Relabel barrier** — vertices that kept excess after a full arc
+//!   scan recompute `h(u) = 1 + min {h(v) : (u,v) residual}` against the
+//!   now-stable residuals. Recomputing *at the barrier* (not mid-round)
+//!   is what keeps the height function valid: any arc made residual
+//!   during the round is seen by the recompute, and a relabel is skipped
+//!   when an admissible arc (re)appeared. Valid heights are the
+//!   termination and maximality certificate of push-relabel.
+//! * **Global relabeling** — every ≈`n` relabels, heights are reset to
+//!   exact residual distances by two level-synchronous parallel reverse
+//!   BFS passes (distance-to-sink, else `n +` distance-to-source), built
+//!   on the chunked frontier-expansion pattern of [`crate::par`].
+//!
+//! The solver works on an **atomic mirror** of the residual state and
+//! commits to the [`FlowNetwork`] only after verifying maximality (all
+//! excess drained, sink unreachable from the source in the residual).
+//! If verification fails — or the instance looks pathological (weight
+//! overflow risk, round-cap hit) — the untouched network is handed to
+//! the sequential Dinic oracle instead, so the solver's *contract* can
+//! never be violated by a scheduling anomaly: callers always receive a
+//! maximum flow, and the refinement's cuts are identical either way.
+
+use super::dinic::{Cap, FlowNetwork, INF, SINK, SOURCE};
+use super::solver::{MaxFlowSolver, SequentialDinic, SolverScratch};
+use crate::par::{self, pool::SendPtr};
+use crate::util::rng::hash64;
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU8, Ordering};
+
+/// The shared-memory parallel push-relabel solver (see the [module
+/// docs](self)). Stateless — all per-solve state lives in the pooled
+/// [`SolverScratch`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ParallelPushRelabel;
+
+impl MaxFlowSolver for ParallelPushRelabel {
+    fn solve(
+        &self,
+        net: &mut FlowNetwork,
+        order_seed: u64,
+        limit: Cap,
+        threads: usize,
+        scratch: &mut SolverScratch,
+    ) -> Cap {
+        match push_relabel(net, order_seed, limit, threads, scratch) {
+            Some(added) => added,
+            // Safety net: the mirror never touched `net`, so the oracle
+            // solves the identical problem — same max-flow value, same
+            // unique cuts, only the (irrelevant) assignment differs.
+            None => SequentialDinic.solve(net, order_seed, limit, threads, scratch),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "relabel"
+    }
+}
+
+/// Re-solve attempts per call: each retry saturates source arcs whose
+/// heads became sink-reachable only through the previous attempt's flow
+/// (strictly increasing the value), so a handful always suffices.
+const MAX_ATTEMPTS: usize = 8;
+
+/// Core algorithm on the atomic mirror. `None` = hand the untouched
+/// network to the oracle.
+fn push_relabel(
+    net: &mut FlowNetwork,
+    order_seed: u64,
+    limit: Cap,
+    threads: usize,
+    scratch: &mut SolverScratch,
+) -> Option<Cap> {
+    let n = net.num_nodes();
+    let m = net.num_arcs();
+    let nt = threads.max(1);
+    let two_n = 2 * n as u32;
+    let base = net.flow_value();
+
+    // Effective capacities: `∞` terminal arcs are clamped to just above
+    // the largest possible flow value (the sum of all finite capacities),
+    // which leaves every min cut unchanged while keeping the injected
+    // excess inside i64. Arcs the solver saturates at the clamp stay
+    // residual under the true capacities, so the Picard–Queyranne
+    // closures over the written-back network are exact.
+    let mut finite_sum: i128 = 0;
+    for a in 0..m as u32 {
+        let c = net.arc_cap(a);
+        if c < INF {
+            finite_sum += c as i128;
+        }
+    }
+    let clamp = finite_sum + 1;
+    if clamp > (i64::MAX / 8) as i128 {
+        return None; // pathological weights → oracle
+    }
+    let clamp = clamp as Cap;
+    if (net.arcs_of(SOURCE).len() as i128 + 1) * clamp as i128 > (i64::MAX / 4) as i128 {
+        return None; // total injected excess could overflow → oracle
+    }
+
+    scratch.reset(n, m, nt);
+    let SolverScratch {
+        flow,
+        ecap,
+        excess,
+        height,
+        queued,
+        active,
+        next,
+        relab,
+        relabel_all,
+        dist_t,
+        dist_s,
+        frontier,
+        nfront,
+    } = scratch;
+    for a in 0..m as u32 {
+        flow[a as usize].store(net.arc_flow(a), Ordering::Relaxed);
+        let c = net.arc_cap(a);
+        ecap[a as usize] = if c >= INF { clamp } else { c };
+    }
+
+    // The running guards: rounds are capped generously above anything a
+    // region network produces — hitting the cap (or any verification
+    // failure) falls back to the oracle rather than stalling or
+    // committing a wrong flow.
+    let max_rounds = 32 * n + 1024;
+
+    for _attempt in 0..MAX_ATTEMPTS {
+        if base + excess[SINK as usize].load(Ordering::SeqCst) > limit {
+            // Early abort: the refinement's bound is already exceeded;
+            // commit the (possibly pre-)flow so `flow_value()` reports
+            // it. Callers must not extract cuts in this case (see
+            // `MaxFlowSolver`).
+            let added = excess[SINK as usize].load(Ordering::SeqCst);
+            net.store_flows(flow, added);
+            return Some(added);
+        }
+        // Exact heights for the current (feasible) flow; `fresh` lowers
+        // stale labels so pockets opened by the previous attempt become
+        // reachable again.
+        global_relabel(net, ecap, flow, height, dist_t, dist_s, frontier, nfront, nt, true);
+
+        // Saturate the residual source arcs whose head can reach the
+        // sink (those heads sit at height < n − 1, so leaving them
+        // residual would invalidate h(s) = n); arcs into sink-unreachable
+        // heads stay residual — validity holds there because such heads
+        // carry height ≥ n, and any flow through them would only return.
+        for &a in net.arcs_of(SOURCE) {
+            let ai = a as usize;
+            let res = ecap[ai] - flow[ai].load(Ordering::Relaxed);
+            if res <= 0 {
+                continue;
+            }
+            let v = net.arc_to(a);
+            if v != SINK && dist_t[v as usize].load(Ordering::Relaxed) == u32::MAX {
+                continue;
+            }
+            flow[ai].fetch_add(res, Ordering::Relaxed);
+            flow[net.arc_rev(a) as usize].fetch_sub(res, Ordering::Relaxed);
+            if v == SINK {
+                excess[SINK as usize].fetch_add(res, Ordering::SeqCst);
+            } else if v != SOURCE {
+                excess[v as usize].fetch_add(res, Ordering::SeqCst);
+                if queued[v as usize].swap(1, Ordering::SeqCst) == 0 {
+                    active.push(v);
+                }
+            }
+        }
+
+        let mut relabels_since_gr = 0usize;
+        let mut round = 0usize;
+        while !active.is_empty() {
+            round += 1;
+            if round > max_rounds {
+                return None;
+            }
+            if base + excess[SINK as usize].load(Ordering::SeqCst) > limit {
+                let added = excess[SINK as usize].load(Ordering::SeqCst);
+                net.store_flows(flow, added);
+                return Some(added);
+            }
+            if relabels_since_gr >= n.max(16) {
+                global_relabel(
+                    net, ecap, flow, height, dist_t, dist_s, frontier, nfront, nt, false,
+                );
+                relabels_since_gr = 0;
+            }
+
+            // --- Discharge phase (parallel, heights frozen) ---
+            let nchunks = par::pool::num_chunks(active.len(), nt);
+            for l in next[..nchunks].iter_mut() {
+                l.clear();
+            }
+            for l in relab[..nchunks].iter_mut() {
+                l.clear();
+            }
+            {
+                let next_ptr = SendPtr(next.as_mut_ptr());
+                let relab_ptr = SendPtr(relab.as_mut_ptr());
+                let active_ref: &[u32] = active;
+                let net_ref: &FlowNetwork = net;
+                let ecap_ref: &[Cap] = ecap;
+                let flow_ref: &[AtomicI64] = flow;
+                let excess_ref: &[AtomicI64] = excess;
+                let height_ref: &[AtomicU32] = height;
+                let queued_ref: &[AtomicU8] = queued;
+                let nptr = &next_ptr;
+                let rptr = &relab_ptr;
+                par::for_each_chunk_in(nt, active_ref.len(), move |ci, r| {
+                    // SAFETY: chunk `ci` exclusively owns its output lists.
+                    let chunk_next = unsafe { &mut *nptr.0.add(ci) };
+                    let chunk_relab = unsafe { &mut *rptr.0.add(ci) };
+                    for &u in &active_ref[r] {
+                        discharge(
+                            u,
+                            net_ref,
+                            ecap_ref,
+                            flow_ref,
+                            excess_ref,
+                            height_ref,
+                            queued_ref,
+                            chunk_next,
+                            chunk_relab,
+                        );
+                    }
+                });
+            }
+
+            // --- Relabel barrier (residuals stable, recompute exact) ---
+            relabel_all.clear();
+            for l in relab[..nchunks].iter_mut() {
+                relabel_all.extend_from_slice(l);
+            }
+            if !relabel_all.is_empty() {
+                let invalid = AtomicU8::new(0);
+                let relabel_ref: &[u32] = relabel_all;
+                let net_ref: &FlowNetwork = net;
+                let ecap_ref: &[Cap] = ecap;
+                let flow_ref: &[AtomicI64] = flow;
+                let height_ref: &[AtomicU32] = height;
+                let invalid_ref = &invalid;
+                par::for_each_chunk_in(nt, relabel_ref.len(), move |_ci, r| {
+                    for &u in &relabel_ref[r] {
+                        let hu = height_ref[u as usize].load(Ordering::Relaxed);
+                        let mut best = u32::MAX;
+                        for &a in net_ref.arcs_of(u) {
+                            if ecap_ref[a as usize] - flow_ref[a as usize].load(Ordering::Relaxed)
+                                > 0
+                            {
+                                let hv =
+                                    height_ref[net_ref.arc_to(a) as usize].load(Ordering::Relaxed);
+                                best = best.min(hv);
+                            }
+                        }
+                        if best == u32::MAX {
+                            // Excess with no residual arc: impossible in a
+                            // consistent state.
+                            invalid_ref.store(1, Ordering::Relaxed);
+                            continue;
+                        }
+                        let nh = best + 1;
+                        if nh > hu {
+                            if nh > two_n {
+                                invalid_ref.store(1, Ordering::Relaxed);
+                                continue;
+                            }
+                            height_ref[u as usize].store(nh, Ordering::Relaxed);
+                        }
+                        // nh <= hu: an admissible arc (re)appeared during
+                        // the round — no relabel, the vertex pushes next
+                        // round.
+                    }
+                });
+                if invalid.load(Ordering::Relaxed) != 0 {
+                    return None;
+                }
+                relabels_since_gr += relabel_all.len();
+            }
+
+            // --- Next FIFO round (chunk order, seed-rotated) ---
+            active.clear();
+            for l in next[..nchunks].iter_mut() {
+                active.extend_from_slice(l);
+            }
+            if active.len() > 1 {
+                let rot = (hash64(order_seed, round as u64) % active.len() as u64) as usize;
+                active.rotate_left(rot);
+            }
+        }
+
+        // --- Verification: preflow fully converted & flow maximal? ---
+        for e in excess[2..n].iter() {
+            if e.load(Ordering::SeqCst) != 0 {
+                return None; // lost-wakeup bug guard — never expected
+            }
+        }
+        if !sink_reachable_from_source(net, ecap, flow, dist_t, frontier) {
+            let added = excess[SINK as usize].load(Ordering::SeqCst);
+            net.store_flows(flow, added);
+            return Some(added);
+        }
+        // An augmenting path survived through arcs whose heads were
+        // sink-unreachable when we chose the saturating set — retry with
+        // fresh exact heights; the path's source arc is saturated next
+        // time, so the flow value strictly increases per retry.
+    }
+    None
+}
+
+/// Discharge one active vertex: push its excess along admissible arcs
+/// (heights frozen this round), then decide between requeue, relabel, or
+/// deactivation — the latter with the clear-then-recheck handshake that
+/// makes a concurrent push impossible to lose.
+#[allow(clippy::too_many_arguments)]
+fn discharge(
+    u: u32,
+    net: &FlowNetwork,
+    ecap: &[Cap],
+    flow: &[AtomicI64],
+    excess: &[AtomicI64],
+    height: &[AtomicU32],
+    queued: &[AtomicU8],
+    chunk_next: &mut Vec<u32>,
+    chunk_relab: &mut Vec<u32>,
+) {
+    let ui = u as usize;
+    let hu = height[ui].load(Ordering::Relaxed);
+    let mut e = excess[ui].load(Ordering::SeqCst);
+    let mut pushed = 0 as Cap;
+    if e > 0 {
+        for &a in net.arcs_of(u) {
+            if e == 0 {
+                break;
+            }
+            let ai = a as usize;
+            // Only `u` ever increases `flow[a]`; concurrent activity can
+            // only grow the residual, so this read never over-pushes.
+            let res = ecap[ai] - flow[ai].load(Ordering::Relaxed);
+            if res <= 0 {
+                continue;
+            }
+            let v = net.arc_to(a);
+            if hu != height[v as usize].load(Ordering::Relaxed) + 1 {
+                continue;
+            }
+            let d = e.min(res);
+            flow[ai].fetch_add(d, Ordering::Relaxed);
+            flow[net.arc_rev(a) as usize].fetch_sub(d, Ordering::Relaxed);
+            pushed += d;
+            e -= d;
+            if v > SINK {
+                excess[v as usize].fetch_add(d, Ordering::SeqCst);
+                if queued[v as usize].swap(1, Ordering::SeqCst) == 0 {
+                    chunk_next.push(v);
+                }
+            } else if v == SINK {
+                excess[SINK as usize].fetch_add(d, Ordering::SeqCst);
+            }
+            // v == SOURCE: returned flow, excess at s is untracked.
+        }
+    }
+    if pushed > 0 {
+        excess[ui].fetch_sub(pushed, Ordering::SeqCst);
+    }
+    let rem = excess[ui].load(Ordering::SeqCst);
+    if rem > 0 {
+        if e > 0 {
+            // A full scan couldn't place the snapshot — relabel at the
+            // barrier. (e == 0 means fresh excess arrived mid-discharge;
+            // just requeue, admissible arcs may still exist.)
+            chunk_relab.push(u);
+        }
+        chunk_next.push(u); // membership bit stays set
+    } else {
+        // Drained: clear the membership bit FIRST, then re-check — a
+        // pusher that lands in between sees the cleared bit and enqueues
+        // `u` itself; the swap arbitrates so exactly one side wins.
+        queued[ui].store(0, Ordering::SeqCst);
+        if excess[ui].load(Ordering::SeqCst) > 0 && queued[ui].swap(1, Ordering::SeqCst) == 0 {
+            chunk_next.push(u);
+        }
+    }
+}
+
+/// Set heights to exact residual distances: `h(v) = dist(v → t)` where
+/// the sink is residual-reachable, else `n + dist(v → s)`, else `2n`
+/// (dead). `fresh` overwrites (attempt starts, excess-free state);
+/// otherwise heights only increase (monotonicity keeps the in-round
+/// termination bound). `h(s) = n`, `h(t) = 0` always.
+#[allow(clippy::too_many_arguments)]
+fn global_relabel(
+    net: &FlowNetwork,
+    ecap: &[Cap],
+    flow: &[AtomicI64],
+    height: &[AtomicU32],
+    dist_t: &[AtomicU32],
+    dist_s: &[AtomicU32],
+    frontier: &mut Vec<u32>,
+    nfront: &mut [Vec<u32>],
+    nt: usize,
+    fresh: bool,
+) {
+    let n = net.num_nodes();
+    reverse_residual_bfs(net, ecap, flow, dist_t, frontier, nfront, SINK, SOURCE, nt);
+    reverse_residual_bfs(net, ecap, flow, dist_s, frontier, nfront, SOURCE, SINK, nt);
+    let nu = n as u32;
+    par::for_each_chunk_in(nt, n, |_ci, r| {
+        for v in r {
+            let h = if v as u32 == SOURCE {
+                nu
+            } else if v as u32 == SINK {
+                0
+            } else {
+                let dt = dist_t[v].load(Ordering::Relaxed);
+                if dt != u32::MAX {
+                    dt
+                } else {
+                    let ds = dist_s[v].load(Ordering::Relaxed);
+                    if ds != u32::MAX {
+                        nu + ds
+                    } else {
+                        2 * nu
+                    }
+                }
+            };
+            let h = if fresh { h } else { h.max(height[v].load(Ordering::Relaxed)) };
+            height[v].store(h, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Level-synchronous parallel reverse BFS over the residual mirror:
+/// label every `v` with its shortest residual-path distance **to**
+/// `root` (an arc `v → u` is traversed from `u` via its reverse stub).
+/// `skip` is never labeled (distances must not route through the other
+/// terminal). Distance ownership is a CAS on `u32::MAX`, frontiers are
+/// per-chunk lists concatenated in chunk order.
+#[allow(clippy::too_many_arguments)]
+fn reverse_residual_bfs(
+    net: &FlowNetwork,
+    ecap: &[Cap],
+    flow: &[AtomicI64],
+    dist: &[AtomicU32],
+    frontier: &mut Vec<u32>,
+    nfront: &mut [Vec<u32>],
+    root: u32,
+    skip: u32,
+    nt: usize,
+) {
+    par::for_each_chunk_in(nt, dist.len(), |_ci, r| {
+        for d in &dist[r] {
+            d.store(u32::MAX, Ordering::Relaxed);
+        }
+    });
+    dist[root as usize].store(0, Ordering::Relaxed);
+    frontier.clear();
+    frontier.push(root);
+    let mut level = 0u32;
+    while !frontier.is_empty() {
+        level += 1;
+        let nchunks = par::pool::num_chunks(frontier.len(), nt);
+        for l in nfront[..nchunks].iter_mut() {
+            l.clear();
+        }
+        {
+            let nf_ptr = SendPtr(nfront.as_mut_ptr());
+            let nfp = &nf_ptr;
+            let frontier_ref: &[u32] = frontier;
+            par::for_each_chunk_in(nt, frontier_ref.len(), move |ci, r| {
+                // SAFETY: chunk `ci` exclusively owns its frontier list.
+                let out = unsafe { &mut *nfp.0.add(ci) };
+                for &u in &frontier_ref[r] {
+                    for &a in net.arcs_of(u) {
+                        let v = net.arc_to(a);
+                        if v == skip {
+                            continue;
+                        }
+                        let ra = net.arc_rev(a) as usize;
+                        if ecap[ra] - flow[ra].load(Ordering::Relaxed) > 0
+                            && dist[v as usize]
+                                .compare_exchange(
+                                    u32::MAX,
+                                    level,
+                                    Ordering::Relaxed,
+                                    Ordering::Relaxed,
+                                )
+                                .is_ok()
+                        {
+                            out.push(v);
+                        }
+                    }
+                }
+            });
+        }
+        frontier.clear();
+        for l in nfront[..nchunks].iter_mut() {
+            frontier.extend_from_slice(l);
+        }
+    }
+}
+
+/// Is the sink residual-reachable from the source in the mirror? (The
+/// maximality check before write-back; sequential — one O(m) sweep.)
+fn sink_reachable_from_source(
+    net: &FlowNetwork,
+    ecap: &[Cap],
+    flow: &[AtomicI64],
+    marks: &[AtomicU32],
+    stack: &mut Vec<u32>,
+) -> bool {
+    for m in marks {
+        m.store(u32::MAX, Ordering::Relaxed);
+    }
+    marks[SOURCE as usize].store(0, Ordering::Relaxed);
+    stack.clear();
+    stack.push(SOURCE);
+    while let Some(u) = stack.pop() {
+        for &a in net.arcs_of(u) {
+            let ai = a as usize;
+            if ecap[ai] - flow[ai].load(Ordering::Relaxed) <= 0 {
+                continue;
+            }
+            let v = net.arc_to(a);
+            if marks[v as usize].load(Ordering::Relaxed) == u32::MAX {
+                if v == SINK {
+                    return true;
+                }
+                marks[v as usize].store(0, Ordering::Relaxed);
+                stack.push(v);
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastructures::PartitionedHypergraph;
+    use crate::refinement::flow::lawler::build_network;
+    use crate::refinement::flow::region::grow_region;
+
+    use crate::refinement::flow::dinic::test_diamond as diamond;
+
+    #[test]
+    fn max_flow_value_matches_oracle_across_seeds_and_threads() {
+        let mut scratch = SolverScratch::default();
+        for seed in 0..6u64 {
+            for threads in [1usize, 2, 4] {
+                let mut net = diamond();
+                let f = ParallelPushRelabel.solve(&mut net, seed, Cap::MAX, threads, &mut scratch);
+                assert_eq!(f, 19, "seed {seed} threads {threads}");
+                assert_eq!(net.flow_value(), 19);
+            }
+        }
+    }
+
+    #[test]
+    fn conservation_and_feasibility_after_solve() {
+        let mut scratch = SolverScratch::default();
+        for threads in [1usize, 4] {
+            let mut net = diamond();
+            ParallelPushRelabel.solve(&mut net, 2, Cap::MAX, threads, &mut scratch);
+            for u in 2..6u32 {
+                let mut net_out: Cap = 0;
+                for &a in net.arcs_of(u) {
+                    net_out += net.arc_flow(a);
+                    assert!(net.arc_flow(a) <= net.arc_cap(a), "capacity violated on {a}");
+                }
+                assert_eq!(net_out, 0, "conservation violated at {u} (threads {threads})");
+            }
+        }
+    }
+
+    #[test]
+    fn pq_cut_sides_identical_to_dinic() {
+        let mut scratch = SolverScratch::default();
+        let mut reference = None;
+        for (solver, seed) in [(0usize, 0u64), (0, 3), (1, 0), (1, 3), (1, 7)] {
+            let mut net = diamond();
+            if solver == 0 {
+                SequentialDinic.solve(&mut net, seed, Cap::MAX, 1, &mut scratch);
+            } else {
+                ParallelPushRelabel.solve(&mut net, seed, Cap::MAX, 4, &mut scratch);
+            }
+            let cuts = (net.source_reachable(), net.sink_reaching());
+            match &reference {
+                None => reference = Some(cuts),
+                Some(r) => assert_eq!(r, &cuts, "solver {solver} seed {seed}"),
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_resolve_after_piercing_arc() {
+        // Mirrors dinic's incremental test: solve, open a new INF source
+        // arc, re-solve — the value must follow the oracle's.
+        let mut scratch = SolverScratch::default();
+        let mut net = diamond();
+        ParallelPushRelabel.solve(&mut net, 1, Cap::MAX, 2, &mut scratch);
+        assert_eq!(net.flow_value(), 19);
+        net.add_arc(SOURCE, 4, INF);
+        let added = ParallelPushRelabel.solve(&mut net, 1, Cap::MAX, 2, &mut scratch);
+        assert!(added > 0);
+        assert_eq!(net.flow_value(), 20);
+    }
+
+    #[test]
+    fn limit_abort_reports_excess_value() {
+        let mut scratch = SolverScratch::default();
+        let mut net = diamond();
+        ParallelPushRelabel.solve(&mut net, 0, 5, 2, &mut scratch);
+        // Either aborted early above the limit or finished maximal — both
+        // must report a value over the limit on this instance.
+        assert!(net.flow_value() > 5, "must exceed the limit before stopping");
+    }
+
+    #[test]
+    fn solvers_produce_different_flow_assignments() {
+        // The falsifiability half of the paper's claim: the two solvers
+        // really do compute *different* maximum flows on a network with
+        // flow degrees of freedom (a grid region has many) — it is only
+        // the derived cut sides that coincide.
+        let h = crate::gen::grid::grid2d_graph(12, 12);
+        let part: Vec<u32> = (0..144).map(|v| u32::from(v % 12 >= 6)).collect();
+        let p = PartitionedHypergraph::new(&h, 2, part);
+        let region = grow_region(&p, 0, 1, 0.3, 4.0);
+        let base = build_network(&p, &region).net;
+        let mut scratch = SolverScratch::default();
+
+        let mut dinic_net = base.clone();
+        let dinic_flow = SequentialDinic.solve(&mut dinic_net, 0, Cap::MAX, 1, &mut scratch);
+        let dinic_assignment: Vec<Cap> =
+            (0..dinic_net.num_arcs() as u32).map(|a| dinic_net.arc_flow(a)).collect();
+
+        let mut any_diff = false;
+        for seed in 0..4u64 {
+            for threads in [1usize, 2, 4] {
+                let mut pr_net = base.clone();
+                let f =
+                    ParallelPushRelabel.solve(&mut pr_net, seed, Cap::MAX, threads, &mut scratch);
+                assert_eq!(f, dinic_flow, "max-flow value must be solver-independent");
+                assert_eq!(
+                    pr_net.source_reachable(),
+                    dinic_net.source_reachable(),
+                    "PQ minimal source side must be solver-independent"
+                );
+                assert_eq!(
+                    pr_net.sink_reaching(),
+                    dinic_net.sink_reaching(),
+                    "PQ maximal source side must be solver-independent"
+                );
+                let assignment: Vec<Cap> =
+                    (0..pr_net.num_arcs() as u32).map(|a| pr_net.arc_flow(a)).collect();
+                any_diff |= assignment != dinic_assignment;
+            }
+        }
+        assert!(
+            any_diff,
+            "push-relabel reproduced Dinic's exact flow assignment everywhere — \
+             the non-determinism would be vacuous"
+        );
+    }
+}

@@ -1,5 +1,6 @@
 //! K-way flow refinement scheduling (Section 5.2): deterministic
-//! *matching-based* active-block scheduling.
+//! *matching-based* active-block scheduling with a **nested thread
+//! budget**.
 //!
 //! Unlike Mt-KaHyPar's first-come-first-serve concurrent pair scheduling
 //! (non-deterministic), each block participates in at most one two-way
@@ -8,6 +9,17 @@
 //! between matchings. To combat stragglers, edges incident to high-degree
 //! blocks are matched first. Blocks that contributed no improvement in a
 //! round are deactivated (active block scheduling, Sanders & Schulz).
+//!
+//! **Nested thread budget.** Pair-level parallelism dries up at small
+//! `k` and in late rounds (a maximal matching has at most `⌊k/2⌋` pairs,
+//! and often far fewer remain active). An undersubscribed matching hands
+//! its idle threads to the pairs' *inner* max-flow solves: with `T`
+//! worker threads and `p` concurrently scheduled pairs, every pair's
+//! solver receives a budget of `max(1, T / p)` threads
+//! ([`super::relabel`] consumes it; the Dinic oracle ignores it). The
+//! budget is a pure function of `(T, p)` — and the refinement result
+//! never depends on it anyway, because the derived cuts are
+//! solver- and schedule-independent (DESIGN.md §9).
 
 use super::super::RefinementContext;
 use super::bipartition::refine_pair_in;
@@ -15,6 +27,21 @@ use crate::config::FlowConfig;
 use crate::datastructures::{PartitionedHypergraph, QuotientGraph};
 use crate::util::rng::hash64;
 use crate::{BlockId, Weight};
+
+/// Per-call scratch of [`refine_kway_flows_in`], owned by the
+/// [`RefinementContext`] so warm-engine flow rounds allocate none of it:
+/// the active-block flags, quotient-edge worklist, per-matching degree
+/// counts, matched-block flags, the matching itself and the
+/// improved-block flags.
+#[derive(Debug, Default)]
+pub struct FlowRoundScratch {
+    active: Vec<bool>,
+    remaining: Vec<(BlockId, BlockId)>,
+    deg: Vec<usize>,
+    matched_block: Vec<bool>,
+    matching: Vec<(BlockId, BlockId)>,
+    improved: Vec<bool>,
+}
 
 /// Run k-way flow refinement; returns the total objective improvement.
 /// Allocates a throwaway scratch arena — the partitioner uses
@@ -29,8 +56,8 @@ pub fn refine_kway_flows(
     refine_kway_flows_in(p, eps, cfg, seed, &mut ctx)
 }
 
-/// [`refine_kway_flows`] drawing the shared pair-refinement buffer pool
-/// from the caller's [`RefinementContext`].
+/// [`refine_kway_flows`] drawing the shared pair-refinement buffer pools
+/// and the per-round scratch from the caller's [`RefinementContext`].
 pub fn refine_kway_flows_in(
     p: &PartitionedHypergraph,
     eps: f64,
@@ -38,34 +65,39 @@ pub fn refine_kway_flows_in(
     seed: u64,
     ctx: &mut RefinementContext,
 ) -> Weight {
-    let pool = &ctx.flow_bools;
     let k = p.k();
     if k < 2 {
         return 0;
     }
     let before = p.km1();
-    let mut active = vec![true; k];
+    let solver = cfg.solver.instance();
+    let pools = &ctx.flow;
+    let FlowRoundScratch { active, remaining, deg, matched_block, matching, improved } =
+        &mut ctx.flow_rounds;
+    active.clear();
+    active.resize(k, true);
+    deg.clear();
+    deg.resize(k, 0);
+    matched_block.clear();
+    matched_block.resize(k, false);
+    let total_threads = crate::par::num_threads();
     let mut rounds_without_improvement = 0usize;
-    // Per-matching-round scratch, hoisted out of the loops and reused.
-    let mut deg = vec![0usize; k];
-    let mut matched_block = vec![false; k];
-    let mut matching: Vec<(BlockId, BlockId)> = Vec::new();
 
     for round in 0..cfg.max_rounds {
         let q = QuotientGraph::build(p);
-        let mut remaining: Vec<(BlockId, BlockId)> = q
-            .edges()
-            .into_iter()
-            .filter(|&(i, j)| active[i as usize] || active[j as usize])
-            .collect();
+        remaining.clear();
+        remaining.extend(
+            q.edges().into_iter().filter(|&(i, j)| active[i as usize] || active[j as usize]),
+        );
         if remaining.is_empty() {
             break;
         }
-        let mut improved_blocks = vec![false; k];
+        improved.clear();
+        improved.resize(k, false);
         while !remaining.is_empty() {
             // Degrees in the remaining quotient graph.
             deg.fill(0);
-            for &(i, j) in &remaining {
+            for &(i, j) in remaining.iter() {
                 deg[i as usize] += 1;
                 deg[j as usize] += 1;
             }
@@ -73,8 +105,9 @@ pub fn refine_kway_flows_in(
             // sorted by (max-degree desc, cut weight desc, ids) — a total
             // order, edges are unique). Sorting `remaining` in place is
             // fine: the next iteration re-sorts under fresh degrees.
+            let deg_ref: &[usize] = deg;
             remaining.sort_unstable_by_key(|&(i, j)| {
-                let d = deg[i as usize].max(deg[j as usize]);
+                let d = deg_ref[i as usize].max(deg_ref[j as usize]);
                 let w = q.cut_weight(i, j);
                 (std::cmp::Reverse(d), std::cmp::Reverse(w), i, j)
             });
@@ -83,21 +116,29 @@ pub fn refine_kway_flows_in(
             // no cloned order vector, no hash-set membership pass.
             matched_block.fill(false);
             matching.clear();
-            remaining.retain(|&(i, j)| {
-                if !matched_block[i as usize] && !matched_block[j as usize] {
-                    matched_block[i as usize] = true;
-                    matched_block[j as usize] = true;
-                    matching.push((i, j));
-                    false // scheduled now → drop from the remaining set
-                } else {
-                    true
-                }
-            });
+            {
+                let matched = &mut *matched_block;
+                let matching = &mut *matching;
+                remaining.retain(|&(i, j)| {
+                    if !matched[i as usize] && !matched[j as usize] {
+                        matched[i as usize] = true;
+                        matched[j as usize] = true;
+                        matching.push((i, j));
+                        false // scheduled now → drop from the remaining set
+                    } else {
+                        true
+                    }
+                });
+            }
             // Run the matching in parallel (blocks are disjoint, so the
-            // concurrent two-way refinements touch disjoint vertex sets);
-            // results are per-pair deterministic, synchronize after.
-            let results: Vec<bool> = crate::par::map_indexed(matching.len(), |m| {
-                let (i, j) = matching[m];
+            // concurrent two-way refinements touch disjoint vertex sets).
+            // Undersubscribed matchings hand their idle threads to the
+            // pairs' inner flow solves; results are per-pair
+            // deterministic, synchronize after.
+            let inner_threads = (total_threads / matching.len().max(1)).max(1);
+            let matching_ref: &[(BlockId, BlockId)] = matching;
+            let results: Vec<bool> = crate::par::map_indexed(matching_ref.len(), |m| {
+                let (i, j) = matching_ref[m];
                 let r = refine_pair_in(
                     p,
                     i,
@@ -105,18 +146,20 @@ pub fn refine_kway_flows_in(
                     eps,
                     cfg,
                     hash64(seed, (round as u64) << 32 | (i as u64) << 16 | j as u64),
-                    pool,
+                    solver,
+                    inner_threads,
+                    pools,
                 );
                 r.improved
             });
-            for (m, &(i, j)) in matching.iter().enumerate() {
+            for (m, &(i, j)) in matching_ref.iter().enumerate() {
                 if results[m] {
-                    improved_blocks[i as usize] = true;
-                    improved_blocks[j as usize] = true;
+                    improved[i as usize] = true;
+                    improved[j as usize] = true;
                 }
             }
         }
-        if improved_blocks.iter().any(|&b| b) {
+        if improved.iter().any(|&b| b) {
             rounds_without_improvement = 0;
         } else {
             rounds_without_improvement += 1;
@@ -124,11 +167,12 @@ pub fn refine_kway_flows_in(
                 break;
             }
         }
-        active = improved_blocks;
+        active.clear();
+        active.extend_from_slice(improved);
         // Keep at least something active for the no-improvement grace
         // rounds (otherwise remaining-edge filter empties instantly).
         if active.iter().all(|&a| !a) {
-            active = vec![true; k];
+            active.fill(true);
         }
     }
     before - p.km1()
@@ -137,7 +181,7 @@ pub fn refine_kway_flows_in(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Config;
+    use crate::config::{Config, FlowSolverKind};
 
     #[test]
     fn improves_kway_partition() {
@@ -154,21 +198,23 @@ mod tests {
     }
 
     #[test]
-    fn deterministic_across_threads_and_flow_seeds() {
+    fn deterministic_across_threads_flow_seeds_and_solvers() {
         let h = crate::gen::sat_hypergraph(400, 1200, 6, 8);
         let part: Vec<BlockId> = (0..400).map(|v| (v % 4) as BlockId).collect();
         let mut outs = Vec::new();
-        for (nt, fs) in [(1usize, 0u64), (2, 1), (4, 2), (2, 3)] {
-            crate::par::with_num_threads(nt, || {
-                let p = PartitionedHypergraph::new(&h, 4, part.clone());
-                let cfg = FlowConfig { flow_seed: fs, ..Default::default() };
-                refine_kway_flows(&p, 0.05, &cfg, 9);
-                outs.push((p.snapshot(), p.km1()));
-            });
+        for solver in FlowSolverKind::ALL {
+            for (nt, fs) in [(1usize, 0u64), (2, 1), (4, 2), (2, 3)] {
+                crate::par::with_num_threads(nt, || {
+                    let p = PartitionedHypergraph::new(&h, 4, part.clone());
+                    let cfg = FlowConfig { flow_seed: fs, solver, ..Default::default() };
+                    refine_kway_flows(&p, 0.05, &cfg, 9);
+                    outs.push((p.snapshot(), p.km1()));
+                });
+            }
         }
         assert!(
             outs.windows(2).all(|w| w[0] == w[1]),
-            "k-way flow refinement is not deterministic"
+            "k-way flow refinement is not deterministic across threads/seeds/solvers"
         );
     }
 

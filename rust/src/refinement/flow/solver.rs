@@ -1,0 +1,201 @@
+//! The pluggable max-flow solver core ([`MaxFlowSolver`]).
+//!
+//! The paper's flow-refinement determinism scheme (Section 5.1) is
+//! *solver-independent*: the two-way refinement derives its cuts only
+//! from the inclusion-minimal/-maximal min-cut sides, which are unique
+//! across **all** maximum flows (Picard–Queyranne). This module pins
+//! that contract down as a trait so the refinement can run on any
+//! maximum-flow algorithm — the seed-permuted sequential Dinic
+//! ([`SequentialDinic`], the oracle) or the genuinely
+//! scheduling-dependent shared-memory parallel push-relabel
+//! ([`super::relabel::ParallelPushRelabel`]) — and produce bit-identical
+//! partitions either way (tested; DESIGN.md §9).
+//!
+//! ```
+//! use detpart::refinement::flow::dinic::{Cap, FlowNetwork, SINK, SOURCE};
+//! use detpart::refinement::flow::relabel::ParallelPushRelabel;
+//! use detpart::refinement::flow::solver::{MaxFlowSolver, SequentialDinic, SolverScratch};
+//!
+//! // A tiny network with two disjoint unit paths s -> v -> t.
+//! let build = || {
+//!     let mut net = FlowNetwork::new(4);
+//!     net.add_arc(SOURCE, 2, 1);
+//!     net.add_arc(2, SINK, 1);
+//!     net.add_arc(SOURCE, 3, 1);
+//!     net.add_arc(3, SINK, 1);
+//!     net
+//! };
+//! let mut scratch = SolverScratch::default();
+//! for solver in [
+//!     &SequentialDinic as &dyn MaxFlowSolver,
+//!     &ParallelPushRelabel as &dyn MaxFlowSolver,
+//! ] {
+//!     let mut net = build();
+//!     let added = solver.solve(&mut net, 7, Cap::MAX, 2, &mut scratch);
+//!     assert_eq!(added, 2, "{} must find the max flow", solver.name());
+//!     // The Picard–Queyranne cut sides are solver-independent.
+//!     assert_eq!(net.source_reachable(), vec![true, false, false, false]);
+//! }
+//! ```
+
+use super::dinic::{Cap, FlowNetwork};
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU8};
+
+/// A maximum-flow algorithm the two-way refinement can run on.
+///
+/// The contract mirrors [`FlowNetwork::augment`]:
+///
+/// * On return with `net.flow_value() <= limit`, the network holds a
+///   **maximum feasible flow** w.r.t. its current arcs — the residual
+///   closures [`FlowNetwork::source_reachable`] /
+///   [`FlowNetwork::sink_reaching`] are then the unique
+///   Picard–Queyranne cut sides.
+/// * On return with `net.flow_value() > limit` the solver aborted early;
+///   the network may hold a *preflow* (push-relabel) or a non-maximal
+///   flow (Dinic) and callers must not extract cuts from it — the
+///   refinement discards the problem in that case.
+/// * The *value* returned is the flow added by this call; it is a pure
+///   function of the network (max-flow values are unique), while the
+///   flow *assignment* may depend on `order_seed`, `threads` and thread
+///   scheduling. Everything the refinement consumes downstream is
+///   assignment-independent.
+///
+/// `threads` is the solver's worker budget — the matching scheduler
+/// hands undersubscribed rounds' idle threads to the active pairs (see
+/// [`super::scheduler`]); solvers must not read the process-global
+/// thread count themselves.
+pub trait MaxFlowSolver: Sync {
+    /// Augment `net`'s flow to maximality w.r.t. its current arcs,
+    /// optionally aborting once the total flow exceeds `limit` (pass
+    /// `Cap::MAX` for a full max-flow). Returns the added flow.
+    fn solve(
+        &self,
+        net: &mut FlowNetwork,
+        order_seed: u64,
+        limit: Cap,
+        threads: usize,
+        scratch: &mut SolverScratch,
+    ) -> Cap;
+
+    /// Canonical short name (CLI / bench / report labels).
+    fn name(&self) -> &'static str;
+}
+
+/// The sequential Dinic oracle: augmenting paths in a seed-permuted arc
+/// order (see [`super::dinic`]). Ignores the thread budget and scratch —
+/// every solve is single-threaded and self-contained.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SequentialDinic;
+
+impl MaxFlowSolver for SequentialDinic {
+    fn solve(
+        &self,
+        net: &mut FlowNetwork,
+        order_seed: u64,
+        limit: Cap,
+        _threads: usize,
+        _scratch: &mut SolverScratch,
+    ) -> Cap {
+        net.augment(order_seed, limit)
+    }
+
+    fn name(&self) -> &'static str {
+        "dinic"
+    }
+}
+
+/// Reusable per-solve state of the max-flow solvers, pooled by the
+/// refinement context so warm engine requests allocate nothing in steady
+/// state. [`SequentialDinic`] ignores it; the parallel push-relabel
+/// solver keeps its atomic mirror of the residual state plus its queue
+/// and BFS buffers here (all fully re-initialized per solve).
+#[derive(Debug, Default)]
+pub struct SolverScratch {
+    /// Atomic mirror of the arc flows (committed to the network only on
+    /// success — an aborted or fallen-back parallel solve leaves the
+    /// network untouched).
+    pub(crate) flow: Vec<AtomicI64>,
+    /// Effective arc capacities (`∞` terminal arcs clamped to just above
+    /// the maximum possible flow value, see `relabel.rs`).
+    pub(crate) ecap: Vec<Cap>,
+    /// Per-node excess (atomic: concurrent pushes add, the owner drains).
+    pub(crate) excess: Vec<AtomicI64>,
+    /// Per-node height labels (written only at round barriers).
+    pub(crate) height: Vec<AtomicU32>,
+    /// Active-queue membership flags (the lost-wakeup guard).
+    pub(crate) queued: Vec<AtomicU8>,
+    /// Current FIFO round of active vertices.
+    pub(crate) active: Vec<u32>,
+    /// Per-chunk activation lists for the next round.
+    pub(crate) next: Vec<Vec<u32>>,
+    /// Per-chunk lists of vertices needing a barrier relabel.
+    pub(crate) relab: Vec<Vec<u32>>,
+    /// Concatenated relabel list (barrier phase input).
+    pub(crate) relabel_all: Vec<u32>,
+    /// Distance-to-sink labels of the global relabeling BFS.
+    pub(crate) dist_t: Vec<AtomicU32>,
+    /// Distance-to-source labels of the global relabeling BFS.
+    pub(crate) dist_s: Vec<AtomicU32>,
+    /// BFS frontier.
+    pub(crate) frontier: Vec<u32>,
+    /// Per-chunk next-frontier lists.
+    pub(crate) nfront: Vec<Vec<u32>>,
+}
+
+impl SolverScratch {
+    /// Size every buffer for a network with `n` nodes and `m` arc slots
+    /// under a `threads`-worker budget, re-initializing all state. Warm
+    /// buffers only grow their capacity.
+    pub(crate) fn reset(&mut self, n: usize, m: usize, threads: usize) {
+        self.flow.clear();
+        self.flow.resize_with(m, || AtomicI64::new(0));
+        self.ecap.clear();
+        self.ecap.resize(m, 0);
+        self.excess.clear();
+        self.excess.resize_with(n, || AtomicI64::new(0));
+        self.height.clear();
+        self.height.resize_with(n, || AtomicU32::new(0));
+        self.queued.clear();
+        self.queued.resize_with(n, || AtomicU8::new(0));
+        self.active.clear();
+        if self.next.len() < threads {
+            self.next.resize_with(threads, Vec::new);
+        }
+        if self.relab.len() < threads {
+            self.relab.resize_with(threads, Vec::new);
+        }
+        if self.nfront.len() < threads {
+            self.nfront.resize_with(threads, Vec::new);
+        }
+        self.relabel_all.clear();
+        self.dist_t.clear();
+        self.dist_t.resize_with(n, || AtomicU32::new(u32::MAX));
+        self.dist_s.clear();
+        self.dist_s.resize_with(n, || AtomicU32::new(u32::MAX));
+        self.frontier.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::refinement::flow::relabel::ParallelPushRelabel;
+
+    #[test]
+    fn dyn_dispatch_both_solvers_agree_on_value_and_cuts() {
+        let build = crate::refinement::flow::dinic::test_diamond;
+        let mut scratch = SolverScratch::default();
+        let solvers: [&dyn MaxFlowSolver; 2] = [&SequentialDinic, &ParallelPushRelabel];
+        let mut cuts = Vec::new();
+        for solver in solvers {
+            for threads in [1usize, 2, 4] {
+                let mut net = build();
+                let f = solver.solve(&mut net, 3, Cap::MAX, threads, &mut scratch);
+                assert_eq!(f, 19, "{} t={threads}", solver.name());
+                assert_eq!(net.flow_value(), 19);
+                cuts.push((net.source_reachable(), net.sink_reaching()));
+            }
+        }
+        assert!(cuts.windows(2).all(|w| w[0] == w[1]), "PQ cuts differ between solvers");
+    }
+}

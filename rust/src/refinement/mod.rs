@@ -101,7 +101,8 @@ impl<T: Default> Drop for PoolGuard<'_, T> {
 /// so all levels reuse allocations instead of reallocating per level:
 /// per-worker affinity buffers, per-chunk candidate vectors, Jet's
 /// oscillation-lock bitset, the boundary-collection mark bitset, the
-/// partition-state backing buffers, and the flow buffer pool.
+/// partition-state backing buffers, and the flow refinement's buffer
+/// pools and per-round scratch.
 pub struct RefinementContext {
     k: usize,
     /// Per-worker dense affinity scratch.
@@ -116,8 +117,13 @@ pub struct RefinementContext {
     vertex_marks: AtomicBitset,
     /// Reusable backing buffers for the per-level partition state.
     partition_scratch: Option<PartitionScratch>,
-    /// Buffer pool for the parallel two-way flow refinements.
-    pub flow_bools: BufferPool<Vec<bool>>,
+    /// Buffer pools for the parallel two-way flow refinements (terminal
+    /// flags + max-flow solver scratch).
+    pub flow: flow::FlowPools,
+    /// The flow scheduler's per-round vectors (active/degree/matching
+    /// bookkeeping), hoisted here so warm flow rounds reuse them instead
+    /// of reallocating per call.
+    pub flow_rounds: flow::scheduler::FlowRoundScratch,
     /// The unified move-selection pipeline's buffers (candidate arena,
     /// sort scratch, segment bounds, prefix arrays — see [`select`]).
     selection: select::SelectionScratch,
@@ -133,7 +139,8 @@ impl RefinementContext {
             candidates: Vec::new(),
             vertex_marks: AtomicBitset::new(max_vertices),
             partition_scratch: Some(PartitionScratch::default()),
-            flow_bools: BufferPool::new(),
+            flow: flow::FlowPools::new(),
+            flow_rounds: flow::scheduler::FlowRoundScratch::default(),
             selection: select::SelectionScratch::default(),
         }
     }

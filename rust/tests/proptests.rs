@@ -493,3 +493,49 @@ fn prop_full_pipeline_valid_outputs() {
         assert!(r.km1 >= 0);
     });
 }
+
+#[test]
+fn prop_partitions_bit_identical_across_flow_solvers_seeds_and_threads() {
+    // THE PR-5 property (Section 5.1 made real): the final partition of a
+    // detflows run is a pure function of (input, config, seed) — for BOTH
+    // max-flow solvers, for every flow seed, and for 1/2/4 worker
+    // threads, even though the parallel push-relabel's flow assignments
+    // are genuinely scheduling-dependent. Oracle = sequential Dinic on
+    // one thread.
+    use detpart::config::FlowSolverKind;
+    let instances: Vec<(&str, detpart::datastructures::Hypergraph)> = vec![
+        ("sat", detpart::gen::sat_hypergraph(260, 780, 5, 11)),
+        ("vlsi", detpart::gen::vlsi_netlist(18, 1.15, 33)),
+        ("rmat", detpart::gen::rmat_graph(8, 6, 5)),
+    ];
+    for (name, hg) in &instances {
+        for master_seed in [1u64, 6] {
+            for flow_seed in [0u64, 9] {
+                let mk = |solver: FlowSolverKind| {
+                    let mut c = Config::detflows(master_seed);
+                    let f = c.refinement.flows.as_mut().unwrap();
+                    f.flow_seed = flow_seed;
+                    f.solver = solver;
+                    c
+                };
+                let oracle = detpart::par::with_num_threads(1, || {
+                    detpart::partitioner::partition(hg, 4, &mk(FlowSolverKind::Dinic))
+                });
+                for solver in FlowSolverKind::ALL {
+                    for nt in [1usize, 2, 4] {
+                        let r = detpart::par::with_num_threads(nt, || {
+                            detpart::partitioner::partition(hg, 4, &mk(solver))
+                        });
+                        assert_eq!(
+                            (&r.part, r.km1),
+                            (&oracle.part, oracle.km1),
+                            "{name}: solver {} diverged from the dinic oracle \
+                             (master_seed {master_seed}, flow_seed {flow_seed}, {nt} threads)",
+                            solver.name(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
