@@ -491,6 +491,130 @@ fn flow_micro() {
     }
 }
 
+/// The PR-6 layout micro (DESIGN.md §10): (a) narrow u32 vs wide u64
+/// offset-array scans — bytes traversed and wall time for the same edge
+/// walk; (b) uniform vs degree-weighted chunk assignment — max pins per
+/// chunk on a heavy-tailed instance; (c) legacy `lines()` loader vs the
+/// streaming two-pass parser — wall time and allocations (the streaming
+/// path must not allocate per edge). Emits `BENCH_layout.json`.
+fn layout_micro() {
+    use detpart::datastructures::Hypergraph;
+    use detpart::util::Timer;
+
+    println!("== micro: memory layout (index width, chunking, loaders) ==");
+    let threads = detpart::par::num_threads();
+
+    // --- (a) offset-array traffic: narrow vs wide scans of one edge walk.
+    let narrow = detpart::gen::rmat_graph_huge(16, 8, 9);
+    let wide = detpart::gen::rmat_graph_huge(16, 8, 9).with_wide_offsets();
+    let reps = 20usize;
+    let scan = |h: &Hypergraph| -> usize {
+        let mut acc = 0usize;
+        for e in 0..h.num_edges() as u32 {
+            acc += h.edge_size(e);
+        }
+        acc
+    };
+    let time_scan = |h: &Hypergraph| -> (f64, usize) {
+        let mut acc = 0usize;
+        let t = Timer::start();
+        for _ in 0..reps {
+            acc = acc.wrapping_add(scan(h));
+        }
+        (t.elapsed_s() * 1e3 / reps as f64, acc)
+    };
+    let (narrow_ms, a1) = time_scan(&narrow);
+    let (wide_ms, a2) = time_scan(&wide);
+    assert_eq!(a1, a2, "scan checksum must not depend on offset width");
+    let (narrow_bytes, wide_bytes) = (narrow.offset_bytes(), wide.offset_bytes());
+    let bytes_ratio = wide_bytes as f64 / narrow_bytes as f64;
+    // The acceptance criterion: compact indices cut offset traffic ≥ 1.5×.
+    assert!(
+        bytes_ratio >= 1.5,
+        "u32 offsets should carry ≥1.5x less traffic than u64, got {bytes_ratio:.2}x"
+    );
+    println!(
+        "  offset scan ({} edges): narrow {narrow_ms:.3} ms / {} KiB vs wide {wide_ms:.3} ms / {} KiB ({bytes_ratio:.1}x bytes) [checksum {a1}]",
+        narrow.num_edges(),
+        narrow_bytes / 1024,
+        wide_bytes / 1024,
+    );
+
+    // --- (b) chunk balance: uniform index split vs degree-weighted split
+    // over the vertices of a heavy-tailed graph (the Jet boundary-scan
+    // shape). Load metric = incident pins per chunk.
+    let n = narrow.num_vertices();
+    let mut cum = vec![0i64; n];
+    for v in 0..n {
+        cum[v] = narrow.degree(v as u32) as i64;
+    }
+    let total_pins = detpart::par::exclusive_prefix_sum_in_place(&mut cum);
+    let cum_fn = |i: usize| if i == n { total_pins as u64 } else { cum[i] as u64 };
+    let nc = detpart::par::pool::num_chunks(n, threads.max(4));
+    let load = |r: std::ops::Range<usize>| cum_fn(r.end) - cum_fn(r.start);
+    let uniform_max = (0..nc)
+        .map(|c| load(detpart::par::pool::nth_chunk(n, nc, c)))
+        .max()
+        .unwrap_or(0);
+    let weighted_max = (0..nc)
+        .map(|c| load(detpart::par::nth_chunk_weighted(n, nc, c, &cum_fn)))
+        .max()
+        .unwrap_or(0);
+    assert!(
+        weighted_max <= uniform_max,
+        "degree-weighted chunks ({weighted_max}) must not be worse than uniform ({uniform_max})"
+    );
+    let ideal = (total_pins as u64).div_ceil(nc.max(1) as u64);
+    println!(
+        "  chunking ({n} vertices, {nc} chunks): max pins/chunk uniform {uniform_max} vs weighted {weighted_max} (ideal {ideal})"
+    );
+
+    // --- (c) loaders: legacy lines() parser vs streaming two-pass.
+    let h = detpart::gen::vlsi_netlist(100, 1.2, 7);
+    let text = detpart::io::hgr_string(&h, true, true);
+    let lreps = 3usize;
+    alloc_counter::reset_epoch();
+    let t = Timer::start();
+    let mut legacy_edges = 0usize;
+    for _ in 0..lreps {
+        legacy_edges = detpart::io::read_hgr_str_legacy(&text).unwrap().num_edges();
+    }
+    let legacy_ms = t.elapsed_s() * 1e3 / lreps as f64;
+    let legacy_allocs = alloc_counter::allocs() / lreps as u64;
+    alloc_counter::reset_epoch();
+    let t = Timer::start();
+    let mut streaming_edges = 0usize;
+    for _ in 0..lreps {
+        streaming_edges = detpart::io::read_hgr_bytes(text.as_bytes()).unwrap().num_edges();
+    }
+    let streaming_ms = t.elapsed_s() * 1e3 / lreps as f64;
+    let streaming_allocs = alloc_counter::allocs() / lreps as u64;
+    assert_eq!(legacy_edges, streaming_edges, "loaders disagree on edge count");
+    // The other acceptance criterion: no per-edge intermediate vectors —
+    // allocation count must sit far below the edge count (the legacy
+    // path's Vec<Vec<_>> makes at least one allocation per edge).
+    assert!(
+        streaming_allocs < streaming_edges as u64,
+        "streaming loader allocated {streaming_allocs} times for {streaming_edges} edges"
+    );
+    println!(
+        "  loader ({} bytes, {streaming_edges} edges): legacy {legacy_ms:.3} ms, {legacy_allocs} allocs | streaming {streaming_ms:.3} ms, {streaming_allocs} allocs ({:.1}x fewer) | {threads} threads",
+        text.len(),
+        legacy_allocs as f64 / streaming_allocs.max(1) as f64,
+    );
+
+    let json = format!(
+        "{{\"bench\":\"layout\",\"threads\":{threads},\"offset_scan\":{{\"instance\":\"huge-rmat-s16\",\"edges\":{},\"narrow_ms\":{narrow_ms:.4},\"wide_ms\":{wide_ms:.4},\"narrow_bytes\":{narrow_bytes},\"wide_bytes\":{wide_bytes},\"bytes_ratio\":{bytes_ratio:.3}}},\"chunking\":{{\"vertices\":{n},\"chunks\":{nc},\"ideal_pins\":{ideal},\"uniform_max_pins\":{uniform_max},\"weighted_max_pins\":{weighted_max}}},\"loader\":{{\"instance\":\"vlsi-100\",\"bytes\":{},\"edges\":{streaming_edges},\"legacy_ms\":{legacy_ms:.4},\"streaming_ms\":{streaming_ms:.4},\"legacy_allocs\":{legacy_allocs},\"streaming_allocs\":{streaming_allocs}}}}}\n",
+        narrow.num_edges(),
+        text.len(),
+    );
+    let path = "BENCH_layout.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+}
+
 fn micro_benchmarks() {
     use detpart::config::JetConfig;
     use detpart::datastructures::PartitionedHypergraph;
@@ -621,6 +745,7 @@ fn main() {
         selection_micro();
         engine_micro();
         flow_micro();
+        layout_micro();
         return;
     }
     for name in names {
@@ -630,17 +755,20 @@ fn main() {
             selection_micro();
             engine_micro();
             flow_micro();
+            layout_micro();
         } else if name == "contraction" {
             contraction_micro();
-        } else if name == "selection" {
+        } else if name == "selection" || name == "refinement" {
             selection_micro();
         } else if name == "engine" {
             engine_micro();
         } else if name == "flow" {
             flow_micro();
+        } else if name == "layout" {
+            layout_micro();
         } else if !figures::run_by_name(&ctx, name) {
             eprintln!(
-                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, selection, engine, flow, all"
+                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, refinement, engine, flow, layout, all"
             );
             std::process::exit(1);
         }

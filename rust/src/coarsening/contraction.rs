@@ -18,8 +18,9 @@
 //! 4. **Bulk construction** — surviving nets are compacted into
 //!    (offsets, pins, weights) arrays in lexicographic pin order (the same
 //!    total order the old sequential path produced, so downstream results
-//!    are unchanged) and ingested by [`HypergraphBuilder::from_csr`]'s
-//!    parallel counting sort.
+//!    are unchanged), with offsets emitted directly at their final
+//!    compact width, and ingested by
+//!    [`HypergraphBuilder::from_csr_offsets`]'s parallel counting sort.
 //!
 //! All intermediate buffers live in [`CoarseningScratch`], owned by the
 //! multilevel driver and reused across levels; steady-state contraction
@@ -182,7 +183,10 @@ pub fn contract_in(
         let aref = &arena_ptr;
         let sref = &size_ptr;
         let map_ref: &[VertexId] = &map;
-        crate::par::for_each_chunk(num_edges, move |_c, r| {
+        // Per-edge cost is O(size·log size), so chunks are balanced by
+        // *pins* (the CSR offsets are a free prefix sum), not edge count —
+        // a uniform split serializes on the hot chunk of skewed instances.
+        crate::par::for_each_chunk_weighted(num_edges, |e| hg.pin_prefix(e) as u64, move |_c, r| {
             for e in r {
                 let pins = hg.pins(e as EdgeId);
                 let off = hg.pin_offset(e as EdgeId);
@@ -354,7 +358,12 @@ pub fn contract_in(
             s
         }) as usize
     };
-    let mut edge_offsets = vec![0usize; num_coarse_edges + 1];
+    // The offset array is emitted directly at its final width
+    // ([`CsrOffsets`]): `u32` slots whenever the coarse pin total fits,
+    // so the 8-byte `usize` intermediate never exists. The emit loop is
+    // monomorphized per width via `CsrIndex`.
+    let mut edge_offsets =
+        crate::datastructures::CsrOffsets::zeros(num_coarse_edges + 1, pin_total);
     let mut pins_out: Vec<VertexId> = Vec::with_capacity(pin_total);
     // SAFETY: every slot is written exactly once below before use.
     #[allow(clippy::uninit_vec)]
@@ -363,39 +372,65 @@ pub fn contract_in(
     }
     let mut edge_weights: Vec<Weight> = vec![0; num_coarse_edges];
     {
-        let eo_ptr = SendPtr(edge_offsets.as_mut_ptr());
-        let po_ptr = SendPtr(pins_out.as_mut_ptr());
-        let ew_ptr = SendPtr(edge_weights.as_mut_ptr());
-        let (eo, po, ew) = (&eo_ptr, &po_ptr, &ew_ptr);
+        #[allow(clippy::too_many_arguments)]
+        fn emit<I: crate::par::CsrIndex>(
+            hg: &Hypergraph,
+            nt: usize,
+            num_coarse_edges: usize,
+            edge_offsets: &mut [I],
+            pins_out: &mut [VertexId],
+            edge_weights: &mut [Weight],
+            offs: &[i64],
+            leaders: &[u32],
+            keys: &[(u64, u32)],
+            arena: &[VertexId],
+            new_size: &[u32],
+            group_weight: &[Weight],
+        ) {
+            let eo_ptr = SendPtr(edge_offsets.as_mut_ptr());
+            let po_ptr = SendPtr(pins_out.as_mut_ptr());
+            let ew_ptr = SendPtr(edge_weights.as_mut_ptr());
+            let (eo, po, ew) = (&eo_ptr, &po_ptr, &ew_ptr);
+            crate::par::for_each_chunk(num_chunks(num_coarse_edges, nt), move |_c, r| {
+                for ci in r {
+                    let mut pin_at = offs[ci] as usize;
+                    for j in nth_chunk(num_coarse_edges, nt, ci) {
+                        let pos = leaders[j] as usize;
+                        let (off, sz) = edge_span(hg, new_size, keys[pos].1);
+                        // SAFETY: destination ranges are disjoint per edge.
+                        unsafe {
+                            *eo.0.add(j) = I::from_usize(pin_at);
+                            std::ptr::copy_nonoverlapping(
+                                arena.as_ptr().add(off),
+                                po.0.add(pin_at),
+                                sz,
+                            );
+                            *ew.0.add(j) = group_weight[pos];
+                        }
+                        pin_at += sz;
+                    }
+                }
+            });
+        }
         let offs: &[i64] = &scratch.chunk_counts;
         let leaders: &[u32] = &scratch.leaders;
         let keys: &[(u64, u32)] = &scratch.keys;
         let arena: &[VertexId] = &scratch.arena;
         let new_size: &[u32] = &scratch.new_size;
         let group_weight: &[Weight] = &scratch.group_weight;
-        crate::par::for_each_chunk(num_chunks(num_coarse_edges, nt), move |_c, r| {
-            for ci in r {
-                let mut pin_at = offs[ci] as usize;
-                for j in nth_chunk(num_coarse_edges, nt, ci) {
-                    let pos = leaders[j] as usize;
-                    let (off, sz) = edge_span(hg, new_size, keys[pos].1);
-                    // SAFETY: destination ranges are disjoint per edge.
-                    unsafe {
-                        *eo.0.add(j) = pin_at;
-                        std::ptr::copy_nonoverlapping(
-                            arena.as_ptr().add(off),
-                            po.0.add(pin_at),
-                            sz,
-                        );
-                        *ew.0.add(j) = group_weight[pos];
-                    }
-                    pin_at += sz;
-                }
-            }
-        });
+        match &mut edge_offsets {
+            crate::datastructures::CsrOffsets::Narrow(eo) => emit(
+                hg, nt, num_coarse_edges, eo, &mut pins_out, &mut edge_weights, offs, leaders,
+                keys, arena, new_size, group_weight,
+            ),
+            crate::datastructures::CsrOffsets::Wide(eo) => emit(
+                hg, nt, num_coarse_edges, eo, &mut pins_out, &mut edge_weights, offs, leaders,
+                keys, arena, new_size, group_weight,
+            ),
+        }
     }
-    edge_offsets[num_coarse_edges] = pin_total;
-    let coarse = HypergraphBuilder::from_csr(
+    edge_offsets.set(num_coarse_edges, pin_total);
+    let coarse = HypergraphBuilder::from_csr_offsets(
         num_coarse,
         edge_offsets,
         pins_out,
@@ -594,6 +629,31 @@ mod tests {
                     c.validate().unwrap();
                 });
             }
+        }
+    }
+
+    /// Width oracle: contracting through the forced-u64 offset
+    /// representation must be bit-identical to the compact-u32 path.
+    #[test]
+    fn wide_offset_oracle_contracts_identically() {
+        let h = crate::gen::sat_hypergraph(250, 800, 7, 13);
+        let cfg = crate::config::CoarseningConfig::default();
+        let clusters = super::super::cluster_vertices(&h, None, &cfg, 25, 4);
+        let wide = h.clone().with_wide_offsets();
+        let (c_n, map_n) = contract(&h, &clusters);
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let (c_w, map_w) = contract(&wide, &clusters);
+                assert_eq!(map_w, map_n, "nt={nt}");
+                assert_eq!(c_w.num_edges(), c_n.num_edges());
+                for e in 0..c_n.num_edges() as EdgeId {
+                    assert_eq!(c_w.pins(e), c_n.pins(e), "nt={nt} e={e}");
+                    assert_eq!(c_w.edge_weight(e), c_n.edge_weight(e));
+                }
+                for v in 0..c_n.num_vertices() as VertexId {
+                    assert_eq!(c_w.incident_edges(v), c_n.incident_edges(v));
+                }
+            });
         }
     }
 

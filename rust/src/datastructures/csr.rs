@@ -1,0 +1,238 @@
+//! Width-compact CSR offset arrays — the memory-layout half of the
+//! billion-pin scale-out (DESIGN.md §10).
+//!
+//! `VertexId`/`EdgeId` are already 4 bytes, but the hypergraph's two
+//! offset arrays were stored as 8-byte `usize`, so every offset-driven
+//! scan (coarsening, gain affinity, pin-count init) streamed twice the
+//! bytes it needed whenever the instance had fewer than 2³² pins — i.e.
+//! always, today. [`CsrOffsets`] stores offsets at the narrowest width
+//! that holds the trailing offset: `u32` ([`CsrOffsets::Narrow`]) below
+//! 2³² pins, `u64` ([`CsrOffsets::Wide`]) beyond. The wide path is also
+//! the **determinism oracle**: tests force it via
+//! [`Hypergraph::with_wide_offsets`](crate::datastructures::Hypergraph::with_wide_offsets)
+//! and assert bit-identical partitions.
+//!
+//! Accessors ([`CsrOffsets::get`] / [`CsrOffsets::range`]) dispatch with
+//! a single match — hot loops that scan many offsets should instead
+//! match once and run a monomorphized loop body per variant (the
+//! contraction emitter and the counting scatter do exactly that via
+//! [`CsrIndex`]).
+
+use crate::par::CsrIndex;
+use std::ops::Range;
+
+/// A CSR offset array stored at the narrowest sufficient index width.
+///
+/// Invariant maintained by every constructor: offsets are monotone
+/// non-decreasing and the **last** entry (the total) fits the stored
+/// width, so every entry does.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CsrOffsets {
+    /// 4-byte offsets — chosen whenever the trailing offset fits `u32`.
+    Narrow(Vec<u32>),
+    /// 8-byte fallback for ≥ 2³² totals; doubles as the test oracle.
+    Wide(Vec<u64>),
+}
+
+impl CsrOffsets {
+    /// Does a CSR with `total` trailing offset fit the narrow width?
+    #[inline]
+    pub fn fits_narrow(total: usize) -> bool {
+        total <= u32::MAX as usize
+    }
+
+    /// Compact a `usize` offset array to the narrowest width that holds
+    /// its trailing entry (offsets must be monotone, so the last entry is
+    /// the maximum). The conversion itself is a parallel map.
+    pub fn from_usize(offsets: Vec<usize>) -> Self {
+        let total = offsets.last().copied().unwrap_or(0);
+        debug_assert!(offsets.windows(2).all(|w| w[0] <= w[1]), "offsets not monotone");
+        if Self::fits_narrow(total) {
+            CsrOffsets::Narrow(crate::par::map_indexed(offsets.len(), |i| offsets[i] as u32))
+        } else {
+            CsrOffsets::Wide(crate::par::map_indexed(offsets.len(), |i| offsets[i] as u64))
+        }
+    }
+
+    /// An all-zero offset array of `len` entries at the width needed for
+    /// `max_offset` — the arena form the contraction emitter and the
+    /// streaming loaders scatter into before filling every slot.
+    pub fn zeros(len: usize, max_offset: usize) -> Self {
+        if Self::fits_narrow(max_offset) {
+            CsrOffsets::Narrow(vec![0u32; len])
+        } else {
+            CsrOffsets::Wide(vec![0u64; len])
+        }
+    }
+
+    /// The offset array `[0, stride, 2·stride, …, count·stride]` of a
+    /// uniform-arity CSR (e.g. a plain graph viewed as 2-pin hyperedges),
+    /// built in parallel at the narrowest sufficient width.
+    pub fn uniform_stride(count: usize, stride: usize) -> Self {
+        let total = count * stride;
+        if Self::fits_narrow(total) {
+            CsrOffsets::Narrow(crate::par::map_indexed(count + 1, |i| (i * stride) as u32))
+        } else {
+            CsrOffsets::Wide(crate::par::map_indexed(count + 1, |i| (i * stride) as u64))
+        }
+    }
+
+    /// Number of stored offsets (`num_groups + 1` in a full CSR).
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            CsrOffsets::Narrow(v) => v.len(),
+            CsrOffsets::Wide(v) => v.len(),
+        }
+    }
+
+    /// True when no offsets are stored.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Load offset `i` as `usize`.
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> usize {
+        match self {
+            CsrOffsets::Narrow(v) => v[i] as usize,
+            CsrOffsets::Wide(v) => v[i] as usize,
+        }
+    }
+
+    /// The half-open item range of group `i`
+    /// (`offsets[i]..offsets[i + 1]`), loaded with a single dispatch.
+    #[inline(always)]
+    pub fn range(&self, i: usize) -> Range<usize> {
+        match self {
+            CsrOffsets::Narrow(v) => v[i] as usize..v[i + 1] as usize,
+            CsrOffsets::Wide(v) => v[i] as usize..v[i + 1] as usize,
+        }
+    }
+
+    /// Store `v` at slot `i` (must fit the chosen width — constructors
+    /// size the width from the final total, so in-range by invariant).
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, v: usize) {
+        match self {
+            CsrOffsets::Narrow(o) => o[i] = u32::from_usize(v),
+            CsrOffsets::Wide(o) => o[i] = v as u64,
+        }
+    }
+
+    /// The trailing offset (total item count); 0 when empty.
+    #[inline]
+    pub fn last(&self) -> usize {
+        match self {
+            CsrOffsets::Narrow(v) => v.last().map_or(0, |&x| x as usize),
+            CsrOffsets::Wide(v) => v.last().map_or(0, |&x| x as usize),
+        }
+    }
+
+    /// Bytes of offset storage actually held (capacity-based — the bench
+    /// accounting metric behind the bytes/pin table in DESIGN.md §10).
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        match self {
+            CsrOffsets::Narrow(v) => v.capacity() * std::mem::size_of::<u32>(),
+            CsrOffsets::Wide(v) => v.capacity() * std::mem::size_of::<u64>(),
+        }
+    }
+
+    /// True on the 8-byte fallback/oracle path.
+    #[inline]
+    pub fn is_wide(&self) -> bool {
+        matches!(self, CsrOffsets::Wide(_))
+    }
+
+    /// Convert to the wide representation (no-op if already wide) — the
+    /// oracle conversion used by the width-equality proptests.
+    pub fn to_wide(self) -> Self {
+        match self {
+            CsrOffsets::Narrow(v) => {
+                CsrOffsets::Wide(crate::par::map_indexed(v.len(), |i| v[i] as u64))
+            }
+            wide => wide,
+        }
+    }
+
+    /// Debug helper: offsets strictly increase (no empty groups).
+    pub fn is_strictly_increasing(&self) -> bool {
+        match self {
+            CsrOffsets::Narrow(v) => v.windows(2).all(|w| w[0] < w[1]),
+            CsrOffsets::Wide(v) => v.windows(2).all(|w| w[0] < w[1]),
+        }
+    }
+
+    /// Debug helper: offsets never decrease.
+    pub fn is_monotone(&self) -> bool {
+        match self {
+            CsrOffsets::Narrow(v) => v.windows(2).all(|w| w[0] <= w[1]),
+            CsrOffsets::Wide(v) => v.windows(2).all(|w| w[0] <= w[1]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compaction_picks_narrow_and_roundtrips() {
+        let offs = vec![0usize, 3, 3, 10, 42];
+        let c = CsrOffsets::from_usize(offs.clone());
+        assert!(!c.is_wide());
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.last(), 42);
+        for (i, &o) in offs.iter().enumerate() {
+            assert_eq!(c.get(i), o);
+        }
+        assert_eq!(c.range(2), 3..10);
+        let w = c.clone().to_wide();
+        assert!(w.is_wide());
+        for i in 0..offs.len() {
+            assert_eq!(w.get(i), c.get(i));
+        }
+        assert_eq!(w.range(3), c.range(3));
+    }
+
+    #[test]
+    fn narrow_is_half_the_bytes() {
+        let offs: Vec<usize> = (0..=1000).map(|i| i * 3).collect();
+        let narrow = CsrOffsets::from_usize(offs);
+        let wide = narrow.clone().to_wide();
+        assert_eq!(wide.bytes(), 2 * narrow.bytes());
+    }
+
+    #[test]
+    fn zeros_and_set_respect_width() {
+        let mut z = CsrOffsets::zeros(4, 100);
+        assert!(!z.is_wide());
+        z.set(2, 99);
+        assert_eq!(z.get(2), 99);
+        let zw = CsrOffsets::zeros(4, u32::MAX as usize + 1);
+        assert!(zw.is_wide());
+    }
+
+    #[test]
+    fn uniform_stride_is_a_plain_graph_offset_array() {
+        let s = CsrOffsets::uniform_stride(5, 2);
+        assert_eq!(s.len(), 6);
+        for i in 0..=5 {
+            assert_eq!(s.get(i), 2 * i);
+        }
+        assert!(s.is_monotone());
+        let empty = CsrOffsets::uniform_stride(0, 2);
+        assert_eq!(empty.len(), 1);
+        assert_eq!(empty.last(), 0);
+    }
+
+    #[test]
+    fn empty_offsets() {
+        let e = CsrOffsets::from_usize(Vec::new());
+        assert!(e.is_empty());
+        assert_eq!(e.last(), 0);
+        assert_eq!(e.bytes(), 0);
+    }
+}

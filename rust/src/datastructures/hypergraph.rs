@@ -4,15 +4,23 @@
 //! both stored as offset/value arrays, so `pins(e)` and
 //! `incident_edges(v)` are O(1) slices. Construction is deterministic:
 //! incidence lists are materialized in increasing edge order.
+//!
+//! Both offset arrays are width-compact ([`CsrOffsets`]): 4-byte entries
+//! whenever the pin count fits `u32`, 8-byte fallback beyond — the
+//! offset scans dominate memory traffic on large instances, so this
+//! halves their bandwidth (DESIGN.md §10). The wide representation stays
+//! reachable via [`Hypergraph::with_wide_offsets`] as the determinism
+//! oracle: partitions must be bit-identical across widths.
 
+use super::csr::CsrOffsets;
 use crate::{EdgeId, VertexId, Weight};
 
 /// Immutable weighted hypergraph.
 #[derive(Clone, Debug)]
 pub struct Hypergraph {
-    edge_offsets: Vec<usize>,
+    edge_offsets: CsrOffsets,
     pins: Vec<VertexId>,
-    vertex_offsets: Vec<usize>,
+    vertex_offsets: CsrOffsets,
     incidence: Vec<EdgeId>,
     vertex_weights: Vec<Weight>,
     edge_weights: Vec<Weight>,
@@ -58,7 +66,7 @@ impl Hypergraph {
     /// Pins of hyperedge `e`.
     #[inline]
     pub fn pins(&self, e: EdgeId) -> &[VertexId] {
-        &self.pins[self.edge_offsets[e as usize]..self.edge_offsets[e as usize + 1]]
+        &self.pins[self.edge_offsets.range(e as usize)]
     }
 
     /// CSR offset of hyperedge `e`'s pins within the flat pin array —
@@ -67,23 +75,44 @@ impl Hypergraph {
     /// arena with the fine hypergraph's own offsets.
     #[inline]
     pub fn pin_offset(&self, e: EdgeId) -> usize {
-        self.edge_offsets[e as usize]
+        self.edge_offsets.get(e as usize)
+    }
+
+    /// Cumulative pin count before edge slot `i` — valid for
+    /// `i ∈ 0..=num_edges()`, with `pin_prefix(num_edges()) == num_pins()`.
+    /// This is the free monotone weight function that
+    /// [`crate::par::for_each_chunk_weighted`] consumes to balance *pins*
+    /// per chunk on edge scans (no prefix-sum pass needed: the CSR offset
+    /// array *is* the prefix sum).
+    #[inline]
+    pub fn pin_prefix(&self, i: usize) -> usize {
+        self.edge_offsets.get(i)
+    }
+
+    /// Cumulative incidence count before vertex slot `i` — valid for
+    /// `i ∈ 0..=num_vertices()`; the vertex-side analogue of
+    /// [`pin_prefix`](Self::pin_prefix) for degree-weighted vertex scans.
+    #[inline]
+    pub fn incidence_prefix(&self, i: usize) -> usize {
+        self.vertex_offsets.get(i)
     }
 
     /// Hyperedges incident to vertex `v`, in increasing edge-id order.
     #[inline]
     pub fn incident_edges(&self, v: VertexId) -> &[EdgeId] {
-        &self.incidence[self.vertex_offsets[v as usize]..self.vertex_offsets[v as usize + 1]]
+        &self.incidence[self.vertex_offsets.range(v as usize)]
     }
 
     #[inline]
     pub fn edge_size(&self, e: EdgeId) -> usize {
-        self.edge_offsets[e as usize + 1] - self.edge_offsets[e as usize]
+        let r = self.edge_offsets.range(e as usize);
+        r.end - r.start
     }
 
     #[inline]
     pub fn degree(&self, v: VertexId) -> usize {
-        self.vertex_offsets[v as usize + 1] - self.vertex_offsets[v as usize]
+        let r = self.vertex_offsets.range(v as usize);
+        r.end - r.start
     }
 
     #[inline]
@@ -125,13 +154,50 @@ impl Hypergraph {
         (0..self.num_edges()).all(|e| self.edge_size(e as EdgeId) == 2)
     }
 
+    /// True when both offset arrays are stored at the compact 4-byte
+    /// width (always, below 2³² pins).
+    #[inline]
+    pub fn offsets_are_narrow(&self) -> bool {
+        !self.edge_offsets.is_wide() && !self.vertex_offsets.is_wide()
+    }
+
+    /// Bytes held by the two offset arrays — the traffic the compact
+    /// width halves; feeds the bytes/pin table in DESIGN.md §10 and
+    /// `BENCH_layout.json`.
+    pub fn offset_bytes(&self) -> usize {
+        self.edge_offsets.bytes() + self.vertex_offsets.bytes()
+    }
+
+    /// Total bytes of the CSR arrays (offsets, pins, incidence, weights).
+    pub fn memory_bytes(&self) -> usize {
+        self.offset_bytes()
+            + self.pins.capacity() * std::mem::size_of::<VertexId>()
+            + self.incidence.capacity() * std::mem::size_of::<EdgeId>()
+            + self.vertex_weights.capacity() * std::mem::size_of::<Weight>()
+            + self.edge_weights.capacity() * std::mem::size_of::<Weight>()
+    }
+
+    /// Determinism oracle: the same hypergraph with both offset arrays
+    /// forced to the 8-byte width. Every accessor returns identical
+    /// values, so any downstream result — contraction, refinement, final
+    /// partition — must be bit-identical; the width proptests pump
+    /// instances through both representations and assert exactly that.
+    pub fn with_wide_offsets(mut self) -> Self {
+        self.edge_offsets = self.edge_offsets.to_wide();
+        self.vertex_offsets = self.vertex_offsets.to_wide();
+        self
+    }
+
     /// Structural sanity check used by tests & after contraction.
     pub fn validate(&self) -> Result<(), String> {
-        if *self.edge_offsets.last().unwrap() != self.pins.len() {
+        if self.edge_offsets.last() != self.pins.len() {
             return Err("edge offsets do not cover pins".into());
         }
-        if *self.vertex_offsets.last().unwrap() != self.incidence.len() {
+        if self.vertex_offsets.last() != self.incidence.len() {
             return Err("vertex offsets do not cover incidence".into());
+        }
+        if !self.edge_offsets.is_monotone() || !self.vertex_offsets.is_monotone() {
+            return Err("offsets not monotone".into());
         }
         if self.pins.len() != self.incidence.len() {
             return Err("pin count mismatch between directions".into());
@@ -193,9 +259,34 @@ impl HypergraphBuilder {
         scratch: &mut crate::par::CountingScratch,
     ) -> Hypergraph {
         assert_eq!(edge_offsets.len(), edge_weights.len() + 1);
-        assert_eq!(*edge_offsets.last().unwrap(), pins.len());
+        Self::from_csr_offsets(
+            num_vertices,
+            CsrOffsets::from_usize(edge_offsets),
+            pins,
+            edge_weights,
+            vertex_weights,
+            scratch,
+        )
+    }
+
+    /// [`from_csr`](Self::from_csr) taking an already width-compact
+    /// offset array — the zero-copy entry point for producers that emit
+    /// [`CsrOffsets`] directly (the contraction pipeline, the streaming
+    /// loaders, the huge generators), so the 8-byte `usize` intermediate
+    /// never exists. The vertex→edge offset array is built at the width
+    /// matching the pin count.
+    pub fn from_csr_offsets(
+        num_vertices: usize,
+        edge_offsets: CsrOffsets,
+        pins: Vec<VertexId>,
+        edge_weights: Vec<Weight>,
+        vertex_weights: Vec<Weight>,
+        scratch: &mut crate::par::CountingScratch,
+    ) -> Hypergraph {
+        assert_eq!(edge_offsets.len(), edge_weights.len() + 1);
+        assert_eq!(edge_offsets.last(), pins.len());
         assert_eq!(vertex_weights.len(), num_vertices);
-        debug_assert!(edge_offsets.windows(2).all(|w| w[0] < w[1]), "empty edge");
+        debug_assert!(edge_offsets.is_strictly_increasing(), "empty edge");
         debug_assert!(pins.iter().all(|&p| (p as usize) < num_vertices));
         let total_vertex_weight = crate::par::parallel_reduce(
             num_vertices,
@@ -208,36 +299,64 @@ impl HypergraphBuilder {
             },
             |a, b| a + b,
         );
-        // Per-pin edge ids (scratch buffer): chunk over edges, each chunk
-        // fills its contiguous, disjoint pin range.
+        // Per-pin edge ids (scratch buffer): chunk over edges *weighted
+        // by pin count* (skewed-degree instances would serialize a
+        // uniform split on the hot chunk), each chunk filling its
+        // contiguous, disjoint pin range. Monomorphized per offset width
+        // so the inner loop reads 4-byte offsets on the narrow path.
         let mut edge_of = std::mem::take(&mut scratch.values);
         edge_of.clear();
         edge_of.resize(pins.len(), 0);
-        {
+        fn fill_edge_ids<I: crate::par::CsrIndex>(
+            offs: &[I],
+            num_edges: usize,
+            edge_of: &mut [EdgeId],
+        ) {
             let ptr = crate::par::pool::SendPtr(edge_of.as_mut_ptr());
             let pref = &ptr;
-            let offs: &[usize] = &edge_offsets;
-            crate::par::for_each_chunk(edge_weights.len(), move |_c, r| {
-                for e in r {
-                    for i in offs[e]..offs[e + 1] {
-                        // SAFETY: pin ranges are disjoint per edge.
-                        unsafe {
-                            *pref.0.add(i) = e as EdgeId;
+            crate::par::for_each_chunk_weighted(
+                num_edges,
+                |e| offs[e].to_usize() as u64,
+                move |_c, r| {
+                    for e in r {
+                        for i in offs[e].to_usize()..offs[e + 1].to_usize() {
+                            // SAFETY: pin ranges are disjoint per edge.
+                            unsafe {
+                                *pref.0.add(i) = e as EdgeId;
+                            }
                         }
                     }
-                }
-            });
+                },
+            );
         }
-        let mut vertex_offsets = Vec::new();
+        match &edge_offsets {
+            CsrOffsets::Narrow(o) => fill_edge_ids(o, edge_weights.len(), &mut edge_of),
+            CsrOffsets::Wide(o) => fill_edge_ids(o, edge_weights.len(), &mut edge_of),
+        }
         let mut incidence = Vec::new();
-        crate::par::stable_counting_scatter(
-            &pins,
-            num_vertices,
-            &edge_of,
-            &mut vertex_offsets,
-            &mut incidence,
-            scratch,
-        );
+        let vertex_offsets = if CsrOffsets::fits_narrow(pins.len()) {
+            let mut vo: Vec<u32> = Vec::new();
+            crate::par::stable_counting_scatter(
+                &pins,
+                num_vertices,
+                &edge_of,
+                &mut vo,
+                &mut incidence,
+                scratch,
+            );
+            CsrOffsets::Narrow(vo)
+        } else {
+            let mut vo: Vec<u64> = Vec::new();
+            crate::par::stable_counting_scatter(
+                &pins,
+                num_vertices,
+                &edge_of,
+                &mut vo,
+                &mut incidence,
+                scratch,
+            );
+            CsrOffsets::Wide(vo)
+        };
         scratch.values = edge_of;
         Hypergraph {
             edge_offsets,
@@ -315,9 +434,9 @@ impl HypergraphBuilder {
             }
         }
         Hypergraph {
-            edge_offsets: self.edge_offsets,
+            edge_offsets: CsrOffsets::from_usize(self.edge_offsets),
             pins: self.pins,
-            vertex_offsets,
+            vertex_offsets: CsrOffsets::from_usize(vertex_offsets),
             incidence,
             vertex_weights,
             edge_weights: self.edge_weights,
@@ -455,5 +574,80 @@ mod tests {
         let mut h = tiny();
         h.total_vertex_weight += 1;
         assert!(h.validate().is_err());
+    }
+
+    #[test]
+    fn offsets_compact_by_default_and_wide_oracle_agrees() {
+        let h = crate::gen::sat_hypergraph(200, 600, 8, 11);
+        assert!(h.offsets_are_narrow(), "sub-2^32-pin instance must use u32 offsets");
+        let wide = h.clone().with_wide_offsets();
+        assert!(!wide.offsets_are_narrow());
+        wide.validate().unwrap();
+        // Every accessor must agree bit-for-bit between the widths.
+        assert_eq!(wide.num_pins(), h.num_pins());
+        for e in 0..h.num_edges() as EdgeId {
+            assert_eq!(wide.pins(e), h.pins(e));
+            assert_eq!(wide.pin_offset(e), h.pin_offset(e));
+            assert_eq!(wide.edge_size(e), h.edge_size(e));
+        }
+        for v in 0..h.num_vertices() as VertexId {
+            assert_eq!(wide.incident_edges(v), h.incident_edges(v));
+            assert_eq!(wide.degree(v), h.degree(v));
+        }
+        // The narrow form is the whole point: half the offset bytes.
+        assert_eq!(wide.offset_bytes(), 2 * h.offset_bytes());
+        assert!(h.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn from_csr_offsets_matches_from_csr() {
+        let g = crate::gen::sat_hypergraph(120, 400, 6, 3);
+        let mut offsets = vec![0usize];
+        let mut pins = Vec::new();
+        for e in 0..g.num_edges() as EdgeId {
+            pins.extend_from_slice(g.pins(e));
+            offsets.push(pins.len());
+        }
+        let ew: Vec<Weight> = (0..g.num_edges()).map(|e| g.edge_weight(e as EdgeId)).collect();
+        let vw: Vec<Weight> =
+            (0..g.num_vertices()).map(|v| g.vertex_weight(v as VertexId)).collect();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let mut scratch = crate::par::CountingScratch::default();
+                let a = HypergraphBuilder::from_csr(
+                    g.num_vertices(),
+                    offsets.clone(),
+                    pins.clone(),
+                    ew.clone(),
+                    vw.clone(),
+                    &mut scratch,
+                );
+                // Wide input offsets must produce the same hypergraph.
+                let b = HypergraphBuilder::from_csr_offsets(
+                    g.num_vertices(),
+                    CsrOffsets::from_usize(offsets.clone()).to_wide(),
+                    pins.clone(),
+                    ew.clone(),
+                    vw.clone(),
+                    &mut scratch,
+                );
+                for e in 0..a.num_edges() as EdgeId {
+                    assert_eq!(a.pins(e), b.pins(e), "nt={nt}");
+                }
+                for v in 0..a.num_vertices() as VertexId {
+                    assert_eq!(a.incident_edges(v), b.incident_edges(v), "nt={nt}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn pin_prefix_is_the_offset_array() {
+        let h = tiny();
+        assert_eq!(h.pin_prefix(0), 0);
+        assert_eq!(h.pin_prefix(1), 3);
+        assert_eq!(h.pin_prefix(h.num_edges()), h.num_pins());
+        assert_eq!(h.incidence_prefix(0), 0);
+        assert_eq!(h.incidence_prefix(h.num_vertices()), h.num_pins());
     }
 }

@@ -2,10 +2,12 @@
 //! dynamic partition state with per-edge pin counts and connectivity, and
 //! the quotient graph over blocks used by the flow-refinement scheduler.
 
+pub mod csr;
 pub mod hypergraph;
 pub mod partition;
 pub mod quotient;
 
+pub use csr::CsrOffsets;
 pub use hypergraph::{Hypergraph, HypergraphBuilder};
 pub use partition::{AffinityBuffer, PartitionScratch, PartitionedHypergraph};
 pub use quotient::QuotientGraph;

@@ -127,6 +127,39 @@ impl PackedPinCounts {
         ((self.words[w].fetch_sub(1u64 << s, Ordering::Relaxed) >> s) & self.mask) as u32
     }
 
+    /// Visit every entry `j ∈ [0, k)` of the row starting at entry index
+    /// `base` whose count is non-zero, in ascending order — the
+    /// branch-light form of the affinity gather. [`get`](Self::get) pays
+    /// one div/mod per *entry*; this walks the row word by word (one
+    /// div/mod per word, then constant shifts), and a word whose
+    /// remaining lanes are all zero — the common case for `k ≫ λ(e)` —
+    /// is skipped with a single load.
+    #[inline]
+    fn for_each_set_in_row(&self, base: usize, k: usize, mut f: impl FnMut(usize)) {
+        let mut j = 0usize;
+        while j < k {
+            let idx = base + j;
+            let w = idx / self.per_word;
+            let lane = idx % self.per_word;
+            let in_word = (self.per_word - lane).min(k - j);
+            let mut word = self.words[w].load(Ordering::Relaxed) >> (lane as u32 * self.bits);
+            if word == 0 {
+                // All remaining lanes of this word are zero (higher lanes
+                // may belong to the next row, but zero there only makes
+                // the skip conservative, never wrong).
+                j += in_word;
+                continue;
+            }
+            for t in 0..in_word {
+                if word & self.mask != 0 {
+                    f(j + t);
+                }
+                word >>= self.bits;
+            }
+            j += in_word;
+        }
+    }
+
     /// Bits per entry.
     fn bits(&self) -> u32 {
         self.bits
@@ -284,8 +317,12 @@ impl<'a> PartitionedHypergraph<'a> {
                 p.block_weights[b].fetch_add(hg.vertex_weight(v as VertexId), Ordering::Relaxed);
             }
         });
-        // Pin counts + connectivity + initial km1.
-        crate::par::for_each_chunk(hg.num_edges(), |_c, r| {
+        // Pin counts + connectivity + initial km1. Chunked by *pins*
+        // rather than edges: per-edge work is O(|e|), and a uniform edge
+        // split serializes on the heavy chunk for skewed size
+        // distributions. km1 combines via commutative integer adds, so
+        // chunk shape cannot change the result.
+        crate::par::for_each_chunk_weighted(hg.num_edges(), |i| hg.pin_prefix(i) as u64, |_c, r| {
             let mut km1 = 0 as Weight;
             for e in r {
                 let mut lambda = 0;
@@ -582,11 +619,15 @@ impl<'a> PartitionedHypergraph<'a> {
             }
             if self.connectivity(e) > 1 {
                 let base = e as usize * self.k;
-                for b in 0..self.k as BlockId {
-                    if b != s && self.pin_counts.get(base + b as usize) > 0 {
-                        buf.add(b, w);
+                let s = s as usize;
+                // Word-walk over the packed row: blocks visited in
+                // ascending order, exactly as the naive `0..k` scan, so
+                // the affinity buffer ends up bit-identical.
+                self.pin_counts.for_each_set_in_row(base, self.k, |b| {
+                    if b != s {
+                        buf.add(b as BlockId, w);
                     }
-                }
+                });
             }
         }
         (w_total, benefit, internal)
@@ -875,6 +916,30 @@ mod tests {
             assert_eq!(p.pin_count(0, 0), 0);
             assert_eq!(p.pin_count(0, 1), size as u32);
             p.validate(None).unwrap();
+        }
+    }
+
+    #[test]
+    fn packed_row_scan_matches_get() {
+        // The word-walk row scan must report exactly the non-zero lanes
+        // of `get`, ascending, for every (k, edge-size) packing shape —
+        // including rows that straddle word boundaries.
+        for k in [2usize, 3, 5, 8, 17, 33] {
+            for size in [2usize, 3, 7, 16, 63] {
+                let pins: Vec<VertexId> = (0..size as VertexId).collect();
+                let h = Hypergraph::new(size, &[pins.clone(), pins.clone()], None, None);
+                // Spread pins round-robin so several lanes are set.
+                let parts: Vec<BlockId> = (0..size).map(|v| (v % k) as BlockId).collect();
+                let p = PartitionedHypergraph::new(&h, k, parts);
+                for e in 0..2usize {
+                    let base = e * k;
+                    let expect: Vec<usize> =
+                        (0..k).filter(|&b| p.pin_counts.get(base + b) > 0).collect();
+                    let mut got = Vec::new();
+                    p.pin_counts.for_each_set_in_row(base, k, |b| got.push(b));
+                    assert_eq!(got, expect, "k={k} size={size} e={e}");
+                }
+            }
         }
     }
 

@@ -17,7 +17,7 @@ pub mod suite;
 pub mod vlsi;
 
 pub use grid::{grid2d_graph, grid3d_graph, spm_hypergraph_2d, spm_hypergraph_3d, torus_graph};
-pub use rmat::rmat_graph;
+pub use rmat::{rmat_graph, rmat_graph_huge};
 pub use sat::sat_hypergraph;
-pub use suite::{instance_by_name, suite, Instance, InstanceClass};
-pub use vlsi::vlsi_netlist;
+pub use suite::{huge_suite, instance_by_name, suite, Instance, InstanceClass};
+pub use vlsi::{vlsi_netlist, vlsi_netlist_huge, vlsi_netlist_scaled};

@@ -56,6 +56,83 @@ pub fn rmat_graph(scale: u32, edge_factor: usize, seed: u64) -> Hypergraph {
     builder.build()
 }
 
+/// Scale-out variant of [`rmat_graph`] for the `huge` suite tier
+/// (DESIGN.md §10): **counter-based** candidate generation — candidate
+/// `i` descends the recursive quadrant tree using a `hash64` chain
+/// seeded from `(seed, i)`, so every candidate is an independent pure
+/// function and generation parallelizes perfectly — followed by a
+/// parallel sort + dedup and a CSR-arena build through
+/// [`HypergraphBuilder::from_csr_offsets`] (no per-edge `Vec`, no
+/// `HashSet`).
+///
+/// Same Graph500 probabilities and the same structural class as
+/// [`rmat_graph`], and equally deterministic per `(scale, edge_factor,
+/// seed)` — but a *different* edge set than the sequential generator
+/// (counter-based draws replace the serial RNG stream), so the two are
+/// distinct named instances, not interchangeable oracles. Unlike
+/// [`rmat_graph`], duplicate candidates are dropped without retries, so
+/// the edge count undershoots `edge_factor·2^scale` by the collision
+/// rate.
+pub fn rmat_graph_huge(scale: u32, edge_factor: usize, seed: u64) -> Hypergraph {
+    assert!(scale <= 31, "vertex ids are u32");
+    let n = 1usize << scale;
+    let target = n * edge_factor;
+    let (a, b, c) = (0.57f64, 0.19f64, 0.19f64);
+    let ta = (a * u64::MAX as f64) as u64;
+    let tb = ((a + b) * u64::MAX as f64) as u64;
+    let tc = ((a + b + c) * u64::MAX as f64) as u64;
+    // Candidate keys: `(min << 32) | max`, `u64::MAX` marks self-loops.
+    let mut keys: Vec<u64> = crate::par::map_indexed(target, |i| {
+        let mut h = crate::util::rng::hash64(seed, i as u64);
+        let (mut u, mut v) = (0u64, 0u64);
+        for level in 0..scale {
+            h = crate::util::rng::hash64(h, level as u64 + 1);
+            u <<= 1;
+            v <<= 1;
+            if h < ta {
+                // top-left quadrant
+            } else if h < tb {
+                v |= 1;
+            } else if h < tc {
+                u |= 1;
+            } else {
+                u |= 1;
+                v |= 1;
+            }
+        }
+        if u == v {
+            u64::MAX
+        } else {
+            (u.min(v) << 32) | u.max(v)
+        }
+    });
+    // Sort (pure value sort → schedule-independent), then parallel
+    // dedup: keep the first of each run, drop the self-loop sentinel.
+    crate::par::par_sort_by(&mut keys, |x, y| x.cmp(y));
+    let kept = crate::par::collect_indices_where(target, |i| {
+        keys[i] != u64::MAX && (i == 0 || keys[i] != keys[i - 1])
+    });
+    let num_edges = kept.len();
+    let pins: Vec<VertexId> = crate::par::map_indexed(2 * num_edges, |j| {
+        let key = keys[kept[j / 2] as usize];
+        if j % 2 == 0 {
+            (key >> 32) as VertexId
+        } else {
+            (key & u32::MAX as u64) as VertexId
+        }
+    });
+    let offsets = crate::datastructures::CsrOffsets::uniform_stride(num_edges, 2);
+    let mut scratch = crate::par::CountingScratch::default();
+    HypergraphBuilder::from_csr_offsets(
+        n,
+        offsets,
+        pins,
+        vec![1; num_edges],
+        vec![1; n],
+        &mut scratch,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,5 +170,34 @@ mod tests {
         let g = rmat_graph(9, 8, 1);
         let target = 512 * 8;
         assert!(g.num_edges() > target / 2, "{} of {target}", g.num_edges());
+    }
+
+    #[test]
+    fn huge_variant_valid_and_deterministic_across_threads() {
+        let mut outs: Vec<Vec<u32>> = Vec::new();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let g = rmat_graph_huge(10, 8, 1);
+                g.validate().unwrap();
+                assert!(g.is_graph());
+                assert!(g.num_edges() > 1024 * 4, "{} edges", g.num_edges());
+                // Flat fingerprint: all pins in edge order.
+                let pins: Vec<u32> =
+                    (0..g.num_edges()).flat_map(|e| g.pins(e as u32).to_vec()).collect();
+                outs.push(pins);
+            });
+        }
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn huge_variant_is_heavy_tailed() {
+        let g = rmat_graph_huge(11, 8, 7);
+        let max_deg = (0..g.num_vertices()).map(|v| g.degree(v as u32)).max().unwrap();
+        let avg = g.avg_degree();
+        assert!(
+            max_deg as f64 > 5.0 * avg,
+            "huge rmat should be heavy-tailed: max {max_deg} avg {avg}"
+        );
     }
 }

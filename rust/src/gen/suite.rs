@@ -79,6 +79,21 @@ pub fn suite() -> Vec<Instance> {
     ]
 }
 
+/// The `huge` memory-bandwidth tier (DESIGN.md §10): instances sized so
+/// the tier's combined pin count reaches 10⁸, exercising the wide/narrow
+/// CSR index split and the streaming loaders at scale. Built from the
+/// counter-based parallel generators ([`super::rmat_graph_huge`],
+/// [`super::vlsi_netlist_scaled`]) — building these through the
+/// sequential `add_edge` path would itself take minutes. Not part of
+/// [`suite`]; run via the `#[ignore]`d test or `--features`-free bench
+/// harnesses that opt in explicitly.
+pub fn huge_suite() -> Vec<Instance> {
+    vec![
+        inst!("huge-rmat-s23", IrregularGraph, || super::rmat_graph_huge(23, 8, 4001)),
+        inst!("huge-vlsi-s24", Hypergraph, || super::vlsi_netlist_scaled(24, 1.15, 4002)),
+    ]
+}
+
 /// A small subset for quick experiments / CI-style tests.
 pub fn mini_suite() -> Vec<Instance> {
     suite()
@@ -125,11 +140,36 @@ mod tests {
 
     #[test]
     fn names_unique() {
-        let s = suite();
+        let mut s = suite();
+        s.extend(huge_suite());
         let mut names: Vec<_> = s.iter().map(|i| i.name).collect();
         names.sort_unstable();
         let n = names.len();
         names.dedup();
         assert_eq!(names.len(), n);
+    }
+
+    #[test]
+    fn huge_suite_registered() {
+        let s = huge_suite();
+        assert!(s.len() >= 2);
+        assert!(s.iter().any(|i| i.class == InstanceClass::IrregularGraph));
+        assert!(s.iter().any(|i| i.class == InstanceClass::Hypergraph));
+    }
+
+    /// The huge tier's reason to exist: ≥ 10⁸ pins in total, past the
+    /// point where u32-vs-u64 offset width dominates bandwidth. Builds
+    /// multi-GB instances — run explicitly with
+    /// `cargo test --release -- --ignored huge_tier`.
+    #[test]
+    #[ignore = "builds ~1e8-pin instances; run with --release -- --ignored"]
+    fn huge_tier_reaches_1e8_pins() {
+        let mut total_pins = 0usize;
+        for inst in huge_suite() {
+            let h = inst.build();
+            h.validate().unwrap();
+            total_pins += h.num_pins();
+        }
+        assert!(total_pins >= 100_000_000, "huge tier only has {total_pins} pins");
     }
 }

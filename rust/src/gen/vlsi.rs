@@ -7,7 +7,7 @@
 
 use crate::datastructures::{Hypergraph, HypergraphBuilder};
 use crate::util::Rng;
-use crate::VertexId;
+use crate::{VertexId, Weight};
 
 /// Generate a netlist hypergraph with `side × side` cells and
 /// `nets_per_cell · side²` nets.
@@ -58,6 +58,142 @@ pub fn vlsi_netlist(side: usize, nets_per_cell: f64, seed: u64) -> Hypergraph {
     b2.build()
 }
 
+/// Sample one net's pin set with a caller-seeded RNG — the per-net pure
+/// function behind [`vlsi_netlist_huge`]. Same degree distribution,
+/// window sampling and rejection logic as the sequential generator.
+fn fill_net(rng: &mut Rng, side: usize, n: usize, pins: &mut Vec<VertexId>) {
+    let u = rng.next_f64().max(1e-9);
+    let extra = (u.powf(-0.45) - 1.0).floor() as usize;
+    let degree = (2 + extra).min(24).min(n - 1);
+    let dx = rng.next_range(side as u64) as usize;
+    let dy = rng.next_range(side as u64) as usize;
+    let radius = 2 + degree;
+    pins.clear();
+    pins.push((dy * side + dx) as VertexId);
+    let mut guard = 0;
+    while pins.len() < degree && guard < 100 {
+        guard += 1;
+        let ox = rng.next_in(0, 2 * radius as u64 + 1) as i64 - radius as i64;
+        let oy = rng.next_in(0, 2 * radius as u64 + 1) as i64 - radius as i64;
+        let x = dx as i64 + ox;
+        let y = dy as i64 + oy;
+        if x < 0 || y < 0 || x >= side as i64 || y >= side as i64 {
+            continue;
+        }
+        let c = (y as usize * side + x as usize) as VertexId;
+        if !pins.contains(&c) {
+            pins.push(c);
+        }
+    }
+}
+
+/// Scale-out variant of [`vlsi_netlist`] for the `huge` suite tier
+/// (DESIGN.md §10): net `i` is a pure function of `hash64(seed, i)`, so
+/// sizing (pass 1) and pin emission (pass 2) both run fully parallel and
+/// the pins scatter straight into a width-compact CSR arena — no
+/// `HypergraphBuilder::add_edge` loop, no per-net `Vec` retained. Nets
+/// that sample fewer than 2 pins are dropped at compaction, like the
+/// sequential generator skips them. Deterministic per `(side,
+/// nets_per_cell, seed)` at every thread count, but a *different* (per-net
+/// seeded) sample stream than [`vlsi_netlist`], which stays byte-stable.
+pub fn vlsi_netlist_huge(side: usize, nets_per_cell: f64, seed: u64) -> Hypergraph {
+    assert!(side >= 2, "need at least a 2×2 die");
+    let n = side * side;
+    assert!(n <= u32::MAX as usize, "cell ids are u32");
+    let num_nets = (n as f64 * nets_per_cell).round() as usize;
+    // Pass 1: per-net sizes (< 2 pins → 0, dropped below).
+    let mut sizes = vec![0i64; num_nets + 1];
+    {
+        let sp = crate::par::pool::SendPtr(sizes.as_mut_ptr());
+        crate::par::for_each_chunk(num_nets, move |_c, r| {
+            let mut buf: Vec<VertexId> = Vec::new();
+            for i in r {
+                let mut rng = Rng::new(crate::util::rng::hash64(seed, i as u64));
+                fill_net(&mut rng, side, n, &mut buf);
+                // SAFETY: each net index belongs to one chunk → disjoint.
+                unsafe { *sp.0.add(i) = if buf.len() >= 2 { buf.len() as i64 } else { 0 } };
+            }
+        });
+    }
+    let total = crate::par::exclusive_prefix_sum_in_place(&mut sizes) as usize;
+    // Dropped nets contribute 0 to the prefix, so the surviving nets'
+    // offsets already tile the arena gap-free — just compact the ids.
+    let kept = crate::par::collect_indices_where(num_nets, |i| sizes[i + 1] > sizes[i]);
+    let num_edges = kept.len();
+    // Pass 2: regenerate each surviving net and scatter its sorted pins
+    // at the prefix offsets, chunked by pins for balance.
+    let mut pins = vec![0 as VertexId; total];
+    {
+        let pp = crate::par::pool::SendPtr(pins.as_mut_ptr());
+        let (kept, sizes) = (&kept, &sizes);
+        crate::par::for_each_chunk_weighted(
+            num_edges,
+            |j| if j == num_edges { total as u64 } else { sizes[kept[j] as usize] as u64 },
+            move |_c, r| {
+                let mut buf: Vec<VertexId> = Vec::new();
+                for j in r {
+                    let i = kept[j] as usize;
+                    let mut rng = Rng::new(crate::util::rng::hash64(seed, i as u64));
+                    fill_net(&mut rng, side, n, &mut buf);
+                    buf.sort_unstable();
+                    let at = sizes[i] as usize;
+                    for (t, &p) in buf.iter().enumerate() {
+                        // SAFETY: disjoint per-net destination ranges.
+                        unsafe { *pp.0.add(at + t) = p };
+                    }
+                }
+            },
+        );
+    }
+    let mut offsets = crate::datastructures::CsrOffsets::zeros(num_edges + 1, total);
+    fn fill_offsets<I: crate::par::CsrIndex>(
+        o: &mut [I],
+        kept: &[u32],
+        sizes: &[i64],
+        total: usize,
+    ) {
+        let ne = kept.len();
+        crate::par::for_each_chunk_mut(o, |start, slice| {
+            for (jj, s) in slice.iter_mut().enumerate() {
+                let j = start + jj;
+                *s = I::from_usize(if j == ne {
+                    total
+                } else {
+                    sizes[kept[j] as usize] as usize
+                });
+            }
+        });
+    }
+    match &mut offsets {
+        crate::datastructures::CsrOffsets::Narrow(o) => fill_offsets(o, &kept, &sizes, total),
+        crate::datastructures::CsrOffsets::Wide(o) => fill_offsets(o, &kept, &sizes, total),
+    }
+    let weights: Vec<Weight> = crate::par::map_indexed(n, |i| {
+        if crate::util::rng::hash_rng(seed ^ 0xC0FFEE, i as u64, 100) < 2 {
+            8
+        } else {
+            1
+        }
+    });
+    let mut scratch = crate::par::CountingScratch::default();
+    HypergraphBuilder::from_csr_offsets(
+        n,
+        offsets,
+        pins,
+        vec![1; num_edges],
+        weights,
+        &mut scratch,
+    )
+}
+
+/// The `scale` knob: a [`vlsi_netlist_huge`] die with ~`2^scale` cells
+/// (`side = round(sqrt(2^scale))`), mirroring the R-MAT scale parameter
+/// so suite tiers can be sized uniformly.
+pub fn vlsi_netlist_scaled(scale: u32, nets_per_cell: f64, seed: u64) -> Hypergraph {
+    let side = ((1u64 << scale) as f64).sqrt().round() as usize;
+    vlsi_netlist_huge(side.max(2), nets_per_cell, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +223,33 @@ mod tests {
         let heavy = (0..h.num_vertices()).filter(|&v| h.vertex_weight(v as u32) > 1).count();
         assert!(heavy > 0);
         assert!(heavy < h.num_vertices() / 10);
+    }
+
+    #[test]
+    fn huge_variant_valid_and_deterministic_across_threads() {
+        let mut outs: Vec<Vec<u32>> = Vec::new();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let h = vlsi_netlist_huge(40, 1.2, 11);
+                h.validate().unwrap();
+                assert_eq!(h.num_vertices(), 1600);
+                let pins: Vec<u32> =
+                    (0..h.num_edges()).flat_map(|e| h.pins(e as u32).to_vec()).collect();
+                outs.push(pins);
+            });
+        }
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn huge_variant_keeps_netlist_shape() {
+        let h = vlsi_netlist_scaled(11, 1.2, 11);
+        assert_eq!(h.num_vertices(), 45 * 45);
+        let total = h.num_edges();
+        assert!(total > 1000, "{total} nets");
+        let two = (0..total).filter(|&e| h.edge_size(e as u32) == 2).count();
+        assert!(two as f64 > 0.5 * total as f64, "two-pin {two}/{total}");
+        let heavy = (0..h.num_vertices()).filter(|&v| h.vertex_weight(v as u32) > 1).count();
+        assert!(heavy > 0, "expected macro cells");
     }
 }

@@ -6,22 +6,265 @@
 //! * 11 — both.
 //!
 //! Vertex ids in the file are 1-based; comment lines start with `%`.
+//!
+//! The default reader is the **streaming two-pass parser** (DESIGN.md
+//! §10): pass 1 counts content lines and pin tokens in parallel over
+//! newline-aligned byte chunks, a prefix sum turns the counts into arena
+//! offsets, and pass 2 parses pins directly into the CSR arena at
+//! disjoint offsets — no per-edge `Vec<Vec<VertexId>>` intermediate, no
+//! `String` copy of the file. The original line-by-line parser survives
+//! as [`read_hgr_str_legacy`], the equality oracle for the streaming
+//! path.
 
-use crate::datastructures::{Hypergraph, HypergraphBuilder};
+use super::text;
+use crate::datastructures::{CsrOffsets, Hypergraph, HypergraphBuilder};
+use crate::par::pool::SendPtr;
+use crate::util::{Context, Error, Result};
+use crate::{bail, ensure, err};
 use crate::{VertexId, Weight};
-use crate::util::{Context, Result};
-use crate::bail;
 use std::path::Path;
 
-/// Parse an `.hgr` file.
+/// Parse an `.hgr` file (streaming parser; reads raw bytes, no UTF-8
+/// validation pass).
 pub fn read_hgr(path: &Path) -> Result<Hypergraph> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    read_hgr_str(&text)
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    read_hgr_bytes(&bytes)
 }
 
-/// Parse `.hgr` content from a string.
+/// Parse `.hgr` content from a string (streaming parser).
 pub fn read_hgr_str(text: &str) -> Result<Hypergraph> {
+    read_hgr_bytes(text.as_bytes())
+}
+
+/// Parse `.hgr` content from raw bytes with the parallel streaming
+/// two-pass parser. Bit-identical to [`read_hgr_str_legacy`] on every
+/// valid input, at every thread count.
+pub fn read_hgr_bytes(bytes: &[u8]) -> Result<Hypergraph> {
+    let (header, body_start) = text::first_content_line(bytes).context("empty hgr file")?;
+    let mut it = text::Tokens::new(header);
+    let num_edges =
+        text::parse_usize(it.next().context("missing |E|")?).context("bad |E| in header")?;
+    let num_vertices =
+        text::parse_usize(it.next().context("missing |V|")?).context("bad |V| in header")?;
+    let fmt = match it.next() {
+        Some(t) => text::parse_usize(t).context("bad fmt in header")?,
+        None => 0,
+    };
+    let (has_edge_weights, has_vertex_weights) = match fmt {
+        0 => (false, false),
+        1 => (true, false),
+        10 => (false, true),
+        11 => (true, true),
+        f => bail!("unsupported hgr fmt {f}"),
+    };
+    // Pins are `VertexId = u32`: a larger vertex count would silently
+    // truncate ids, so reject it up front.
+    ensure!(
+        num_vertices <= u32::MAX as usize,
+        "|V| = {num_vertices} exceeds the 32-bit vertex id space"
+    );
+
+    let body = &bytes[body_start..];
+    let nt = crate::par::num_threads().max(1);
+    let chunks = text::split_at_lines(body, nt);
+    let nchunks = chunks.len();
+
+    // Pass 1 — per chunk: token count of every content line. Allocates
+    // `nchunks` integer vectors (O(lines) memory total), never a vector
+    // per edge.
+    let pass1: Vec<Vec<u32>> = crate::par::map_indexed(nchunks, |c| {
+        text::content_lines(&body[chunks[c].clone()])
+            .map(|line| text::Tokens::new(line).count() as u32)
+            .collect()
+    });
+    let mut line_start = Vec::with_capacity(nchunks);
+    let mut total_lines = 0usize;
+    for t in &pass1 {
+        line_start.push(total_lines);
+        total_lines += t.len();
+    }
+    // Guard *before* any |E|-sized allocation: a garbage header
+    // (`999999999999 2`) must fail cleanly, not OOM.
+    let needed = num_edges + if has_vertex_weights { num_vertices } else { 0 };
+    if total_lines < needed {
+        if total_lines < num_edges {
+            bail!("missing edge line {total_lines}");
+        }
+        bail!("missing vertex weight {}", total_lines - num_edges);
+    }
+
+    // Scatter per-edge pin counts, then prefix → raw arena offsets.
+    let ew = has_edge_weights as usize;
+    let mut raw_off = vec![0i64; num_edges + 1];
+    {
+        let ptr = SendPtr(raw_off.as_mut_ptr());
+        let pref = &ptr;
+        let pass1 = &pass1;
+        let line_start = &line_start;
+        let errs: Vec<Option<Error>> = crate::par::map_indexed(nchunks, move |c| {
+            for (j, &t) in pass1[c].iter().enumerate() {
+                let g = line_start[c] + j;
+                if g >= num_edges {
+                    break;
+                }
+                let p = (t as usize).saturating_sub(ew);
+                if p == 0 {
+                    return Some(err!("edge {g}: no pins"));
+                }
+                // SAFETY: each global line index belongs to exactly one
+                // chunk → disjoint writes.
+                unsafe { *pref.0.add(g) = p as i64 };
+            }
+            None
+        });
+        if let Some(e) = errs.into_iter().flatten().next() {
+            return Err(e);
+        }
+    }
+    let raw_total = crate::par::exclusive_prefix_sum_in_place(&mut raw_off) as usize;
+
+    // Pass 2 — parse edge weights, pins and vertex weights straight into
+    // the arenas at disjoint offsets; sort + dedup each edge's pins in
+    // place and record the deduplicated size.
+    let mut pins_raw = vec![0 as VertexId; raw_total];
+    let mut edge_weights = vec![1 as Weight; num_edges];
+    let mut vertex_weights = vec![1 as Weight; num_vertices];
+    let mut new_size = vec![0i64; num_edges + 1];
+    {
+        let pins_ptr = SendPtr(pins_raw.as_mut_ptr());
+        let ew_ptr = SendPtr(edge_weights.as_mut_ptr());
+        let vw_ptr = SendPtr(vertex_weights.as_mut_ptr());
+        let ns_ptr = SendPtr(new_size.as_mut_ptr());
+        let (raw_off, line_start, chunks) = (&raw_off, &line_start, &chunks);
+        let errs: Vec<Option<Error>> = crate::par::map_indexed(nchunks, move |c| {
+            for (j, line) in text::content_lines(&body[chunks[c].clone()]).enumerate() {
+                let g = line_start[c] + j;
+                if g < num_edges {
+                    let mut toks = text::Tokens::new(line);
+                    if has_edge_weights {
+                        // Token present by the pass-1 count (≥ 1 + pins).
+                        let t = toks.next().unwrap();
+                        match text::parse_i64(t) {
+                            // SAFETY (all writes below): indices derived
+                            // from this chunk's line range → disjoint.
+                            Some(w) => unsafe { *ew_ptr.0.add(g) = w },
+                            None => {
+                                return Some(err!("edge {g}: bad weight {}", text::show(t)))
+                            }
+                        }
+                    }
+                    let base = raw_off[g] as usize;
+                    let mut n = 0usize;
+                    for t in toks {
+                        let v = match text::parse_usize(t) {
+                            Some(v) => v,
+                            None => return Some(err!("edge {g}: bad pin {}", text::show(t))),
+                        };
+                        if v == 0 || v > num_vertices {
+                            return Some(err!(
+                                "edge {g}: pin {v} out of range 1..={num_vertices}"
+                            ));
+                        }
+                        unsafe { *pins_ptr.0.add(base + n) = (v - 1) as VertexId };
+                        n += 1;
+                    }
+                    // Repeated pins occur in public instances; dedup in
+                    // place, exactly like the legacy parser.
+                    let edge =
+                        unsafe { std::slice::from_raw_parts_mut(pins_ptr.0.add(base), n) };
+                    edge.sort_unstable();
+                    let mut kept = 1usize;
+                    for i in 1..n {
+                        if edge[i] != edge[kept - 1] {
+                            edge[kept] = edge[i];
+                            kept += 1;
+                        }
+                    }
+                    unsafe { *ns_ptr.0.add(g) = kept as i64 };
+                } else if has_vertex_weights && g < num_edges + num_vertices {
+                    let v = g - num_edges;
+                    let mut toks = text::Tokens::new(line);
+                    let t = toks.next().unwrap(); // content line → ≥ 1 token
+                    if toks.next().is_some() {
+                        return Some(err!("vertex weight {v}: trailing tokens"));
+                    }
+                    match text::parse_i64(t) {
+                        Some(w) => unsafe { *vw_ptr.0.add(v) = w },
+                        None => {
+                            return Some(err!("vertex weight {v}: bad integer {}", text::show(t)))
+                        }
+                    }
+                }
+                // Extra trailing content lines are ignored (legacy parity).
+            }
+            None
+        });
+        if let Some(e) = errs.into_iter().flatten().next() {
+            return Err(e);
+        }
+    }
+
+    // Compact the deduplicated pin lists and emit width-compact offsets.
+    let kept_total = crate::par::exclusive_prefix_sum_in_place(&mut new_size) as usize;
+    let mut pins = vec![0 as VertexId; kept_total];
+    {
+        let dst = SendPtr(pins.as_mut_ptr());
+        let (raw_off, new_size, pins_raw) = (&raw_off, &new_size, &pins_raw);
+        crate::par::for_each_chunk_weighted(
+            num_edges,
+            |g| raw_off[g] as u64,
+            move |_c, r| {
+                for g in r {
+                    let kept = (new_size[g + 1] - new_size[g]) as usize;
+                    let src = raw_off[g] as usize;
+                    // SAFETY: destination ranges are disjoint per edge
+                    // (exclusive prefix of kept counts).
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            pins_raw.as_ptr().add(src),
+                            dst.0.add(new_size[g] as usize),
+                            kept,
+                        );
+                    }
+                }
+            },
+        );
+    }
+    drop(pins_raw);
+    let mut edge_offsets = CsrOffsets::zeros(num_edges + 1, kept_total);
+    match &mut edge_offsets {
+        CsrOffsets::Narrow(o) => {
+            crate::par::for_each_chunk_mut(o, |start, slice| {
+                for (s, &x) in slice.iter_mut().zip(&new_size[start..start + slice.len()]) {
+                    *s = x as u32;
+                }
+            });
+        }
+        CsrOffsets::Wide(o) => {
+            crate::par::for_each_chunk_mut(o, |start, slice| {
+                for (s, &x) in slice.iter_mut().zip(&new_size[start..start + slice.len()]) {
+                    *s = x as u64;
+                }
+            });
+        }
+    }
+    let mut scratch = crate::par::CountingScratch::default();
+    Ok(HypergraphBuilder::from_csr_offsets(
+        num_vertices,
+        edge_offsets,
+        pins,
+        edge_weights,
+        vertex_weights,
+        &mut scratch,
+    ))
+}
+
+/// The original sequential line-by-line parser — retained as the
+/// **equality oracle** for [`read_hgr_bytes`] (and for bisecting parser
+/// discrepancies). Allocates a pin vector per edge; do not use on large
+/// instances.
+pub fn read_hgr_str_legacy(text: &str) -> Result<Hypergraph> {
     let mut lines = text.lines().filter(|l| {
         let t = l.trim();
         !t.is_empty() && !t.starts_with('%')
@@ -38,6 +281,10 @@ pub fn read_hgr_str(text: &str) -> Result<Hypergraph> {
         11 => (true, true),
         f => bail!("unsupported hgr fmt {f}"),
     };
+    ensure!(
+        num_vertices <= u32::MAX as usize,
+        "|V| = {num_vertices} exceeds the 32-bit vertex id space"
+    );
 
     let mut builder = HypergraphBuilder::new(num_vertices);
     let mut pins: Vec<VertexId> = Vec::new();
@@ -77,22 +324,45 @@ pub fn read_hgr_str(text: &str) -> Result<Hypergraph> {
     Ok(builder.build())
 }
 
-/// Write an `.hgr` file (always fmt=11: both weight kinds explicit).
-pub fn write_hgr(hg: &Hypergraph, path: &Path) -> Result<()> {
+/// Render a hypergraph as `.hgr` text, with each weight kind optional
+/// (the fmt code follows from the flags). Round-trips bit-identically
+/// through [`read_hgr_str`] when the omitted weights are all 1.
+pub fn hgr_string(hg: &Hypergraph, edge_weights: bool, vertex_weights: bool) -> String {
+    let fmt = match (edge_weights, vertex_weights) {
+        (false, false) => "",
+        (true, false) => " 1",
+        (false, true) => " 10",
+        (true, true) => " 11",
+    };
     let mut out = String::new();
-    out.push_str(&format!("{} {} 11\n", hg.num_edges(), hg.num_vertices()));
+    out.push_str(&format!("{} {}{}\n", hg.num_edges(), hg.num_vertices(), fmt));
     for e in 0..hg.num_edges() {
-        out.push_str(&hg.edge_weight(e as u32).to_string());
+        let mut first = true;
+        if edge_weights {
+            out.push_str(&hg.edge_weight(e as u32).to_string());
+            first = false;
+        }
         for &p in hg.pins(e as u32) {
-            out.push(' ');
+            if !first {
+                out.push(' ');
+            }
             out.push_str(&(p + 1).to_string());
+            first = false;
         }
         out.push('\n');
     }
-    for v in 0..hg.num_vertices() {
-        out.push_str(&hg.vertex_weight(v as u32).to_string());
-        out.push('\n');
+    if vertex_weights {
+        for v in 0..hg.num_vertices() {
+            out.push_str(&hg.vertex_weight(v as u32).to_string());
+            out.push('\n');
+        }
     }
+    out
+}
+
+/// Write an `.hgr` file (always fmt=11: both weight kinds explicit).
+pub fn write_hgr(hg: &Hypergraph, path: &Path) -> Result<()> {
+    let out = hgr_string(hg, true, true);
     std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
     Ok(())
 }
@@ -129,10 +399,21 @@ mod tests {
 
     #[test]
     fn rejects_bad_input() {
-        assert!(read_hgr_str("").is_err());
-        assert!(read_hgr_str("1 2\n1 3\n").is_err()); // pin out of range
-        assert!(read_hgr_str("2 2\n1 2\n").is_err()); // missing edge line
-        assert!(read_hgr_str("1 2 99\n1 2\n").is_err()); // bad fmt
+        for parse in [read_hgr_str, read_hgr_str_legacy] {
+            assert!(parse("").is_err());
+            assert!(parse("1 2\n1 3\n").is_err()); // pin out of range
+            assert!(parse("2 2\n1 2\n").is_err()); // missing edge line
+            assert!(parse("1 2 99\n1 2\n").is_err()); // bad fmt
+            assert!(parse("1 2\n0 1\n").is_err()); // pin 0 (1-based ids)
+            assert!(parse("1 2 1\n5\n").is_err()); // weight but no pins
+            assert!(parse("1 2\n1 x\n").is_err()); // non-numeric pin
+        }
+        // A garbage header must fail cleanly before any |E|-sized
+        // allocation (would OOM otherwise).
+        assert!(read_hgr_str("999999999999 2\n1 2\n").is_err());
+        // |V| beyond the u32 id space is a typed error, not truncation.
+        assert!(read_hgr_str("1 5000000000\n1 2\n").is_err());
+        assert!(read_hgr_str_legacy("1 5000000000\n1 2\n").is_err());
     }
 
     #[test]
@@ -159,5 +440,53 @@ mod tests {
     fn dedups_repeated_pins() {
         let h = read_hgr_str("1 3\n1 2 2 3\n").unwrap();
         assert_eq!(h.pins(0), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn hgr_string_variants_roundtrip() {
+        let h = Hypergraph::new(
+            5,
+            &[vec![0, 1, 2], vec![2, 3], vec![3, 4], vec![0, 4]],
+            Some(vec![2, 3, 4, 5, 6]),
+            Some(vec![7, 1, 2, 9]),
+        );
+        for (ew, vw) in [(true, true), (true, false), (false, true), (false, false)] {
+            let txt = hgr_string(&h, ew, vw);
+            let h2 = read_hgr_str(&txt).unwrap();
+            assert_eq!(h2.num_vertices(), h.num_vertices());
+            assert_eq!(h2.num_edges(), h.num_edges());
+            for e in 0..h.num_edges() {
+                assert_eq!(h2.pins(e as u32), h.pins(e as u32));
+                let expect = if ew { h.edge_weight(e as u32) } else { 1 };
+                assert_eq!(h2.edge_weight(e as u32), expect, "ew={ew} vw={vw}");
+            }
+            for v in 0..h.num_vertices() {
+                let expect = if vw { h.vertex_weight(v as u32) } else { 1 };
+                assert_eq!(h2.vertex_weight(v as u32), expect, "ew={ew} vw={vw}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_matches_legacy_across_threads() {
+        // Messy but valid input: comments, blank lines, repeated pins,
+        // negative-free weights, CRLF endings, no trailing newline.
+        let txt = "% header comment\n4 6 11\n\n5 1 2 2\n7 2 3\r\n1 4 5 6\n2 6 1\n9\n8\n%x\n7\n6\n5\n4";
+        let oracle = read_hgr_str_legacy(txt).unwrap();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let h = read_hgr_str(txt).unwrap();
+                assert_eq!(h.num_vertices(), oracle.num_vertices());
+                assert_eq!(h.num_edges(), oracle.num_edges());
+                for e in 0..h.num_edges() as u32 {
+                    assert_eq!(h.pins(e), oracle.pins(e), "nt={nt} e={e}");
+                    assert_eq!(h.edge_weight(e), oracle.edge_weight(e));
+                }
+                for v in 0..h.num_vertices() as u32 {
+                    assert_eq!(h.vertex_weight(v), oracle.vertex_weight(v));
+                    assert_eq!(h.incident_edges(v), oracle.incident_edges(v));
+                }
+            });
+        }
     }
 }

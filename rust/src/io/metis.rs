@@ -6,20 +6,226 @@
 //! vertex weights (fmt 10), edge weights (fmt 1) and both (11). Each of
 //! the following |V| lines lists the neighbors (1-based) of vertex i,
 //! optionally preceded by its weight(s) / interleaved with edge weights.
+//!
+//! The default reader is the **streaming two-pass parser** (DESIGN.md
+//! §10): a cheap line-count pass fixes each chunk's global line range,
+//! pass 1 validates tokens and counts the kept edges (`u < v`, each
+//! undirected edge emitted once) per vertex, a prefix sum turns the
+//! counts into CSR offsets, and pass 2 scatters the 2-pin edges directly
+//! into the arena. The sequential parser survives as
+//! [`read_graph_str_legacy`], the equality oracle.
 
-use crate::datastructures::{Hypergraph, HypergraphBuilder};
+use super::text;
+use crate::datastructures::{CsrOffsets, Hypergraph, HypergraphBuilder};
+use crate::par::pool::SendPtr;
+use crate::util::{Context, Error, Result};
+use crate::{bail, ensure, err};
 use crate::{VertexId, Weight};
-use crate::util::{Context, Result};
-use crate::bail;
 use std::path::Path;
 
+/// Parse a `.graph` file (streaming parser).
 pub fn read_graph(path: &Path) -> Result<Hypergraph> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    read_graph_str(&text)
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    read_graph_bytes(&bytes)
 }
 
+/// Parse `.graph` content from a string (streaming parser).
 pub fn read_graph_str(text: &str) -> Result<Hypergraph> {
+    read_graph_bytes(text.as_bytes())
+}
+
+struct GraphHeader {
+    num_vertices: usize,
+    num_edges: usize,
+    has_edge_weights: bool,
+    has_vertex_weights: bool,
+}
+
+fn parse_header(header: &[u8]) -> Result<GraphHeader> {
+    let mut it = text::Tokens::new(header);
+    let num_vertices =
+        text::parse_usize(it.next().context("missing |V|")?).context("bad |V| in header")?;
+    let num_edges =
+        text::parse_usize(it.next().context("missing |E|")?).context("bad |E| in header")?;
+    let fmt = match it.next() {
+        Some(t) => text::parse_usize(t).context("bad fmt in header")?,
+        None => 0,
+    };
+    let ncon = match it.next() {
+        Some(t) => text::parse_usize(t).context("bad ncon in header")?,
+        None => 1,
+    };
+    if ncon > 1 {
+        bail!("multi-constraint graphs unsupported (ncon={ncon})");
+    }
+    ensure!(
+        num_vertices <= u32::MAX as usize,
+        "|V| = {num_vertices} exceeds the 32-bit vertex id space"
+    );
+    Ok(GraphHeader {
+        num_vertices,
+        num_edges,
+        has_edge_weights: fmt % 10 == 1,
+        has_vertex_weights: (fmt / 10) % 10 == 1,
+    })
+}
+
+/// Parse `.graph` content from raw bytes with the parallel streaming
+/// two-pass parser. Bit-identical to [`read_graph_str_legacy`] on every
+/// valid input, at every thread count.
+pub fn read_graph_bytes(bytes: &[u8]) -> Result<Hypergraph> {
+    let (header, body_start) =
+        text::first_content_line(bytes).context("empty graph file")?;
+    let h = parse_header(header)?;
+    let (n, has_ew, has_vw) = (h.num_vertices, h.has_edge_weights, h.has_vertex_weights);
+
+    let body = &bytes[body_start..];
+    let nt = crate::par::num_threads().max(1);
+    let chunks = text::split_at_lines(body, nt);
+    let nchunks = chunks.len();
+
+    // Pass 0 — cheap content-line count per chunk (no token parsing)
+    // fixes each chunk's global adjacency-line range. Guards the
+    // |V|-sized allocations below against garbage headers.
+    let counts: Vec<usize> = crate::par::map_indexed(nchunks, |c| {
+        text::content_lines(&body[chunks[c].clone()]).count()
+    });
+    let mut line_start = Vec::with_capacity(nchunks);
+    let mut total_lines = 0usize;
+    for &c in &counts {
+        line_start.push(total_lines);
+        total_lines += c;
+    }
+    if total_lines < n {
+        bail!("missing adjacency line {total_lines}");
+    }
+
+    // Pass 1 — validate every token, fill vertex weights, count kept
+    // edges (`u < v`) per vertex.
+    let mut kept = vec![0i64; n + 1];
+    let mut vertex_weights = vec![1 as Weight; n];
+    {
+        let kept_ptr = SendPtr(kept.as_mut_ptr());
+        let vw_ptr = SendPtr(vertex_weights.as_mut_ptr());
+        let (line_start, chunks) = (&line_start, &chunks);
+        let errs: Vec<Option<Error>> = crate::par::map_indexed(nchunks, move |c| {
+            for (j, line) in text::content_lines(&body[chunks[c].clone()]).enumerate() {
+                let u = line_start[c] + j;
+                if u >= n {
+                    break; // extra trailing content lines ignored (legacy parity)
+                }
+                let mut toks = text::Tokens::new(line);
+                if has_vw {
+                    let t = toks.next().unwrap(); // content line → ≥ 1 token
+                    match text::parse_i64(t) {
+                        // SAFETY (writes below): each line index belongs
+                        // to exactly one chunk → disjoint writes.
+                        Some(w) => unsafe { *vw_ptr.0.add(u) = w },
+                        None => {
+                            return Some(err!("vertex {u}: bad weight {}", text::show(t)))
+                        }
+                    }
+                }
+                let mut k = 0i64;
+                while let Some(t) = toks.next() {
+                    let v = match text::parse_usize(t) {
+                        Some(v) => v,
+                        None => {
+                            return Some(err!("vertex {u}: bad neighbor {}", text::show(t)))
+                        }
+                    };
+                    if v == 0 || v > n {
+                        return Some(err!("vertex {u}: neighbor {v} out of range"));
+                    }
+                    if has_ew {
+                        let wt = match toks.next() {
+                            Some(wt) => wt,
+                            None => return Some(err!("vertex {u}: missing edge weight")),
+                        };
+                        if text::parse_i64(wt).is_none() {
+                            return Some(err!(
+                                "vertex {u}: bad edge weight {}",
+                                text::show(wt)
+                            ));
+                        }
+                    }
+                    // Each undirected edge appears twice; count it once.
+                    if u < v - 1 {
+                        k += 1;
+                    }
+                }
+                unsafe { *kept_ptr.0.add(u) = k };
+            }
+            None
+        });
+        if let Some(e) = errs.into_iter().flatten().next() {
+            return Err(e);
+        }
+    }
+    let total_kept = crate::par::exclusive_prefix_sum_in_place(&mut kept) as usize;
+    if total_kept != h.num_edges {
+        bail!("edge count mismatch: header {}, found {total_kept}", h.num_edges);
+    }
+
+    // Pass 2 — scatter the kept 2-pin edges at the prefix offsets. All
+    // tokens were validated in pass 1, so parsing cannot fail here.
+    let mut pins = vec![0 as VertexId; 2 * total_kept];
+    let mut edge_weights = vec![1 as Weight; total_kept];
+    {
+        let pins_ptr = SendPtr(pins.as_mut_ptr());
+        let ew_ptr = SendPtr(edge_weights.as_mut_ptr());
+        let (kept, line_start, chunks) = (&kept, &line_start, &chunks);
+        crate::par::for_each_chunk(nchunks, move |_i, cr| {
+            for c in cr {
+                for (j, line) in text::content_lines(&body[chunks[c].clone()]).enumerate() {
+                    let u = line_start[c] + j;
+                    if u >= n {
+                        break;
+                    }
+                    let mut toks = text::Tokens::new(line);
+                    if has_vw {
+                        toks.next();
+                    }
+                    let mut at = kept[u] as usize;
+                    while let Some(t) = toks.next() {
+                        let v = text::parse_usize(t).unwrap_or(0);
+                        let w: Weight = if has_ew {
+                            toks.next().and_then(text::parse_i64).unwrap_or(1)
+                        } else {
+                            1
+                        };
+                        if v > 0 && u < v - 1 {
+                            // SAFETY: destination ranges are disjoint per
+                            // vertex (exclusive prefix of kept counts).
+                            unsafe {
+                                *pins_ptr.0.add(2 * at) = u as VertexId;
+                                *pins_ptr.0.add(2 * at + 1) = (v - 1) as VertexId;
+                                *ew_ptr.0.add(at) = w;
+                            }
+                            at += 1;
+                        }
+                    }
+                }
+            }
+        });
+    }
+    let offsets = CsrOffsets::uniform_stride(total_kept, 2);
+    let mut scratch = crate::par::CountingScratch::default();
+    Ok(HypergraphBuilder::from_csr_offsets(
+        n,
+        offsets,
+        pins,
+        edge_weights,
+        vertex_weights,
+        &mut scratch,
+    ))
+}
+
+/// The original sequential parser — retained as the **equality oracle**
+/// for [`read_graph_bytes`]. Builds edges one at a time; do not use on
+/// large instances.
+pub fn read_graph_str_legacy(text: &str) -> Result<Hypergraph> {
     let mut lines = text.lines().filter(|l| {
         let t = l.trim();
         !t.is_empty() && !t.starts_with('%')
@@ -35,6 +241,10 @@ pub fn read_graph_str(text: &str) -> Result<Hypergraph> {
     if ncon > 1 {
         bail!("multi-constraint graphs unsupported (ncon={ncon})");
     }
+    ensure!(
+        num_vertices <= u32::MAX as usize,
+        "|V| = {num_vertices} exceeds the 32-bit vertex id space"
+    );
 
     let mut vertex_weights = vec![1 as Weight; num_vertices];
     let mut builder = HypergraphBuilder::new(num_vertices);
@@ -97,10 +307,49 @@ mod tests {
     #[test]
     fn detects_count_mismatch() {
         assert!(read_graph_str("2 2\n2\n1\n").is_err());
+        assert!(read_graph_str_legacy("2 2\n2\n1\n").is_err());
     }
 
     #[test]
     fn rejects_multiconstraint() {
         assert!(read_graph_str("2 1 10 2\n1 1 2\n1 1 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_neighbors() {
+        for parse in [read_graph_str, read_graph_str_legacy] {
+            assert!(parse("2 1\n0\n1\n").is_err()); // neighbor 0 (1-based)
+            assert!(parse("2 1\n3\n1\n").is_err()); // out of range
+            assert!(parse("2 1\nx\n1\n").is_err()); // non-numeric
+            assert!(parse("3 3\n2\n1\n").is_err()); // missing adjacency line
+        }
+        // Garbage header fails before any |V|-sized allocation.
+        assert!(read_graph_str("999999999999 1\n2\n1\n").is_err());
+        assert!(read_graph_str("5000000000 1\n2\n1\n").is_err());
+    }
+
+    #[test]
+    fn streaming_matches_legacy_across_threads() {
+        // 5-cycle with weights, comments, CRLF, a blank line and no
+        // trailing newline. fmt=11: vertex weight, then (neighbor,
+        // edge-weight) pairs.
+        let txt =
+            "% graph\n5 5 11\n3 2 4 5 9\n1 1 4 3 7\r\n9 2 7 4 2\n\n2 3 2 5 1\n4 4 1 1 9";
+        let oracle = read_graph_str_legacy(txt).unwrap();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let h = read_graph_str(txt).unwrap();
+                assert_eq!(h.num_vertices(), oracle.num_vertices());
+                assert_eq!(h.num_edges(), oracle.num_edges());
+                for e in 0..h.num_edges() as u32 {
+                    assert_eq!(h.pins(e), oracle.pins(e), "nt={nt} e={e}");
+                    assert_eq!(h.edge_weight(e), oracle.edge_weight(e), "nt={nt} e={e}");
+                }
+                for v in 0..h.num_vertices() as u32 {
+                    assert_eq!(h.vertex_weight(v), oracle.vertex_weight(v));
+                    assert_eq!(h.incident_edges(v), oracle.incident_edges(v));
+                }
+            });
+        }
     }
 }

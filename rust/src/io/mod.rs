@@ -1,11 +1,19 @@
 //! File formats: hMetis `.hgr` hypergraphs, METIS `.graph` graphs
 //! (ingested as 2-pin hypergraphs), and partition files (one block id per
 //! line, the standard interchange used by partitioning tools).
+//!
+//! Both loaders default to the parallel **streaming two-pass parsers**
+//! ([`hmetis::read_hgr_bytes`] / [`metis::read_graph_bytes`], DESIGN.md
+//! §10); the original sequential parsers are retained as equality
+//! oracles ([`read_hgr_str_legacy`] / [`read_graph_str_legacy`]).
 
 pub mod hmetis;
 pub mod metis;
 pub mod partition_file;
+pub(crate) mod text;
 
-pub use hmetis::{read_hgr, read_hgr_str, write_hgr};
-pub use metis::{read_graph, read_graph_str};
+pub use hmetis::{
+    hgr_string, read_hgr, read_hgr_bytes, read_hgr_str, read_hgr_str_legacy, write_hgr,
+};
+pub use metis::{read_graph, read_graph_bytes, read_graph_str, read_graph_str_legacy};
 pub use partition_file::{read_partition, write_partition};

@@ -1,0 +1,247 @@
+//! Shared infrastructure for the **streaming two-pass loaders**
+//! (DESIGN.md §10): newline-aligned byte chunking, a zero-copy
+//! content-line iterator, ASCII whitespace tokenization and hand-rolled
+//! integer parsing — everything the hMetis/METIS parsers need to run
+//! pass 1 (counting) and pass 2 (scatter) in parallel over raw bytes
+//! without materializing a per-edge `Vec<Vec<VertexId>>` intermediate.
+//!
+//! Determinism: [`split_at_lines`] is a pure function of `(bytes,
+//! parts)`, chunks tile the byte range in order, and each parser
+//! aggregates per-chunk errors by chunk index — so the reported error is
+//! the one at the smallest byte offset, exactly what a sequential scan
+//! would hit first, at every thread count.
+
+use std::ops::Range;
+
+/// Trim ASCII whitespace from both ends (the byte-level `str::trim`).
+#[inline]
+pub(crate) fn trim(mut line: &[u8]) -> &[u8] {
+    while let [first, rest @ ..] = line {
+        if first.is_ascii_whitespace() {
+            line = rest;
+        } else {
+            break;
+        }
+    }
+    while let [rest @ .., last] = line {
+        if last.is_ascii_whitespace() {
+            line = rest;
+        } else {
+            break;
+        }
+    }
+    line
+}
+
+/// Is a *trimmed* line a content line (non-empty, not a `%` comment)?
+#[inline]
+pub(crate) fn is_content(trimmed: &[u8]) -> bool {
+    !trimmed.is_empty() && trimmed[0] != b'%'
+}
+
+/// The first content line and the byte offset just past it — the cheap
+/// sequential scan that locates a header before any parallel work.
+pub(crate) fn first_content_line(bytes: &[u8]) -> Option<(&[u8], usize)> {
+    let mut pos = 0;
+    while pos < bytes.len() {
+        let end = bytes[pos..]
+            .iter()
+            .position(|&c| c == b'\n')
+            .map_or(bytes.len(), |p| pos + p);
+        let line = trim(&bytes[pos..end]);
+        let next = (end + 1).min(bytes.len());
+        if is_content(line) {
+            return Some((line, next));
+        }
+        pos = next;
+    }
+    None
+}
+
+/// Split `bytes` into at most `parts` contiguous ranges whose boundaries
+/// fall on line starts, in order, covering the whole slice. A pure
+/// function of `(bytes, parts)`; empty ranges are omitted.
+pub(crate) fn split_at_lines(bytes: &[u8], parts: usize) -> Vec<Range<usize>> {
+    let len = bytes.len();
+    if len == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, len);
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0usize);
+    for i in 1..parts {
+        let tentative = i * len / parts;
+        let b = if bytes[tentative - 1] == b'\n' {
+            tentative // already a line start
+        } else {
+            match bytes[tentative..].iter().position(|&c| c == b'\n') {
+                Some(p) => tentative + p + 1,
+                None => len,
+            }
+        };
+        bounds.push(b.max(*bounds.last().unwrap()));
+    }
+    bounds.push(len);
+    bounds.windows(2).map(|w| w[0]..w[1]).filter(|r| !r.is_empty()).collect()
+}
+
+/// Iterator over the trimmed **content** lines of a byte chunk (blank
+/// lines and `%` comments skipped) — zero-copy, no allocation.
+pub(crate) struct ContentLines<'a> {
+    rest: &'a [u8],
+}
+
+/// Content-line iterator over `bytes`.
+pub(crate) fn content_lines(bytes: &[u8]) -> ContentLines<'_> {
+    ContentLines { rest: bytes }
+}
+
+impl<'a> Iterator for ContentLines<'a> {
+    type Item = &'a [u8];
+
+    fn next(&mut self) -> Option<&'a [u8]> {
+        while !self.rest.is_empty() {
+            let end = self
+                .rest
+                .iter()
+                .position(|&c| c == b'\n')
+                .unwrap_or(self.rest.len());
+            let line = trim(&self.rest[..end]);
+            self.rest = &self.rest[(end + 1).min(self.rest.len())..];
+            if is_content(line) {
+                return Some(line);
+            }
+        }
+        None
+    }
+}
+
+/// ASCII-whitespace token iterator (the byte-level `split_whitespace`) —
+/// zero-copy, no allocation.
+pub(crate) struct Tokens<'a> {
+    rest: &'a [u8],
+}
+
+impl<'a> Tokens<'a> {
+    pub(crate) fn new(line: &'a [u8]) -> Self {
+        Tokens { rest: line }
+    }
+}
+
+impl<'a> Iterator for Tokens<'a> {
+    type Item = &'a [u8];
+
+    fn next(&mut self) -> Option<&'a [u8]> {
+        let start = self.rest.iter().position(|c| !c.is_ascii_whitespace())?;
+        let rest = &self.rest[start..];
+        let end = rest.iter().position(|c| c.is_ascii_whitespace()).unwrap_or(rest.len());
+        self.rest = &rest[end..];
+        Some(&rest[..end])
+    }
+}
+
+/// Parse an unsigned decimal integer (optional leading `+`, matching
+/// `str::parse::<usize>`). `None` on empty input, stray bytes, or
+/// overflow.
+pub(crate) fn parse_usize(tok: &[u8]) -> Option<usize> {
+    let tok = tok.strip_prefix(b"+").unwrap_or(tok);
+    if tok.is_empty() {
+        return None;
+    }
+    let mut acc = 0usize;
+    for &c in tok {
+        let d = c.wrapping_sub(b'0');
+        if d > 9 {
+            return None;
+        }
+        acc = acc.checked_mul(10)?.checked_add(d as usize)?;
+    }
+    Some(acc)
+}
+
+/// Parse a signed decimal integer (optional leading `-`/`+`, matching
+/// `str::parse::<i64>`).
+pub(crate) fn parse_i64(tok: &[u8]) -> Option<i64> {
+    let (neg, digits) = match tok {
+        [b'-', rest @ ..] => (true, rest),
+        [b'+', rest @ ..] => (false, rest),
+        _ => (false, tok),
+    };
+    if digits.is_empty() {
+        return None;
+    }
+    let mut acc = 0i64;
+    for &c in digits {
+        let d = c.wrapping_sub(b'0');
+        if d > 9 {
+            return None;
+        }
+        acc = acc.checked_mul(10)?;
+        acc = if neg { acc.checked_sub(d as i64)? } else { acc.checked_add(d as i64)? };
+    }
+    Some(acc)
+}
+
+/// Render a token as UTF-8 (lossy) for error messages.
+pub(crate) fn show(tok: &[u8]) -> String {
+    String::from_utf8_lossy(tok).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chunks_align_and_cover() {
+        let data = b"one 1\ntwo 2 2\n% comment\n\nthree\nfour 4\n";
+        for parts in 1..=8 {
+            let chunks = split_at_lines(data, parts);
+            // Cover the whole slice in order.
+            assert_eq!(chunks.first().unwrap().start, 0);
+            assert_eq!(chunks.last().unwrap().end, data.len());
+            assert!(chunks.windows(2).all(|w| w[0].end == w[1].start));
+            // Every boundary is a line start.
+            for c in &chunks {
+                assert!(c.start == 0 || data[c.start - 1] == b'\n');
+            }
+            // Chunked content lines == whole-slice content lines.
+            let whole: Vec<&[u8]> = content_lines(data).collect();
+            let chunked: Vec<&[u8]> =
+                chunks.iter().flat_map(|c| content_lines(&data[c.clone()])).collect();
+            assert_eq!(chunked, whole, "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn content_lines_skip_blank_and_comments() {
+        let lines: Vec<&[u8]> =
+            content_lines(b"  a b \r\n\n% skip\n c\n%\nd").collect();
+        assert_eq!(lines, vec![b"a b" as &[u8], b"c", b"d"]);
+    }
+
+    #[test]
+    fn first_content_line_skips_leading_comments() {
+        let (line, off) = first_content_line(b"% hdr comment\n\n3 4 11\n1 2\n").unwrap();
+        assert_eq!(line, b"3 4 11");
+        assert_eq!(&b"% hdr comment\n\n3 4 11\n1 2\n"[off..], b"1 2\n");
+        assert!(first_content_line(b"% only\n\n").is_none());
+    }
+
+    #[test]
+    fn tokenizer_and_parsers() {
+        let toks: Vec<&[u8]> = Tokens::new(b"  12\t+3  -4 x9 ").collect();
+        assert_eq!(toks, vec![b"12" as &[u8], b"+3", b"-4", b"x9"]);
+        assert_eq!(parse_usize(b"12"), Some(12));
+        assert_eq!(parse_usize(b"+3"), Some(3));
+        assert_eq!(parse_usize(b"-4"), None);
+        assert_eq!(parse_usize(b"x9"), None);
+        assert_eq!(parse_usize(b""), None);
+        assert_eq!(parse_usize(b"18446744073709551616"), None); // overflow
+        assert_eq!(parse_i64(b"-4"), Some(-4));
+        assert_eq!(parse_i64(b"+7"), Some(7));
+        assert_eq!(parse_i64(b"9223372036854775807"), Some(i64::MAX));
+        assert_eq!(parse_i64(b"-9223372036854775808"), Some(i64::MIN));
+        assert_eq!(parse_i64(b"9223372036854775808"), None);
+        assert_eq!(parse_i64(b"-"), None);
+    }
+}

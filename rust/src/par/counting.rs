@@ -17,6 +17,61 @@
 
 use super::pool::{for_each_chunk, nth_chunk, num_chunks, num_threads, SendPtr};
 
+/// Offset-array index width for CSR construction — the abstraction the
+/// billion-pin scale-out hangs off. Offset arrays are the dominant
+/// streamed data on the hot scans, so [`stable_counting_scatter`] (and
+/// the contraction pipeline's offset emission) are generic over the
+/// stored width: `u32` when the trailing offset fits (halving offset
+/// bandwidth), `u64` as the transparent fallback and determinism oracle,
+/// `usize` for legacy callers. Values always travel as `usize` at the
+/// boundary; only the *stored* representation narrows.
+pub trait CsrIndex: Copy + Send + Sync + Default + 'static {
+    /// Largest offset value this width can store.
+    const MAX_OFFSET: usize;
+    /// Narrowing store conversion. Callers guarantee `v` fits (the width
+    /// is chosen from the trailing offset); debug builds check.
+    fn from_usize(v: usize) -> Self;
+    /// Widening load conversion.
+    fn to_usize(self) -> usize;
+}
+
+impl CsrIndex for u32 {
+    const MAX_OFFSET: usize = u32::MAX as usize;
+    #[inline(always)]
+    fn from_usize(v: usize) -> Self {
+        debug_assert!(v <= Self::MAX_OFFSET, "offset {v} overflows u32");
+        v as u32
+    }
+    #[inline(always)]
+    fn to_usize(self) -> usize {
+        self as usize
+    }
+}
+
+impl CsrIndex for u64 {
+    const MAX_OFFSET: usize = u64::MAX as usize;
+    #[inline(always)]
+    fn from_usize(v: usize) -> Self {
+        v as u64
+    }
+    #[inline(always)]
+    fn to_usize(self) -> usize {
+        self as usize
+    }
+}
+
+impl CsrIndex for usize {
+    const MAX_OFFSET: usize = usize::MAX;
+    #[inline(always)]
+    fn from_usize(v: usize) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn to_usize(self) -> usize {
+        self
+    }
+}
+
 /// Reusable buffers for [`stable_counting_scatter`] (and callers that need
 /// a per-item value array): owned by a higher-level scratch arena so
 /// steady-state calls allocate nothing.
@@ -42,36 +97,46 @@ impl CountingScratch {
 /// `offsets_out[k]..offsets_out[k+1]` is group `k`) and the scattered
 /// values into `out` (resized to `keys.len()`). Within a group, values
 /// appear in increasing input-index order (stable) for every thread count.
-pub fn stable_counting_scatter(
+///
+/// Generic over the stored offset width ([`CsrIndex`]): the hypergraph
+/// build emits `u32` offsets directly when the pin count fits, so the
+/// offset array is never materialized at 8 bytes just to be narrowed.
+/// The caller picks a width that can hold `keys.len()`.
+pub fn stable_counting_scatter<I: CsrIndex>(
     keys: &[u32],
     num_keys: usize,
     values: &[u32],
-    offsets_out: &mut Vec<usize>,
+    offsets_out: &mut Vec<I>,
     out: &mut Vec<u32>,
     scratch: &mut CountingScratch,
 ) {
     assert_eq!(keys.len(), values.len());
+    debug_assert!(keys.len() <= I::MAX_OFFSET, "offset width cannot hold pin count");
     let len = keys.len();
     offsets_out.clear();
-    offsets_out.resize(num_keys + 1, 0);
+    offsets_out.resize(num_keys + 1, I::default());
     out.clear();
     out.resize(len, 0);
     let nt = num_threads().max(1);
     let nchunks = num_chunks(len, nt);
     if nchunks <= 1 {
-        // Sequential counting sort.
-        for &k in keys {
-            offsets_out[k as usize + 1] += 1;
-        }
-        for k in 0..num_keys {
-            offsets_out[k + 1] += offsets_out[k];
-        }
-        // Reuse the count row as the running cursor.
+        // Sequential counting sort: count into the scratch row, prefix
+        // into offsets, then reuse the row as the running cursor.
         let counts = &mut scratch.counts;
         counts.clear();
         counts.resize(num_keys, 0);
+        for &k in keys {
+            counts[k as usize] += 1;
+        }
+        let mut acc = 0usize;
+        for k in 0..num_keys {
+            offsets_out[k] = I::from_usize(acc);
+            acc += counts[k] as usize;
+            counts[k] = 0;
+        }
+        offsets_out[num_keys] = I::from_usize(acc);
         for (i, &k) in keys.iter().enumerate() {
-            let pos = offsets_out[k as usize] + counts[k as usize] as usize;
+            let pos = offsets_out[k as usize].to_usize() + counts[k as usize] as usize;
             counts[k as usize] += 1;
             out[pos] = values[i];
         }
@@ -118,7 +183,7 @@ pub fn stable_counting_scatter(
                     }
                 }
                 unsafe {
-                    *oref.0.add(k + 1) = acc as usize;
+                    *oref.0.add(k + 1) = I::from_usize(acc as usize);
                 }
             }
         });
@@ -126,7 +191,7 @@ pub fn stable_counting_scatter(
     // offsets_out is now [0, t_0, …, t_{K-1}] (slot k+1 holds key k's
     // total); an inclusive scan turns it into the group offset array
     // [0, t_0, t_0+t_1, …, Σt].
-    inclusive_prefix_sum_usize(offsets_out);
+    inclusive_prefix_sum(offsets_out);
     // Phase 3: scatter. Each chunk's cursor for key k is
     // offsets_out[k] + counts[chunk][k] (its exclusive rank), advanced
     // locally — rows are disjoint per chunk, destinations are unique.
@@ -135,7 +200,7 @@ pub fn stable_counting_scatter(
         let out_ptr = SendPtr(out.as_mut_ptr());
         let cref = &counts_ptr;
         let oref = &out_ptr;
-        let offsets: &[usize] = offsets_out;
+        let offsets: &[I] = offsets_out;
         for_each_chunk(nchunks, move |_c, r| {
             for ci in r {
                 for i in nth_chunk(len, nt, ci) {
@@ -144,7 +209,7 @@ pub fn stable_counting_scatter(
                     // each destination index is written exactly once.
                     unsafe {
                         let cur = cref.0.add(ci * num_keys + k);
-                        let pos = offsets[k] + *cur as usize;
+                        let pos = offsets[k].to_usize() + *cur as usize;
                         *cur += 1;
                         *oref.0.add(pos) = values[i];
                     }
@@ -154,17 +219,17 @@ pub fn stable_counting_scatter(
     }
 }
 
-/// In-place inclusive prefix sum over `usize` — the one sequential pass
-/// left in [`stable_counting_scatter`] (a single add-and-store sweep over
-/// `num_keys + 1` slots; the counts, column scan and scatter around it
-/// are parallel). Known Amdahl tradeoff: a chunked usize scan mirroring
-/// `exclusive_prefix_sum_in_place` would remove it if coarse-vertex
-/// counts ever make this pass show up in profiles.
-fn inclusive_prefix_sum_usize(xs: &mut [usize]) {
+/// In-place inclusive prefix sum over a [`CsrIndex`] slice — the one
+/// sequential pass left in [`stable_counting_scatter`] (a single
+/// add-and-store sweep over `num_keys + 1` slots; the counts, column scan
+/// and scatter around it are parallel). Known Amdahl tradeoff: a chunked
+/// scan mirroring `exclusive_prefix_sum_in_place` would remove it if
+/// coarse-vertex counts ever make this pass show up in profiles.
+fn inclusive_prefix_sum<I: CsrIndex>(xs: &mut [I]) {
     let mut acc = 0usize;
     for x in xs.iter_mut() {
-        acc += *x;
-        *x = acc;
+        acc += x.to_usize();
+        *x = I::from_usize(acc);
     }
 }
 
@@ -226,6 +291,35 @@ mod tests {
                     assert_eq!(out, expect, "n={n} nt={nt}");
                 });
             }
+        }
+    }
+
+    #[test]
+    fn counting_scatter_widths_agree() {
+        // The narrow (u32), wide (u64) and legacy (usize) offset widths
+        // must produce identical groupings — the u64 path is the
+        // determinism oracle for the compact one.
+        let mut rng = Rng::new(77);
+        let n = 10_000usize;
+        let num_keys = 211usize;
+        let keys: Vec<u32> = (0..n).map(|_| rng.next_range(num_keys as u64) as u32).collect();
+        let values: Vec<u32> = (0..n as u32).collect();
+        for nt in [1usize, 3, 8] {
+            with_num_threads(nt, || {
+                let mut scratch = CountingScratch::default();
+                let (mut o32, mut o64, mut ou) =
+                    (Vec::<u32>::new(), Vec::<u64>::new(), Vec::<usize>::new());
+                let (mut v32, mut v64, mut vu) = (Vec::new(), Vec::new(), Vec::new());
+                stable_counting_scatter(&keys, num_keys, &values, &mut o32, &mut v32, &mut scratch);
+                stable_counting_scatter(&keys, num_keys, &values, &mut o64, &mut v64, &mut scratch);
+                stable_counting_scatter(&keys, num_keys, &values, &mut ou, &mut vu, &mut scratch);
+                assert_eq!(v32, v64, "nt={nt}");
+                assert_eq!(v32, vu, "nt={nt}");
+                let w32: Vec<usize> = o32.iter().map(|&x| x as usize).collect();
+                let w64: Vec<usize> = o64.iter().map(|&x| x as usize).collect();
+                assert_eq!(w32, ou, "nt={nt}");
+                assert_eq!(w64, ou, "nt={nt}");
+            });
         }
     }
 

@@ -25,10 +25,10 @@ pub mod pool;
 pub mod prefix;
 pub mod sort;
 
-pub use counting::{bucket_boundaries_in, stable_counting_scatter, CountingScratch};
+pub use counting::{bucket_boundaries_in, stable_counting_scatter, CountingScratch, CsrIndex};
 pub use pool::{
-    for_each_chunk, for_each_chunk_in, for_each_chunk_mut, map_indexed, num_threads,
-    parallel_reduce, set_num_threads, with_num_threads,
+    for_each_chunk, for_each_chunk_in, for_each_chunk_mut, for_each_chunk_weighted, map_indexed,
+    nth_chunk_weighted, num_threads, parallel_reduce, set_num_threads, with_num_threads,
 };
 pub use prefix::{
     collect_indices_where, collect_indices_where_into, exclusive_prefix_sum,

@@ -88,6 +88,102 @@ pub fn nth_chunk(len: usize, parts: usize, i: usize) -> Range<usize> {
     start..start + base + usize::from(i < extra)
 }
 
+/// Weighted variant of [`nth_chunk`]: split `[0, len)` into `parts`
+/// contiguous ranges balancing **weight** per chunk instead of item
+/// count. `cum(i)` is the cumulative weight of items `[0, i)` — monotone
+/// non-decreasing, and `cum(0)` need not be zero, so a CSR offset array
+/// (`cum = |e| pin_offset(e)`) plugs in directly with no prefix-sum pass.
+///
+/// Chunk `i` is `boundary(i)..boundary(i+1)` where `boundary(j)` is the
+/// smallest index whose cumulative share reaches `j/parts` of the total
+/// (found by binary search, so each call is `O(log len)` evaluations of
+/// `cum`). The split is a pure function of `(weights, parts)` — weighted
+/// chunk shapes are exactly as deterministic as uniform ones. Unlike
+/// [`nth_chunk`], a returned range may be **empty** when a single item
+/// outweighs an entire share; with all-zero total weight the split falls
+/// back to the uniform [`nth_chunk`].
+///
+/// This is the cache-aware assignment for skewed-degree instances
+/// (rmat): balancing *pins* per chunk instead of edges keeps one hot
+/// high-degree chunk from serializing the whole scan.
+pub fn nth_chunk_weighted(
+    len: usize,
+    parts: usize,
+    i: usize,
+    cum: impl Fn(usize) -> u64,
+) -> Range<usize> {
+    let parts = parts.clamp(1, len.max(1));
+    debug_assert!(i < parts);
+    let base = cum(0);
+    let total = cum(len) - base;
+    if total == 0 {
+        return nth_chunk(len, parts, i);
+    }
+    let boundary = |j: usize| -> usize {
+        if j == 0 {
+            return 0;
+        }
+        if j >= parts {
+            // Trailing zero-weight items belong to the last chunk.
+            return len;
+        }
+        let target = j as u128 * total as u128;
+        let (mut lo, mut hi) = (0usize, len);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if (cum(mid) - base) as u128 * parts as u128 >= target {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo
+    };
+    boundary(i)..boundary(i + 1)
+}
+
+/// Parallel for over **weight-balanced** index chunks:
+/// `f(chunk_index, range)` with ranges from [`nth_chunk_weighted`].
+///
+/// Chunk indices run over `0..num_chunks(len, num_threads())` — the same
+/// slot count as the uniform [`for_each_chunk`], so per-chunk scratch
+/// sized by [`num_chunks`] works unchanged — but empty ranges are
+/// skipped, never passed to `f`. Same disjoint-or-commutative contract as
+/// [`for_each_chunk`]; same schedule independence.
+pub fn for_each_chunk_weighted(
+    len: usize,
+    cum: impl Fn(usize) -> u64 + Sync,
+    f: impl Fn(usize, Range<usize>) + Sync,
+) {
+    let nt = num_threads().max(1);
+    if nt <= 1 || len < 2 {
+        if len > 0 {
+            f(0, 0..len);
+        }
+        return;
+    }
+    let parts = num_chunks(len, nt);
+    std::thread::scope(|s| {
+        let f = &f;
+        let cum = &cum;
+        let mut first = None;
+        for ci in 0..parts {
+            let r = nth_chunk_weighted(len, parts, ci, cum);
+            if r.is_empty() {
+                continue;
+            }
+            if first.is_none() {
+                first = Some((ci, r));
+            } else {
+                s.spawn(move || f(ci, r));
+            }
+        }
+        if let Some((ci, r)) = first {
+            f(ci, r);
+        }
+    });
+}
+
 /// Parallel for over index chunks: `f(chunk_index, range)`.
 ///
 /// `f` must only touch state that is disjoint per chunk or atomically
@@ -259,6 +355,86 @@ mod tests {
                     assert_eq!(nth_chunk(len, parts, i), *r, "len={len} parts={parts} i={i}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn weighted_chunks_cover_and_are_ordered() {
+        // Skewed weights (degree² profile), uniform weights, zero
+        // weights, and a single mega-item: ranges must tile [0, len) in
+        // order for every part count.
+        let profiles: Vec<Vec<u64>> = vec![
+            (0..257).map(|i: u64| (i % 17) * (i % 17)).collect(),
+            vec![1; 100],
+            vec![0; 40],
+            {
+                let mut w = vec![1u64; 64];
+                w[20] = 1_000_000;
+                w
+            },
+        ];
+        for weights in &profiles {
+            let len = weights.len();
+            let cum: Vec<u64> = std::iter::once(0)
+                .chain(weights.iter().scan(0u64, |a, &w| {
+                    *a += w;
+                    Some(*a)
+                }))
+                .collect();
+            for parts in [1usize, 2, 3, 7, 64, 500] {
+                let eff = num_chunks(len, parts);
+                let mut expect = 0usize;
+                for i in 0..eff {
+                    let r = nth_chunk_weighted(len, parts, i, |j| cum[j]);
+                    assert_eq!(r.start, expect, "parts={parts} i={i}");
+                    assert!(r.end >= r.start);
+                    expect = r.end;
+                }
+                assert_eq!(expect, len, "parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_chunks_balance_skewed_weights() {
+        // One item per index with weight ∈ {1, 1000}: uniform chunking
+        // puts all heavy items in one chunk; weighted chunking must keep
+        // every chunk's weight within 2× of the ideal share.
+        let len = 4096usize;
+        let w = |i: usize| if i < 64 { 1000u64 } else { 1 };
+        let cum: Vec<u64> = (0..=len).scan(0u64, |a, i| {
+            let v = *a;
+            if i < len {
+                *a += w(i);
+            }
+            Some(v)
+        }).collect();
+        let total: u64 = (0..len).map(w).sum();
+        let parts = 8usize;
+        let ideal = total / parts as u64;
+        for i in 0..parts {
+            let r = nth_chunk_weighted(len, parts, i, |j| cum[j]);
+            let cw: u64 = r.map(w).sum();
+            assert!(cw <= 2 * ideal + 1000, "chunk {i} weight {cw} vs ideal {ideal}");
+        }
+    }
+
+    #[test]
+    fn weighted_for_each_visits_all_across_threads() {
+        for nt in [1usize, 2, 4, 8] {
+            with_num_threads(nt, || {
+                let hits: Vec<AtomicU64> = (0..311).map(|_| AtomicU64::new(0)).collect();
+                // cum of weight(i) = i % 5 (includes zero-weight items).
+                let cum = |j: usize| -> u64 {
+                    (0..j).map(|i| (i % 5) as u64).sum()
+                };
+                for_each_chunk_weighted(311, cum, |_ci, r| {
+                    for i in r {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "nt={nt}");
+            });
         }
     }
 

@@ -149,8 +149,32 @@ fn collect_native(
     // cheaper once the partition tightens (see EXPERIMENTS.md §Perf).
     let boundary = crate::refinement::boundary_vertices_in(p, ctx.vertex_marks());
     let nt = crate::par::num_threads().max(1);
-    let ranges = crate::par::pool::chunk_ranges(boundary.len(), nt);
-    let n_chunks = ranges.len();
+    // Per-vertex scan work is O(deg(v)·k̄): chunk the boundary by total
+    // *degree* rather than vertex count, so one hub-heavy chunk can't
+    // serialize the scan. Chunks still tile the boundary in index order,
+    // so the flattened candidate list is bit-identical to a uniform
+    // split (and across thread counts).
+    let n_b = boundary.len();
+    let n_chunks = crate::par::pool::num_chunks(n_b, nt);
+    let ranges: Vec<_> = {
+        let hg = p.hypergraph();
+        let degree_cum = &mut ctx.degree_cum;
+        degree_cum.clear();
+        degree_cum.resize(n_b, 0);
+        {
+            let boundary = &boundary;
+            crate::par::for_each_chunk_mut(&mut degree_cum[..], |start, chunk| {
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    *slot = hg.degree(boundary[start + j]) as i64;
+                }
+            });
+        }
+        let total = crate::par::exclusive_prefix_sum_in_place(degree_cum);
+        let cum = |i: usize| if i == n_b { total as u64 } else { degree_cum[i] as u64 };
+        (0..n_chunks)
+            .map(|ci| crate::par::nth_chunk_weighted(n_b, n_chunks, ci, &cum))
+            .collect()
+    };
     {
         let (bufs, chunk_outs) = ctx.scan_scratch(n_chunks);
         let boundary = &boundary;

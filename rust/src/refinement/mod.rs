@@ -115,6 +115,10 @@ pub struct RefinementContext {
     pub candidates: Vec<MoveCandidate>,
     /// Mark bitset reused by boundary-vertex collection.
     vertex_marks: AtomicBitset,
+    /// Boundary-degree prefix sums for degree-weighted candidate-scan
+    /// chunking (see [`jet::candidates`]): hub-heavy boundaries would
+    /// serialize a uniform split on the chunk holding the hubs.
+    pub(crate) degree_cum: Vec<i64>,
     /// Reusable backing buffers for the per-level partition state.
     partition_scratch: Option<PartitionScratch>,
     /// Buffer pools for the parallel two-way flow refinements (terminal
@@ -138,6 +142,7 @@ impl RefinementContext {
             locked: Bitset::new(max_vertices),
             candidates: Vec::new(),
             vertex_marks: AtomicBitset::new(max_vertices),
+            degree_cum: Vec::new(),
             partition_scratch: Some(PartitionScratch::default()),
             flow: flow::FlowPools::new(),
             flow_rounds: flow::scheduler::FlowRoundScratch::default(),

@@ -202,29 +202,32 @@ pub fn approve_and_apply_in<'a>(
             .then(a.vertex.cmp(&b.vertex))
     });
     crate::par::bucket_boundaries_in(&s.arena, |m| m.target, &mut s.seg_bounds, &mut s.counts);
-    // Move weights, then segmented inclusive prefix sums per target.
+    // Move weights, then segmented inclusive prefix sums per target. The
+    // gather runs zipped over (weight slot, candidate) pairs — one bounds
+    // check per chunk instead of one per element, and a straight-line
+    // body the compiler can unroll.
     s.prefix.clear();
     s.prefix.resize(n, 0);
     {
         let arena = &s.arena;
         crate::par::for_each_chunk_mut(&mut s.prefix, |start, slice| {
-            for (j, w) in slice.iter_mut().enumerate() {
-                *w = hg.vertex_weight(arena[start + j].vertex);
+            for (w, m) in slice.iter_mut().zip(&arena[start..start + slice.len()]) {
+                *w = hg.vertex_weight(m.vertex);
             }
         });
     }
     crate::par::segmented_inclusive_prefix_sum_in_place(&mut s.prefix, &s.seg_bounds);
     // Per-target binary-search cutoff on the monotone prefix: the kept
-    // count is the partition point of `cumulative ≤ budget`.
+    // count is the partition point of `cumulative ≤ budget`. Zipped over
+    // the segment-boundary windows aligned with this chunk of cuts.
     let nseg = s.seg_bounds.len() - 1;
     s.cuts.clear();
     s.cuts.resize(nseg, 0);
     {
         let SelectionScratch { ref arena, ref seg_bounds, ref prefix, ref mut cuts, .. } = *s;
         crate::par::for_each_chunk_mut(cuts, |start, slice| {
-            for (j, cut) in slice.iter_mut().enumerate() {
-                let seg = start + j;
-                let (lo, hi) = (seg_bounds[seg] as usize, seg_bounds[seg + 1] as usize);
+            for (cut, sb) in slice.iter_mut().zip(seg_bounds[start..].windows(2)) {
+                let (lo, hi) = (sb[0] as usize, sb[1] as usize);
                 let t = arena[lo].target;
                 let budget = max_block_weights[t as usize] - p.block_weight(t);
                 *cut = prefix[lo..hi].partition_point(|&ps| ps <= budget) as i64;
@@ -259,8 +262,8 @@ pub fn shed_and_apply_in<'a>(
     {
         let arena = &s.arena;
         crate::par::for_each_chunk_mut(&mut s.prefix, |start, slice| {
-            for (j, w) in slice.iter_mut().enumerate() {
-                *w = hg.vertex_weight(arena[start + j].vertex);
+            for (w, m) in slice.iter_mut().zip(&arena[start..start + slice.len()]) {
+                *w = hg.vertex_weight(m.vertex);
             }
         });
     }

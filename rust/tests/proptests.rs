@@ -446,6 +446,123 @@ fn prop_hgr_parser_never_panics_on_garbage() {
 }
 
 #[test]
+fn prop_hgr_roundtrip_across_weight_variants_and_parsers() {
+    // Round-trip property for the PR-6 streaming loaders: serialize a
+    // random hypergraph through every `hgr_string` weight variant and
+    // parse it back with BOTH the streaming and the legacy parser. Pins
+    // must survive exactly; weights survive when the variant carries
+    // them and collapse to 1 when it doesn't.
+    use detpart::datastructures::Hypergraph;
+    fn check_pair(orig: &Hypergraph, back: &Hypergraph, ew: bool, vw: bool, tag: &str) {
+        assert_eq!(back.num_vertices(), orig.num_vertices(), "{tag}");
+        assert_eq!(back.num_edges(), orig.num_edges(), "{tag}");
+        for e in 0..orig.num_edges() as u32 {
+            assert_eq!(back.pins(e), orig.pins(e), "{tag}: edge {e}");
+            let want = if ew { orig.edge_weight(e) } else { 1 };
+            assert_eq!(back.edge_weight(e), want, "{tag}: edge weight {e}");
+        }
+        for v in 0..orig.num_vertices() as u32 {
+            let want = if vw { orig.vertex_weight(v) } else { 1 };
+            assert_eq!(back.vertex_weight(v), want, "{tag}: vertex weight {v}");
+        }
+    }
+    for_random_instances(1201, 12, &P, |seed, hg, _rng| {
+        for (ew, vw) in [(false, false), (true, false), (false, true), (true, true)] {
+            let text = detpart::io::hgr_string(hg, ew, vw);
+            let streamed = detpart::io::read_hgr_str(&text).unwrap();
+            let legacy = detpart::io::read_hgr_str_legacy(&text).unwrap();
+            check_pair(hg, &streamed, ew, vw, &format!("seed {seed} ew={ew} vw={vw} streaming"));
+            check_pair(hg, &legacy, ew, vw, &format!("seed {seed} ew={ew} vw={vw} legacy"));
+        }
+    });
+}
+
+#[test]
+fn prop_streaming_loader_matches_legacy_on_suite() {
+    // The streaming two-pass parser and the retained sequential parser
+    // must agree structure-for-structure on every mini-suite instance,
+    // at every thread count (chunk boundaries shift with nt; output
+    // must not).
+    for inst in detpart::gen::suite::mini_suite() {
+        let h = inst.build();
+        let text = detpart::io::hgr_string(&h, true, true);
+        let oracle = detpart::io::read_hgr_str_legacy(&text).unwrap();
+        for nt in [1usize, 2, 4] {
+            detpart::par::with_num_threads(nt, || {
+                let s = detpart::io::read_hgr_str(&text).unwrap();
+                assert_eq!(s.num_vertices(), oracle.num_vertices(), "{}", inst.name);
+                assert_eq!(s.num_edges(), oracle.num_edges(), "{}", inst.name);
+                for e in 0..oracle.num_edges() as u32 {
+                    assert_eq!(s.pins(e), oracle.pins(e), "{} nt={nt} edge {e}", inst.name);
+                    assert_eq!(s.edge_weight(e), oracle.edge_weight(e), "{} nt={nt}", inst.name);
+                }
+                for v in 0..oracle.num_vertices() as u32 {
+                    let name = inst.name;
+                    assert_eq!(s.vertex_weight(v), oracle.vertex_weight(v), "{name} nt={nt}");
+                    assert_eq!(s.incident_edges(v), oracle.incident_edges(v), "{name} nt={nt}");
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn prop_partitions_bit_identical_across_index_widths_loaders_and_threads() {
+    // THE PR-6 acceptance property (DESIGN.md §10): partitions are a
+    // pure function of (input, config, seed) — regardless of whether the
+    // CSR offsets are narrow (u32) or widened to u64, regardless of
+    // which loader built the hypergraph (streaming vs legacy), for the
+    // detjet / sdet / detflows presets, at 1/2/4 threads. Oracle = the
+    // generator-built (narrow) instance partitioned on one thread.
+    let instances: Vec<(&str, detpart::datastructures::Hypergraph)> = vec![
+        ("sat", detpart::gen::sat_hypergraph(150, 450, 5, 21)),
+        ("vlsi", detpart::gen::vlsi_netlist(14, 1.15, 33)),
+        ("rmat", detpart::gen::rmat_graph(7, 6, 5)),
+    ];
+    let presets: [(&str, fn(u64) -> Config); 3] = [
+        ("detjet", Config::detjet),
+        ("sdet", Config::sdet),
+        ("detflows", Config::detflows),
+    ];
+    for (name, hg) in &instances {
+        let text = detpart::io::hgr_string(hg, true, true);
+        // Three parsed routes to "the same" hypergraph, compared against
+        // the generator-built narrow oracle: streaming parse (narrow),
+        // streaming parse widened to u64, legacy parse widened.
+        let variants: Vec<(&str, detpart::datastructures::Hypergraph)> = vec![
+            ("streaming-wide", detpart::io::read_hgr_str(&text).unwrap().with_wide_offsets()),
+            ("streaming", detpart::io::read_hgr_str(&text).unwrap()),
+            ("legacy-wide", detpart::io::read_hgr_str_legacy(&text).unwrap().with_wide_offsets()),
+        ];
+        // Sanity: the parsed variants are structurally the original.
+        for (vtag, vh) in &variants {
+            for e in 0..hg.num_edges() as u32 {
+                assert_eq!(vh.pins(e), hg.pins(e), "{name}/{vtag}: edge {e}");
+            }
+        }
+        for (ptag, preset) in &presets {
+            let seed = 9u64;
+            let oracle = detpart::par::with_num_threads(1, || {
+                detpart::partitioner::partition(hg, 4, &preset(seed))
+            });
+            for (vtag, vh) in &variants {
+                for nt in [1usize, 2, 4] {
+                    let r = detpart::par::with_num_threads(nt, || {
+                        detpart::partitioner::partition(vh, 4, &preset(seed))
+                    });
+                    assert_eq!(
+                        (&r.part, r.km1),
+                        (&oracle.part, oracle.km1),
+                        "{name}/{ptag}/{vtag} nt={nt}: partition depends on \
+                         index width or loader path"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_quotient_graph_matches_bruteforce() {
     use detpart::datastructures::QuotientGraph;
     for_random_instances(909, 20, &P, |seed, hg, rng| {
