@@ -615,6 +615,103 @@ fn layout_micro() {
     }
 }
 
+/// The PR-7 kernel micro: the scalar oracle vs the blocked SoA
+/// affinity/gain kernels on the Jet candidate scan over an rmat suite —
+/// ns per vertex for each kernel, with identical candidate lists
+/// asserted per instance. CI gate: the blocked kernels must not lose to
+/// the scalar oracle in aggregate. Emits `BENCH_kernel.json`.
+fn kernel_micro() {
+    use detpart::config::KernelKind;
+    use detpart::datastructures::PartitionedHypergraph;
+    use detpart::refinement::RefinementContext;
+    use detpart::util::Timer;
+
+    println!("== micro: affinity/gain kernels (scalar oracle vs blocked SoA lanes) ==");
+    let threads = detpart::par::num_threads();
+    let k = 8usize;
+    let cases: Vec<(&str, detpart::datastructures::Hypergraph)> = vec![
+        ("rmat-12", detpart::gen::rmat_graph(12, 8, 7)),
+        ("rmat-13", detpart::gen::rmat_graph(13, 8, 9)),
+        ("rmat-14", detpart::gen::rmat_graph(14, 8, 11)),
+    ];
+    let reps = 7usize;
+    let mut totals = [0.0f64; 2]; // [scalar, blocked] suite ms (best-of-reps sums)
+    let mut rows: Vec<String> = Vec::new();
+    for (name, h) in &cases {
+        let n = h.num_vertices();
+        let part: Vec<u32> = (0..n)
+            .map(|v| (detpart::util::rng::hash64(17, v as u64) % k as u64) as u32)
+            .collect();
+        let p = PartitionedHypergraph::new(h, k, part);
+        let locked = detpart::util::Bitset::new(n);
+        let mut ctx = RefinementContext::new(k, n);
+        let mut out = Vec::new();
+        let mut ms = [0.0f64; 2];
+        let mut lists: Vec<Vec<detpart::refinement::MoveCandidate>> = Vec::new();
+        for (ki, kernel) in KernelKind::ALL.into_iter().enumerate() {
+            ctx.set_kernel(kernel);
+            // Warm pass sizes the scratch arenas; timed reps measure the
+            // steady state, best-of-reps cuts scheduler noise.
+            detpart::refinement::jet::candidates::collect_candidates_in(
+                &p, &locked, 0.75, None, &mut ctx, &mut out,
+            );
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let t = Timer::start();
+                detpart::refinement::jet::candidates::collect_candidates_in(
+                    &p, &locked, 0.75, None, &mut ctx, &mut out,
+                );
+                best = best.min(t.elapsed_s() * 1e3);
+            }
+            ms[ki] = best;
+            lists.push(out.clone());
+        }
+        assert_eq!(lists[0], lists[1], "{name}: blocked candidates diverged from scalar");
+        let per_v = |m: f64| m * 1e6 / n as f64; // ms → ns/vertex
+        totals[0] += ms[0];
+        totals[1] += ms[1];
+        println!(
+            "  {name}: {n} vertices, {} candidates | scalar {:.1} ns/v | blocked {:.1} ns/v ({:.2}x) | {threads} threads",
+            lists[0].len(),
+            per_v(ms[0]),
+            per_v(ms[1]),
+            ms[0] / ms[1].max(1e-9),
+        );
+        rows.push(format!(
+            "{{\"instance\":\"{name}\",\"vertices\":{n},\"candidates\":{},\"scalar_ns_per_vertex\":{:.2},\"blocked_ns_per_vertex\":{:.2},\"speedup\":{:.3}}}",
+            lists[0].len(),
+            per_v(ms[0]),
+            per_v(ms[1]),
+            ms[0] / ms[1].max(1e-9),
+        ));
+    }
+    let speedup = totals[0] / totals[1].max(1e-9);
+    // The CI gate: blocked must not lose to the scalar oracle over the
+    // suite (5% slack absorbs shared-runner timer jitter; a genuine
+    // regression sits far above it).
+    assert!(
+        totals[1] <= totals[0] * 1.05,
+        "blocked kernels slower than scalar over the suite: {:.3} ms vs {:.3} ms",
+        totals[1],
+        totals[0],
+    );
+    println!(
+        "  suite: scalar {:.3} ms vs blocked {:.3} ms ({speedup:.2}x)",
+        totals[0], totals[1]
+    );
+    let json = format!(
+        "{{\"bench\":\"kernel\",\"threads\":{threads},\"reps\":{reps},\"k\":{k},\"scalar_ms_total\":{:.4},\"blocked_ms_total\":{:.4},\"speedup\":{speedup:.3},\"cases\":[{}]}}\n",
+        totals[0],
+        totals[1],
+        rows.join(",")
+    );
+    let path = "BENCH_kernel.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+}
+
 fn micro_benchmarks() {
     use detpart::config::JetConfig;
     use detpart::datastructures::PartitionedHypergraph;
@@ -746,6 +843,7 @@ fn main() {
         engine_micro();
         flow_micro();
         layout_micro();
+        kernel_micro();
         return;
     }
     for name in names {
@@ -756,6 +854,7 @@ fn main() {
             engine_micro();
             flow_micro();
             layout_micro();
+            kernel_micro();
         } else if name == "contraction" {
             contraction_micro();
         } else if name == "selection" || name == "refinement" {
@@ -766,9 +865,11 @@ fn main() {
             flow_micro();
         } else if name == "layout" {
             layout_micro();
+        } else if name == "kernel" {
+            kernel_micro();
         } else if !figures::run_by_name(&ctx, name) {
             eprintln!(
-                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, refinement, engine, flow, layout, all"
+                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, refinement, engine, flow, layout, kernel, all"
             );
             std::process::exit(1);
         }

@@ -9,7 +9,7 @@
 //! detpart verify-determinism --instance <name> --k <k> [--preset ..]
 //! ```
 
-use crate::config::{Config, ConfigBuilder, FlowSolverKind, GainBackend, Preset};
+use crate::config::{Config, ConfigBuilder, FlowSolverKind, GainBackend, KernelKind, Preset};
 use crate::engine::{PartitionRequest, Partitioner};
 use crate::util::timer::PhaseTimer;
 use crate::util::{Context, Result};
@@ -59,6 +59,13 @@ pub fn dispatch(args: &[String]) -> Result<()> {
     if let Some(t) = flags.get("threads") {
         crate::par::set_num_threads(t.parse().context("--threads")?);
     }
+    if let Some(p) = flags.get("pin-threads") {
+        crate::par::set_thread_pinning(match p.as_str() {
+            "on" | "1" | "true" => true,
+            "off" | "0" | "false" => false,
+            other => bail!("unknown --pin-threads value {other:?} (want on|off)"),
+        });
+    }
     match cmd.as_str() {
         "partition" => cmd_partition(&flags),
         "generate" => cmd_generate(&flags),
@@ -79,6 +86,7 @@ fn print_usage() {
          \x20 detpart partition --input <f.hgr|f.graph> --k <k> [--preset detjet]\n\
          \x20          [--eps 0.03] [--seed 0] [--threads N]\n\
          \x20          [--gain-backend native|xla] [--flow-solver dinic|relabel]\n\
+         \x20          [--kernel scalar|blocked] [--pin-threads on|off]\n\
          \x20          [--output out.part]\n\
          \x20 detpart partition --instance <name> --k <k> ...\n\
          \x20 detpart generate --list\n\
@@ -123,6 +131,20 @@ fn build_config(flags: &HashMap<String, String>) -> Result<Config> {
             "xla" => GainBackend::Xla,
             other => bail!("unknown gain backend {other:?}"),
         });
+    }
+    match flags.get("kernel") {
+        Some(kn) => {
+            let kind = KernelKind::from_name(kn)
+                .ok_or_else(|| err!("unknown kernel {kn:?} (want scalar|blocked)"))?;
+            builder = builder.kernel(kind);
+        }
+        // The xla backend ships its own tiled gain kernels, so without an
+        // explicit --kernel the blocked default downgrades to scalar
+        // instead of tripping the Blocked+Xla validation error.
+        None if flags.get("gain-backend").map(String::as_str) == Some("xla") => {
+            builder = builder.kernel(KernelKind::Scalar);
+        }
+        None => {}
     }
     if let Some(s) = flags.get("flow-solver") {
         let kind = FlowSolverKind::from_name(s)
@@ -313,6 +335,57 @@ mod tests {
             "dinic",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn kernel_flag_selects_and_rejects() {
+        // A full run with the scalar oracle kernel works end to end.
+        dispatch(&s(&[
+            "partition",
+            "--instance",
+            "spm2d-64",
+            "--k",
+            "2",
+            "--preset",
+            "sdet",
+            "--kernel",
+            "scalar",
+        ]))
+        .unwrap();
+        // Unknown kernel names are rejected at parse time.
+        assert!(dispatch(&s(&[
+            "partition",
+            "--instance",
+            "spm2d-64",
+            "--k",
+            "2",
+            "--kernel",
+            "bogus",
+        ]))
+        .is_err());
+        // Explicitly asking for blocked kernels with the xla backend
+        // surfaces the config validation error instead of running.
+        assert!(dispatch(&s(&[
+            "partition",
+            "--instance",
+            "spm2d-64",
+            "--k",
+            "2",
+            "--gain-backend",
+            "xla",
+            "--kernel",
+            "blocked",
+        ]))
+        .is_err());
+        // Without an explicit --kernel the xla backend downgrades the
+        // blocked default to scalar rather than erroring.
+        let mut f = HashMap::new();
+        f.insert("gain-backend".to_string(), "xla".to_string());
+        assert_eq!(build_config(&f).unwrap().refinement.kernel, KernelKind::Scalar);
+        assert_eq!(
+            build_config(&HashMap::new()).unwrap().refinement.kernel,
+            KernelKind::Blocked
+        );
     }
 
     #[test]

@@ -38,6 +38,49 @@ pub enum GainBackend {
     Xla,
 }
 
+/// Which CPU kernel implementation the native refinement hot path runs —
+/// the innermost per-vertex × per-block affinity/gain loops shared by the
+/// Jet candidate scan, synchronous LP and the rebalancer priority scan.
+/// Both kinds produce **bit-identical** partitions (the blocked kernels
+/// reduce in the same fixed block order as the scalar walk; asserted by
+/// `prop_blocked_kernels_match_scalar_oracle`), so this knob trades
+/// speed, not results.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Row-at-a-time scalar walk over the touched-block list — the
+    /// retained determinism oracle.
+    Scalar,
+    /// SoA lane-blocked batch kernels: dense per-block accumulator rows
+    /// gathered for several vertices per pass, branch-free packed
+    /// (gain, block) reductions, written in autovectorization-friendly
+    /// form (the default).
+    Blocked,
+}
+
+impl KernelKind {
+    /// Every kernel kind, oracle first.
+    pub const ALL: [KernelKind; 2] = [KernelKind::Scalar, KernelKind::Blocked];
+
+    /// The kernel's canonical (CLI / CSV / report) name.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Blocked => "blocked",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn from_name(name: &str) -> Option<KernelKind> {
+        KernelKind::ALL.into_iter().find(|k| k.name() == name)
+    }
+}
+
+impl fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// The named configuration presets of the paper's evaluation. Replaces
 /// the former free-form `Config.name` string, so preset lookup, report
 /// labels and [`Preset::ALL`] cannot drift apart.
@@ -350,6 +393,11 @@ pub struct RefinementConfig {
     pub flows: Option<FlowConfig>,
     /// Backend for Jet's dense candidate-selection arithmetic.
     pub gain_backend: GainBackend,
+    /// CPU kernel implementation for the native affinity/gain hot path
+    /// (ignored by the XLA backend, which ships its own kernels —
+    /// selecting [`KernelKind::Blocked`] together with
+    /// [`GainBackend::Xla`] is a validation error).
+    pub kernel: KernelKind,
 }
 
 impl Default for RefinementConfig {
@@ -360,6 +408,7 @@ impl Default for RefinementConfig {
             jet: JetConfig::default(),
             flows: None,
             gain_backend: GainBackend::Native,
+            kernel: KernelKind::Blocked,
         }
     }
 }
@@ -400,6 +449,11 @@ pub enum ConfigError {
     ),
     /// The coarsening contraction limit per block is zero.
     ZeroContractionLimit,
+    /// [`KernelKind::Blocked`] was combined with [`GainBackend::Xla`]:
+    /// the XLA backend ships its own tiled kernels and bypasses the
+    /// native blocked layer, so the combination is contradictory — pick
+    /// one vectorized path.
+    KernelBackendMismatch,
 }
 
 impl fmt::Display for ConfigError {
@@ -431,6 +485,14 @@ impl fmt::Display for ConfigError {
             }
             ConfigError::ZeroContractionLimit => {
                 write!(f, "coarsening contraction limit per block must be >= 1")
+            }
+            ConfigError::KernelBackendMismatch => {
+                write!(
+                    f,
+                    "kernel 'blocked' requires the native gain backend \
+                     (the xla backend ships its own tiled kernels; use \
+                     kernel 'scalar' with it)"
+                )
             }
         }
     }
@@ -607,6 +669,11 @@ impl Config {
                 return Err(ConfigError::InvalidFlowConfig("max_rounds must be >= 1"));
             }
         }
+        if self.refinement.kernel == KernelKind::Blocked
+            && self.refinement.gain_backend == GainBackend::Xla
+        {
+            return Err(ConfigError::KernelBackendMismatch);
+        }
         Ok(())
     }
 }
@@ -670,6 +737,15 @@ impl ConfigBuilder {
     /// Override the gain backend for Jet's candidate selection.
     pub fn gain_backend(mut self, backend: GainBackend) -> Self {
         self.cfg.refinement.gain_backend = backend;
+        self
+    }
+
+    /// Select the CPU kernel implementation for the native refinement
+    /// hot path (`Blocked` is the default; `Scalar` is the determinism
+    /// oracle). [`build`](Self::build) rejects `Blocked` combined with
+    /// [`GainBackend::Xla`].
+    pub fn kernel(mut self, kernel: KernelKind) -> Self {
+        self.cfg.refinement.kernel = kernel;
         self
     }
 
@@ -799,6 +875,49 @@ mod tests {
             .build()
             .unwrap();
         assert!(cfg.refinement.flows.is_none());
+    }
+
+    #[test]
+    fn kernel_kinds_resolve_and_builder_applies() {
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::from_name(k.name()), Some(k));
+            assert_eq!(k.to_string(), k.name());
+        }
+        assert!(KernelKind::from_name("nope").is_none());
+        assert_eq!(RefinementConfig::default().kernel, KernelKind::Blocked);
+        let cfg = ConfigBuilder::new(Preset::DetJet)
+            .kernel(KernelKind::Scalar)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.refinement.kernel, KernelKind::Scalar);
+        // Every preset validates under both kernels (native backend).
+        for p in Preset::ALL {
+            for k in KernelKind::ALL {
+                ConfigBuilder::new(p).kernel(k).build().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_backend_mismatch_is_rejected() {
+        // Blocked (the default) contradicts the XLA backend…
+        assert_eq!(
+            ConfigBuilder::new(Preset::DetJet)
+                .gain_backend(GainBackend::Xla)
+                .kernel(KernelKind::Blocked)
+                .build(),
+            Err(ConfigError::KernelBackendMismatch)
+        );
+        // …while Scalar + Xla is the supported pairing.
+        let cfg = ConfigBuilder::new(Preset::DetJet)
+            .gain_backend(GainBackend::Xla)
+            .kernel(KernelKind::Scalar)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.refinement.gain_backend, GainBackend::Xla);
+        assert_eq!(cfg.refinement.kernel, KernelKind::Scalar);
+        let e = ConfigError::KernelBackendMismatch;
+        assert!(e.to_string().contains("blocked"));
     }
 
     #[test]

@@ -160,6 +160,40 @@ impl PackedPinCounts {
         }
     }
 
+    /// Dense, branch-free form of the row gather for the blocked
+    /// kernels ([`crate::refinement::kernel`]): for every entry
+    /// `j ∈ [0, k)` of the row at `base`, add `w` to `aff[j]` and set
+    /// `present[j]` to all-ones iff the packed count is non-zero. The
+    /// word walk is the same ascending order as
+    /// [`for_each_set_in_row`](Self::for_each_set_in_row) — and since
+    /// the dense accumulators are plain exact integer sums, the order
+    /// (and the all-zero-word skip, kept purely for speed) cannot
+    /// change the result. The inner lane unpack is a fixed-bound loop
+    /// with a straight-line masked body: no per-entry branching for the
+    /// autovectorizer to trip on.
+    #[inline]
+    fn accumulate_row_dense(&self, base: usize, k: usize, w: i64, aff: &mut [i64], present: &mut [i64]) {
+        let mut j = 0usize;
+        while j < k {
+            let idx = base + j;
+            let wi = idx / self.per_word;
+            let lane = idx % self.per_word;
+            let in_word = (self.per_word - lane).min(k - j);
+            let mut word = self.words[wi].load(Ordering::Relaxed) >> (lane as u32 * self.bits);
+            if word == 0 {
+                j += in_word;
+                continue;
+            }
+            for t in 0..in_word {
+                let m = ((word & self.mask != 0) as i64).wrapping_neg();
+                aff[j + t] += w & m;
+                present[j + t] |= m;
+                word >>= self.bits;
+            }
+            j += in_word;
+        }
+    }
+
     /// Bits per entry.
     fn bits(&self) -> u32 {
         self.bits
@@ -628,6 +662,47 @@ impl<'a> PartitionedHypergraph<'a> {
                         buf.add(b as BlockId, w);
                     }
                 });
+            }
+        }
+        (w_total, benefit, internal)
+    }
+
+    /// Dense-row counterpart of
+    /// [`collect_affinities`](Self::collect_affinities) for the blocked
+    /// kernels: accumulates into full `k`-wide rows instead of a
+    /// touched-list buffer. After the call, for every block `b`:
+    /// * `aff[b]     += Σ ω(e)·[φ_e(b)>0]` over the **cut** edges of `v`
+    ///   (including `b = s` — callers mask the current block out), and
+    /// * `present[b] |= -1` iff some cut edge of `v` has `φ_e(b)>0`.
+    ///
+    /// `present` (not `aff ≠ 0`) delimits the candidate set because zero
+    /// edge weights are legal: the scalar path's touched list records a
+    /// block the moment a cut edge covers it, even at weight 0, and the
+    /// oracle equivalence needs exactly that set. Rows must be
+    /// zero-initialized and at least `k` long; both are written densely,
+    /// so the caller batches several vertices per pass and reuses the
+    /// rows (see `refinement::kernel`). Returns the same
+    /// `(w_total, benefit, internal)` triple as the scalar walk.
+    pub(crate) fn collect_affinities_dense(
+        &self,
+        v: VertexId,
+        aff: &mut [i64],
+        present: &mut [i64],
+    ) -> (Weight, Weight, Weight) {
+        let s = self.part(v);
+        let mut w_total = 0;
+        let mut benefit = 0;
+        let mut internal = 0;
+        for &e in self.hg.incident_edges(v) {
+            let w = self.hg.edge_weight(e);
+            w_total += w;
+            // Branch-free split of w into benefit/internal on φ_e(s)=1
+            // (φ_e(s) ≥ 1 always — v itself is a pin in s).
+            let is_sole = (self.pin_count(e, s) == 1) as i64;
+            benefit += w & is_sole.wrapping_neg();
+            internal += w & (is_sole - 1);
+            if self.connectivity(e) > 1 {
+                self.pin_counts.accumulate_row_dense(e as usize * self.k, self.k, w, aff, present);
             }
         }
         (w_total, benefit, internal)

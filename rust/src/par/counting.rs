@@ -142,10 +142,16 @@ pub fn stable_counting_scatter<I: CsrIndex>(
         }
         return;
     }
-    // Phase 1: per-chunk key counts (disjoint matrix rows).
+    // Phase 1: per-chunk key counts (disjoint matrix rows). Rows are
+    // padded to cache-line stride (16 × u32 = 64 B): without padding,
+    // the tail of row `ci` and the head of row `ci+1` share a line, and
+    // two workers incrementing near the boundary ping-pong it (false
+    // sharing) — measurable on small-key contractions where the whole
+    // matrix is a few lines.
+    let row_stride = num_keys.div_ceil(16) * 16;
     let counts = &mut scratch.counts;
     counts.clear();
-    counts.resize(nchunks * num_keys, 0);
+    counts.resize(nchunks * row_stride, 0);
     {
         let counts_ptr = SendPtr(counts.as_mut_ptr());
         let cref = &counts_ptr;
@@ -154,7 +160,7 @@ pub fn stable_counting_scatter<I: CsrIndex>(
                 // SAFETY: row `ci` is owned exclusively by this iteration
                 // (chunk index sets are disjoint).
                 let row = unsafe {
-                    std::slice::from_raw_parts_mut(cref.0.add(ci * num_keys), num_keys)
+                    std::slice::from_raw_parts_mut(cref.0.add(ci * row_stride), num_keys)
                 };
                 for i in nth_chunk(len, nt, ci) {
                     row[keys[i] as usize] += 1;
@@ -176,7 +182,7 @@ pub fn stable_counting_scatter<I: CsrIndex>(
                     // SAFETY: column k is touched only by this iteration
                     // (key chunks are disjoint).
                     unsafe {
-                        let p = cref.0.add(ci * num_keys + k);
+                        let p = cref.0.add(ci * row_stride + k);
                         let v = *p;
                         *p = acc;
                         acc += v;
@@ -208,7 +214,7 @@ pub fn stable_counting_scatter<I: CsrIndex>(
                     // SAFETY: row ci is owned by this chunk iteration;
                     // each destination index is written exactly once.
                     unsafe {
-                        let cur = cref.0.add(ci * num_keys + k);
+                        let cur = cref.0.add(ci * row_stride + k);
                         let pos = offsets[k].to_usize() + *cur as usize;
                         *cur += 1;
                         *oref.0.add(pos) = values[i];

@@ -28,7 +28,8 @@ pub mod sort;
 pub use counting::{bucket_boundaries_in, stable_counting_scatter, CountingScratch, CsrIndex};
 pub use pool::{
     for_each_chunk, for_each_chunk_in, for_each_chunk_mut, for_each_chunk_weighted, map_indexed,
-    nth_chunk_weighted, num_threads, parallel_reduce, set_num_threads, with_num_threads,
+    nth_chunk_weighted, num_threads, parallel_reduce, set_num_threads, set_thread_pinning,
+    thread_pinning_enabled, with_num_threads, PaddedAtomicI64,
 };
 pub use prefix::{
     collect_indices_where, collect_indices_where_into, exclusive_prefix_sum,

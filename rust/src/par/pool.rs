@@ -7,9 +7,186 @@
 //! runs are tested against.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicUsize, Ordering};
 
 static NUM_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// An `AtomicI64` alone on its cache line. Per-chunk counter arrays
+/// (selection staging counts, push-relabel excess cells) are written by
+/// different workers at adjacent indices; without padding those writes
+/// ping-pong the shared line between cores (false sharing). 64-byte
+/// alignment gives every counter its own line on x86-64 and most aarch64
+/// parts (128-byte-line machines still halve the collisions).
+#[repr(align(64))]
+#[derive(Default, Debug)]
+pub struct PaddedAtomicI64(
+    /// The counter itself (also reachable through `Deref`).
+    pub AtomicI64,
+);
+
+impl PaddedAtomicI64 {
+    /// A padded counter starting at `v`.
+    pub fn new(v: i64) -> Self {
+        PaddedAtomicI64(AtomicI64::new(v))
+    }
+}
+
+impl std::ops::Deref for PaddedAtomicI64 {
+    type Target = AtomicI64;
+
+    fn deref(&self) -> &AtomicI64 {
+        &self.0
+    }
+}
+
+/// Worker-thread pinning policy: 0 = unset (read `DETPART_PIN` once),
+/// 1 = off, 2 = on.
+static PIN_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Enable/disable pinning of spawned worker threads to CPUs (overrides
+/// the `DETPART_PIN` environment variable). Off by default: pinning
+/// helps steady-state refinement loops on dedicated machines and NUMA
+/// boxes, but hurts when the partitioner shares cores. Placement is a
+/// locality hint only — results are bit-identical either way.
+pub fn set_thread_pinning(on: bool) {
+    PIN_WORKERS.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// Whether spawned workers get pinned (see [`set_thread_pinning`]).
+pub fn thread_pinning_enabled() -> bool {
+    match PIN_WORKERS.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let on = std::env::var_os("DETPART_PIN").is_some_and(|v| !v.is_empty() && v != "0");
+            PIN_WORKERS.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Pin the calling **spawned** worker to the CPU owning chunk `slot`.
+///
+/// Called at the top of every chunk-worker closure the pool (and the
+/// refiners' hand-rolled scopes) spawn. Chunk ranges are pure functions
+/// of `(len, parts)` and `slot` is the chunk index, so across rounds the
+/// same CPU walks the same CSR/pin-count range — stable chunk→CPU
+/// ownership, which is what makes cache and NUMA page reuse work even
+/// though `std::thread::scope` creates fresh OS threads per call. The
+/// caller's inline chunk is deliberately never pinned: that affinity
+/// would outlive the parallel region and serialize the whole process
+/// onto one CPU.
+#[inline]
+pub(crate) fn pin_worker(slot: usize) {
+    if thread_pinning_enabled() {
+        affinity::pin_slot(slot);
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod affinity {
+    //! Raw `sched_{get,set}affinity` — no libc, keeping the zero-dep
+    //! rule. Failures are ignored throughout: pinning is a locality
+    //! hint, never load-bearing.
+    use std::sync::OnceLock;
+
+    /// 16 × u64 = 1024 CPUs, the kernel's default cpumask width.
+    const MASK_WORDS: usize = 16;
+
+    #[cfg(target_arch = "x86_64")]
+    const SYS_SETAFFINITY: usize = 203;
+    #[cfg(target_arch = "x86_64")]
+    const SYS_GETAFFINITY: usize = 204;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_SETAFFINITY: usize = 122;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_GETAFFINITY: usize = 123;
+
+    #[cfg(target_arch = "x86_64")]
+    #[inline]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") nr => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") nr,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// CPUs this process may run on (ascending), enumerated once from
+    /// the process affinity mask — respects cgroup/taskset restrictions.
+    pub(super) fn allowed_cpus() -> &'static [u32] {
+        static ALLOWED: OnceLock<Vec<u32>> = OnceLock::new();
+        ALLOWED.get_or_init(|| {
+            let mut mask = [0u64; MASK_WORDS];
+            let r = unsafe {
+                syscall3(
+                    SYS_GETAFFINITY,
+                    0, // pid 0 = calling thread
+                    std::mem::size_of_val(&mask),
+                    mask.as_mut_ptr() as usize,
+                )
+            };
+            if r <= 0 {
+                return Vec::new();
+            }
+            let mut cpus = Vec::new();
+            for (w, &word) in mask.iter().enumerate() {
+                for bit in 0..64 {
+                    if word & (1u64 << bit) != 0 {
+                        cpus.push((w * 64 + bit) as u32);
+                    }
+                }
+            }
+            cpus
+        })
+    }
+
+    pub(super) fn pin_slot(slot: usize) {
+        let cpus = allowed_cpus();
+        if cpus.is_empty() {
+            return;
+        }
+        let cpu = cpus[slot % cpus.len()] as usize;
+        let mut mask = [0u64; MASK_WORDS];
+        mask[cpu / 64] = 1u64 << (cpu % 64);
+        unsafe {
+            syscall3(
+                SYS_SETAFFINITY,
+                0,
+                std::mem::size_of_val(&mask),
+                mask.as_ptr() as usize,
+            );
+        }
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod affinity {
+    /// Non-Linux (or exotic-arch) fallback: placement stays with the OS.
+    pub(super) fn pin_slot(_slot: usize) {}
+}
 
 /// Current worker-thread count (defaults to `available_parallelism`).
 pub fn num_threads() -> usize {
@@ -175,7 +352,10 @@ pub fn for_each_chunk_weighted(
             if first.is_none() {
                 first = Some((ci, r));
             } else {
-                s.spawn(move || f(ci, r));
+                s.spawn(move || {
+                    pin_worker(ci);
+                    f(ci, r)
+                });
             }
         }
         if let Some((ci, r)) = first {
@@ -214,7 +394,10 @@ pub fn for_each_chunk_in(threads: usize, len: usize, f: impl Fn(usize, Range<usi
         let mut iter = chunks.into_iter().enumerate();
         let first = iter.next();
         for (ci, r) in iter {
-            s.spawn(move || f(ci, r));
+            s.spawn(move || {
+                pin_worker(ci);
+                f(ci, r)
+            });
         }
         if let Some((ci, r)) = first {
             f(ci, r);
@@ -245,7 +428,10 @@ pub fn for_each_chunk_mut<T: Send>(data: &mut [T], f: impl Fn(usize, &mut [T]) +
             if i == 0 {
                 first = Some((start, head));
             } else {
-                s.spawn(move || f(start, head));
+                s.spawn(move || {
+                    pin_worker(i);
+                    f(start, head)
+                });
             }
         }
         if let Some((start, head)) = first {
@@ -307,6 +493,7 @@ pub fn parallel_reduce<A: Send>(
                     first = Some((slot, r));
                 } else {
                     s.spawn(move || {
+                        pin_worker(i);
                         *slot = Some(chunk_fn(r, identity()));
                     });
                 }
@@ -510,5 +697,45 @@ mod tests {
         let before = num_threads();
         with_num_threads(3, || assert_eq!(num_threads(), 3));
         assert_eq!(num_threads(), before);
+    }
+
+    #[test]
+    fn padded_atomic_has_exclusive_cache_lines() {
+        assert_eq!(std::mem::align_of::<PaddedAtomicI64>(), 64);
+        assert_eq!(std::mem::size_of::<PaddedAtomicI64>(), 64);
+        let cells: Vec<PaddedAtomicI64> = (0..4).map(|_| PaddedAtomicI64::new(0)).collect();
+        // Adjacent cells land 64 bytes apart → no shared line.
+        let a = &cells[0] as *const _ as usize;
+        let b = &cells[1] as *const _ as usize;
+        assert_eq!(b - a, 64);
+        cells[1].fetch_add(5, Ordering::Relaxed);
+        assert_eq!(cells[1].load(Ordering::Relaxed), 5); // Deref works
+    }
+
+    #[test]
+    fn pinned_workers_produce_identical_results() {
+        // Pinning is a placement hint: outputs must be bit-identical with
+        // it on, and enabling it must never crash (including on kernels
+        // or sandboxes where the affinity syscalls fail).
+        let data: Vec<u64> = (0..5000).map(|i| (i * 2654435761) % 997).collect();
+        let reduce = || {
+            parallel_reduce(
+                data.len(),
+                || 0u64,
+                |r, mut acc| {
+                    for i in r {
+                        acc += data[i];
+                    }
+                    acc
+                },
+                |a, b| a + b,
+            )
+        };
+        let unpinned = reduce();
+        set_thread_pinning(true);
+        let pinned = with_num_threads(4, reduce);
+        set_thread_pinning(false);
+        assert_eq!(pinned, unpinned);
+        assert!(!thread_pinning_enabled());
     }
 }

@@ -110,8 +110,11 @@ pub(crate) fn direct_kway(
 
     // The session's refinement context: one scratch arena for the whole
     // uncoarsening, pre-reserved at the finest level's dimensions so no
-    // level — and no warm repeat request — reallocates.
+    // level — and no warm repeat request — reallocates. Contexts are
+    // cached across requests, so the kernel choice is re-stamped from the
+    // active config on every acquisition.
     let ctx = scratch.refinement(k, hg);
+    ctx.set_kernel(cfg.refinement.kernel);
 
     // Refine at the coarsest level, then uncoarsen level by level. The
     // `level_tag` seeds per-level hashing (coarsest = 0, then li + 1 —
@@ -232,6 +235,7 @@ pub(crate) fn recursive_bipartitioning_driver(
     // rebalancer's selection arenas come from the engine, not fresh
     // allocations.
     let ctx = scratch.refinement(k, hg);
+    ctx.set_kernel(cfg.refinement.kernel);
     let p = PartitionedHypergraph::new_with_scratch(hg, k, part, ctx.take_partition_scratch());
     if !p.is_balanced(cfg.eps) {
         progress.scope("refinement-lp", || {
@@ -326,6 +330,7 @@ fn bipartition_multilevel(
         crate::metrics::max_block_weight(total - target0, eps_split),
     ];
     let ctx = scratch.rb_split(hg);
+    ctx.set_kernel(cfg.refinement.kernel);
     let mut refine2 =
         |h: &Hypergraph, pt: &mut Vec<BlockId>, progress: &mut Progress<'_>, ctx: &mut RefinementContext| {
             let p = PartitionedHypergraph::new_with_scratch(

@@ -221,7 +221,7 @@ fn push_relabel(
                 let net_ref: &FlowNetwork = net;
                 let ecap_ref: &[Cap] = ecap;
                 let flow_ref: &[AtomicI64] = flow;
-                let excess_ref: &[AtomicI64] = excess;
+                let excess_ref: &[crate::par::PaddedAtomicI64] = excess;
                 let height_ref: &[AtomicU32] = height;
                 let queued_ref: &[AtomicU8] = queued;
                 let nptr = &next_ptr;
@@ -337,7 +337,7 @@ fn discharge(
     net: &FlowNetwork,
     ecap: &[Cap],
     flow: &[AtomicI64],
-    excess: &[AtomicI64],
+    excess: &[crate::par::PaddedAtomicI64],
     height: &[AtomicU32],
     queued: &[AtomicU8],
     chunk_next: &mut Vec<u32>,

@@ -118,8 +118,14 @@ pub struct SolverScratch {
     /// Effective arc capacities (`∞` terminal arcs clamped to just above
     /// the maximum possible flow value, see `relabel.rs`).
     pub(crate) ecap: Vec<Cap>,
-    /// Per-node excess (atomic: concurrent pushes add, the owner drains).
-    pub(crate) excess: Vec<AtomicI64>,
+    /// Per-node excess, cache-line padded (atomic: concurrent pushes
+    /// add, the owner drains). Padding matters here more than anywhere:
+    /// every worker's pushes toward the sink hammer `excess[SINK]` with
+    /// SeqCst RMWs, and without padding that line also holds the excess
+    /// of nodes 2..7 — every drain of those ping-pongs against the
+    /// hottest counter in the solve. Flow networks are region-sized
+    /// (bounded by the flow config's max region), so 64 B/node is cheap.
+    pub(crate) excess: Vec<crate::par::PaddedAtomicI64>,
     /// Per-node height labels (written only at round barriers).
     pub(crate) height: Vec<AtomicU32>,
     /// Active-queue membership flags (the lost-wakeup guard).
@@ -152,7 +158,7 @@ impl SolverScratch {
         self.ecap.clear();
         self.ecap.resize(m, 0);
         self.excess.clear();
-        self.excess.resize_with(n, || AtomicI64::new(0));
+        self.excess.resize_with(n, Default::default);
         self.height.clear();
         self.height.resize_with(n, || AtomicU32::new(0));
         self.queued.clear();

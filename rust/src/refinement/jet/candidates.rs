@@ -131,9 +131,44 @@ pub fn collect_candidates_in(
 ) {
     out.clear();
     match selector {
-        None => collect_native(p, locked, tau, ctx, out),
+        None => match ctx.kernel() {
+            crate::config::KernelKind::Scalar => collect_native(p, locked, tau, ctx, out),
+            crate::config::KernelKind::Blocked => {
+                collect_native_blocked(p, locked, tau, ctx, out)
+            }
+        },
         Some(s) => out.extend(collect_tiled(p, locked, tau, s)),
     }
+}
+
+/// Degree-weighted chunking of the boundary (shared by the scalar and
+/// blocked scans, so both flatten bit-identical candidate lists): chunks
+/// tile the boundary in index order, split by cumulative degree.
+fn boundary_chunk_ranges(
+    p: &PartitionedHypergraph,
+    ctx: &mut RefinementContext,
+    boundary: &[VertexId],
+) -> Vec<std::ops::Range<usize>> {
+    let nt = crate::par::num_threads().max(1);
+    // Per-vertex scan work is O(deg(v)·k̄): chunk the boundary by total
+    // *degree* rather than vertex count, so one hub-heavy chunk can't
+    // serialize the scan.
+    let n_b = boundary.len();
+    let n_chunks = crate::par::pool::num_chunks(n_b, nt);
+    let hg = p.hypergraph();
+    let degree_cum = &mut ctx.degree_cum;
+    degree_cum.clear();
+    degree_cum.resize(n_b, 0);
+    crate::par::for_each_chunk_mut(&mut degree_cum[..], |start, chunk| {
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            *slot = hg.degree(boundary[start + j]) as i64;
+        }
+    });
+    let total = crate::par::exclusive_prefix_sum_in_place(degree_cum);
+    let cum = |i: usize| if i == n_b { total as u64 } else { degree_cum[i] as u64 };
+    (0..n_chunks)
+        .map(|ci| crate::par::nth_chunk_weighted(n_b, n_chunks, ci, &cum))
+        .collect()
 }
 
 fn collect_native(
@@ -148,41 +183,17 @@ fn collect_native(
     // scan is restricted to them — semantically identical, and far
     // cheaper once the partition tightens (see EXPERIMENTS.md §Perf).
     let boundary = crate::refinement::boundary_vertices_in(p, ctx.vertex_marks());
-    let nt = crate::par::num_threads().max(1);
-    // Per-vertex scan work is O(deg(v)·k̄): chunk the boundary by total
-    // *degree* rather than vertex count, so one hub-heavy chunk can't
-    // serialize the scan. Chunks still tile the boundary in index order,
-    // so the flattened candidate list is bit-identical to a uniform
-    // split (and across thread counts).
-    let n_b = boundary.len();
-    let n_chunks = crate::par::pool::num_chunks(n_b, nt);
-    let ranges: Vec<_> = {
-        let hg = p.hypergraph();
-        let degree_cum = &mut ctx.degree_cum;
-        degree_cum.clear();
-        degree_cum.resize(n_b, 0);
-        {
-            let boundary = &boundary;
-            crate::par::for_each_chunk_mut(&mut degree_cum[..], |start, chunk| {
-                for (j, slot) in chunk.iter_mut().enumerate() {
-                    *slot = hg.degree(boundary[start + j]) as i64;
-                }
-            });
-        }
-        let total = crate::par::exclusive_prefix_sum_in_place(degree_cum);
-        let cum = |i: usize| if i == n_b { total as u64 } else { degree_cum[i] as u64 };
-        (0..n_chunks)
-            .map(|ci| crate::par::nth_chunk_weighted(n_b, n_chunks, ci, &cum))
-            .collect()
-    };
+    let ranges = boundary_chunk_ranges(p, ctx, &boundary);
+    let n_chunks = ranges.len();
     {
         let (bufs, chunk_outs) = ctx.scan_scratch(n_chunks);
         let boundary = &boundary;
         let slots: Vec<_> =
             chunk_outs.iter_mut().zip(bufs.iter_mut()).zip(ranges).collect();
         std::thread::scope(|s| {
-            for ((slot, buf), range) in slots {
+            for (ci, ((slot, buf), range)) in slots.into_iter().enumerate() {
                 s.spawn(move || {
+                    crate::par::pool::pin_worker(ci);
                     for i in range {
                         let v = boundary[i];
                         if locked.get(v as usize) {
@@ -217,6 +228,43 @@ fn collect_native(
     }
     // Flatten in chunk order at chunked-prefix offsets — the parallel,
     // deterministic replacement for the old sequential `append` loop.
+    ctx.flatten_chunks_to(n_chunks, out);
+}
+
+/// Blocked-kernel twin of [`collect_native`]: same boundary set, same
+/// degree-weighted chunking, same emission order — the per-vertex scan
+/// runs through [`crate::refinement::kernel::jet_scan_blocked`]'s SoA
+/// lane batches instead of the touched-list walk. Bit-identical output
+/// (asserted by `blocked_scan_matches_scalar` below and the end-to-end
+/// proptest).
+fn collect_native_blocked(
+    p: &PartitionedHypergraph,
+    locked: &Bitset,
+    tau: f64,
+    ctx: &mut RefinementContext,
+    out: &mut Vec<MoveCandidate>,
+) {
+    let boundary = crate::refinement::boundary_vertices_in(p, ctx.vertex_marks());
+    let ranges = boundary_chunk_ranges(p, ctx, &boundary);
+    let n_chunks = ranges.len();
+    {
+        let (kernels, chunk_outs) = ctx.blocked_scan_scratch(n_chunks);
+        let boundary = &boundary;
+        let slots: Vec<_> =
+            chunk_outs.iter_mut().zip(kernels.iter_mut()).zip(ranges).collect();
+        std::thread::scope(|s| {
+            for (ci, ((slot, ks), range)) in slots.into_iter().enumerate() {
+                s.spawn(move || {
+                    crate::par::pool::pin_worker(ci);
+                    let verts = boundary[range]
+                        .iter()
+                        .copied()
+                        .filter(|&v| !locked.get(v as usize));
+                    crate::refinement::kernel::jet_scan_blocked(p, verts, tau, ks, slot);
+                });
+            }
+        });
+    }
     ctx.flatten_chunks_to(n_chunks, out);
 }
 
@@ -342,6 +390,26 @@ mod tests {
             let native = collect_candidates(&p, &locked, tau, None);
             let tiled = collect_candidates(&p, &locked, tau, Some(&NativeTileSelector));
             assert_eq!(native, tiled, "tau={tau}");
+        }
+    }
+
+    #[test]
+    fn blocked_scan_matches_scalar() {
+        let (h, part) = setup();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let p = PartitionedHypergraph::new(&h, 4, part.clone());
+                let locked = Bitset::new(400);
+                for tau in [0.0, 0.25, 0.75] {
+                    let mut ctx = RefinementContext::new(4, 400);
+                    let (mut scalar, mut blocked) = (Vec::new(), Vec::new());
+                    ctx.set_kernel(crate::config::KernelKind::Scalar);
+                    collect_candidates_in(&p, &locked, tau, None, &mut ctx, &mut scalar);
+                    ctx.set_kernel(crate::config::KernelKind::Blocked);
+                    collect_candidates_in(&p, &locked, tau, None, &mut ctx, &mut blocked);
+                    assert_eq!(scalar, blocked, "tau={tau} nt={nt}");
+                }
+            });
         }
     }
 

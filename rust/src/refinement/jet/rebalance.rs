@@ -95,10 +95,8 @@ pub fn rebalance_with_priority_in(
     let dz = (deadzone_d * eps * avg as f64).ceil() as Weight;
 
     for _round in 0..max_rounds {
-        let weights = p.block_weights();
-        let overloaded: Vec<BlockId> = (0..k as BlockId)
-            .filter(|&b| weights[b as usize] > lmax)
-            .collect();
+        let overloaded: Vec<BlockId> =
+            (0..k as BlockId).filter(|&b| p.block_weight(b) > lmax).collect();
         if overloaded.is_empty() {
             return true;
         }
@@ -155,65 +153,88 @@ fn stage_block_moves(
     let hg = p.hypergraph();
     let n = hg.num_vertices();
     let heavy_cap_num = 3 * (p.block_weight(b) - avg); // c(v) > 3/2·(..) ⇔ 2c(v) > 3·(..)
-    let weights = p.block_weights();
     let k = p.k();
 
     let nt = crate::par::num_threads().max(1);
     let ranges = crate::par::pool::chunk_ranges(n, nt);
     let n_chunks = ranges.len();
-    {
-        let (bufs, outs) = ctx.scan_scratch(n_chunks);
-        let slots: Vec<_> = outs.iter_mut().zip(bufs.iter_mut()).zip(ranges).collect();
-        let weights = &weights;
-        std::thread::scope(|s| {
-            for ((slot, buf), range) in slots {
-                s.spawn(move || {
-                    for v in range {
-                        let v = v as VertexId;
-                        if p.part(v) != b {
-                            continue;
-                        }
-                        let cv = hg.vertex_weight(v);
-                        if 2 * cv > heavy_cap_num {
-                            continue; // heavy-vertex exclusion
-                        }
-                        buf.reset();
-                        let (w_total, benefit, _internal) = p.collect_affinities(v, buf);
-                        let leave_cost = w_total - benefit;
-                        let eligible = |t: BlockId| -> bool {
-                            t != b
-                                && weights[t as usize] + cv <= lmax
-                                && weights[t as usize] < lmax - dz
-                        };
-                        // Best touched eligible target (sorted in place —
-                        // no per-vertex allocation).
-                        buf.sort_touched();
-                        let mut best: Option<(Weight, BlockId)> = None;
-                        for &t in buf.touched() {
-                            if !eligible(t) {
+    // Per-call block-weight snapshot (frozen during staging — no moves
+    // are applied until the shed step, so the snapshot equals live reads
+    // and kills the old per-call `block_weights()` allocation).
+    ctx.snapshot_block_weights(p);
+    match ctx.kernel() {
+        crate::config::KernelKind::Scalar => {
+            let (bufs, outs, weights) = ctx.scan_scratch_with_weights(n_chunks);
+            let slots: Vec<_> = outs.iter_mut().zip(bufs.iter_mut()).zip(ranges).collect();
+            std::thread::scope(|s| {
+                for (ci, ((slot, buf), range)) in slots.into_iter().enumerate() {
+                    s.spawn(move || {
+                        crate::par::pool::pin_worker(ci);
+                        for v in range {
+                            let v = v as VertexId;
+                            if p.part(v) != b {
                                 continue;
                             }
-                            let gain = buf.get(t) - leave_cost;
-                            if best.map_or(true, |(bg, _)| gain > bg) {
-                                best = Some((gain, t));
+                            let cv = hg.vertex_weight(v);
+                            if 2 * cv > heavy_cap_num {
+                                continue; // heavy-vertex exclusion
+                            }
+                            buf.reset();
+                            let (w_total, benefit, _internal) = p.collect_affinities(v, buf);
+                            let leave_cost = w_total - benefit;
+                            let eligible = |t: BlockId| -> bool {
+                                t != b
+                                    && weights[t as usize] + cv <= lmax
+                                    && weights[t as usize] < lmax - dz
+                            };
+                            // Best touched eligible target (sorted in place —
+                            // no per-vertex allocation).
+                            buf.sort_touched();
+                            let mut best: Option<(Weight, BlockId)> = None;
+                            for &t in buf.touched() {
+                                if !eligible(t) {
+                                    continue;
+                                }
+                                let gain = buf.get(t) - leave_cost;
+                                if best.map_or(true, |(bg, _)| gain > bg) {
+                                    best = Some((gain, t));
+                                }
+                            }
+                            // A zero-affinity eligible block (gain −leave_cost)
+                            // if better than nothing / all-touched-ineligible.
+                            if best.map_or(true, |(bg, _)| -leave_cost > bg) {
+                                if let Some(t) =
+                                    (0..k as BlockId).find(|&t| eligible(t) && buf.get(t) == 0)
+                                {
+                                    best = Some((-leave_cost, t));
+                                }
+                            }
+                            if let Some((gain, target)) = best {
+                                slot.push(MoveCandidate { vertex: v, target, gain });
                             }
                         }
-                        // A zero-affinity eligible block (gain −leave_cost)
-                        // if better than nothing / all-touched-ineligible.
-                        if best.map_or(true, |(bg, _)| -leave_cost > bg) {
-                            if let Some(t) =
-                                (0..k as BlockId).find(|&t| eligible(t) && buf.get(t) == 0)
-                            {
-                                best = Some((-leave_cost, t));
-                            }
-                        }
-                        if let Some((gain, target)) = best {
-                            slot.push(MoveCandidate { vertex: v, target, gain });
-                        }
-                    }
-                });
-            }
-        });
+                    });
+                }
+            });
+        }
+        crate::config::KernelKind::Blocked => {
+            let (kernels, outs, weights) = ctx.blocked_scan_scratch_with_weights(n_chunks);
+            let slots: Vec<_> =
+                outs.iter_mut().zip(kernels.iter_mut()).zip(ranges).collect();
+            std::thread::scope(|s| {
+                for (ci, ((slot, ks), range)) in slots.into_iter().enumerate() {
+                    s.spawn(move || {
+                        crate::par::pool::pin_worker(ci);
+                        let verts = range.map(|v| v as VertexId).filter(|&v| {
+                            p.part(v) == b && 2 * hg.vertex_weight(v) <= heavy_cap_num
+                        });
+                        crate::refinement::kernel::rebalance_scan_blocked(
+                            p, verts, b, lmax, dz, weights, ks, slot,
+                        );
+                    });
+                }
+            });
+        }
     }
     // Flatten in chunk order at chunked-prefix offsets → deterministic.
     ctx.stage_selection_from_chunks(n_chunks);
@@ -309,6 +330,27 @@ mod tests {
         }
         assert!(outs.windows(2).all(|w| w[0] == w[1]));
         assert!(outs[0].0);
+    }
+
+    #[test]
+    fn blocked_staging_matches_scalar() {
+        let h = crate::gen::sat_hypergraph(500, 1500, 8, 13);
+        let part: Vec<BlockId> = (0..500).map(|v| u32::from(v >= 450)).collect();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let mut staged = Vec::new();
+                for kind in crate::config::KernelKind::ALL {
+                    let p = PartitionedHypergraph::new(&h, 2, part.clone());
+                    let lmax = p.max_block_weight(0.03);
+                    let mut ctx = RefinementContext::new(2, 500);
+                    ctx.set_kernel(kind);
+                    stage_block_moves(&p, 0, lmax, 1, p.avg_block_weight(), &mut ctx);
+                    staged.push(ctx.selection_mut().staged().to_vec());
+                }
+                assert_eq!(staged[0], staged[1], "nt={nt}");
+                assert!(!staged[0].is_empty(), "instance staged nothing");
+            });
+        }
     }
 
     #[test]

@@ -1,0 +1,507 @@
+//! Blocked affinity/gain kernels — the vectorized form of the refinement
+//! hot path (`KernelKind::Blocked`).
+//!
+//! The innermost loops of Jet's candidate scan, synchronous LP and the
+//! rebalancer priority scan all share one shape: per vertex, gather the
+//! per-block affinities `aff[b] = Σ ω(e)·[φ_e(b)>0]` over the incident
+//! cut edges, then pick the best admissible target block. The scalar
+//! path ([`KernelKind::Scalar`], retained verbatim as the determinism
+//! oracle) walks a sparse touched-block list per vertex. The blocked
+//! kernels here restructure that into SoA batches:
+//!
+//! * **Dense lane rows.** Each vertex in a batch of [`BATCH`] owns a
+//!   dense `k_pad`-wide accumulator row (`k` rounded up to a multiple of
+//!   [`LANES`]), filled by the packed pin-count word walk
+//!   (`PackedPinCounts::accumulate_row_dense`) with a branch-free masked
+//!   add — no touched-list maintenance, no data-dependent branches in
+//!   the accumulation body.
+//! * **Presence masks, not `aff ≠ 0`.** Zero edge weights are legal, and
+//!   the scalar touched list records a block the moment a cut edge
+//!   covers it even at weight 0 — so candidacy is tracked in a separate
+//!   all-ones/all-zeros `present` row, OR-accumulated alongside `aff`.
+//! * **Branch-free packed reductions.** The best (gain, block) pair is a
+//!   single max over order-embedded keys ([`pack_key`]): gain biased to
+//!   unsigned in the high bits, the block id bit-inverted in the low
+//!   bits, so larger key ⇔ larger gain, then *lower* block — exactly the
+//!   scalar first-maximum-over-ascending-blocks tie-break. Invalid lanes
+//!   contribute key 0, below every valid key. The reductions run as
+//!   fixed-trip-count loops over [`LANES`]-wide lane groups with
+//!   straight-line bodies — the autovectorization-guaranteed form — and
+//!   integer max is associative and commutative, so the lane-striped
+//!   partial maxima combine to the same answer in every grouping.
+//!
+//! Because every quantity is an exact integer and every reduction is a
+//! max/min over a total order, the blocked kernels are **bit-identical**
+//! to the scalar oracle by construction — asserted per consumer by unit
+//! tests and end-to-end by `prop_blocked_kernels_match_scalar_oracle`
+//! (DESIGN.md §11).
+//!
+//! The keys use `u128` (not the `u64` a first sketch would reach for):
+//! a full `i64` gain plus a 32-bit block id need 96 bits to embed the
+//! lexicographic order losslessly. [`pack_key`] is unit-tested at the
+//! `i64` extremes.
+
+use super::MoveCandidate;
+use crate::datastructures::PartitionedHypergraph;
+use crate::{BlockId, VertexId, Weight};
+
+/// Lane-group width of the blocked loops: accumulator rows are padded to
+/// a multiple of this and every reduction steps over whole lane groups.
+pub(crate) const LANES: usize = 8;
+
+/// Vertices gathered per pass. Keeps `BATCH · k_pad` accumulator rows
+/// resident while the incident-edge walks stream the pin-count words.
+pub(crate) const BATCH: usize = 4;
+
+/// Order-embedding of `(gain, block)` into `u128`: gain (sign-flipped to
+/// unsigned) in bits 32.., bit-inverted block id in bits 0..32. Key
+/// comparison is then exactly "higher gain first, lower block id on
+/// ties", and `0` (gain `i64::MIN` *and* block `u32::MAX`) is below
+/// every reachable key (`k ≤ u32::MAX` block ids never invert to 0), so
+/// masked-out lanes drop out of a plain `max`.
+#[inline]
+pub(crate) fn pack_key(gain: i64, block: u32) -> u128 {
+    ((((gain as u64) ^ (1u64 << 63)) as u128) << 32) | ((block ^ u32::MAX) as u128)
+}
+
+/// Inverse of [`pack_key`].
+#[inline]
+pub(crate) fn unpack_key(key: u128) -> (i64, u32) {
+    ((((key >> 32) as u64) ^ (1u64 << 63)) as i64, (key as u32) ^ u32::MAX)
+}
+
+/// Per-worker scratch of the blocked kernels: the batch accumulator rows
+/// plus the padded per-block operand rows, all grown once per `k` and
+/// reused across rounds and levels (owned by
+/// [`super::RefinementContext`], one per scan chunk).
+#[derive(Default)]
+pub(crate) struct KernelScratch {
+    k: usize,
+    k_pad: usize,
+    /// `BATCH × k_pad` dense affinity rows.
+    aff: Vec<i64>,
+    /// `BATCH × k_pad` candidacy masks (all-ones ⇔ some cut edge covers
+    /// the block), OR-accumulated alongside `aff`.
+    present: Vec<i64>,
+    /// Per-vertex validity mask scratch (one `k_pad` row, rebuilt per
+    /// reduction).
+    valid: Vec<i64>,
+    /// All-ones for `b < k`, zero for the pad lanes — keeps conditions
+    /// that do not factor through `present` (rebalance eligibility) from
+    /// admitting a pad lane.
+    inrange: Vec<i64>,
+    /// Padded copy of a per-block weight operand (pad lanes 0 — safe to
+    /// feed the branch-free arithmetic, masked out by `inrange`).
+    wpad: Vec<i64>,
+    /// Padded copy of a per-block budget operand (pad lanes `i64::MIN`).
+    bpad: Vec<i64>,
+}
+
+impl KernelScratch {
+    /// Size all rows for `k` blocks (no-op when already sized).
+    pub(crate) fn ensure(&mut self, k: usize) {
+        if self.k == k && !self.aff.is_empty() {
+            return;
+        }
+        self.k = k;
+        self.k_pad = k.div_ceil(LANES) * LANES;
+        self.aff.clear();
+        self.aff.resize(BATCH * self.k_pad, 0);
+        self.present.clear();
+        self.present.resize(BATCH * self.k_pad, 0);
+        self.valid.clear();
+        self.valid.resize(self.k_pad, 0);
+        self.inrange.clear();
+        self.inrange.resize(self.k_pad, 0);
+        for b in 0..k {
+            self.inrange[b] = -1;
+        }
+        self.wpad.clear();
+        self.wpad.resize(self.k_pad, 0);
+        self.bpad.clear();
+        self.bpad.resize(self.k_pad, i64::MIN);
+    }
+
+    /// Zero the first `rows` accumulator rows (start of a batch).
+    #[inline]
+    fn zero_rows(&mut self, rows: usize) {
+        let len = rows * self.k_pad;
+        self.aff[..len].fill(0);
+        self.present[..len].fill(0);
+    }
+
+    /// The `i`-th batch row as `(aff, present)` slices.
+    #[inline]
+    fn rows_mut(&mut self, i: usize) -> (&mut [i64], &mut [i64]) {
+        let r = i * self.k_pad..(i + 1) * self.k_pad;
+        (&mut self.aff[r.clone()], &mut self.present[r])
+    }
+
+    /// Load a per-block weight operand into the padded `wpad` row
+    /// (pad lanes 0).
+    #[inline]
+    fn load_weights(&mut self, w: &[Weight]) {
+        debug_assert_eq!(w.len(), self.k);
+        self.wpad[..self.k].copy_from_slice(w);
+        self.wpad[self.k..].fill(0);
+    }
+
+    /// Load a per-block budget operand into the padded `bpad` row
+    /// (pad lanes `i64::MIN`, so `x + cv ≤ bpad[b]` is false there).
+    #[inline]
+    fn load_budgets(&mut self, b: &[Weight]) {
+        debug_assert_eq!(b.len(), self.k);
+        self.bpad[..self.k].copy_from_slice(b);
+        self.bpad[self.k..].fill(i64::MIN);
+    }
+
+    /// Branch-free max of `pack_key(aff[b], b)` over the lanes where
+    /// `mask[b]` is all-ones; 0 when no lane is valid. Fixed-trip lane
+    /// loops, lane-striped partial maxima, one final cross-lane max —
+    /// max is associative/commutative, so the grouping cannot change the
+    /// result.
+    #[inline]
+    fn reduce_best(aff: &[i64], mask: &[i64]) -> u128 {
+        let mut best = [0u128; LANES];
+        let mut j = 0;
+        while j < aff.len() {
+            for t in 0..LANES {
+                let b = j + t;
+                let key = pack_key(aff[b], b as u32) & (mask[b] as u128);
+                best[t] = best[t].max(key);
+            }
+            j += LANES;
+        }
+        let mut m = 0u128;
+        for &b in &best {
+            m = m.max(b);
+        }
+        m
+    }
+
+    /// Branch-free minimum block id over the lanes where `mask[b]` is
+    /// all-ones **and** `aff[b] == 0` (the rebalancer's zero-affinity
+    /// fallback); `u64::MAX` when none qualifies.
+    #[inline]
+    fn reduce_min_zero_affinity(aff: &[i64], mask: &[i64]) -> u64 {
+        let mut best = [u64::MAX; LANES];
+        let mut j = 0;
+        while j < aff.len() {
+            for t in 0..LANES {
+                let b = j + t;
+                let zero = ((aff[b] == 0) as i64).wrapping_neg();
+                // valid → b, invalid → all-ones (loses every min).
+                let key = (b as u64) | !((mask[b] & zero) as u64);
+                best[t] = best[t].min(key);
+            }
+            j += LANES;
+        }
+        let mut m = u64::MAX;
+        for &b in &best {
+            m = m.min(b);
+        }
+        m
+    }
+}
+
+/// Per-batch gather shared by the three consumers: zero the rows, run
+/// the dense affinity walk for each vertex, mask the current block out
+/// of its presence row, and record `(current, leave_cost, internal)`.
+#[inline]
+fn fill_batch(
+    p: &PartitionedHypergraph,
+    verts: &[VertexId],
+    ks: &mut KernelScratch,
+    stats: &mut [(BlockId, Weight, Weight); BATCH],
+) {
+    ks.zero_rows(verts.len());
+    for (i, &v) in verts.iter().enumerate() {
+        let (aff, present) = ks.rows_mut(i);
+        let (w_total, benefit, internal) = p.collect_affinities_dense(v, aff, present);
+        let s = p.part(v);
+        present[s as usize] = 0;
+        stats[i] = (s, w_total - benefit, internal);
+    }
+}
+
+/// Blocked Jet candidate scan over `vertices` (already boundary-filtered
+/// and unlocked, ascending): for each, the max-gain target over the
+/// present blocks (lowest id on ties), admitted iff
+/// `gain ≥ −τ·internal` — bit-identical to the scalar loop in
+/// [`super::jet::candidates`].
+pub(crate) fn jet_scan_blocked(
+    p: &PartitionedHypergraph,
+    vertices: impl Iterator<Item = VertexId>,
+    tau: f64,
+    ks: &mut KernelScratch,
+    out: &mut Vec<MoveCandidate>,
+) {
+    ks.ensure(p.k());
+    let mut pend = [0 as VertexId; BATCH];
+    let mut stats = [(0 as BlockId, 0 as Weight, 0 as Weight); BATCH];
+    let mut m = 0;
+    let mut flush = |pend: &[VertexId], ks: &mut KernelScratch, out: &mut Vec<MoveCandidate>| {
+        fill_batch(p, pend, ks, &mut stats);
+        for (i, &v) in pend.iter().enumerate() {
+            let (_s, leave_cost, internal) = stats[i];
+            let row = i * ks.k_pad..(i + 1) * ks.k_pad;
+            let key =
+                KernelScratch::reduce_best(&ks.aff[row.clone()], &ks.present[row]);
+            if key != 0 {
+                let (a, b) = unpack_key(key);
+                let gain = a - leave_cost;
+                // Temperature admission — same f64 form as the scalar path.
+                if (gain as f64) >= -(tau * internal as f64) {
+                    out.push(MoveCandidate { vertex: v, target: b, gain });
+                }
+            }
+        }
+    };
+    for v in vertices {
+        pend[m] = v;
+        m += 1;
+        if m == BATCH {
+            flush(&pend, ks, out);
+            m = 0;
+        }
+    }
+    if m > 0 {
+        flush(&pend[..m], ks, out);
+    }
+}
+
+/// Blocked LP positive-gain scan over `vertices` (ascending): best
+/// strictly-positive-gain target with remaining capacity under the
+/// frozen `block_weights` snapshot — bit-identical to the scalar loop in
+/// [`super::lp`] (whose live per-candidate `block_weight` reads equal
+/// the snapshot: no move is applied while staging runs).
+pub(crate) fn lp_scan_blocked(
+    p: &PartitionedHypergraph,
+    vertices: impl Iterator<Item = VertexId>,
+    block_weights: &[Weight],
+    max_block_weights: &[Weight],
+    ks: &mut KernelScratch,
+    out: &mut Vec<MoveCandidate>,
+) {
+    ks.ensure(p.k());
+    ks.load_weights(block_weights);
+    ks.load_budgets(max_block_weights);
+    let hg = p.hypergraph();
+    let mut pend = [0 as VertexId; BATCH];
+    let mut stats = [(0 as BlockId, 0 as Weight, 0 as Weight); BATCH];
+    let mut m = 0;
+    let mut flush = |pend: &[VertexId], ks: &mut KernelScratch, out: &mut Vec<MoveCandidate>| {
+        fill_batch(p, pend, ks, &mut stats);
+        for (i, &v) in pend.iter().enumerate() {
+            let (_s, leave_cost, _internal) = stats[i];
+            let cv = hg.vertex_weight(v);
+            let row = i * ks.k_pad;
+            // valid ⇔ present ∧ gain > 0 ∧ capacity left — the capacity
+            // test must sit in the mask: a higher-gain but full block
+            // may not shadow a feasible lower-gain one.
+            let mut j = 0;
+            while j < ks.k_pad {
+                for t in 0..LANES {
+                    let b = j + t;
+                    let positive = ((ks.aff[row + b] > leave_cost) as i64).wrapping_neg();
+                    let fits =
+                        ((ks.wpad[b] + cv <= ks.bpad[b]) as i64).wrapping_neg();
+                    ks.valid[b] = ks.present[row + b] & positive & fits;
+                }
+                j += LANES;
+            }
+            let key = KernelScratch::reduce_best(
+                &ks.aff[row..row + ks.k_pad],
+                &ks.valid,
+            );
+            if key != 0 {
+                let (a, b) = unpack_key(key);
+                out.push(MoveCandidate { vertex: v, target: b, gain: a - leave_cost });
+            }
+        }
+    };
+    for v in vertices {
+        pend[m] = v;
+        m += 1;
+        if m == BATCH {
+            flush(&pend, ks, out);
+            m = 0;
+        }
+    }
+    if m > 0 {
+        flush(&pend[..m], ks, out);
+    }
+}
+
+/// Blocked rebalancer priority scan over `vertices` (all in overloaded
+/// block `b0`, heavy-filtered, ascending): best eligible touched target,
+/// with the zero-affinity-eligible fallback — bit-identical to the
+/// scalar loop in [`super::jet::rebalance`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn rebalance_scan_blocked(
+    p: &PartitionedHypergraph,
+    vertices: impl Iterator<Item = VertexId>,
+    b0: BlockId,
+    lmax: Weight,
+    dz: Weight,
+    block_weights: &[Weight],
+    ks: &mut KernelScratch,
+    out: &mut Vec<MoveCandidate>,
+) {
+    ks.ensure(p.k());
+    ks.load_weights(block_weights);
+    let hg = p.hypergraph();
+    let mut pend = [0 as VertexId; BATCH];
+    let mut stats = [(0 as BlockId, 0 as Weight, 0 as Weight); BATCH];
+    let mut m = 0;
+    let mut flush = |pend: &[VertexId], ks: &mut KernelScratch, out: &mut Vec<MoveCandidate>| {
+        fill_batch(p, pend, ks, &mut stats);
+        for (i, &v) in pend.iter().enumerate() {
+            let (_s, leave_cost, _internal) = stats[i];
+            let cv = hg.vertex_weight(v);
+            let row = i * ks.k_pad;
+            // Eligibility does not factor through `present` (the
+            // fallback considers untouched blocks), so gate the pad
+            // lanes with `inrange` explicitly.
+            let mut j = 0;
+            while j < ks.k_pad {
+                for t in 0..LANES {
+                    let b = j + t;
+                    let fits = ((ks.wpad[b] + cv <= lmax) as i64).wrapping_neg();
+                    let outside_dz = ((ks.wpad[b] < lmax - dz) as i64).wrapping_neg();
+                    ks.valid[b] = ks.inrange[b] & fits & outside_dz;
+                }
+                j += LANES;
+            }
+            ks.valid[b0 as usize] = 0;
+            // Best touched (= present) eligible target.
+            let mut best_key = 0u128;
+            {
+                let aff = &ks.aff[row..row + ks.k_pad];
+                let present = &ks.present[row..row + ks.k_pad];
+                let mut j = 0;
+                while j < ks.k_pad {
+                    for t in 0..LANES {
+                        let b = j + t;
+                        let key = pack_key(aff[b], b as u32)
+                            & ((ks.valid[b] & present[b]) as u128);
+                        best_key = best_key.max(key);
+                    }
+                    j += LANES;
+                }
+            }
+            let mut best: Option<(Weight, BlockId)> = if best_key != 0 {
+                let (a, t) = unpack_key(best_key);
+                Some((a - leave_cost, t))
+            } else {
+                None
+            };
+            // Zero-affinity eligible fallback, lowest block id — the
+            // dense row value is 0 exactly when the scalar
+            // `buf.get(t) == 0` (untouched, or touched only by
+            // zero-weight edges).
+            if best.map_or(true, |(bg, _)| -leave_cost > bg) {
+                let zmin = KernelScratch::reduce_min_zero_affinity(
+                    &ks.aff[row..row + ks.k_pad],
+                    &ks.valid,
+                );
+                if zmin != u64::MAX {
+                    best = Some((-leave_cost, zmin as BlockId));
+                }
+            }
+            if let Some((gain, target)) = best {
+                out.push(MoveCandidate { vertex: v, target, gain });
+            }
+        }
+    };
+    for v in vertices {
+        pend[m] = v;
+        m += 1;
+        if m == BATCH {
+            flush(&pend, ks, out);
+            m = 0;
+        }
+    }
+    if m > 0 {
+        flush(&pend[..m], ks, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastructures::AffinityBuffer;
+
+    #[test]
+    fn packed_key_orders_gain_then_block_at_i64_extremes() {
+        // Strictly increasing (gain, −block) order must map to strictly
+        // increasing keys — including at the i64 extremes.
+        let cases: [(i64, u32); 8] = [
+            (i64::MIN, 7),
+            (i64::MIN, 0),
+            (-1, 1_000_000),
+            (-1, 3),
+            (0, 2),
+            (1, u32::MAX - 1),
+            (i64::MAX, 9),
+            (i64::MAX, 0),
+        ];
+        for w in cases.windows(2) {
+            let (lo, hi) = (pack_key(w[0].0, w[0].1), pack_key(w[1].0, w[1].1));
+            assert!(lo < hi, "{:?} !< {:?}", w[0], w[1]);
+        }
+        for &(g, b) in &cases {
+            assert_eq!(unpack_key(pack_key(g, b)), (g, b));
+        }
+        // Block ids below u32::MAX never produce the all-invalid key 0.
+        assert_ne!(pack_key(i64::MIN, 0), 0);
+        assert_eq!(pack_key(i64::MIN, u32::MAX), 0);
+    }
+
+    #[test]
+    fn reduce_best_matches_first_max_over_ascending_blocks() {
+        // Duplicate maxima → lowest block, exactly the scalar tie-break.
+        let k_pad = 2 * LANES;
+        let mut aff = vec![0i64; k_pad];
+        let mut mask = vec![0i64; k_pad];
+        for (b, a) in [(3usize, 5i64), (6, 9), (11, 9), (14, -2)] {
+            aff[b] = a;
+            mask[b] = -1;
+        }
+        let (a, b) = unpack_key(KernelScratch::reduce_best(&aff, &mask));
+        assert_eq!((a, b), (9, 6));
+        // All-invalid → 0.
+        assert_eq!(KernelScratch::reduce_best(&aff, &vec![0i64; k_pad]), 0);
+    }
+
+    #[test]
+    fn dense_walk_matches_scalar_affinity_buffer() {
+        let h = crate::gen::sat_hypergraph(200, 600, 8, 5);
+        let k = 5usize;
+        let part: Vec<BlockId> = (0..200).map(|v| (v % k as u32) as BlockId).collect();
+        let p = PartitionedHypergraph::new(&h, k, part);
+        let k_pad = k.div_ceil(LANES) * LANES;
+        let mut buf = AffinityBuffer::new(k);
+        let (mut aff, mut present) = (vec![0i64; k_pad], vec![0i64; k_pad]);
+        for v in 0..200u32 {
+            buf.reset();
+            aff.fill(0);
+            present.fill(0);
+            let scalar = p.collect_affinities(v, &mut buf);
+            let dense = p.collect_affinities_dense(v, &mut aff, &mut present);
+            assert_eq!(scalar, dense, "stats diverge at v={v}");
+            let s = p.part(v);
+            for b in 0..k as u32 {
+                if b == s {
+                    continue;
+                }
+                assert_eq!(buf.get(b), aff[b as usize], "aff diverges at v={v} b={b}");
+                let touched = buf.touched().contains(&b);
+                assert_eq!(touched, present[b as usize] != 0, "presence at v={v} b={b}");
+            }
+            for pad in k..k_pad {
+                assert_eq!((aff[pad], present[pad]), (0, 0), "pad lane written");
+            }
+        }
+    }
+}

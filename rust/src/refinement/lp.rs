@@ -81,7 +81,10 @@ pub fn refine_lp_in(
 
 /// For each active vertex: the best strictly-positive-gain move into a
 /// block with remaining capacity, staged into the selection arena
-/// (per-chunk emission, flattened at chunked-prefix offsets).
+/// (per-chunk emission, flattened at chunked-prefix offsets). Both
+/// kernel paths filter capacity against the frozen per-round
+/// block-weight snapshot — identical to live reads, since no move is
+/// applied while the staging scan runs (approval re-checks anyway).
 fn stage_positive_candidates(
     p: &PartitionedHypergraph,
     active: &[crate::VertexId],
@@ -91,48 +94,73 @@ fn stage_positive_candidates(
     let nt = crate::par::num_threads().max(1);
     let ranges = crate::par::pool::chunk_ranges(active.len(), nt);
     let n_chunks = ranges.len();
-    {
-        let (bufs, outs) = ctx.scan_scratch(n_chunks);
-        let slots: Vec<_> = outs.iter_mut().zip(bufs.iter_mut()).zip(ranges).collect();
-        std::thread::scope(|s| {
-            for ((slot, buf), range) in slots {
-                s.spawn(move || {
-                    for i in range {
-                        let v = active[i];
-                        buf.reset();
-                        let (w_total, benefit, _internal) = p.collect_affinities(v, buf);
-                        let s_block = p.part(v);
-                        let leave_cost = w_total - benefit;
-                        let mut best: Option<(Weight, BlockId)> = None;
-                        for &b in buf.touched() {
-                            let gain = buf.get(b) - leave_cost;
-                            if gain <= 0 {
-                                continue;
+    ctx.snapshot_block_weights(p);
+    match ctx.kernel() {
+        crate::config::KernelKind::Scalar => {
+            let (bufs, outs, weights) = ctx.scan_scratch_with_weights(n_chunks);
+            let slots: Vec<_> = outs.iter_mut().zip(bufs.iter_mut()).zip(ranges).collect();
+            std::thread::scope(|s| {
+                for (ci, ((slot, buf), range)) in slots.into_iter().enumerate() {
+                    s.spawn(move || {
+                        crate::par::pool::pin_worker(ci);
+                        for i in range {
+                            let v = active[i];
+                            buf.reset();
+                            let (w_total, benefit, _internal) = p.collect_affinities(v, buf);
+                            let s_block = p.part(v);
+                            let leave_cost = w_total - benefit;
+                            let mut best: Option<(Weight, BlockId)> = None;
+                            for &b in buf.touched() {
+                                let gain = buf.get(b) - leave_cost;
+                                if gain <= 0 {
+                                    continue;
+                                }
+                                // capacity pre-filter (approval re-checks)
+                                if weights[b as usize] + p.hypergraph().vertex_weight(v)
+                                    > max_block_weights[b as usize]
+                                {
+                                    continue;
+                                }
+                                let cand = (gain, b);
+                                let better = match best {
+                                    None => true,
+                                    Some((bg, bb)) => gain > bg || (gain == bg && b < bb),
+                                };
+                                if better {
+                                    best = Some(cand);
+                                }
                             }
-                            // capacity pre-filter (approval re-checks)
-                            if p.block_weight(b) + p.hypergraph().vertex_weight(v)
-                                > max_block_weights[b as usize]
-                            {
-                                continue;
-                            }
-                            let cand = (gain, b);
-                            let better = match best {
-                                None => true,
-                                Some((bg, bb)) => gain > bg || (gain == bg && b < bb),
-                            };
-                            if better {
-                                best = Some(cand);
+                            if let Some((gain, b)) = best {
+                                debug_assert_ne!(b, s_block);
+                                let _ = s_block;
+                                slot.push(MoveCandidate { vertex: v, target: b, gain });
                             }
                         }
-                        if let Some((gain, b)) = best {
-                            debug_assert_ne!(b, s_block);
-                            let _ = s_block;
-                            slot.push(MoveCandidate { vertex: v, target: b, gain });
-                        }
-                    }
-                });
-            }
-        });
+                    });
+                }
+            });
+        }
+        crate::config::KernelKind::Blocked => {
+            let (kernels, outs, weights) = ctx.blocked_scan_scratch_with_weights(n_chunks);
+            let slots: Vec<_> =
+                outs.iter_mut().zip(kernels.iter_mut()).zip(ranges).collect();
+            std::thread::scope(|s| {
+                for (ci, ((slot, ks), range)) in slots.into_iter().enumerate() {
+                    s.spawn(move || {
+                        crate::par::pool::pin_worker(ci);
+                        let verts = active[range].iter().copied();
+                        crate::refinement::kernel::lp_scan_blocked(
+                            p,
+                            verts,
+                            weights,
+                            max_block_weights,
+                            ks,
+                            slot,
+                        );
+                    });
+                }
+            });
+        }
     }
     ctx.stage_selection_from_chunks(n_chunks);
 }
@@ -190,6 +218,30 @@ mod tests {
             assert!(p.block_weight(b) <= lmax[b as usize], "block {b} over budget");
         }
         p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn blocked_staging_matches_scalar() {
+        let h = crate::gen::sat_hypergraph(300, 900, 8, 4);
+        let part: Vec<u32> = (0..300).map(|v| (v % 4) as u32).collect();
+        let active: Vec<crate::VertexId> = (0..300).collect();
+        let lmax: Vec<Weight> = (0..4).map(|b| {
+            let p = PartitionedHypergraph::new(&h, 4, part.clone());
+            p.block_weight(b) + 3
+        }).collect();
+        for nt in [1usize, 2, 4] {
+            crate::par::with_num_threads(nt, || {
+                let mut staged = Vec::new();
+                for kind in crate::config::KernelKind::ALL {
+                    let p = PartitionedHypergraph::new(&h, 4, part.clone());
+                    let mut ctx = RefinementContext::new(4, 300);
+                    ctx.set_kernel(kind);
+                    stage_positive_candidates(&p, &active, &lmax, &mut ctx);
+                    staged.push(ctx.selection_mut().staged().to_vec());
+                }
+                assert_eq!(staged[0], staged[1], "nt={nt}");
+            });
+        }
     }
 
     #[test]

@@ -15,10 +15,12 @@
 //! unified parallel pipeline in [`select`] (DESIGN.md §7).
 
 pub mod jet;
+pub(crate) mod kernel;
 pub mod lp;
 pub mod flow;
 pub mod select;
 
+use crate::config::KernelKind;
 use crate::datastructures::{AffinityBuffer, PartitionScratch, PartitionedHypergraph};
 use crate::util::bitset::AtomicBitset;
 use crate::util::Bitset;
@@ -105,8 +107,15 @@ impl<T: Default> Drop for PoolGuard<'_, T> {
 /// pools and per-round scratch.
 pub struct RefinementContext {
     k: usize,
+    /// Which affinity/gain kernel the scans run — the blocked SoA lanes
+    /// ([`kernel`]) or the scalar touched-list oracle. Re-set from the
+    /// active config at every context acquisition (contexts are cached
+    /// across requests).
+    kernel: KernelKind,
     /// Per-worker dense affinity scratch.
     affinity: Vec<AffinityBuffer>,
+    /// Per-worker blocked-kernel scratch (lane rows; sized on first use).
+    kernel_scratch: Vec<kernel::KernelScratch>,
     /// Per-chunk candidate output vectors for parallel scans.
     chunk_candidates: Vec<Vec<MoveCandidate>>,
     /// Jet's oscillation-lock bitset (take with `mem::take`, put back).
@@ -137,7 +146,9 @@ impl RefinementContext {
     pub fn new(k: usize, max_vertices: usize) -> Self {
         RefinementContext {
             k,
+            kernel: KernelKind::Blocked,
             affinity: Vec::new(),
+            kernel_scratch: Vec::new(),
             chunk_candidates: Vec::new(),
             locked: Bitset::new(max_vertices),
             candidates: Vec::new(),
@@ -152,6 +163,17 @@ impl RefinementContext {
 
     pub fn k(&self) -> usize {
         self.k
+    }
+
+    /// Select the affinity/gain kernel the scans run (defaults to
+    /// [`KernelKind::Blocked`]; the scalar oracle stays available for
+    /// differential testing and the XLA gain backend).
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        self.kernel = kernel;
+    }
+
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
     }
 
     /// At least `parts` reset per-worker affinity buffers (k blocks each).
@@ -184,6 +206,82 @@ impl RefinementContext {
             c.clear();
         }
         (&mut self.affinity[..parts], &mut self.chunk_candidates[..parts])
+    }
+
+    /// Disjoint per-worker scratch for *blocked* candidate scans:
+    /// `parts` lane-row scratches plus `parts` cleared candidate output
+    /// vectors (the blocked counterpart of
+    /// [`scan_scratch`](Self::scan_scratch)).
+    pub(crate) fn blocked_scan_scratch(
+        &mut self,
+        parts: usize,
+    ) -> (&mut [kernel::KernelScratch], &mut [Vec<MoveCandidate>]) {
+        while self.kernel_scratch.len() < parts {
+            self.kernel_scratch.push(kernel::KernelScratch::default());
+        }
+        while self.chunk_candidates.len() < parts {
+            self.chunk_candidates.push(Vec::new());
+        }
+        for c in self.chunk_candidates[..parts].iter_mut() {
+            c.clear();
+        }
+        (&mut self.kernel_scratch[..parts], &mut self.chunk_candidates[..parts])
+    }
+
+    /// Freeze the current block weights into the selection scratch's
+    /// per-round snapshot (no refiner applies moves while a staging scan
+    /// runs, so indexing the snapshot is bit-identical to live
+    /// `block_weight` reads — and allocation-free).
+    pub(crate) fn snapshot_block_weights(&mut self, p: &PartitionedHypergraph) {
+        self.selection.snapshot_block_weights(p);
+    }
+
+    /// [`scan_scratch`](Self::scan_scratch) plus the frozen block-weight
+    /// snapshot (split borrows: scratch fields and the snapshot are
+    /// disjoint).
+    pub(crate) fn scan_scratch_with_weights(
+        &mut self,
+        parts: usize,
+    ) -> (&mut [AffinityBuffer], &mut [Vec<MoveCandidate>], &[Weight]) {
+        while self.affinity.len() < parts {
+            self.affinity.push(AffinityBuffer::new(self.k));
+        }
+        while self.chunk_candidates.len() < parts {
+            self.chunk_candidates.push(Vec::new());
+        }
+        for b in self.affinity[..parts].iter_mut() {
+            b.reset();
+        }
+        for c in self.chunk_candidates[..parts].iter_mut() {
+            c.clear();
+        }
+        (
+            &mut self.affinity[..parts],
+            &mut self.chunk_candidates[..parts],
+            &self.selection.block_weights,
+        )
+    }
+
+    /// [`blocked_scan_scratch`](Self::blocked_scan_scratch) plus the
+    /// frozen block-weight snapshot.
+    pub(crate) fn blocked_scan_scratch_with_weights(
+        &mut self,
+        parts: usize,
+    ) -> (&mut [kernel::KernelScratch], &mut [Vec<MoveCandidate>], &[Weight]) {
+        while self.kernel_scratch.len() < parts {
+            self.kernel_scratch.push(kernel::KernelScratch::default());
+        }
+        while self.chunk_candidates.len() < parts {
+            self.chunk_candidates.push(Vec::new());
+        }
+        for c in self.chunk_candidates[..parts].iter_mut() {
+            c.clear();
+        }
+        (
+            &mut self.kernel_scratch[..parts],
+            &mut self.chunk_candidates[..parts],
+            &self.selection.block_weights,
+        )
     }
 
     /// The boundary-collection mark bitset.

@@ -72,6 +72,19 @@ pub struct SelectionScratch {
     pub(crate) seg_bounds: Vec<u32>,
     /// Per-chunk count/offset scratch shared by all compactions.
     pub(crate) counts: Vec<i64>,
+    /// Cache-line-padded per-chunk counter cells for the parallel count
+    /// passes: the plain `counts` cells are 8 bytes apart, so concurrent
+    /// per-chunk writes false-share lines; workers write these padded
+    /// cells instead, and the (tiny, `nchunks`-long) result is copied
+    /// into `counts` for the serial-free prefix sum.
+    pub(crate) padded_counts: Vec<crate::par::PaddedAtomicI64>,
+    /// Per-round frozen block-weight snapshot
+    /// ([`snapshot_block_weights`](Self::snapshot_block_weights)): the
+    /// staging scans index this instead of issuing per-candidate live
+    /// `block_weight` reads (bit-identical — no move is applied while a
+    /// staging scan runs — and it kills the rebalancer's per-call
+    /// `block_weights()` allocation).
+    pub(crate) block_weights: Vec<Weight>,
     /// Move weights → segmented inclusive prefix sums.
     pub(crate) prefix: Vec<i64>,
     /// Per-segment kept counts → destination offsets.
@@ -121,6 +134,13 @@ impl SelectionScratch {
         &self.arena
     }
 
+    /// Freeze `p`'s current block weights into the per-round snapshot.
+    pub(crate) fn snapshot_block_weights(&mut self, p: &PartitionedHypergraph) {
+        self.block_weights.clear();
+        self.block_weights
+            .extend((0..p.k() as crate::BlockId).map(|b| p.block_weight(b)));
+    }
+
     /// Bytes currently reserved across all buffers (bench metric).
     pub fn memory_bytes(&self) -> usize {
         (self.arena.capacity() + self.aux.capacity())
@@ -129,6 +149,8 @@ impl SelectionScratch {
             + (self.seg_bounds.capacity() + self.rank_of.capacity() + self.touched.capacity())
                 * 4
             + self.recomputed.capacity() * 8
+            + self.padded_counts.capacity() * std::mem::size_of::<crate::par::PaddedAtomicI64>()
+            + self.block_weights.capacity() * 8
     }
 }
 
@@ -297,20 +319,30 @@ pub(crate) fn retain_map_in(
     let nchunks = crate::par::pool::num_chunks(n, nt);
     s.counts.clear();
     s.counts.resize(nchunks, 0);
+    if s.padded_counts.len() < nchunks {
+        s.padded_counts.resize_with(nchunks, Default::default);
+    }
     {
+        // Count pass through the cache-line-padded cells: the plain
+        // `counts` cells are 8 bytes apart, so every worker's end-of-chunk
+        // write would ping-pong the one line holding them all.
         let arena = &s.arena;
         let f = &f;
-        crate::par::for_each_chunk_mut(&mut s.counts, |start, slots| {
-            for (j, slot) in slots.iter_mut().enumerate() {
+        let cells = &s.padded_counts[..nchunks];
+        crate::par::for_each_chunk(nchunks, move |_c, r| {
+            for ci in r {
                 let mut c = 0i64;
-                for i in crate::par::pool::nth_chunk(n, nt, start + j) {
+                for i in crate::par::pool::nth_chunk(n, nt, ci) {
                     if f(i, arena[i]).is_some() {
                         c += 1;
                     }
                 }
-                *slot = c;
+                cells[ci].store(c, std::sync::atomic::Ordering::Relaxed);
             }
         });
+        for ci in 0..nchunks {
+            s.counts[ci] = s.padded_counts[ci].load(std::sync::atomic::Ordering::Relaxed);
+        }
     }
     let total = crate::par::exclusive_prefix_sum_in_place(&mut s.counts) as usize;
     if s.aux.len() < n {

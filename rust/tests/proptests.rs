@@ -612,6 +612,52 @@ fn prop_full_pipeline_valid_outputs() {
 }
 
 #[test]
+fn prop_blocked_kernels_match_scalar_oracle() {
+    // THE PR-7 acceptance property: the blocked SoA affinity/gain kernels
+    // are a bit-identical drop-in for the scalar oracle — same partition,
+    // same km1 — on every generator class, for the detjet / sdet /
+    // detflows presets, at 1/2/4 threads. Oracle = scalar kernel on one
+    // thread.
+    use detpart::config::KernelKind;
+    let instances: Vec<(&str, detpart::datastructures::Hypergraph)> = vec![
+        ("sat", detpart::gen::sat_hypergraph(260, 780, 5, 11)),
+        ("vlsi", detpart::gen::vlsi_netlist(16, 1.15, 33)),
+        ("rmat", detpart::gen::rmat_graph(8, 6, 5)),
+    ];
+    let presets: [(&str, fn(u64) -> Config); 3] = [
+        ("detjet", Config::detjet),
+        ("sdet", Config::sdet),
+        ("detflows", Config::detflows),
+    ];
+    for (name, hg) in &instances {
+        for (ptag, preset) in &presets {
+            let seed = 5u64;
+            let mk = |kernel: KernelKind| {
+                let mut c = preset(seed);
+                c.refinement.kernel = kernel;
+                c
+            };
+            let oracle = detpart::par::with_num_threads(1, || {
+                detpart::partitioner::partition(hg, 4, &mk(KernelKind::Scalar))
+            });
+            for kernel in KernelKind::ALL {
+                for nt in [1usize, 2, 4] {
+                    let r = detpart::par::with_num_threads(nt, || {
+                        detpart::partitioner::partition(hg, 4, &mk(kernel))
+                    });
+                    assert_eq!(
+                        (&r.part, r.km1),
+                        (&oracle.part, oracle.km1),
+                        "{name}/{ptag}: kernel {kernel} diverged from the scalar \
+                         oracle at {nt} threads"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_partitions_bit_identical_across_flow_solvers_seeds_and_threads() {
     // THE PR-5 property (Section 5.1 made real): the final partition of a
     // detflows run is a pure function of (input, config, seed) — for BOTH

@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_contraction.json artifact against the checked-in
+baseline contract.
+
+The contract (rust/benches/baselines/BENCH_contraction.json) pins what is
+machine-independent about the contraction micro — the emitter schema, the
+hierarchy depth, the CSR pipeline allocating strictly less than the
+HashMap path on every level, a steady-state allocation ceiling, and a
+suite-level speedup floor — without pinning wall-clock numbers, which
+vary across runners.
+
+Usage: check_bench_baseline.py <baseline.json> <fresh.json>
+"""
+
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"baseline diff FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main(baseline_path: str, fresh_path: str) -> None:
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+
+    for key in ("bench", "instance"):
+        if fresh.get(key) != base[key]:
+            fail(f"{key} mismatch: fresh {fresh.get(key)!r} vs baseline {base[key]!r}")
+
+    levels = fresh.get("levels")
+    if not levels:
+        fail("fresh artifact has no levels")
+    if len(levels) < base["min_levels"]:
+        fail(f"only {len(levels)} levels, baseline requires >= {base['min_levels']}")
+
+    schema = set(base["level_schema"])
+    for i, row in enumerate(levels):
+        missing = sorted(schema - set(row))
+        if missing:
+            fail(f"level {i} missing fields {missing}")
+        if row["new_allocs"] >= row["old_allocs"]:
+            fail(
+                f"level {i}: CSR path allocations ({row['new_allocs']}) not "
+                f"below the HashMap path ({row['old_allocs']})"
+            )
+
+    ceiling = base["max_steady_new_allocs"]
+    for i, row in enumerate(levels[1:], start=1):
+        if row["new_allocs"] > ceiling:
+            fail(
+                f"steady-state level {i} made {row['new_allocs']} allocations "
+                f"(ceiling {ceiling}) — scratch reuse regressed"
+            )
+
+    total_old = sum(r["old_ms"] for r in levels)
+    total_new = sum(r["new_ms"] for r in levels)
+    speedup = total_old / max(total_new, 1e-9)
+    if speedup < base["min_speedup"]:
+        fail(f"suite speedup {speedup:.2f}x below floor {base['min_speedup']}x")
+
+    print(
+        f"baseline diff OK: {len(levels)} levels, {speedup:.2f}x CSR speedup, "
+        f"steady-state allocs <= {ceiling}"
+    )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    main(sys.argv[1], sys.argv[2])
