@@ -712,6 +712,124 @@ fn kernel_micro() {
     }
 }
 
+/// The PR-8 active-set micro: full boundary rescans vs the frontier-
+/// driven active set on Jet refinement over the rmat suite — wall time,
+/// per-round scanned-vertex counts, and a counting-allocator check on
+/// warm passes. CI gates (machine-independent): the frontier policy
+/// must scan strictly fewer vertices in total, at most half the full
+/// policy's vertices in its best round after the (always-full) first
+/// one, and warm passes must not large-allocate. Emits
+/// `BENCH_activeset.json`.
+fn activeset_micro() {
+    use detpart::config::{ActiveSetKind, JetConfig};
+    use detpart::datastructures::PartitionedHypergraph;
+    use detpart::refinement::{jet::refine_jet_in, RefinementContext, RoundWork};
+    use detpart::util::Timer;
+
+    println!("== micro: active-set refinement (full rescans vs frontier) ==");
+    let threads = detpart::par::num_threads();
+    let k = 8usize;
+    let cases: Vec<(&str, detpart::datastructures::Hypergraph)> = vec![
+        ("rmat-12", detpart::gen::rmat_graph(12, 8, 7)),
+        ("rmat-13", detpart::gen::rmat_graph(13, 8, 9)),
+        ("rmat-14", detpart::gen::rmat_graph(14, 8, 11)),
+    ];
+    let reps = 3usize;
+    let cfg = JetConfig::default();
+    let mut totals = [0.0f64; 2]; // [full, frontier] suite ms (best-of-reps sums)
+    let mut rows: Vec<String> = Vec::new();
+    for (name, h) in &cases {
+        let n = h.num_vertices();
+        let part: Vec<u32> = (0..n)
+            .map(|v| (detpart::util::rng::hash64(17, v as u64) % k as u64) as u32)
+            .collect();
+        let mut logs: Vec<Vec<RoundWork>> = Vec::new();
+        let mut finals = Vec::new();
+        let mut ms = [0.0f64; 2];
+        let mut warm_large = [0u64; 2];
+        let kinds = [ActiveSetKind::Full, ActiveSetKind::Frontier];
+        for (ai, kind) in kinds.into_iter().enumerate() {
+            let mut ctx = RefinementContext::new(k, n);
+            ctx.set_active_set(kind, 0.75);
+            // Warm pass: sizes every scratch arena and records the
+            // per-round scan counts the contract below is written
+            // against.
+            ctx.active_set_mut().set_record_rounds(true);
+            let p = PartitionedHypergraph::new(h, k, part.clone());
+            refine_jet_in(&p, 0.05, &cfg, 3, None, &mut ctx);
+            logs.push(ctx.active_set().round_log().to_vec());
+            finals.push((p.snapshot(), p.km1()));
+            ctx.active_set_mut().set_record_rounds(false);
+            // Timed warm reps: the arenas are sized, so refinement rounds
+            // must not fall back to fresh large allocations.
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let p = PartitionedHypergraph::new(h, k, part.clone());
+                alloc_counter::reset_epoch();
+                let t = Timer::start();
+                refine_jet_in(&p, 0.05, &cfg, 3, None, &mut ctx);
+                best = best.min(t.elapsed_s() * 1e3);
+                warm_large[ai] += alloc_counter::large_allocs();
+            }
+            ms[ai] = best;
+        }
+        assert_eq!(finals[0], finals[1], "{name}: frontier diverged from the full oracle");
+        let (lf, la) = (&logs[0], &logs[1]);
+        assert_eq!(lf.len(), la.len(), "{name}: round structure diverged");
+        let full_scanned: u64 = lf.iter().map(|w| w.scanned).sum();
+        let frontier_scanned: u64 = la.iter().map(|w| w.scanned).sum();
+        let min_late_ratio = lf
+            .iter()
+            .zip(la.iter())
+            .skip(1)
+            .filter(|(f, _)| f.scanned > 0)
+            .map(|(f, a)| a.scanned as f64 / f.scanned as f64)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            frontier_scanned < full_scanned,
+            "{name}: frontier scanned {frontier_scanned} >= full {full_scanned}"
+        );
+        assert!(
+            min_late_ratio <= 0.5,
+            "{name}: best late-round frontier/full scan ratio {min_late_ratio:.3} > 0.5"
+        );
+        assert_eq!(warm_large, [0, 0], "{name}: warm refinement passes large-allocated");
+        totals[0] += ms[0];
+        totals[1] += ms[1];
+        println!(
+            "  {name}: {n} vertices, {} rounds | full {:.2} ms, {full_scanned} scanned | frontier {:.2} ms, {frontier_scanned} scanned ({:.2}x fewer, best late ratio {min_late_ratio:.3}) | {threads} threads",
+            lf.len(),
+            ms[0],
+            ms[1],
+            full_scanned as f64 / frontier_scanned.max(1) as f64,
+        );
+        rows.push(format!(
+            "{{\"instance\":\"{name}\",\"vertices\":{n},\"rounds\":{},\"full_ms\":{:.4},\"frontier_ms\":{:.4},\"full_scanned\":{full_scanned},\"frontier_scanned\":{frontier_scanned},\"min_late_ratio\":{min_late_ratio:.4},\"warm_large_allocs\":{}}}",
+            lf.len(),
+            ms[0],
+            ms[1],
+            warm_large[0] + warm_large[1],
+        ));
+    }
+    println!(
+        "  suite: full {:.3} ms vs frontier {:.3} ms ({:.2}x)",
+        totals[0],
+        totals[1],
+        totals[0] / totals[1].max(1e-9)
+    );
+    let json = format!(
+        "{{\"bench\":\"activeset\",\"threads\":{threads},\"reps\":{reps},\"k\":{k},\"full_ms_total\":{:.4},\"frontier_ms_total\":{:.4},\"cases\":[{}]}}\n",
+        totals[0],
+        totals[1],
+        rows.join(",")
+    );
+    let path = "BENCH_activeset.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+}
+
 fn micro_benchmarks() {
     use detpart::config::JetConfig;
     use detpart::datastructures::PartitionedHypergraph;
@@ -844,6 +962,7 @@ fn main() {
         flow_micro();
         layout_micro();
         kernel_micro();
+        activeset_micro();
         return;
     }
     for name in names {
@@ -855,6 +974,7 @@ fn main() {
             flow_micro();
             layout_micro();
             kernel_micro();
+            activeset_micro();
         } else if name == "contraction" {
             contraction_micro();
         } else if name == "selection" || name == "refinement" {
@@ -867,9 +987,11 @@ fn main() {
             layout_micro();
         } else if name == "kernel" {
             kernel_micro();
+        } else if name == "activeset" {
+            activeset_micro();
         } else if !figures::run_by_name(&ctx, name) {
             eprintln!(
-                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, refinement, engine, flow, layout, kernel, all"
+                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, refinement, engine, flow, layout, kernel, activeset, all"
             );
             std::process::exit(1);
         }

@@ -81,6 +81,50 @@ impl fmt::Display for KernelKind {
     }
 }
 
+/// Which vertex set the refinement rounds scan — the full boundary every
+/// round, or the *frontier*: the deduplicated union of pins of nets
+/// touched by the previous round's applied moves. Only frontier vertices
+/// can have changed gains, so both kinds produce **bit-identical**
+/// partitions (asserted by
+/// `prop_frontier_refinement_matches_full_scan_oracle`); this knob trades
+/// scan volume, not results. See DESIGN.md §12.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActiveSetKind {
+    /// Rescan the full boundary every round — the retained determinism
+    /// oracle.
+    Full,
+    /// Scan only vertices incident to nets touched since the last scan,
+    /// derived from the move journal (first round per level is always
+    /// full; falls back to `Full` deterministically when the frontier
+    /// exceeds [`RefinementConfig::active_set_fallback_frac`] of the
+    /// boundary). The default.
+    Frontier,
+}
+
+impl ActiveSetKind {
+    /// Every active-set kind, oracle first.
+    pub const ALL: [ActiveSetKind; 2] = [ActiveSetKind::Full, ActiveSetKind::Frontier];
+
+    /// The kind's canonical (CLI / CSV / report) name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ActiveSetKind::Full => "full",
+            ActiveSetKind::Frontier => "frontier",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn from_name(name: &str) -> Option<ActiveSetKind> {
+        ActiveSetKind::ALL.into_iter().find(|k| k.name() == name)
+    }
+}
+
+impl fmt::Display for ActiveSetKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// The named configuration presets of the paper's evaluation. Replaces
 /// the former free-form `Config.name` string, so preset lookup, report
 /// labels and [`Preset::ALL`] cannot drift apart.
@@ -398,6 +442,14 @@ pub struct RefinementConfig {
     /// selecting [`KernelKind::Blocked`] together with
     /// [`GainBackend::Xla`] is a validation error).
     pub kernel: KernelKind,
+    /// Which vertex set refinement rounds scan (full boundary vs the
+    /// move-journal-derived frontier). See [`ActiveSetKind`].
+    pub active_set: ActiveSetKind,
+    /// When the frontier grows beyond this fraction of the boundary, the
+    /// round deterministically falls back to a full boundary scan (dense
+    /// early rounds skip the set-maintenance overhead). Must be finite
+    /// and in `(0, 1]`.
+    pub active_set_fallback_frac: f64,
 }
 
 impl Default for RefinementConfig {
@@ -409,6 +461,8 @@ impl Default for RefinementConfig {
             flows: None,
             gain_backend: GainBackend::Native,
             kernel: KernelKind::Blocked,
+            active_set: ActiveSetKind::Frontier,
+            active_set_fallback_frac: 0.75,
         }
     }
 }
@@ -454,6 +508,11 @@ pub enum ConfigError {
     /// native blocked layer, so the combination is contradictory — pick
     /// one vectorized path.
     KernelBackendMismatch,
+    /// `active_set_fallback_frac` is not finite or outside `(0, 1]`.
+    InvalidActiveSetFallback(
+        /// The offending fraction.
+        f64,
+    ),
 }
 
 impl fmt::Display for ConfigError {
@@ -492,6 +551,12 @@ impl fmt::Display for ConfigError {
                     "kernel 'blocked' requires the native gain backend \
                      (the xla backend ships its own tiled kernels; use \
                      kernel 'scalar' with it)"
+                )
+            }
+            ConfigError::InvalidActiveSetFallback(frac) => {
+                write!(
+                    f,
+                    "active-set fallback fraction must be finite and in (0, 1], got {frac}"
                 )
             }
         }
@@ -674,6 +739,10 @@ impl Config {
         {
             return Err(ConfigError::KernelBackendMismatch);
         }
+        let frac = self.refinement.active_set_fallback_frac;
+        if !frac.is_finite() || frac <= 0.0 || frac > 1.0 {
+            return Err(ConfigError::InvalidActiveSetFallback(frac));
+        }
         Ok(())
     }
 }
@@ -746,6 +815,13 @@ impl ConfigBuilder {
     /// [`GainBackend::Xla`].
     pub fn kernel(mut self, kernel: KernelKind) -> Self {
         self.cfg.refinement.kernel = kernel;
+        self
+    }
+
+    /// Select which vertex set refinement rounds scan (`Frontier` is the
+    /// default; `Full` is the determinism oracle).
+    pub fn active_set(mut self, kind: ActiveSetKind) -> Self {
+        self.cfg.refinement.active_set = kind;
         self
     }
 
@@ -896,6 +972,40 @@ mod tests {
                 ConfigBuilder::new(p).kernel(k).build().unwrap();
             }
         }
+    }
+
+    #[test]
+    fn active_set_kinds_resolve_and_builder_applies() {
+        for a in ActiveSetKind::ALL {
+            assert_eq!(ActiveSetKind::from_name(a.name()), Some(a));
+            assert_eq!(a.to_string(), a.name());
+        }
+        assert!(ActiveSetKind::from_name("nope").is_none());
+        // Frontier is the default; Full is the retained oracle.
+        assert_eq!(RefinementConfig::default().active_set, ActiveSetKind::Frontier);
+        let cfg = ConfigBuilder::new(Preset::DetJet)
+            .active_set(ActiveSetKind::Full)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.refinement.active_set, ActiveSetKind::Full);
+        // Every preset validates under both active-set kinds.
+        for p in Preset::ALL {
+            for a in ActiveSetKind::ALL {
+                ConfigBuilder::new(p).active_set(a).build().unwrap();
+            }
+        }
+        // The fallback fraction is range-checked.
+        for bad in [0.0, -0.5, 1.5, f64::NAN, f64::INFINITY] {
+            assert!(matches!(
+                ConfigBuilder::new(Preset::DetJet)
+                    .tweak(|c| c.refinement.active_set_fallback_frac = bad)
+                    .build()
+                    .unwrap_err(),
+                ConfigError::InvalidActiveSetFallback(_)
+            ));
+        }
+        let e = ConfigError::InvalidActiveSetFallback(1.5);
+        assert!(e.to_string().contains("fallback"));
     }
 
     #[test]

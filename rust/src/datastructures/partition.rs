@@ -563,10 +563,30 @@ impl<'a> PartitionedHypergraph<'a> {
         len: usize,
         f: impl Fn(usize) -> (VertexId, BlockId) + Sync,
     ) {
+        self.apply_moves_observed(len, f, |_| {});
+    }
+
+    /// [`apply_moves_with`](Self::apply_moves_with) plus a per-move hook:
+    /// `on_moved(v)` fires for every move that actually changed a block
+    /// assignment (i.e. where [`apply_move`](Self::apply_move) returned
+    /// true), from whichever worker thread applied it. The active-set
+    /// layer uses this to stamp the nets touched by the batch without a
+    /// second pass over the move slice. `on_moved` must be safe to call
+    /// concurrently for distinct vertices; the set of vertices it sees is
+    /// interleaving-independent (exactly the movers of the batch), so any
+    /// commutative use preserves the determinism contract.
+    pub fn apply_moves_observed(
+        &self,
+        len: usize,
+        f: impl Fn(usize) -> (VertexId, BlockId) + Sync,
+        on_moved: impl Fn(VertexId) + Sync,
+    ) {
         crate::par::for_each_chunk(len, |_c, r| {
             for i in r {
                 let (v, t) = f(i);
-                self.apply_move(v, t);
+                if self.apply_move(v, t) {
+                    on_moved(v);
+                }
             }
         });
     }

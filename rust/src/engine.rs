@@ -147,6 +147,21 @@ pub trait ProgressObserver {
         let _ = (phase, seconds);
     }
 
+    /// Aggregated refinement work counters for the rounds since the last
+    /// emission (vertices scanned, candidates staged, moves applied,
+    /// frontier sizes — see [`crate::refinement::RoundWork`]), emitted at
+    /// the same per-level points as
+    /// [`km1_after_round`](Self::km1_after_round). Deterministic payload:
+    /// every count is a pure function of the synchronous round structure,
+    /// so the stream is bit-identical across thread counts (asserted by
+    /// the engine determinism tests). The counts *do* differ between
+    /// [`crate::config::ActiveSetKind`] policies — scanning fewer
+    /// vertices is the point — which is what the CLI's `--verbose`
+    /// surfaces.
+    fn round_work(&mut self, phase: &'static str, work: crate::refinement::RoundWork) {
+        let _ = (phase, work);
+    }
+
     /// The connectivity objective after a refinement round. Deterministic
     /// payload: bit-identical across thread counts for deterministic
     /// presets.
@@ -198,6 +213,12 @@ impl<'a> Progress<'a> {
     pub(crate) fn km1_after_round(&mut self, phase: &'static str, km1: Weight) {
         if let Some(o) = &mut self.observer {
             o.km1_after_round(phase, km1);
+        }
+    }
+
+    pub(crate) fn round_work(&mut self, phase: &'static str, work: crate::refinement::RoundWork) {
+        if let Some(o) = &mut self.observer {
+            o.round_work(phase, work);
         }
     }
 

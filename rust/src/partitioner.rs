@@ -115,6 +115,7 @@ pub(crate) fn direct_kway(
     // active config on every acquisition.
     let ctx = scratch.refinement(k, hg);
     ctx.set_kernel(cfg.refinement.kernel);
+    ctx.set_active_set(cfg.refinement.active_set, cfg.refinement.active_set_fallback_frac);
 
     // Refine at the coarsest level, then uncoarsen level by level. The
     // `level_tag` seeds per-level hashing (coarsest = 0, then li + 1 —
@@ -171,6 +172,7 @@ fn refine_level(
                 );
             });
             progress.km1_after_round("refinement-jet", p.km1());
+            progress.round_work("refinement-jet", ctx.take_round_work());
         }
         RefinementAlgo::LabelPropagation => {
             progress.scope("refinement-lp", || {
@@ -185,6 +187,7 @@ fn refine_level(
                 }
             });
             progress.km1_after_round("refinement-lp", p.km1());
+            progress.round_work("refinement-lp", ctx.take_round_work());
         }
         RefinementAlgo::None => {}
     }
@@ -206,6 +209,7 @@ fn refine_level(
                 );
             });
             progress.km1_after_round("refinement-flow", p.km1());
+            progress.round_work("refinement-flow", ctx.take_round_work());
         }
     }
     let (snap, scratch) = p.into_scratch();
@@ -236,8 +240,13 @@ pub(crate) fn recursive_bipartitioning_driver(
     // allocations.
     let ctx = scratch.refinement(k, hg);
     ctx.set_kernel(cfg.refinement.kernel);
+    ctx.set_active_set(cfg.refinement.active_set, cfg.refinement.active_set_fallback_frac);
     let p = PartitionedHypergraph::new_with_scratch(hg, k, part, ctx.take_partition_scratch());
     if !p.is_balanced(cfg.eps) {
+        // Standalone rebalance: size the active-set stamp arrays first —
+        // the applied sheds are stamped even though no scan consumes the
+        // resulting frontier here.
+        ctx.active.begin_pass(hg);
         progress.scope("refinement-lp", || {
             crate::refinement::jet::rebalance::rebalance_with_priority_in(
                 &p, cfg.eps, 0.1, 200, true, ctx,
@@ -245,6 +254,7 @@ pub(crate) fn recursive_bipartitioning_driver(
         });
     }
     progress.km1_after_round("rb-final", p.km1());
+    progress.round_work("rb-final", ctx.take_round_work());
     let (snap, ps) = p.into_scratch();
     ctx.put_partition_scratch(ps);
     snap
@@ -331,6 +341,7 @@ fn bipartition_multilevel(
     ];
     let ctx = scratch.rb_split(hg);
     ctx.set_kernel(cfg.refinement.kernel);
+    ctx.set_active_set(cfg.refinement.active_set, cfg.refinement.active_set_fallback_frac);
     let mut refine2 =
         |h: &Hypergraph, pt: &mut Vec<BlockId>, progress: &mut Progress<'_>, ctx: &mut RefinementContext| {
             let p = PartitionedHypergraph::new_with_scratch(

@@ -131,44 +131,30 @@ pub fn collect_candidates_in(
 ) {
     out.clear();
     match selector {
-        None => match ctx.kernel() {
-            crate::config::KernelKind::Scalar => collect_native(p, locked, tau, ctx, out),
-            crate::config::KernelKind::Blocked => {
-                collect_native_blocked(p, locked, tau, ctx, out)
+        None => {
+            // Resolve the round's scan set through the active-set layer:
+            // the full boundary (first round of a pass, Full mode, or a
+            // fallback round), or the derived frontier. Only boundary
+            // vertices can have a non-empty affinity row (an interior
+            // vertex's incident edges are all single-block), so a
+            // boundary-restricted scan is semantically identical to a
+            // full sweep — and the frontier is a superset of every vertex
+            // Full would stage (DESIGN.md §12), so both resolutions stage
+            // bit-identical candidate lists.
+            let (scan, was_full) = ctx.take_scan_list(p);
+            ctx.active.note_scanned(scan.len() as u64);
+            match ctx.kernel() {
+                crate::config::KernelKind::Scalar => {
+                    collect_native(p, locked, tau, ctx, &scan, out)
+                }
+                crate::config::KernelKind::Blocked => {
+                    collect_native_blocked(p, locked, tau, ctx, &scan, out)
+                }
             }
-        },
+            ctx.put_scan_list(scan, was_full);
+        }
         Some(s) => out.extend(collect_tiled(p, locked, tau, s)),
     }
-}
-
-/// Degree-weighted chunking of the boundary (shared by the scalar and
-/// blocked scans, so both flatten bit-identical candidate lists): chunks
-/// tile the boundary in index order, split by cumulative degree.
-fn boundary_chunk_ranges(
-    p: &PartitionedHypergraph,
-    ctx: &mut RefinementContext,
-    boundary: &[VertexId],
-) -> Vec<std::ops::Range<usize>> {
-    let nt = crate::par::num_threads().max(1);
-    // Per-vertex scan work is O(deg(v)·k̄): chunk the boundary by total
-    // *degree* rather than vertex count, so one hub-heavy chunk can't
-    // serialize the scan.
-    let n_b = boundary.len();
-    let n_chunks = crate::par::pool::num_chunks(n_b, nt);
-    let hg = p.hypergraph();
-    let degree_cum = &mut ctx.degree_cum;
-    degree_cum.clear();
-    degree_cum.resize(n_b, 0);
-    crate::par::for_each_chunk_mut(&mut degree_cum[..], |start, chunk| {
-        for (j, slot) in chunk.iter_mut().enumerate() {
-            *slot = hg.degree(boundary[start + j]) as i64;
-        }
-    });
-    let total = crate::par::exclusive_prefix_sum_in_place(degree_cum);
-    let cum = |i: usize| if i == n_b { total as u64 } else { degree_cum[i] as u64 };
-    (0..n_chunks)
-        .map(|ci| crate::par::nth_chunk_weighted(n_b, n_chunks, ci, &cum))
-        .collect()
 }
 
 fn collect_native(
@@ -176,18 +162,16 @@ fn collect_native(
     locked: &Bitset,
     tau: f64,
     ctx: &mut RefinementContext,
+    boundary: &[VertexId],
     out: &mut Vec<MoveCandidate>,
 ) {
-    // Perf: only boundary vertices can have a non-empty affinity row
-    // (an interior vertex's incident edges are all single-block), so the
-    // scan is restricted to them — semantically identical, and far
-    // cheaper once the partition tightens (see EXPERIMENTS.md §Perf).
-    let boundary = crate::refinement::boundary_vertices_in(p, ctx.vertex_marks());
-    let ranges = boundary_chunk_ranges(p, ctx, &boundary);
+    // Per-vertex scan work is O(deg(v)·k̄): chunk the scan list by total
+    // *degree* rather than vertex count, so one hub-heavy chunk can't
+    // serialize the scan (shared helper, also used by rebalance).
+    let ranges = crate::refinement::scan_chunk_ranges(p, &mut ctx.degree_cum, boundary);
     let n_chunks = ranges.len();
     {
         let (bufs, chunk_outs) = ctx.scan_scratch(n_chunks);
-        let boundary = &boundary;
         let slots: Vec<_> =
             chunk_outs.iter_mut().zip(bufs.iter_mut()).zip(ranges).collect();
         std::thread::scope(|s| {
@@ -242,14 +226,13 @@ fn collect_native_blocked(
     locked: &Bitset,
     tau: f64,
     ctx: &mut RefinementContext,
+    boundary: &[VertexId],
     out: &mut Vec<MoveCandidate>,
 ) {
-    let boundary = crate::refinement::boundary_vertices_in(p, ctx.vertex_marks());
-    let ranges = boundary_chunk_ranges(p, ctx, &boundary);
+    let ranges = crate::refinement::scan_chunk_ranges(p, &mut ctx.degree_cum, boundary);
     let n_chunks = ranges.len();
     {
         let (kernels, chunk_outs) = ctx.blocked_scan_scratch(n_chunks);
-        let boundary = &boundary;
         let slots: Vec<_> =
             chunk_outs.iter_mut().zip(kernels.iter_mut()).zip(ranges).collect();
         std::thread::scope(|s| {

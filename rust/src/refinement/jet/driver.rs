@@ -76,6 +76,10 @@ pub fn refine_jet_in(
         initial_km1: p.km1(),
         ..Default::default()
     };
+    // Size the active-set stamp arrays up front: the entry rebalance
+    // below applies (and stamps) moves outside any temperature pass.
+    // Each temperature then restarts the pass itself.
+    ctx.active.begin_pass(p.hypergraph());
     // Repair balance first if the projected partition is over.
     if !p.is_balanced(eps) {
         rebalance_with_priority_in(p, eps, cfg.deadzone, 100, cfg.weight_aware_rebalance, ctx);
@@ -83,13 +87,23 @@ pub fn refine_jet_in(
     // The (possibly repaired) entry state is the rollback baseline.
     p.commit_journal();
     let mut best_km1 = if acceptable(p, eps) { p.km1() } else { Weight::MAX };
+    // Convergence streak: consecutive rounds (possibly spanning a
+    // temperature switch) that staged zero positive-gain candidates.
+    // Two in a row ⇒ the remaining (colder) temperatures are skipped —
+    // a colder τ only narrows the candidate set, so this early exit is
+    // deterministic and scan-set-independent (the staged counts are
+    // bit-identical under Full and Frontier).
+    let mut empty_streak = 0usize;
 
     for (ti, &tau) in cfg.temperatures.iter().enumerate() {
+        if empty_streak >= 2 {
+            break;
+        }
         if cfg.asynchronous {
             let tau_seed = hash64(seed, ti as u64);
             run_async_temperature(p, eps, cfg, tau, tau_seed, &mut stats, ctx);
         } else {
-            run_temperature(p, eps, cfg, tau, selector, &mut stats, ctx);
+            run_temperature(p, eps, cfg, tau, selector, &mut stats, ctx, &mut empty_streak);
         }
         // Track the best acceptable partition across temperatures: commit
         // improvements, revert everything else to the incumbent.
@@ -105,6 +119,7 @@ pub fn refine_jet_in(
     stats
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_temperature(
     p: &PartitionedHypergraph,
     eps: f64,
@@ -113,11 +128,17 @@ fn run_temperature(
     selector: Option<&dyn TileSelector>,
     stats: &mut JetStats,
     ctx: &mut RefinementContext,
+    empty_streak: &mut usize,
 ) {
-    let n = p.hypergraph().num_vertices();
+    let hg = p.hypergraph();
+    let n = hg.num_vertices();
     let mut locked = std::mem::take(&mut ctx.locked);
     locked.reset(n);
     let mut candidates = std::mem::take(&mut ctx.candidates);
+    // Fresh active-set pass per temperature: candidate admission is
+    // τ-dependent, so the first round after a temperature switch must
+    // rescan the full boundary (DESIGN.md §12).
+    ctx.active.begin_pass(hg);
     // Entry state == the journal baseline (the caller committed/reverted
     // right before); commits below advance it only on strict improvement.
     let mut best_km1 = if acceptable(p, eps) { p.km1() } else { Weight::MAX };
@@ -131,10 +152,10 @@ fn run_temperature(
         // moves staged there, and the bulk apply feeds them to the
         // engine without an intermediate `(vertex, target)` copy vector.
         let n_moved = {
+            let (sel, aset) = ctx.selection_and_active();
             let moves = if cfg.use_afterburner {
-                afterburner_in(p, &candidates, ctx.selection_mut())
+                afterburner_in(p, &candidates, sel)
             } else {
-                let sel = ctx.selection_mut();
                 sel.stage(&candidates);
                 select::filter_positive_in(sel);
                 sel.staged()
@@ -143,8 +164,24 @@ fn run_temperature(
                 0
             } else {
                 // Unconstrained synchronous execution (may violate
-                // balance).
-                p.apply_moves_with(moves.len(), |i| (moves[i].vertex, moves[i].target));
+                // balance). In Frontier mode, stamp the nets each mover
+                // touches as a byproduct of the bulk apply.
+                if aset.tracking() {
+                    p.apply_moves_observed(
+                        moves.len(),
+                        |i| (moves[i].vertex, moves[i].target),
+                        |v| aset.on_moved(hg, v),
+                    );
+                    // The vertices locked *this* round (last round's
+                    // movers) were skipped by the scan and become
+                    // eligible again next round — carry them into the
+                    // next frontier even if their nets stay quiet.
+                    for v in locked.iter_ones() {
+                        aset.keep_active(v as crate::VertexId);
+                    }
+                } else {
+                    p.apply_moves_with(moves.len(), |i| (moves[i].vertex, moves[i].target));
+                }
                 // Lock moved vertices for the next iteration
                 // (oscillation guard).
                 locked.clear();
@@ -154,10 +191,24 @@ fn run_temperature(
                 moves.len()
             }
         };
+        ctx.active.note_staged(candidates.len() as u64);
+        ctx.active.note_applied_count(n_moved as u64);
         if n_moved == 0 {
+            *empty_streak += 1;
+            ctx.active.flush_round();
             break;
         }
-        // Repair balance.
+        *empty_streak = 0;
+        // Staged-but-unapplied candidates stay eligible: a vertex the
+        // afterburner filtered this round is re-evaluated by a full scan
+        // next round, so the frontier must carry it too.
+        if ctx.active.tracking() {
+            for c in &candidates {
+                ctx.active.keep_active(c.vertex);
+            }
+        }
+        // Repair balance (rebalance shedding stamps its applied moves
+        // through the same active set).
         if !p.is_balanced(eps) {
             rebalance_with_priority_in(
                 p,
@@ -168,6 +219,9 @@ fn run_temperature(
                 ctx,
             );
         }
+        // All moves of the round (Jet batch + rebalance sheds) are in:
+        // derive the next frontier.
+        ctx.active.finish_round(hg);
         // Bookkeeping: improvement = strictly better acceptable solution.
         let cur = p.km1();
         if acceptable(p, eps) && cur < best_km1 {

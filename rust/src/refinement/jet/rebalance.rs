@@ -88,6 +88,12 @@ pub fn rebalance_with_priority_in(
     weight_aware: bool,
     ctx: &mut RefinementContext,
 ) -> bool {
+    // Fast path: every block already within L_max — equivalent to the
+    // first round's `overloaded.is_empty()` exit, without computing the
+    // deadzone or scanning block weights twice.
+    if p.is_balanced(eps) {
+        return true;
+    }
     let k = p.k();
     let hg = p.hypergraph();
     let lmax = p.max_block_weight(eps);
@@ -107,27 +113,33 @@ pub fn rebalance_with_priority_in(
                 continue; // an earlier shed this round may have landed here
             }
             stage_block_moves(p, b, lmax, dz, avg, ctx);
+            let staged_n = ctx.selection_mut().staged().len() as u64;
             // Minimal prefix by priority whose weight covers the
             // overload — the selection core's shed mode (deterministic
-            // sort + segmented prefix sum + binary-search cutoff).
-            let applied = if weight_aware {
-                select::shed_and_apply_in(
-                    p,
-                    shed_target,
-                    |x, y| priority_cmp(hg, x, y),
-                    ctx.selection_mut(),
-                )
-                .len()
-            } else {
-                // Ablation: Jet's original plain-gain priority.
-                select::shed_and_apply_in(
-                    p,
-                    shed_target,
-                    |x, y| y.gain.cmp(&x.gain).then(x.vertex.cmp(&y.vertex)),
-                    ctx.selection_mut(),
-                )
-                .len()
+            // sort + segmented prefix sum + binary-search cutoff). The
+            // applied sheds are stamped into the active set: rebalance
+            // always scans its block in full (its eligibility test is
+            // weight-dependent, so no subset restriction is exact —
+            // DESIGN.md §12), but its moves must feed the Jet/LP
+            // frontiers like any others.
+            let applied = {
+                let (sel, aset) = ctx.selection_and_active();
+                let applied = if weight_aware {
+                    select::shed_and_apply_in(p, shed_target, |x, y| priority_cmp(hg, x, y), sel)
+                } else {
+                    // Ablation: Jet's original plain-gain priority.
+                    select::shed_and_apply_in(
+                        p,
+                        shed_target,
+                        |x, y| y.gain.cmp(&x.gain).then(x.vertex.cmp(&y.vertex)),
+                        sel,
+                    )
+                };
+                aset.note_applied(hg, applied);
+                applied.len()
             };
+            ctx.active.note_staged(staged_n);
+            ctx.active.note_applied_count(applied as u64);
             progressed |= applied > 0;
         }
         if !progressed {
@@ -155,8 +167,15 @@ fn stage_block_moves(
     let heavy_cap_num = 3 * (p.block_weight(b) - avg); // c(v) > 3/2·(..) ⇔ 2c(v) > 3·(..)
     let k = p.k();
 
-    let nt = crate::par::num_threads().max(1);
-    let ranges = crate::par::pool::chunk_ranges(n, nt);
+    // Degree-weighted chunking via the shared refinement helper (same
+    // splitter as the Jet candidate scans): the per-vertex scan cost is
+    // O(deg(v)·k̄), so a uniform split serializes on hub-heavy stretches.
+    // Emission order is chunk-ordered + per-chunk ascending either way,
+    // so the staged set is bit-identical to the old uniform split.
+    ctx.active.note_scanned(n as u64);
+    let ranges = crate::refinement::weighted_chunk_ranges(&mut ctx.degree_cum, n, |i| {
+        hg.degree(i as VertexId) as i64
+    });
     let n_chunks = ranges.len();
     // Per-call block-weight snapshot (frozen during staging — no moves
     // are applied until the shed step, so the snapshot equals live reads

@@ -11,7 +11,7 @@
 //! negative-gain moves, it gets stuck in the local minima Jet escapes —
 //! exactly the quality gap the paper quantifies.
 
-use super::{boundary_vertices_in, select, MoveCandidate, RefinementContext};
+use super::{select, MoveCandidate, RefinementContext};
 use crate::config::LpConfig;
 use crate::datastructures::PartitionedHypergraph;
 use crate::{BlockId, Weight};
@@ -41,6 +41,11 @@ pub fn refine_lp_in(
 ) -> Weight {
     let mut total_gain = 0;
     let subrounds = cfg.subrounds.max(1) as u64;
+    let hg = p.hypergraph();
+    // Fresh active-set pass per LP call: the first subround scans the
+    // full boundary; later subrounds scan the maintained active list
+    // under `ActiveSetKind::Frontier` (DESIGN.md §12).
+    ctx.active.begin_pass(hg);
     for round in 0..cfg.max_rounds {
         let before = p.km1();
         // This round's rollback baseline.
@@ -50,19 +55,50 @@ pub fn refine_lp_in(
             // Hash-scattered subround membership: deterministic and
             // decorrelated from vertex locality, so adjacent vertices
             // rarely move at the same barrier (oscillation guard).
-            let active: Vec<crate::VertexId> = boundary_vertices_in(p, ctx.vertex_marks())
-                .into_iter()
-                .filter(|&v| {
-                    crate::util::rng::hash64(round as u64, v as u64) % subrounds == sub
-                })
-                .collect();
-            if active.is_empty() {
+            let in_class = |v: crate::VertexId| {
+                crate::util::rng::hash64(round as u64, v as u64) % subrounds == sub
+            };
+            // Base scan set for this subround: the full boundary, or the
+            // active list maintained across subrounds. The active list is
+            // a superset of every vertex with a strictly positive gain
+            // (the staging filter), so both resolutions stage the
+            // identical candidate set.
+            let (base, was_full) = ctx.take_scan_list(p);
+            let mut cls = std::mem::take(&mut ctx.active.class_buf);
+            cls.clear();
+            cls.extend(base.iter().copied().filter(|&v| in_class(v)));
+            ctx.active.note_scanned(cls.len() as u64);
+            if cls.is_empty() {
+                // Nothing to scan in this hash class (under Frontier this
+                // also implies Full would stage nothing — every stageable
+                // vertex is in the active list): the active set carries
+                // over unchanged.
+                ctx.active.class_buf = cls;
+                ctx.restore_scan_list(base, was_full);
+                ctx.active.flush_round();
                 continue;
             }
-            stage_positive_candidates(p, &active, max_block_weights, ctx);
-            let applied =
-                select::approve_and_apply_in(p, max_block_weights, ctx.selection_mut());
-            applied_any |= !applied.is_empty();
+            stage_positive_candidates(p, &cls, max_block_weights, ctx);
+            // Snapshot the staged vertex ids (approval sorts the arena)
+            // and the capacity slack of the frozen weight snapshot — both
+            // feed the deactivation walk below.
+            ctx.capture_staged_ids();
+            ctx.active.note_staged(ctx.selection_mut().staged().len() as u64);
+            let slack = ctx.snapshot_slack(max_block_weights);
+            let n_applied = {
+                let (sel, aset) = ctx.selection_and_active();
+                let applied = select::approve_and_apply_in(p, max_block_weights, sel);
+                aset.note_applied(hg, applied);
+                applied.len()
+            };
+            ctx.active.note_applied_count(n_applied as u64);
+            applied_any |= n_applied > 0;
+            // Derive the next subround's active set: every base vertex
+            // except the provably inert ones, plus the pins of all nets
+            // the applied moves touched.
+            ctx.active.finish_lp_subround(p, &base, in_class, slack);
+            ctx.active.class_buf = cls;
+            ctx.put_scan_list(base, was_full);
         }
         let after = p.km1();
         if !applied_any {

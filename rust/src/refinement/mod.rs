@@ -20,11 +20,14 @@ pub mod lp;
 pub mod flow;
 pub mod select;
 
-use crate::config::KernelKind;
-use crate::datastructures::{AffinityBuffer, PartitionScratch, PartitionedHypergraph};
+use crate::config::{ActiveSetKind, KernelKind};
+use crate::datastructures::{
+    AffinityBuffer, Hypergraph, PartitionScratch, PartitionedHypergraph,
+};
 use crate::util::bitset::AtomicBitset;
 use crate::util::Bitset;
 use crate::{BlockId, VertexId, Weight};
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Mutex;
 
 /// A proposed vertex move with its (precomputed) gain.
@@ -33,6 +36,342 @@ pub struct MoveCandidate {
     pub vertex: VertexId,
     pub target: BlockId,
     pub gain: Weight,
+}
+
+/// Refinement work counters, accumulated by the active-set layer across
+/// all three scan consumers (Jet candidate scan, LP staging, rebalance)
+/// and drained per level by the partitioner into the
+/// [`crate::engine::ProgressObserver`] event stream. All counts are pure
+/// functions of the deterministic round structure, so the counter stream
+/// is thread-count-invariant (asserted by the engine determinism tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundWork {
+    /// Scan rounds flushed (Jet iterations plus LP subrounds).
+    pub rounds: u64,
+    /// Vertices examined by candidate, staging and rebalance scans.
+    pub scanned: u64,
+    /// Candidates staged into the selection pipeline.
+    pub staged: u64,
+    /// Moves actually applied.
+    pub applied: u64,
+    /// Sum of derived frontier sizes (0 under [`ActiveSetKind::Full`]).
+    pub frontier: u64,
+}
+
+impl RoundWork {
+    fn delta_from(&self, mark: &RoundWork) -> RoundWork {
+        RoundWork {
+            rounds: self.rounds - mark.rounds,
+            scanned: self.scanned - mark.scanned,
+            staged: self.staged - mark.staged,
+            applied: self.applied - mark.applied,
+            frontier: self.frontier - mark.frontier,
+        }
+    }
+}
+
+/// Deterministic frontier maintenance for refinement scans (DESIGN.md
+/// §12). After each bulk apply, the nets touched by the batch are stamped
+/// into an epoch-stamped edge array (from the apply hook, so re-moves
+/// within a commit window are covered — the journal's first-origin CAS
+/// would miss them); at round end the touched nets' pins are expanded in
+/// parallel (pin-prefix-weighted chunks), unioned with explicit
+/// carryover stamps ([`keep_active`](Self::keep_active)), and compacted
+/// in ascending vertex order with the chunked-prefix primitives. The
+/// result is a pure function of the applied move prefix: the frontier —
+/// and everything scanned from it — is schedule-independent, and under
+/// the per-consumer exactness arguments of DESIGN.md §12 the refinement
+/// trajectory is bit-identical to [`ActiveSetKind::Full`].
+///
+/// Epochs make invalidation O(1): [`begin_pass`](Self::begin_pass) bumps
+/// both epochs instead of clearing the stamp arrays, and all stamp
+/// buffers grow to steady state once, so warm rounds allocate nothing
+/// large.
+pub struct ActiveSet {
+    kind: ActiveSetKind,
+    fallback_frac: f64,
+    /// `edge_stamp[e] == edge_epoch` ⇔ net `e` had a pin moved since the
+    /// last drain. Relaxed stores suffice: the thread-scope join of the
+    /// applying round happens-before the drain's reads.
+    edge_stamp: Vec<AtomicU32>,
+    edge_epoch: u32,
+    /// `vertex_stamp[v] == vertex_epoch + 1` ⇔ `v` is in the frontier
+    /// being accumulated for the next round.
+    vertex_stamp: Vec<AtomicU32>,
+    vertex_epoch: u32,
+    /// The derived frontier, ascending vertex order (canonical).
+    list: Vec<VertexId>,
+    /// Compaction target, swapped with `list` at each derivation (and the
+    /// recycling slot for consumed scan-list buffers).
+    spare: Vec<VertexId>,
+    /// Reusable buffer for full boundary scans.
+    full_buf: Vec<VertexId>,
+    /// Per-chunk counts scratch for the parallel compactions.
+    counts: Vec<i64>,
+    /// LP bookkeeping: vertices staged this subround (ascending), copied
+    /// out before approval sorts the selection arena.
+    staged_ids: Vec<VertexId>,
+    /// LP's class-filtered scan list (base ∩ hash class), reused across
+    /// subrounds.
+    class_buf: Vec<VertexId>,
+    /// False until the first derivation of a pass: the first round always
+    /// scans the full boundary (per Jet temperature — candidate admission
+    /// is τ-dependent — and per LP call).
+    primed: bool,
+    /// Deterministic fallback latch: the last derived frontier exceeded
+    /// `fallback_frac` of the last full-scan length, so the next round
+    /// scans the full boundary (while stamp maintenance continues).
+    use_full_next: bool,
+    last_full_len: usize,
+    work: RoundWork,
+    round_mark: RoundWork,
+    record_rounds: bool,
+    round_log: Vec<RoundWork>,
+}
+
+impl ActiveSet {
+    fn new() -> Self {
+        ActiveSet {
+            // Contexts default to the Full oracle; the partitioner stamps
+            // the configured kind at every context acquisition, exactly
+            // like the kernel knob.
+            kind: ActiveSetKind::Full,
+            fallback_frac: 0.75,
+            edge_stamp: Vec::new(),
+            // Epochs start at 1 and `begin_pass` bumps before use, so the
+            // zero-initialized stamps of freshly grown slots never match.
+            edge_epoch: 1,
+            vertex_stamp: Vec::new(),
+            vertex_epoch: 1,
+            list: Vec::new(),
+            spare: Vec::new(),
+            full_buf: Vec::new(),
+            counts: Vec::new(),
+            staged_ids: Vec::new(),
+            class_buf: Vec::new(),
+            primed: false,
+            use_full_next: false,
+            last_full_len: 0,
+            work: RoundWork::default(),
+            round_mark: RoundWork::default(),
+            record_rounds: false,
+            round_log: Vec::new(),
+        }
+    }
+
+    /// The configured scan policy.
+    pub fn kind(&self) -> ActiveSetKind {
+        self.kind
+    }
+
+    /// Whether touched-net tracking is on (Frontier mode). Full mode
+    /// skips all stamp maintenance — it is the untouched oracle path.
+    pub(crate) fn tracking(&self) -> bool {
+        self.kind == ActiveSetKind::Frontier
+    }
+
+    fn use_frontier(&self) -> bool {
+        self.tracking() && self.primed && !self.use_full_next
+    }
+
+    /// Start a refinement pass: size the stamp arrays, invalidate all
+    /// pending stamps (O(1) epoch bump), force the first round full.
+    pub(crate) fn begin_pass(&mut self, hg: &Hypergraph) {
+        let (n, m) = (hg.num_vertices(), hg.num_edges());
+        if self.vertex_stamp.len() < n {
+            self.vertex_stamp.resize_with(n, || AtomicU32::new(0));
+        }
+        if self.edge_stamp.len() < m {
+            self.edge_stamp.resize_with(m, || AtomicU32::new(0));
+        }
+        // Near wrap-around, hard-reset the stamps to a value no restarted
+        // epoch reaches soon (one O(n+m) sweep every ~4B rounds).
+        if self.vertex_epoch >= u32::MAX - 8 || self.edge_epoch >= u32::MAX - 8 {
+            for s in self.vertex_stamp.iter_mut() {
+                *s.get_mut() = u32::MAX;
+            }
+            for s in self.edge_stamp.iter_mut() {
+                *s.get_mut() = u32::MAX;
+            }
+            self.vertex_epoch = 1;
+            self.edge_epoch = 1;
+        }
+        self.vertex_epoch += 1;
+        self.edge_epoch += 1;
+        self.primed = false;
+        self.use_full_next = false;
+        self.last_full_len = 0;
+        self.list.clear();
+    }
+
+    /// Stamp `v` into the frontier being accumulated for the next round
+    /// (`&self`: callable from worker threads and past shared borrows).
+    pub(crate) fn keep_active(&self, v: VertexId) {
+        self.vertex_stamp[v as usize]
+            .store(self.vertex_epoch.wrapping_add(1), Ordering::Relaxed);
+    }
+
+    /// Record that `v` actually changed blocks: all its incident nets are
+    /// touched this round.
+    pub(crate) fn on_moved(&self, hg: &Hypergraph, v: VertexId) {
+        let e_epoch = self.edge_epoch;
+        for &e in hg.incident_edges(v) {
+            self.edge_stamp[e as usize].store(e_epoch, Ordering::Relaxed);
+        }
+    }
+
+    /// Parallel [`on_moved`](Self::on_moved) over an applied-move slice —
+    /// the stamping path for moves applied through the selection pipeline
+    /// (LP approval, rebalance shedding). No-op in Full mode.
+    pub(crate) fn note_applied(&self, hg: &Hypergraph, moves: &[MoveCandidate]) {
+        if !self.tracking() {
+            return;
+        }
+        crate::par::for_each_chunk(moves.len(), |_c, r| {
+            for i in r {
+                self.on_moved(hg, moves[i].vertex);
+            }
+        });
+    }
+
+    /// Expand every net touched since the last drain into next-round
+    /// vertex stamps, pin-prefix-weighted so hub nets can't serialize a
+    /// chunk, then retire the edge epoch.
+    fn drain_touched(&mut self, hg: &Hypergraph) {
+        let m = hg.num_edges();
+        let next = self.vertex_epoch.wrapping_add(1);
+        let cur_edge = self.edge_epoch;
+        let edge_stamp = &self.edge_stamp;
+        let vertex_stamp = &self.vertex_stamp;
+        crate::par::for_each_chunk_weighted(
+            m,
+            |i| hg.pin_prefix(i) as u64,
+            |_c, r| {
+                for e in r {
+                    if edge_stamp[e].load(Ordering::Relaxed) == cur_edge {
+                        for &v in hg.pins(e as crate::EdgeId) {
+                            vertex_stamp[v as usize].store(next, Ordering::Relaxed);
+                        }
+                    }
+                }
+            },
+        );
+        self.edge_epoch = self.edge_epoch.wrapping_add(1);
+    }
+
+    /// Finish a scan round: in Frontier mode, derive the next frontier
+    /// (touched-net pin expansion ∪ carryover stamps, compacted in
+    /// ascending vertex order) and arm the fallback latch; in both modes,
+    /// flush the round's work counters.
+    pub(crate) fn finish_round(&mut self, hg: &Hypergraph) {
+        if self.tracking() {
+            self.drain_touched(hg);
+            let next = self.vertex_epoch.wrapping_add(1);
+            let n = hg.num_vertices();
+            {
+                let ActiveSet { vertex_stamp, spare, counts, .. } = self;
+                crate::par::collect_indices_where_into(
+                    n,
+                    |v| vertex_stamp[v].load(Ordering::Relaxed) == next,
+                    spare,
+                    counts,
+                );
+            }
+            std::mem::swap(&mut self.list, &mut self.spare);
+            self.vertex_epoch = next;
+            self.primed = true;
+            self.use_full_next =
+                (self.list.len() as f64) > self.fallback_frac * self.last_full_len as f64;
+            self.work.frontier += self.list.len() as u64;
+        }
+        self.flush_round();
+    }
+
+    /// LP variant of [`finish_round`](Self::finish_round): before the
+    /// pin expansion, carry over every vertex of the subround's base list
+    /// except those provably inert — scanned this subround (class match),
+    /// staged nothing, and light enough (`c(v) ≤ slack`) that no target
+    /// can have been hidden by the capacity pre-filter, so "no candidate"
+    /// really means "no positive gain" and is pin-count-pure (DESIGN.md
+    /// §12). `staged_ids` must have been captured via
+    /// [`RefinementContext::capture_staged_ids`] before approval sorted
+    /// the arena; both it and `base` are ascending, so one merge walk
+    /// suffices.
+    pub(crate) fn finish_lp_subround(
+        &mut self,
+        p: &PartitionedHypergraph,
+        base: &[VertexId],
+        in_class: impl Fn(VertexId) -> bool,
+        slack: Weight,
+    ) {
+        if !self.tracking() {
+            self.flush_round();
+            return;
+        }
+        let hg = p.hypergraph();
+        let next = self.vertex_epoch.wrapping_add(1);
+        {
+            let staged = &self.staged_ids;
+            let vertex_stamp = &self.vertex_stamp;
+            let mut j = 0usize;
+            for &v in base {
+                while j < staged.len() && staged[j] < v {
+                    j += 1;
+                }
+                let was_staged = j < staged.len() && staged[j] == v;
+                let inert = in_class(v) && !was_staged && hg.vertex_weight(v) <= slack;
+                if !inert {
+                    vertex_stamp[v as usize].store(next, Ordering::Relaxed);
+                }
+            }
+        }
+        self.finish_round(hg);
+    }
+
+    /// Add to the scanned-vertices counter.
+    pub(crate) fn note_scanned(&mut self, n: u64) {
+        self.work.scanned += n;
+    }
+
+    /// Add to the staged-candidates counter.
+    pub(crate) fn note_staged(&mut self, n: u64) {
+        self.work.staged += n;
+    }
+
+    /// Add to the applied-moves counter.
+    pub(crate) fn note_applied_count(&mut self, n: u64) {
+        self.work.applied += n;
+    }
+
+    /// Close a round in the counter stream without deriving a frontier
+    /// (used for rounds that applied nothing).
+    pub(crate) fn flush_round(&mut self) {
+        self.work.rounds += 1;
+        if self.record_rounds {
+            self.round_log.push(self.work.delta_from(&self.round_mark));
+        }
+        self.round_mark = self.work;
+    }
+
+    /// Enable/disable the per-round trace (benches and the falsifiability
+    /// test; off by default so long campaigns don't grow a log).
+    pub fn set_record_rounds(&mut self, on: bool) {
+        self.record_rounds = on;
+        if !on {
+            self.round_log.clear();
+        }
+    }
+
+    /// The per-round work trace (empty unless
+    /// [`set_record_rounds`](Self::set_record_rounds) is on).
+    pub fn round_log(&self) -> &[RoundWork] {
+        &self.round_log
+    }
+
+    /// Clear the per-round trace (e.g. between bench phases).
+    pub fn clear_round_log(&mut self) {
+        self.round_log.clear();
+    }
 }
 
 /// Shared pool of reusable buffers for *parallel* consumers (the flow
@@ -140,6 +479,10 @@ pub struct RefinementContext {
     /// The unified move-selection pipeline's buffers (candidate arena,
     /// sort scratch, segment bounds, prefix arrays — see [`select`]).
     selection: select::SelectionScratch,
+    /// The deterministic active-set layer: frontier stamps/lists, the
+    /// fallback latch, and the per-round work counters (see [`ActiveSet`]
+    /// and DESIGN.md §12).
+    pub(crate) active: ActiveSet,
 }
 
 impl RefinementContext {
@@ -158,6 +501,7 @@ impl RefinementContext {
             flow: flow::FlowPools::new(),
             flow_rounds: flow::scheduler::FlowRoundScratch::default(),
             selection: select::SelectionScratch::default(),
+            active: ActiveSet::new(),
         }
     }
 
@@ -294,6 +638,104 @@ impl RefinementContext {
         &mut self.selection
     }
 
+    /// Split borrow of the selection scratch and the active set, so a
+    /// refiner can hold the staged-move slice (borrowing the selection
+    /// arena) while stamping touched nets through the active set's
+    /// `&self` hooks.
+    pub(crate) fn selection_and_active(
+        &mut self,
+    ) -> (&mut select::SelectionScratch, &ActiveSet) {
+        (&mut self.selection, &self.active)
+    }
+
+    /// Configure the active-set policy (re-set from the active config at
+    /// every context acquisition, like [`set_kernel`](Self::set_kernel)).
+    pub fn set_active_set(&mut self, kind: ActiveSetKind, fallback_frac: f64) {
+        self.active.kind = kind;
+        self.active.fallback_frac = fallback_frac;
+    }
+
+    /// The active-set layer (round traces, counters).
+    pub fn active_set(&self) -> &ActiveSet {
+        &self.active
+    }
+
+    /// Mutable access to the active-set layer (bench/test trace control).
+    pub fn active_set_mut(&mut self) -> &mut ActiveSet {
+        &mut self.active
+    }
+
+    /// Resolve the scan list for the next refinement round: the derived
+    /// frontier when Frontier mode is primed and below the fallback
+    /// threshold, else the full boundary (collected into a warm buffer).
+    /// Returns the list and a `was_full` flag; the caller must hand the
+    /// buffer back through [`put_scan_list`](Self::put_scan_list) (after
+    /// a consumed round) or [`restore_scan_list`](Self::restore_scan_list)
+    /// (when the round did nothing and no derivation ran).
+    pub(crate) fn take_scan_list(
+        &mut self,
+        p: &PartitionedHypergraph,
+    ) -> (Vec<VertexId>, bool) {
+        if self.active.use_frontier() {
+            (std::mem::take(&mut self.active.list), false)
+        } else {
+            let mut buf = std::mem::take(&mut self.active.full_buf);
+            boundary_vertices_into(p, &mut self.vertex_marks, &mut buf, &mut self.active.counts);
+            self.active.last_full_len = buf.len();
+            self.active.use_full_next = false;
+            (buf, true)
+        }
+    }
+
+    /// Recycle a consumed scan-list buffer (the frontier it held has been
+    /// superseded by a derivation, or the boundary will be recollected).
+    pub(crate) fn put_scan_list(&mut self, verts: Vec<VertexId>, was_full: bool) {
+        if was_full {
+            self.active.full_buf = verts;
+        } else {
+            self.active.spare = verts;
+        }
+    }
+
+    /// Return an *unconsumed* scan list unchanged, so the next
+    /// [`take_scan_list`](Self::take_scan_list) sees the identical set.
+    pub(crate) fn restore_scan_list(&mut self, verts: Vec<VertexId>, was_full: bool) {
+        if was_full {
+            self.active.full_buf = verts;
+        } else {
+            self.active.list = verts;
+        }
+    }
+
+    /// Copy the staged vertices (ascending — staging emits in chunk order
+    /// over an ascending list) out of the selection arena before approval
+    /// sorts it, for the LP carryover walk.
+    pub(crate) fn capture_staged_ids(&mut self) {
+        self.active.staged_ids.clear();
+        self.active.staged_ids.extend(self.selection.staged().iter().map(|m| m.vertex));
+    }
+
+    /// Minimum remaining capacity over all blocks, from the frozen
+    /// block-weight snapshot of the current staging scan — the LP
+    /// deactivation guard's slack (DESIGN.md §12).
+    pub(crate) fn snapshot_slack(&self, max_block_weights: &[Weight]) -> Weight {
+        max_block_weights
+            .iter()
+            .zip(&self.selection.block_weights)
+            .map(|(&l, &w)| l - w)
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Drain the accumulated work counters (the partitioner calls this at
+    /// each per-level observer emission point).
+    pub fn take_round_work(&mut self) -> RoundWork {
+        let w = self.active.work;
+        self.active.work = RoundWork::default();
+        self.active.round_mark = RoundWork::default();
+        w
+    }
+
     /// Stage the first `parts` per-chunk candidate vectors (filled by a
     /// preceding [`scan_scratch`](Self::scan_scratch) scan) into the
     /// selection arena at chunked-prefix offsets — parallel and
@@ -346,6 +788,22 @@ pub fn boundary_vertices_in(
     p: &PartitionedHypergraph,
     marks: &mut AtomicBitset,
 ) -> Vec<VertexId> {
+    let mut out = Vec::new();
+    let mut counts = Vec::new();
+    boundary_vertices_into(p, marks, &mut out, &mut counts);
+    out
+}
+
+/// [`boundary_vertices_in`] writing into caller-owned buffers (`out` is
+/// cleared first) — the warm-path form used by the active-set layer's
+/// full scans: zero large allocations once `out`/`counts` reach steady
+/// state.
+pub fn boundary_vertices_into(
+    p: &PartitionedHypergraph,
+    marks: &mut AtomicBitset,
+    out: &mut Vec<VertexId>,
+    counts: &mut Vec<i64>,
+) {
     let hg = p.hypergraph();
     let n = hg.num_vertices();
     marks.reset(n);
@@ -359,7 +817,47 @@ pub fn boundary_vertices_in(
             }
         }
     });
-    crate::par::collect_indices_where(n, |v| marks.get(v))
+    crate::par::collect_indices_where_into(n, |v| marks.get(v), out, counts);
+}
+
+/// Degree-weighted chunking of a scan list, shared by the Jet candidate
+/// scans (scalar and blocked, full and frontier) and the rebalance block
+/// scan: chunks tile `verts` in index order, split by cumulative degree,
+/// so a hub-heavy stretch can't serialize one worker. Emission order is
+/// unaffected by the split — chunks flatten in chunk order and each chunk
+/// emits in ascending index order — so any weighted split yields
+/// bit-identical results to a uniform one.
+pub(crate) fn scan_chunk_ranges(
+    p: &PartitionedHypergraph,
+    degree_cum: &mut Vec<i64>,
+    verts: &[VertexId],
+) -> Vec<std::ops::Range<usize>> {
+    let hg = p.hypergraph();
+    weighted_chunk_ranges(degree_cum, verts.len(), |i| hg.degree(verts[i]) as i64)
+}
+
+/// [`scan_chunk_ranges`] over an implicit index range with an arbitrary
+/// per-index weight — the form the rebalance block scan uses for its
+/// dense `0..n` sweep (`weight_of(i) = deg(i)`).
+pub(crate) fn weighted_chunk_ranges(
+    degree_cum: &mut Vec<i64>,
+    len: usize,
+    weight_of: impl Fn(usize) -> i64 + Sync,
+) -> Vec<std::ops::Range<usize>> {
+    let nt = crate::par::num_threads().max(1);
+    let n_chunks = crate::par::pool::num_chunks(len, nt);
+    degree_cum.clear();
+    degree_cum.resize(len, 0);
+    crate::par::for_each_chunk_mut(&mut degree_cum[..], |start, chunk| {
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            *slot = weight_of(start + j);
+        }
+    });
+    let total = crate::par::exclusive_prefix_sum_in_place(degree_cum);
+    let cum = |i: usize| if i == len { total as u64 } else { degree_cum[i] as u64 };
+    (0..n_chunks)
+        .map(|ci| crate::par::nth_chunk_weighted(len, n_chunks, ci, &cum))
+        .collect()
 }
 
 /// Deterministic grouped approval: admit, per target block, the maximal

@@ -33,6 +33,24 @@ pub enum ProgressRecord {
         /// The connectivity objective (deterministic payload).
         km1: Weight,
     },
+    /// Aggregated refinement work counters for a per-level emission.
+    RoundWork {
+        /// The refinement phase that produced them.
+        phase: &'static str,
+        /// The counters (deterministic payload; differs between
+        /// active-set policies by design).
+        work: crate::refinement::RoundWork,
+    },
+}
+
+impl ProgressRecord {
+    /// True for records whose payload depends on the active-set policy
+    /// ([`RoundWork`](ProgressRecord::RoundWork) counts scanned vertices
+    /// and frontier sizes). Cross-policy bit-identity comparisons filter
+    /// these out; cross-thread-count comparisons keep them.
+    pub fn is_work(&self) -> bool {
+        matches!(self, ProgressRecord::RoundWork { .. })
+    }
 }
 
 /// [`ProgressObserver`] that records the deterministic projection of the
@@ -55,6 +73,10 @@ impl RecordingObserver {
                 }
                 ProgressRecord::Phase { phase } => format!("phase {phase}"),
                 ProgressRecord::Km1 { phase, km1 } => format!("km1 {phase}={km1}"),
+                ProgressRecord::RoundWork { phase, work } => format!(
+                    "work {phase}: rounds={} scanned={} staged={} applied={} frontier={}",
+                    work.rounds, work.scanned, work.staged, work.applied, work.frontier
+                ),
             })
             .collect()
     }
@@ -71,6 +93,10 @@ impl ProgressObserver for RecordingObserver {
 
     fn km1_after_round(&mut self, phase: &'static str, km1: Weight) {
         self.events.push(ProgressRecord::Km1 { phase, km1 });
+    }
+
+    fn round_work(&mut self, phase: &'static str, work: crate::refinement::RoundWork) {
+        self.events.push(ProgressRecord::RoundWork { phase, work });
     }
 }
 

@@ -658,6 +658,131 @@ fn prop_blocked_kernels_match_scalar_oracle() {
 }
 
 #[test]
+fn prop_frontier_refinement_matches_full_scan_oracle() {
+    // THE PR-8 acceptance property (DESIGN.md §12): the frontier-driven
+    // active set is a pure scan-scheduling optimisation — partitions,
+    // km1, and the progress-event stream (minus the work counters, which
+    // differ between policies by design) are bit-identical to the
+    // retained full-boundary-rescan oracle, on every generator class,
+    // for the detjet / sdet / detflows presets, at 1/2/4 threads. The
+    // work-counter stream itself must be thread-count invariant within a
+    // policy.
+    use detpart::config::ActiveSetKind;
+    use detpart::engine::{PartitionRequest, Partitioner};
+    use detpart::testing::{ProgressRecord, RecordingObserver};
+
+    fn run(
+        hg: &detpart::datastructures::Hypergraph,
+        cfg: Config,
+        seed: u64,
+    ) -> (Vec<u32>, i64, RecordingObserver) {
+        let mut engine = Partitioner::new(cfg).unwrap();
+        let mut rec = RecordingObserver::default();
+        let r = engine
+            .partition_observed(hg, &PartitionRequest::new(4, seed), &mut rec)
+            .unwrap();
+        (r.part, r.km1, rec)
+    }
+
+    fn sans_work(rec: &RecordingObserver) -> Vec<String> {
+        let events: Vec<ProgressRecord> =
+            rec.events.iter().filter(|e| !e.is_work()).cloned().collect();
+        RecordingObserver { events }.deterministic_view()
+    }
+
+    let instances: Vec<(&str, detpart::datastructures::Hypergraph)> = vec![
+        ("sat", detpart::gen::sat_hypergraph(260, 780, 5, 11)),
+        ("vlsi", detpart::gen::vlsi_netlist(16, 1.15, 33)),
+        ("rmat", detpart::gen::rmat_graph(8, 6, 5)),
+    ];
+    let presets: [(&str, fn(u64) -> Config); 3] = [
+        ("detjet", Config::detjet),
+        ("sdet", Config::sdet),
+        ("detflows", Config::detflows),
+    ];
+    for (name, hg) in &instances {
+        for (ptag, preset) in &presets {
+            let seed = 13u64;
+            let mk = |a: ActiveSetKind| {
+                let mut c = preset(seed);
+                c.refinement.active_set = a;
+                c
+            };
+            let (o_part, o_km1, o_rec) =
+                detpart::par::with_num_threads(1, || run(hg, mk(ActiveSetKind::Full), seed));
+            let o_view = sans_work(&o_rec);
+            for kind in ActiveSetKind::ALL {
+                let mut views = Vec::new();
+                for nt in [1usize, 2, 4] {
+                    let (part, km1, rec) =
+                        detpart::par::with_num_threads(nt, || run(hg, mk(kind), seed));
+                    assert_eq!(
+                        (&part, km1),
+                        (&o_part, o_km1),
+                        "{name}/{ptag}: active-set {kind} diverged from the \
+                         full-scan oracle at {nt} threads"
+                    );
+                    assert_eq!(
+                        sans_work(&rec),
+                        o_view,
+                        "{name}/{ptag}/{kind} nt={nt}: event stream diverged"
+                    );
+                    views.push(rec.deterministic_view());
+                }
+                assert!(
+                    views.windows(2).all(|w| w[0] == w[1]),
+                    "{name}/{ptag}/{kind}: work counters depend on thread count"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn frontier_scans_fewer_vertices_than_full_after_round_one() {
+    // Falsifiability check for the whole point of the active set: on an
+    // rmat instance the frontier rounds scan strictly fewer vertices than
+    // the full-boundary oracle once the first (always-full) round is
+    // behind — while producing the identical move sequence.
+    use detpart::config::ActiveSetKind;
+    use detpart::refinement::jet::refine_jet_in;
+    use detpart::refinement::{RefinementContext, RoundWork};
+
+    let hg = detpart::gen::rmat_graph(10, 8, 7);
+    let n = hg.num_vertices();
+    let k = 8usize;
+    let part: Vec<u32> = (0..n)
+        .map(|v| (detpart::util::rng::hash64(17, v as u64) % k as u64) as u32)
+        .collect();
+    let cfg = JetConfig::default();
+    let mut logs: Vec<Vec<RoundWork>> = Vec::new();
+    let mut finals = Vec::new();
+    for kind in [ActiveSetKind::Full, ActiveSetKind::Frontier] {
+        let p = PartitionedHypergraph::new(&hg, k, part.clone());
+        let mut ctx = RefinementContext::new(k, n);
+        ctx.set_active_set(kind, 0.75);
+        ctx.active_set_mut().set_record_rounds(true);
+        refine_jet_in(&p, 0.05, &cfg, 3, None, &mut ctx);
+        logs.push(ctx.active_set().round_log().to_vec());
+        finals.push((p.snapshot(), p.km1()));
+    }
+    assert_eq!(finals[0], finals[1], "frontier diverged from the full oracle");
+    let (full, frontier) = (&logs[0], &logs[1]);
+    assert_eq!(full.len(), frontier.len(), "round structure diverged");
+    let total = |log: &[RoundWork]| log.iter().map(|w| w.scanned).sum::<u64>();
+    assert!(
+        total(frontier) < total(full),
+        "frontier scanned {} >= full {}",
+        total(frontier),
+        total(full)
+    );
+    assert!(
+        full.iter().zip(frontier.iter()).skip(1).any(|(f, a)| a.scanned < f.scanned),
+        "no round after the first scanned fewer vertices under Frontier"
+    );
+}
+
+#[test]
 fn prop_partitions_bit_identical_across_flow_solvers_seeds_and_threads() {
     // THE PR-5 property (Section 5.1 made real): the final partition of a
     // detflows run is a pure function of (input, config, seed) — for BOTH

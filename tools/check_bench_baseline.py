@@ -1,13 +1,22 @@
 #!/usr/bin/env python3
-"""Diff a fresh BENCH_contraction.json artifact against the checked-in
-baseline contract.
+"""Diff a fresh BENCH_*.json artifact against its checked-in baseline
+contract.
 
-The contract (rust/benches/baselines/BENCH_contraction.json) pins what is
-machine-independent about the contraction micro — the emitter schema, the
-hierarchy depth, the CSR pipeline allocating strictly less than the
-HashMap path on every level, a steady-state allocation ceiling, and a
-suite-level speedup floor — without pinning wall-clock numbers, which
-vary across runners.
+Each contract (rust/benches/baselines/BENCH_<name>.json) pins what is
+machine-independent about one micro bench — emitter schema, structural
+floors/ceilings, allocation discipline, work-reduction ratios — without
+pinning wall-clock numbers, which vary across runners. The baseline's
+"bench" field selects the checker.
+
+Contracts:
+  contraction — hierarchy depth, the CSR pipeline allocating strictly
+      less than the HashMap path on every level, a steady-state
+      allocation ceiling, and a suite-level speedup floor.
+  activeset — the frontier policy scanning strictly fewer vertices than
+      full boundary rescans on every instance, at most `max_late_ratio`
+      of the full policy's vertices in its best round after the
+      (always-full) first one, with zero large allocations on warm
+      refinement passes.
 
 Usage: check_bench_baseline.py <baseline.json> <fresh.json>
 """
@@ -21,12 +30,7 @@ def fail(msg: str) -> None:
     sys.exit(1)
 
 
-def main(baseline_path: str, fresh_path: str) -> None:
-    with open(baseline_path) as f:
-        base = json.load(f)
-    with open(fresh_path) as f:
-        fresh = json.load(f)
-
+def check_contraction(base: dict, fresh: dict) -> None:
     for key in ("bench", "instance"):
         if fresh.get(key) != base[key]:
             fail(f"{key} mismatch: fresh {fresh.get(key)!r} vs baseline {base[key]!r}")
@@ -66,6 +70,69 @@ def main(baseline_path: str, fresh_path: str) -> None:
         f"baseline diff OK: {len(levels)} levels, {speedup:.2f}x CSR speedup, "
         f"steady-state allocs <= {ceiling}"
     )
+
+
+def check_activeset(base: dict, fresh: dict) -> None:
+    if fresh.get("bench") != base["bench"]:
+        fail(f"bench mismatch: fresh {fresh.get('bench')!r} vs baseline {base['bench']!r}")
+
+    cases = fresh.get("cases")
+    if not cases:
+        fail("fresh artifact has no cases")
+    names = [c.get("instance") for c in cases]
+    if names != base["instances"]:
+        fail(f"instance set changed: fresh {names} vs baseline {base['instances']}")
+
+    schema = set(base["case_schema"])
+    ratio_ceiling = base["max_late_ratio"]
+    alloc_ceiling = base["max_warm_large_allocs"]
+    total_full = total_frontier = 0
+    for row in cases:
+        tag = row.get("instance")
+        missing = sorted(schema - set(row))
+        if missing:
+            fail(f"case {tag}: missing fields {missing}")
+        if row["frontier_scanned"] >= row["full_scanned"]:
+            fail(
+                f"case {tag}: frontier scanned {row['frontier_scanned']} vertices, "
+                f"not below the full rescan's {row['full_scanned']}"
+            )
+        if row["min_late_ratio"] > ratio_ceiling:
+            fail(
+                f"case {tag}: best late-round frontier/full scan ratio "
+                f"{row['min_late_ratio']:.3f} above ceiling {ratio_ceiling}"
+            )
+        if row["warm_large_allocs"] > alloc_ceiling:
+            fail(
+                f"case {tag}: {row['warm_large_allocs']} large allocations on warm "
+                f"refinement passes (ceiling {alloc_ceiling}) — scratch reuse regressed"
+            )
+        total_full += row["full_scanned"]
+        total_frontier += row["frontier_scanned"]
+
+    ratio = total_frontier / max(total_full, 1)
+    print(
+        f"baseline diff OK: {len(cases)} cases, frontier scans {ratio:.3f}x the "
+        f"full policy's vertices, warm large allocs <= {alloc_ceiling}"
+    )
+
+
+CHECKERS = {
+    "contraction": check_contraction,
+    "activeset": check_activeset,
+}
+
+
+def main(baseline_path: str, fresh_path: str) -> None:
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+
+    checker = CHECKERS.get(base.get("bench"))
+    if checker is None:
+        fail(f"no checker for bench {base.get('bench')!r} (have {sorted(CHECKERS)})")
+    checker(base, fresh)
 
 
 if __name__ == "__main__":
