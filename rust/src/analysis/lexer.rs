@@ -1,0 +1,329 @@
+//! Comment/string-stripping tokenizer for the `detlint` rule engine.
+//!
+//! The engine never needs a real Rust parser: every rule in the catalog
+//! (DESIGN.md §13) is expressible over a flat token stream, provided that
+//! token text inside **string literals and comments never reaches the
+//! rules** (otherwise a doc comment mentioning `HashMap` or a test
+//! fixture embedding `Ordering::Relaxed` would trigger findings). This
+//! module does exactly that split: it walks the source once, blanks
+//! every string/char literal, collects every comment verbatim (comments
+//! carry the `detlint::` directives and `SAFETY:` annotations the rules
+//! consume), and lexes the remaining code into identifier / number /
+//! punctuation tokens tagged with 1-based line numbers.
+//!
+//! Handled literal forms: line comments (`//…`), nested block comments
+//! (`/* /* … */ */`), string literals with escapes, raw strings
+//! (`r"…"`, `r#"…"#`, byte variants), char and byte-char literals
+//! (distinguished from lifetimes by lookahead). The stripper is
+//! intentionally lossy about *columns* — findings are anchored to lines.
+
+/// One code token: identifier/number/punctuation text plus its line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    /// Token text. Multi-char punctuation is fused only for the three
+    /// sequences the rules match against: `::`, `..` and `->`.
+    pub text: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// True for identifier-or-keyword tokens (`[A-Za-z_][A-Za-z0-9_]*`).
+    pub ident: bool,
+}
+
+/// One comment (line or block), verbatim, anchored to its starting line.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: usize,
+    /// Raw comment text, including the `//` / `/*` introducer.
+    pub text: String,
+}
+
+/// The lexed form of one source file: code tokens plus side-channel
+/// comments. `lines` retains the raw source for the adjacency scans
+/// (rule R5 walks upward over raw lines to find `// SAFETY:` runs).
+#[derive(Debug)]
+pub struct Lexed {
+    /// Code tokens in source order, strings/comments removed.
+    pub tokens: Vec<Tok>,
+    /// All comments in source order.
+    pub comments: Vec<Comment>,
+    /// Raw source split into lines (index 0 = line 1).
+    pub lines: Vec<String>,
+}
+
+/// Lex `src`, separating code tokens from comments.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut tokens: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = chars[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment { line, text: chars[start..i].iter().collect() });
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let (start, start_line) = (i, line);
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            comments.push(Comment { line: start_line, text: chars[start..i].iter().collect() });
+            continue;
+        }
+        // Raw string (r"…", r#"…"#, br"…"): swallow without escapes.
+        if (c == 'r' || c == 'b') && is_raw_string_start(&chars, i) {
+            let mut j = i + 1;
+            if chars[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            j += 1; // opening quote
+            loop {
+                if j >= n {
+                    break;
+                }
+                if chars[j] == '\n' {
+                    line += 1;
+                }
+                if chars[j] == '"' {
+                    let mut h = 0usize;
+                    while h < hashes && j + 1 + h < n && chars[j + 1 + h] == '#' {
+                        h += 1;
+                    }
+                    if h == hashes {
+                        j += 1 + hashes;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        // Plain (or byte) string literal: swallow with escapes.
+        if c == '"' || (c == 'b' && i + 1 < n && chars[i + 1] == '"') {
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            while j < n {
+                match chars[j] {
+                    '\\' => j += 2,
+                    '\n' => {
+                        line += 1;
+                        j += 1;
+                    }
+                    '"' => {
+                        j += 1;
+                        break;
+                    }
+                    _ => j += 1,
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime: 'x' / '\n' / b'x' are literals; a
+        // quote not closed within the escape-or-single-char form is a
+        // lifetime marker and is simply skipped.
+        if c == '\'' || (c == 'b' && i + 1 < n && chars[i + 1] == '\'') {
+            let q = if c == 'b' { i + 1 } else { i };
+            if let Some(end) = char_literal_end(&chars, q) {
+                i = end;
+                continue;
+            }
+            if c == '\'' {
+                i += 1; // lifetime quote: drop it, lex the name as an ident
+                continue;
+            }
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            tokens.push(Tok { text: chars[start..i].iter().collect(), line, ident: true });
+            continue;
+        }
+        // Number (digits plus type-suffix/underscore glue: 10_000usize).
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_' || chars[i] == '.') {
+                // Consume `.` only inside a real float (digit follows):
+                // `1.5` is one token, `0..n` and `x.0.add(i)` are not.
+                if chars[i] == '.' && !(i + 1 < n && chars[i + 1].is_ascii_digit()) {
+                    break;
+                }
+                i += 1;
+            }
+            tokens.push(Tok { text: chars[start..i].iter().collect(), line, ident: false });
+            continue;
+        }
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Punctuation; fuse the pairs the rules care about.
+        let pair = if i + 1 < n { Some((c, chars[i + 1])) } else { None };
+        let fused = matches!(pair, Some((':', ':')) | Some(('.', '.')) | Some(('-', '>')));
+        let text: String = if fused {
+            i += 2;
+            [c, pair.unwrap().1].iter().collect()
+        } else {
+            i += 1;
+            c.to_string()
+        };
+        tokens.push(Tok { text, line, ident: false });
+    }
+    Lexed { tokens, comments, lines: src.lines().map(|l| l.to_string()).collect() }
+}
+
+/// Does position `i` start a raw-string literal (`r"`, `r#`, `br"`, `br#`)?
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        if j >= chars.len() || chars[j] != 'r' {
+            return false;
+        }
+    }
+    if chars[j] != 'r' {
+        return false;
+    }
+    // Reject identifiers like `radius` or prior ident glue like `for`.
+    if i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_') {
+        return false;
+    }
+    let mut k = j + 1;
+    while k < chars.len() && chars[k] == '#' {
+        k += 1;
+    }
+    k < chars.len() && chars[k] == '"'
+}
+
+/// If `chars[q] == '\''` opens a char literal, return the index one past
+/// its closing quote; `None` when it is a lifetime.
+fn char_literal_end(chars: &[char], q: usize) -> Option<usize> {
+    let n = chars.len();
+    if q + 1 >= n {
+        return None;
+    }
+    if chars[q + 1] == '\\' {
+        // Escape: scan to the next quote (covers '\n', '\u{…}', '\'').
+        let mut j = q + 2;
+        while j < n && chars[j] != '\'' {
+            j += 1;
+        }
+        return if j < n { Some(j + 1) } else { None };
+    }
+    if q + 2 < n && chars[q + 2] == '\'' && chars[q + 1] != '\'' {
+        return Some(q + 3);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(l: &Lexed) -> Vec<String> {
+        l.tokens.iter().map(|t| t.text.clone()).collect()
+    }
+
+    #[test]
+    fn strips_strings_and_comments() {
+        let src = "let x = \"HashMap.iter() // not code\"; // HashMap\nuse std;\n";
+        let l = lex(src);
+        let ts = texts(&l);
+        assert!(!ts.contains(&"HashMap".to_string()), "string/comment text leaked: {ts:?}");
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].line, 1);
+        assert!(l.comments[0].text.contains("HashMap"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_track_lines() {
+        let src = "a\n/* one /* two\nstill */ done */\nb\n";
+        let l = lex(src);
+        let ts = texts(&l);
+        assert_eq!(ts, vec!["a", "b"]);
+        assert_eq!(l.tokens[1].line, 4);
+        assert_eq!(l.comments[0].line, 2);
+    }
+
+    #[test]
+    fn raw_strings_swallowed() {
+        let src = "let s = r#\"Ordering::Relaxed \" inner\"#; next\n";
+        let l = lex(src);
+        let ts = texts(&l);
+        assert!(!ts.contains(&"Relaxed".to_string()));
+        assert!(ts.contains(&"next".to_string()));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let c = '\\n'; let d = 'x'; let e = '}'; }\n";
+        let l = lex(src);
+        let ts = texts(&l);
+        // Lifetime names survive as plain idents; literal payloads do not.
+        assert!(ts.contains(&"a".to_string()));
+        assert!(!ts.contains(&"x".to_string()) || ts.iter().filter(|t| *t == "x").count() == 1);
+        assert!(ts.contains(&"}".to_string()));
+    }
+
+    #[test]
+    fn fuses_rule_relevant_punctuation() {
+        let src = "for v in 0..n { a::b(x -> y) }\n";
+        let ts = texts(&lex(src));
+        assert!(ts.contains(&"..".to_string()));
+        assert!(ts.contains(&"::".to_string()));
+        assert!(ts.contains(&"->".to_string()));
+        assert!(ts.contains(&"0".to_string()));
+    }
+
+    #[test]
+    fn numbers_with_suffixes_and_ranges() {
+        let src = "let a = 10_000usize; for i in 0..4 {}\n";
+        let ts = texts(&lex(src));
+        assert!(ts.contains(&"10_000usize".to_string()));
+        assert!(ts.contains(&"0".to_string()));
+        assert!(ts.contains(&"..".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_are_stable_across_multiline_strings() {
+        let src = "let s = \"line one\nline two\";\nlet t = 5;\n";
+        let l = lex(src);
+        let t5 = l.tokens.iter().find(|t| t.text == "t").unwrap();
+        assert_eq!(t5.line, 3);
+    }
+}

@@ -1,0 +1,315 @@
+//! `detlint` — a zero-dependency determinism & data-race static-analysis
+//! pass over this crate's own source tree.
+//!
+//! The partitioner's value proposition is bit-determinism, and that
+//! property is easy to lose silently: one `HashMap` iteration feeding a
+//! result, one wall-clock read steering a heuristic, one truncating
+//! index cast at billion-pin scale, one `Ordering::Relaxed` on an atomic
+//! that actually carries ordering, one `unsafe` whose invariant rotted.
+//! The dynamic oracles (proptest determinism suites) only catch such a
+//! regression on the inputs they happen to draw; `detlint` bans the
+//! hazardous *patterns* statically, at `cargo test` time and as a CI
+//! step.
+//!
+//! The pipeline is deliberately primitive — no `syn`, no type info:
+//! [`lexer`] strips comments and strings and produces a flat token
+//! stream; [`rules`] runs the six-rule catalog (R1–R6, see DESIGN.md
+//! §13) per file; [`report`] aggregates findings into a stable
+//! `LINT_report.json`. Suppression is only possible with an explicit
+//! `// detlint::allow(Rn, reason = "…")` carrying a mandatory reason,
+//! and unused allows are themselves findings, so the suppression set
+//! cannot rot.
+//!
+//! Entry points: [`lint_tree`] (used by the `detlint` binary and the
+//! tier-1 integration test in `tests/detlint.rs`) and
+//! [`rules::lint_source`] (single file; used by the fixture tests).
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use report::{Finding, Report};
+pub use rules::lint_source;
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Lint every `.rs` file under `root` (recursively), in sorted
+/// relative-path order so the report is deterministic across platforms
+/// and directory-iteration orders.
+pub fn lint_tree(root: &Path) -> io::Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    let mut rels: Vec<String> = files
+        .iter()
+        .map(|p| {
+            let rel = p.strip_prefix(root).unwrap_or(p);
+            rel.components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/")
+        })
+        .collect();
+    let mut pairs: Vec<(String, PathBuf)> = rels.drain(..).zip(files).collect();
+    pairs.sort_by(|a, b| a.0.cmp(&b.0));
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut allows_used = 0usize;
+    let files_scanned = pairs.len();
+    for (rel, path) in pairs {
+        let source = std::fs::read_to_string(&path)?;
+        let outcome = lint_source(&rel, &source);
+        allows_used += outcome.allows_used;
+        findings.extend(outcome.findings);
+    }
+    Ok(Report { findings, files_scanned, allows_used })
+}
+
+/// Depth-first collection of `.rs` files under `dir`.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Findings of one rule in a fixture, as (rule, line) pairs.
+    fn hits(rel: &str, src: &str) -> Vec<(String, usize)> {
+        lint_source(rel, src).findings.iter().map(|f| (f.rule.to_string(), f.line)).collect()
+    }
+
+    fn rules_fired(rel: &str, src: &str) -> Vec<String> {
+        let mut r: Vec<String> =
+            lint_source(rel, src).findings.iter().map(|f| f.rule.to_string()).collect();
+        r.dedup();
+        r
+    }
+
+    // ---- R1: hash-collection iteration --------------------------------
+
+    #[test]
+    fn r1_flags_iter_calls_and_for_loops_on_tracked_maps() {
+        let src = "fn f() {\n\
+                   let mut m: HashMap<u32, u32> = HashMap::new();\n\
+                   for k in m.keys() { use_it(k); }\n\
+                   for (k, v) in &m { use_it(k); }\n\
+                   }\n";
+        let h = hits("x.rs", src);
+        assert_eq!(h, vec![("R1".to_string(), 3), ("R1".to_string(), 4)], "{h:?}");
+    }
+
+    #[test]
+    fn r1_tracks_struct_fields_and_std_paths() {
+        let src = "struct S { seen: std::collections::HashSet<u64> }\n\
+                   impl S { fn g(&self) { for v in self.seen.iter() { h(v); } } }\n";
+        assert_eq!(rules_fired("x.rs", src), vec!["R1"]);
+    }
+
+    #[test]
+    fn r1_ignores_ordered_access_and_untracked_names() {
+        let src = "fn f(m: HashMap<u32, u32>, v: Vec<u32>) {\n\
+                   let x = m.get(&3);\n\
+                   for y in v.iter() { h(y); }\n\
+                   for z in others { h(z); }\n\
+                   }\n";
+        assert!(hits("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r1_allow_with_reason_suppresses_and_counts_as_used() {
+        let src = "fn f(m: HashMap<u32, u32>) {\n\
+                   // detlint::allow(R1, reason = \"summed, order-free\")\n\
+                   let s: u32 = m.values().sum();\n\
+                   }\n";
+        let out = lint_source("x.rs", src);
+        assert!(out.findings.is_empty(), "{:?}", out.findings);
+        assert_eq!(out.allows_used, 1);
+    }
+
+    // ---- R2: wall-clock -----------------------------------------------
+
+    #[test]
+    fn r2_flags_instant_now_and_systemtime_outside_timer() {
+        let src = "fn f() { let t = Instant::now(); let s = SystemTime::now(); }\n";
+        assert_eq!(rules_fired("engine.rs", src), vec!["R2"]);
+        assert_eq!(hits("engine.rs", src).len(), 1); // deduped per line
+    }
+
+    #[test]
+    fn r2_is_legal_in_the_timer_module() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert!(hits("util/timer.rs", src).is_empty());
+    }
+
+    // ---- R3: index-width discipline -----------------------------------
+
+    #[test]
+    fn r3_flags_truncating_casts_on_pin_scale_names() {
+        let src = "fn f(pin_count: u64, x: u64) {\n\
+                   let a = pin_count as u32;\n\
+                   let b = x as u32;\n\
+                   let c = offsets[i] as u32;\n\
+                   }\n";
+        let h = hits("refinement/mod.rs", src);
+        assert_eq!(h, vec![("R3".to_string(), 2), ("R3".to_string(), 4)], "{h:?}");
+    }
+
+    #[test]
+    fn r3_is_legal_inside_the_csr_width_boundary() {
+        let src = "fn f(pin_count: u64) { let a = pin_count as u32; }\n";
+        assert!(hits("datastructures/csr.rs", src).is_empty());
+    }
+
+    // ---- R4: atomic-ordering audit ------------------------------------
+
+    #[test]
+    fn r4_flags_relaxed_on_undeclared_atomic() {
+        let src = "fn f(flag: &AtomicU64) { flag.store(1, Ordering::Relaxed); }\n";
+        assert_eq!(rules_fired("engine.rs", src), vec!["R4"]);
+    }
+
+    #[test]
+    fn r4_accepts_declared_counter_and_indexed_receivers() {
+        // `cw` is in the declared set for coarsening/contraction.rs.
+        let src = "fn f(cw: &[AtomicI64]) { cw[c as usize].fetch_add(w, Ordering::Relaxed); }\n";
+        assert!(hits("coarsening/contraction.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r4_non_relaxed_orderings_are_ignored() {
+        let src = "fn f(flag: &AtomicU64) { flag.store(1, Ordering::SeqCst); }\n";
+        assert!(hits("engine.rs", src).is_empty());
+    }
+
+    // ---- R5: unsafe hygiene -------------------------------------------
+
+    #[test]
+    fn r5_flags_unsafe_without_safety_comment() {
+        let src = "fn f(p: *mut u32) {\n\
+                   unsafe { *p = 3; }\n\
+                   }\n";
+        assert_eq!(rules_fired("x.rs", src), vec!["R5"]);
+    }
+
+    #[test]
+    fn r5_accepts_preceding_and_trailing_safety_comments() {
+        let src = "fn f(p: *mut u32) {\n\
+                   // SAFETY: p is valid and exclusively owned here.\n\
+                   unsafe { *p = 3; }\n\
+                   let x = unsafe { *p }; // SAFETY: still exclusive.\n\
+                   }\n";
+        assert!(hits("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r5_safety_may_sit_above_attributes() {
+        let src = "// SAFETY: single-field repr(transparent) wrapper.\n\
+                   #[allow(dead_code)]\n\
+                   unsafe impl Sync for W {}\n";
+        assert!(hits("x.rs", src).is_empty());
+    }
+
+    // ---- R6: hot-path regions -----------------------------------------
+
+    #[test]
+    fn r6_flags_serial_index_loop_inside_region() {
+        let src = "// detlint::hot_path(begin)\n\
+                   fn f(n: usize) {\n\
+                   for v in 0..n { touch(v); }\n\
+                   }\n\
+                   // detlint::hot_path(end)\n";
+        assert_eq!(hits("x.rs", src), vec![("R6".to_string(), 3)]);
+    }
+
+    #[test]
+    fn r6_ignores_loops_outside_regions_and_par_sweeps() {
+        let src = "fn pre(n: usize) { for v in 0..n { touch(v); } }\n\
+                   // detlint::hot_path(begin)\n\
+                   fn f(chunks: &[Chunk]) { par_for(chunks, |c| touch(c)); }\n\
+                   // detlint::hot_path(end)\n";
+        assert!(hits("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r6_reports_unbalanced_and_malformed_markers() {
+        let src = "// detlint::hot_path(begin)\n\
+                   fn f() {}\n";
+        assert_eq!(rules_fired("x.rs", src), vec!["R6"]);
+        let src2 = "// detlint::hot_path(middle)\nfn f() {}\n";
+        assert_eq!(rules_fired("x.rs", src2), vec!["R6"]);
+        let src3 = "// detlint::hot_path(end)\nfn f() {}\n";
+        assert_eq!(rules_fired("x.rs", src3), vec!["R6"]);
+    }
+
+    // ---- suppression hygiene ------------------------------------------
+
+    #[test]
+    fn unused_allow_is_reported() {
+        let src = "// detlint::allow(R1, reason = \"nothing here needs it\")\n\
+                   fn f() {}\n";
+        let out = lint_source("x.rs", src);
+        assert_eq!(out.findings.len(), 1);
+        assert_eq!(out.findings[0].rule, "allow-unused");
+        assert_eq!(out.allows_used, 0);
+    }
+
+    #[test]
+    fn allow_without_reason_is_malformed() {
+        let src = "// detlint::allow(R1)\nfn f(m: HashMap<u32,u32>) { m.iter(); }\n";
+        let fired = rules_fired("x.rs", src);
+        assert!(fired.contains(&"allow-syntax".to_string()), "{fired:?}");
+        // A malformed allow must NOT suppress the finding under it.
+        assert!(fired.contains(&"R1".to_string()), "{fired:?}");
+    }
+
+    #[test]
+    fn allow_of_wrong_rule_does_not_suppress() {
+        let src = "fn f(m: HashMap<u32, u32>) {\n\
+                   // detlint::allow(R2, reason = \"wrong rule id\")\n\
+                   for k in m.keys() { h(k); }\n\
+                   }\n";
+        let fired = rules_fired("x.rs", src);
+        assert!(fired.contains(&"R1".to_string()));
+        assert!(fired.contains(&"allow-unused".to_string()));
+    }
+
+    // ---- tokenizer immunity -------------------------------------------
+
+    #[test]
+    fn rule_text_inside_strings_and_comments_is_inert() {
+        let src = "fn f() {\n\
+                   let s = \"for v in 0..n HashMap Instant::now() unsafe\";\n\
+                   // HashMap.iter() SystemTime unsafe Ordering::Relaxed\n\
+                   let r = r#\"Instant::now() as u32\"#;\n\
+                   }\n";
+        assert!(hits("x.rs", src).is_empty());
+    }
+
+    // ---- tree walk ----------------------------------------------------
+
+    #[test]
+    fn lint_tree_walks_sorted_and_reports() {
+        let dir = std::env::temp_dir().join(format!("detlint_tree_{}", std::process::id()));
+        let sub = dir.join("b");
+        std::fs::create_dir_all(&sub).unwrap();
+        std::fs::write(dir.join("a.rs"), "fn f(p: *mut u32) { unsafe { *p = 1; } }\n").unwrap();
+        std::fs::write(sub.join("c.rs"), "fn g() {}\n").unwrap();
+        let report = lint_tree(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        assert_eq!(report.files_scanned, 2);
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].file, "a.rs");
+        assert_eq!(report.findings[0].rule, "R5");
+        assert!(!report.clean());
+    }
+}

@@ -1,0 +1,152 @@
+//! Findings and the machine-readable `LINT_report.json` emitter.
+//!
+//! The JSON writer is hand-rolled on `std` (the crate is zero-dep by
+//! design); the schema is stable so CI can archive reports across runs
+//! and diff them:
+//!
+//! ```json
+//! {
+//!   "tool": "detlint",
+//!   "schema_version": 1,
+//!   "files_scanned": 57,
+//!   "allows_used": 9,
+//!   "clean": true,
+//!   "rule_counts": {"R1": 0, …},
+//!   "findings": [{"rule": "R5", "file": "par/sort.rs", "line": 84,
+//!                 "message": "…"}]
+//! }
+//! ```
+
+/// One rule violation, anchored to a `file:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule id: `R1`–`R6`, or `allow-syntax` / `allow-unused` for
+    /// suppression-hygiene findings.
+    pub rule: &'static str,
+    /// Path relative to the scanned source root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl Finding {
+    /// Construct a finding.
+    pub fn new(rule: &'static str, file: &str, line: usize, message: impl Into<String>) -> Self {
+        Finding { rule, file: file.to_string(), line, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Aggregated result of linting a source tree.
+#[derive(Debug)]
+pub struct Report {
+    /// All surviving findings, sorted by `(file, line, rule)`.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Total allow directives that suppressed at least one finding.
+    pub allows_used: usize,
+}
+
+/// The rule ids the JSON summary counts (stable order).
+pub const RULE_IDS: [&str; 8] =
+    ["R1", "R2", "R3", "R4", "R5", "R6", "allow-syntax", "allow-unused"];
+
+impl Report {
+    /// True when no rule fired and no suppression rotted.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Serialize to the stable `LINT_report.json` schema.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(512 + self.findings.len() * 128);
+        s.push_str("{\n  \"tool\": \"detlint\",\n  \"schema_version\": 1,\n");
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        s.push_str(&format!("  \"allows_used\": {},\n", self.allows_used));
+        s.push_str(&format!("  \"clean\": {},\n", self.clean()));
+        s.push_str("  \"rule_counts\": {");
+        for (i, id) in RULE_IDS.iter().enumerate() {
+            let n = self.findings.iter().filter(|f| f.rule == *id).count();
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{id}\": {n}"));
+        }
+        s.push_str("},\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str("\n    {\"rule\": ");
+            push_json_str(&mut s, f.rule);
+            s.push_str(", \"file\": ");
+            push_json_str(&mut s, &f.file);
+            s.push_str(&format!(", \"line\": {}, \"message\": ", f.line));
+            push_json_str(&mut s, &f.message);
+            s.push('}');
+        }
+        if !self.findings.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+}
+
+/// Append `v` as a JSON string literal (escaping quotes, backslashes,
+/// control characters; non-ASCII passes through as UTF-8).
+fn push_json_str(out: &mut String, v: &str) {
+    out.push('"');
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes_and_counts() {
+        let r = Report {
+            findings: vec![
+                Finding::new("R5", "a/b.rs", 7, "needs \"SAFETY\""),
+                Finding::new("R5", "a/b.rs", 9, "tab\there"),
+            ],
+            files_scanned: 3,
+            allows_used: 1,
+        };
+        let j = r.to_json();
+        assert!(j.contains("\"clean\": false"));
+        assert!(j.contains("\"R5\": 2"));
+        assert!(j.contains("needs \\\"SAFETY\\\""));
+        assert!(j.contains("tab\\there"));
+        assert!(j.contains("\"files_scanned\": 3"));
+    }
+
+    #[test]
+    fn empty_report_is_clean_and_valid() {
+        let r = Report { findings: Vec::new(), files_scanned: 0, allows_used: 0 };
+        let j = r.to_json();
+        assert!(r.clean());
+        assert!(j.contains("\"clean\": true"));
+        assert!(j.contains("\"findings\": []"));
+    }
+}

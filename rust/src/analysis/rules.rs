@@ -1,0 +1,607 @@
+//! The `detlint` rule catalog and per-file rule engine.
+//!
+//! Six rules target the crate's real determinism-hazard taxonomy
+//! (DESIGN.md §13). Each works on the comment/string-stripped token
+//! stream of [`super::lexer`]; none needs type information — receivers
+//! are resolved by a backward token scan over bracket groups, and hash
+//! collections are tracked per file from their declaration sites.
+//!
+//! | id | hazard |
+//! |----|--------|
+//! | R1 | iteration over `HashMap`/`HashSet` (order is seed-random)    |
+//! | R2 | wall-clock reads outside the timer/observer layer            |
+//! | R3 | truncating `as u32` casts on pin/offset-scale quantities     |
+//! | R4 | `Ordering::Relaxed` on atomics outside the declared set      |
+//! | R5 | `unsafe` without an immediately preceding `// SAFETY:`       |
+//! | R6 | serial index loops inside `detlint::hot_path` regions        |
+//!
+//! Findings are suppressible only via
+//! `// detlint::allow(Rn, reason = "…")` on the offending line or the
+//! line directly above; the engine reports malformed allows (missing
+//! rule id or reason) and allows that suppressed nothing, so
+//! suppressions cannot rot.
+
+use super::lexer::{lex, Comment, Lexed, Tok};
+use super::report::Finding;
+
+/// Atomic RMW/load/store methods whose `Ordering::Relaxed` argument R4
+/// audits back to a receiver.
+const ATOMIC_METHODS: [&str; 13] = [
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_or",
+    "fetch_and",
+    "fetch_xor",
+    "fetch_max",
+    "fetch_min",
+    "fetch_update",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+/// Iteration methods that expose a hash collection's nondeterministic
+/// order (R1).
+const ITER_METHODS: [&str; 9] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+/// Identifier substrings marking pin/offset-scale quantities (R3): at
+/// billion-pin scale these exceed `u32`, so truncating casts on them are
+/// only legal inside the `CsrIndex` width boundary.
+const R3_NAME_MARKERS: [&str; 4] = ["pin", "offset", "prefix", "cum"];
+
+/// Files where R2 wall-clock reads are legal (the canonical timer).
+const R2_ALLOWED_FILES: [&str; 1] = ["util/timer.rs"];
+
+/// Files where R3 width-narrowing casts are legal: the two modules that
+/// *implement* the `u32`/`u64` index-width boundary from PR 6.
+const R3_ALLOWED_FILES: [&str; 2] = ["datastructures/csr.rs", "par/counting.rs"];
+
+/// R4's declared counter-only set: per file, the atomic variables audited
+/// as safe under `Relaxed` because their values are either commutative
+/// accumulators reduced after a join, mark-once flags, or control words
+/// that never feed partition results. Any `Relaxed` on an atomic outside
+/// this table is a finding. Rationale per entry lives in DESIGN.md §13.
+const R4_COUNTER_ONLY: [(&str, &[&str]); 9] = [
+    // Mark-once membership bitset; set/clear order is immaterial.
+    ("util/bitset.rs", &["words", "w"]),
+    // Parallel-arc flow mirror, read back only after scope join.
+    ("refinement/flow/dinic.rs", &["f"]),
+    // Push-relabel working state: synchronized by barrier rounds and
+    // guarded by the verify-then-commit Dinic fallback (DESIGN.md §9).
+    (
+        "refinement/flow/relabel.rs",
+        &[
+            "flow", "flow_ref", "height", "height_ref", "dist", "dist_s", "dist_t", "marks",
+            "invalid", "invalid_ref", "d", "m", "h",
+        ],
+    ),
+    // Padded per-chunk staging counters, reduced after join.
+    ("refinement/select.rs", &["cells", "padded_counts"]),
+    // Active-set epoch stamps: mark-once per pass, any order.
+    ("refinement/mod.rs", &["vertex_stamp", "edge_stamp"]),
+    // Commutative gain recomputation accumulators.
+    ("refinement/jet/afterburner.rs", &["recomputed"]),
+    // Commutative coarse-weight accumulation.
+    ("coarsening/contraction.rs", &["cw"]),
+    // Pool control words plus unit-test hit counters.
+    ("par/pool.rs", &["NUM_THREADS", "PIN_WORKERS", "hits", "h", "cells"]),
+    // Partition state: bit-packed pin counts and block weights are
+    // commutative fetch_adds; the move journal claims slots by CAS
+    // (first-origin wins regardless of order); `moved`/`slot` write
+    // CAS-claimed disjoint cells.
+    (
+        "datastructures/partition.rs",
+        &[
+            "words",
+            "part",
+            "block_weights",
+            "connectivity",
+            "km1_attr",
+            "moved",
+            "moved_len",
+            "first_from",
+            "slot",
+        ],
+    ),
+];
+
+/// A parsed `// detlint::allow(Rn, reason = "…")` directive.
+#[derive(Debug)]
+struct Allow {
+    line: usize,
+    rule: String,
+    used: bool,
+    malformed: bool,
+}
+
+/// A parsed `// detlint::hot_path(begin|end)` directive.
+#[derive(Debug)]
+struct HotMark {
+    line: usize,
+    begin: bool,
+    bad_arg: Option<String>,
+}
+
+/// Outcome of linting one file.
+#[derive(Debug)]
+pub struct FileOutcome {
+    /// Findings that survived suppression, in line order.
+    pub findings: Vec<Finding>,
+    /// Number of allow directives that suppressed at least one finding.
+    pub allows_used: usize,
+}
+
+/// Lint a single source file. `rel_path` is the path relative to the
+/// scanned source root, with `/` separators — the rule allowlists key on
+/// it.
+pub fn lint_source(rel_path: &str, source: &str) -> FileOutcome {
+    let lexed = lex(source);
+    let (mut allows, hot_marks, safety_lines) = parse_directives(&lexed.comments);
+
+    let mut findings: Vec<Finding> = Vec::new();
+    rule_r1(rel_path, &lexed, &mut findings);
+    rule_r2(rel_path, &lexed, &mut findings);
+    rule_r3(rel_path, &lexed, &mut findings);
+    rule_r4(rel_path, &lexed, &mut findings);
+    rule_r5(rel_path, &lexed, &safety_lines, &mut findings);
+    rule_r6(rel_path, &lexed, &hot_marks, &mut findings);
+
+    // Dedup repeated (rule, line) hits (e.g. the two `Relaxed` arguments
+    // of one `compare_exchange`).
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
+
+    // Apply suppressions: an allow covers findings of its rule on its
+    // own line (trailing comment) or the line directly below.
+    let mut kept: Vec<Finding> = Vec::new();
+    for f in findings {
+        let mut suppressed = false;
+        for a in allows.iter_mut() {
+            if !a.malformed && a.rule == f.rule && (a.line == f.line || a.line + 1 == f.line) {
+                a.used = true;
+                suppressed = true;
+                break;
+            }
+        }
+        if !suppressed {
+            kept.push(f);
+        }
+    }
+    let allows_used = allows.iter().filter(|a| a.used).count();
+    for a in &allows {
+        if a.malformed {
+            kept.push(Finding::new(
+                "allow-syntax",
+                rel_path,
+                a.line,
+                "malformed detlint::allow — expected `detlint::allow(Rn, reason = \"…\")` \
+                 with a non-empty reason",
+            ));
+        } else if !a.used {
+            kept.push(Finding::new(
+                "allow-unused",
+                rel_path,
+                a.line,
+                format!("detlint::allow({}) suppresses nothing — remove it", a.rule),
+            ));
+        }
+    }
+    kept.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    FileOutcome { findings: kept, allows_used }
+}
+
+/// Extract `detlint::` directives and `SAFETY`-bearing comment lines.
+///
+/// A directive must be the comment's *leading* content (after the
+/// `//`/`//!`/`/*` introducer and whitespace) — prose that merely
+/// mentions `detlint::allow(…)`, like this sentence or the module docs,
+/// is not a directive.
+fn parse_directives(comments: &[Comment]) -> (Vec<Allow>, Vec<HotMark>, Vec<usize>) {
+    let mut allows = Vec::new();
+    let mut hot = Vec::new();
+    let mut safety = Vec::new();
+    for c in comments {
+        if c.text.contains("SAFETY") || c.text.contains("# Safety") {
+            safety.push(c.line);
+        }
+        let head = c.text.trim_start_matches(['/', '*', '!']).trim_start();
+        if let Some(args) = head.strip_prefix("detlint::allow(") {
+            allows.push(parse_allow(c.line, args));
+        } else if let Some(args) = head.strip_prefix("detlint::hot_path(") {
+            let arg: String =
+                args.chars().take_while(|&ch| ch != ')').collect::<String>().trim().to_string();
+            let (begin, bad) = match arg.as_str() {
+                "begin" => (true, None),
+                "end" => (false, None),
+                other => (false, Some(other.to_string())),
+            };
+            hot.push(HotMark { line: c.line, begin, bad_arg: bad });
+        }
+    }
+    (allows, hot, safety)
+}
+
+/// Parse the argument list of one allow directive.
+fn parse_allow(line: usize, args: &str) -> Allow {
+    let body: String = args.chars().take_while(|&ch| ch != ')').collect();
+    let mut parts = body.splitn(2, ',');
+    let rule = parts.next().unwrap_or("").trim().to_string();
+    let rest = parts.next().unwrap_or("").trim();
+    let rule_ok = rule.len() == 2
+        && rule.starts_with('R')
+        && rule[1..].chars().all(|c| c.is_ascii_digit());
+    let reason_ok = rest
+        .strip_prefix("reason")
+        .map(|r| r.trim_start())
+        .and_then(|r| r.strip_prefix('='))
+        .map(|r| r.trim())
+        .is_some_and(|r| r.len() > 2 && r.starts_with('"'));
+    Allow { line, rule, used: false, malformed: !(rule_ok && reason_ok) }
+}
+
+/// Base identifier of the receiver expression ending just before token
+/// `end` (exclusive): skips trailing `[…]`/`(…)` groups, then returns
+/// the identifier, e.g. `self.words[i / 64]` → `words`.
+fn base_ident_before(tokens: &[Tok], end: usize) -> Option<&str> {
+    let mut i = end;
+    loop {
+        if i == 0 {
+            return None;
+        }
+        let t = &tokens[i - 1].text;
+        if t == "]" || t == ")" {
+            let (open, close) = if t == "]" { ("[", "]") } else { ("(", ")") };
+            let mut depth = 1usize;
+            i -= 1;
+            while i > 0 && depth > 0 {
+                i -= 1;
+                if tokens[i].text == close {
+                    depth += 1;
+                } else if tokens[i].text == open {
+                    depth -= 1;
+                }
+            }
+            continue;
+        }
+        break;
+    }
+    if i == 0 {
+        return None;
+    }
+    let t = &tokens[i - 1];
+    if t.ident {
+        Some(&t.text)
+    } else {
+        None
+    }
+}
+
+/// R1 — nondeterministic iteration. Tracks identifiers declared or typed
+/// as `HashMap`/`HashSet` in this file (let bindings, struct fields, fn
+/// params) and flags iteration-order-exposing calls and for-loops on
+/// them.
+fn rule_r1(rel: &str, lexed: &Lexed, out: &mut Vec<Finding>) {
+    let toks = &lexed.tokens;
+    let mut tracked: Vec<String> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if !(t.text == "HashMap" || t.text == "HashSet") {
+            continue;
+        }
+        // Walk back over the `path::` prefix and `&`/`mut` decorations.
+        let mut j = i;
+        while j >= 2 && toks[j - 1].text == "::" && toks[j - 2].ident {
+            j -= 2;
+        }
+        while j >= 1 && (toks[j - 1].text == "&" || toks[j - 1].text == "mut") {
+            j -= 1;
+        }
+        if j < 2 {
+            continue;
+        }
+        let next = |s: &str| toks.get(i + 1).is_some_and(|t| t.text == s);
+        let sep = &toks[j - 1].text;
+        let name = &toks[j - 2];
+        // `name: HashMap<…>` (binding/field/param) or `= HashMap::new()`.
+        let typed = sep == ":" && next("<") && name.ident;
+        let inited = sep == "=" && next("::") && name.ident;
+        if (typed || inited) && !tracked.contains(&name.text) {
+            tracked.push(name.text.clone());
+        }
+    }
+    if tracked.is_empty() {
+        return;
+    }
+    // `.keys()` / `.values()` / `.drain()` / `.iter()` … on a tracked id.
+    for i in 1..toks.len() {
+        if toks[i].text != "(" || i < 2 {
+            continue;
+        }
+        let m = &toks[i - 1];
+        if !m.ident || toks[i - 2].text != "." {
+            continue;
+        }
+        if !ITER_METHODS.contains(&m.text.as_str()) {
+            continue;
+        }
+        if let Some(base) = base_ident_before(toks, i - 2) {
+            if tracked.iter().any(|t| t == base) {
+                let msg = format!(
+                    "iteration `.{}()` over hash collection `{base}` — order is \
+                     nondeterministic",
+                    m.text
+                );
+                out.push(Finding::new("R1", rel, m.line, msg));
+            }
+        }
+    }
+    // `for pat in [&[mut]] tracked {`.
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].text != "for" {
+            i += 1;
+            continue;
+        }
+        let line = toks[i].line;
+        // Find the `in` at paren/bracket depth 0.
+        let mut j = i + 1;
+        let mut depth = 0i32;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "in" if depth == 0 => break,
+                "{" | ";" => {
+                    j = toks.len();
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        if j >= toks.len() {
+            i += 1;
+            continue;
+        }
+        // Collect the loop expression up to its body brace; flag only
+        // plain `ident`-path expressions (method calls are handled
+        // above).
+        let mut k = j + 1;
+        let mut expr: Vec<&Tok> = Vec::new();
+        let mut plain = true;
+        while k < toks.len() && toks[k].text != "{" {
+            let t = &toks[k];
+            if !(t.ident || t.text == "&" || t.text == "." || t.text == "mut") {
+                plain = false;
+            }
+            expr.push(t);
+            k += 1;
+        }
+        if plain {
+            if let Some(last) = expr.iter().rev().find(|t| t.ident) {
+                if tracked.iter().any(|t| t == &last.text) {
+                    let msg = format!(
+                        "for-loop over hash collection `{}` — order is nondeterministic",
+                        last.text
+                    );
+                    out.push(Finding::new("R1", rel, line, msg));
+                }
+            }
+        }
+        i = k.max(i + 1);
+    }
+}
+
+/// R2 — result-affecting wall-clock reads: `Instant::now` / `SystemTime`
+/// anywhere outside the canonical timer file.
+fn rule_r2(rel: &str, lexed: &Lexed, out: &mut Vec<Finding>) {
+    if R2_ALLOWED_FILES.contains(&rel) {
+        return;
+    }
+    let toks = &lexed.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        let instant_now = t.text == "Instant"
+            && toks.get(i + 1).is_some_and(|t| t.text == "::")
+            && toks.get(i + 2).is_some_and(|t| t.text == "now");
+        let systime = t.text == "SystemTime";
+        if instant_now || systime {
+            out.push(Finding::new(
+                "R2",
+                rel,
+                t.line,
+                "wall-clock read outside util::timer — time must never influence results",
+            ));
+        }
+    }
+}
+
+/// R3 — index-width discipline: truncating `as u32` casts on
+/// pin/offset-scale quantities outside the `CsrIndex` boundary modules.
+fn rule_r3(rel: &str, lexed: &Lexed, out: &mut Vec<Finding>) {
+    if R3_ALLOWED_FILES.contains(&rel) {
+        return;
+    }
+    let toks = &lexed.tokens;
+    for i in 0..toks.len() {
+        if toks[i].text != "as" || !toks.get(i + 1).is_some_and(|t| t.text == "u32") {
+            continue;
+        }
+        if let Some(base) = base_ident_before(toks, i) {
+            let lower = base.to_ascii_lowercase();
+            if R3_NAME_MARKERS.iter().any(|m| lower.contains(m)) {
+                out.push(Finding::new(
+                    "R3",
+                    rel,
+                    toks[i].line,
+                    format!(
+                        "truncating cast `{base} as u32` on a pin/offset-scale quantity — \
+                         route it through the CsrIndex width boundary"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// R4 — atomic-ordering audit: every `Ordering::Relaxed` must resolve to
+/// an atomic receiver in the declared counter-only set for this file.
+fn rule_r4(rel: &str, lexed: &Lexed, out: &mut Vec<Finding>) {
+    let toks = &lexed.tokens;
+    let declared: &[&str] = R4_COUNTER_ONLY
+        .iter()
+        .find(|(f, _)| *f == rel)
+        .map(|(_, names)| *names)
+        .unwrap_or(&[]);
+    for i in 0..toks.len() {
+        let relaxed = toks[i].text == "Ordering"
+            && toks.get(i + 1).is_some_and(|t| t.text == "::")
+            && toks.get(i + 2).is_some_and(|t| t.text == "Relaxed");
+        if !relaxed {
+            continue;
+        }
+        let line = toks[i].line;
+        // Nearest preceding atomic-method call within a bounded window.
+        let lo = i.saturating_sub(200);
+        let mut call: Option<usize> = None;
+        for j in (lo..i).rev() {
+            if toks[j].ident
+                && ATOMIC_METHODS.contains(&toks[j].text.as_str())
+                && j >= 1
+                && toks[j - 1].text == "."
+                && toks.get(j + 1).is_some_and(|t| t.text == "(")
+            {
+                call = Some(j);
+                break;
+            }
+        }
+        let base = call.and_then(|j| base_ident_before(toks, j - 1));
+        match base {
+            Some(b) if declared.contains(&b) => {}
+            Some(b) => out.push(Finding::new(
+                "R4",
+                rel,
+                line,
+                format!(
+                    "Ordering::Relaxed on atomic `{b}` — not in the declared counter-only \
+                     set for this file (rules.rs R4_COUNTER_ONLY)"
+                ),
+            )),
+            None => out.push(Finding::new(
+                "R4",
+                rel,
+                line,
+                "Ordering::Relaxed with no resolvable atomic receiver",
+            )),
+        }
+    }
+}
+
+/// R5 — unsafe hygiene: every line containing an `unsafe` token must
+/// carry a `SAFETY` comment on the same line or in the contiguous run of
+/// comment/attribute lines directly above it.
+fn rule_r5(rel: &str, lexed: &Lexed, safety_lines: &[usize], out: &mut Vec<Finding>) {
+    let mut last_flagged = 0usize;
+    for t in &lexed.tokens {
+        if t.text != "unsafe" || t.line == last_flagged {
+            continue;
+        }
+        last_flagged = t.line; // one check per source line
+        if safety_lines.contains(&t.line) {
+            continue;
+        }
+        let mut ok = false;
+        let mut k = t.line - 1; // 1-based; lines[k-1] is the line above
+        while k >= 1 {
+            let raw = lexed.lines.get(k - 1).map(|l| l.trim()).unwrap_or("");
+            if raw.starts_with("//") || raw.starts_with("#[") || raw.starts_with(")]") {
+                if raw.contains("SAFETY") || raw.contains("# Safety") {
+                    ok = true;
+                    break;
+                }
+                k -= 1;
+            } else {
+                break;
+            }
+        }
+        if !ok {
+            out.push(Finding::new(
+                "R5",
+                rel,
+                t.line,
+                "`unsafe` without an immediately preceding `// SAFETY:` comment",
+            ));
+        }
+    }
+}
+
+/// R6 — hot-path parallelism: inside `// detlint::hot_path(begin/end)`
+/// regions, serial index sweeps (`for x in 0..…`) are banned; region
+/// markers must pair up.
+fn rule_r6(rel: &str, lexed: &Lexed, marks: &[HotMark], out: &mut Vec<Finding>) {
+    let mut regions: Vec<(usize, usize)> = Vec::new();
+    let mut open: Option<usize> = None;
+    for m in marks {
+        if let Some(bad) = &m.bad_arg {
+            out.push(Finding::new(
+                "R6",
+                rel,
+                m.line,
+                format!("bad detlint::hot_path argument `{bad}` — expected begin or end"),
+            ));
+            continue;
+        }
+        match (m.begin, open) {
+            (true, None) => open = Some(m.line),
+            (true, Some(_)) => {
+                out.push(Finding::new("R6", rel, m.line, "nested detlint::hot_path(begin)"));
+            }
+            (false, Some(start)) => {
+                regions.push((start, m.line));
+                open = None;
+            }
+            (false, None) => {
+                out.push(Finding::new("R6", rel, m.line, "detlint::hot_path(end) without begin"));
+            }
+        }
+    }
+    if let Some(start) = open {
+        out.push(Finding::new("R6", rel, start, "unclosed detlint::hot_path region"));
+    }
+    if regions.is_empty() {
+        return;
+    }
+    let toks = &lexed.tokens;
+    for i in 0..toks.len() {
+        let serial = toks[i].text == "for"
+            && toks.get(i + 1).is_some_and(|t| t.ident)
+            && toks.get(i + 2).is_some_and(|t| t.text == "in")
+            && toks.get(i + 3).is_some_and(|t| t.text == "0")
+            && toks.get(i + 4).is_some_and(|t| t.text == "..");
+        if !serial {
+            continue;
+        }
+        let line = toks[i].line;
+        if regions.iter().any(|&(a, b)| a < line && line < b) {
+            out.push(Finding::new(
+                "R6",
+                rel,
+                line,
+                format!(
+                    "serial sweep `for {} in 0..…` inside a detlint::hot_path region",
+                    toks[i + 1].text
+                ),
+            ));
+        }
+    }
+}

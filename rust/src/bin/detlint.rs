@@ -1,0 +1,75 @@
+//! `detlint` — run the determinism/data-race lint over a source tree.
+//!
+//! ```text
+//! cargo run --bin detlint                # lints this crate's src/
+//! cargo run --bin detlint -- path/to/src # lints an explicit root
+//! cargo run --bin detlint -- --out report.json
+//! ```
+//!
+//! Prints every finding as `file:line: [rule] message`, writes the
+//! machine-readable report (default `LINT_report.json` in the current
+//! directory), and exits nonzero on any violation so CI can gate on it.
+//!
+//! Exit codes: `0` clean, `1` findings, `2` usage or I/O error.
+
+use detpart::analysis::lint_tree;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut out_path = PathBuf::from("LINT_report.json");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--out" => match args.next() {
+                Some(p) => out_path = PathBuf::from(p),
+                None => {
+                    eprintln!("detlint: --out requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                eprintln!("usage: detlint [SOURCE_ROOT] [--out REPORT.json]");
+                return ExitCode::SUCCESS;
+            }
+            other if root.is_none() && !other.starts_with('-') => {
+                root = Some(PathBuf::from(other));
+            }
+            other => {
+                eprintln!("detlint: unrecognized argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // Default to this crate's own source tree: the binary is compiled
+    // from it, so CARGO_MANIFEST_DIR is baked in at build time.
+    let root = root.unwrap_or_else(|| PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src")));
+
+    let report = match lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: failed to scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for f in &report.findings {
+        println!("{f}");
+    }
+    if let Err(e) = std::fs::write(&out_path, report.to_json()) {
+        eprintln!("detlint: failed to write {}: {e}", out_path.display());
+        return ExitCode::from(2);
+    }
+    println!(
+        "detlint: {} files, {} finding(s), {} allow(s) used -> {}",
+        report.files_scanned,
+        report.findings.len(),
+        report.allows_used,
+        out_path.display()
+    );
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

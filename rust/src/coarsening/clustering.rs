@@ -359,6 +359,7 @@ mod tests {
         for v in 0..hg.num_vertices() {
             *by_rep.entry(cluster_of[v]).or_insert(0) += hg.vertex_weight(v as VertexId);
         }
+        // detlint::allow(R1, reason = "test: commutative sum, order-free")
         let total: Weight = by_rep.values().sum();
         assert_eq!(total, hg.total_vertex_weight());
     }
@@ -398,6 +399,7 @@ mod tests {
         }
         // Singletons heavier than the cap are allowed (macro cells); merged
         // clusters must obey it.
+        // detlint::allow(R1, reason = "test: per-entry predicate, order-free")
         for (&rep, &w) in &by_rep {
             let members = c.iter().filter(|&&r| r == rep).count();
             if members > 1 {

@@ -37,6 +37,8 @@ use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::atomic::{AtomicI64, Ordering};
 
+// detlint::hot_path(begin)
+
 /// Order-dependent hash of a sorted pin slice, length mixed in first.
 /// 64-bit, so distinct pin sets collide (and fall back to the exact
 /// within-bucket comparison) with probability ≈ m²/2⁶⁵ per level.
@@ -441,6 +443,8 @@ pub fn contract_in(
     (coarse, map)
 }
 
+// detlint::hot_path(end)
+
 /// The pre-PR-2 sequential-merge implementation, kept as the debug oracle:
 /// per-edge `Vec` keys funneled through per-chunk `HashMap`s, merged
 /// sequentially, globally sorted by pin vector. Property tests assert the
@@ -513,6 +517,7 @@ pub fn contract_reference(
                 *merged.entry(k).or_insert(0) += w;
             }
         }
+        // detlint::allow(R1, reason = "drained to a Vec and sorted by pin list below")
         let mut edges: Vec<(Vec<VertexId>, Weight)> = merged.into_iter().collect();
         edges.sort_unstable_by(|a, b| a.0.cmp(&b.0));
         edges
@@ -676,22 +681,5 @@ mod tests {
         assert_eq!(c.num_edges(), 0);
         assert!(map.is_empty());
         c.validate().unwrap();
-    }
-
-    /// Satellite guard: the module's hot path must stay fully parallel —
-    /// no serial `for v in 0..n`-style sweeps outside the reference
-    /// oracle and tests.
-    #[test]
-    fn no_serial_vertex_loops_on_hot_path() {
-        let src = include_str!("contraction.rs");
-        let hot_path = &src[..src.find("pub fn contract_reference").unwrap()];
-        // Build the needles at runtime so this test doesn't match itself.
-        for var in ["v", "e", "i"] {
-            let needle = format!("for {var} in 0..");
-            assert!(
-                !hot_path.contains(&needle),
-                "serial sweep `{needle}` found on the contraction hot path"
-            );
-        }
     }
 }

@@ -963,6 +963,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
     fn journal_revert_deterministic_across_threads() {
         let h = crate::gen::sat_hypergraph(300, 900, 8, 5);
         let part: Vec<BlockId> = (0..300).map(|v| (v % 4) as BlockId).collect();
@@ -1039,6 +1040,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
     fn packed_memory_beats_dense() {
         let h = crate::gen::sat_hypergraph(400, 1200, 8, 3);
         let p = PartitionedHypergraph::new(&h, 16, vec![0; 400]);

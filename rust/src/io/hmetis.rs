@@ -23,6 +23,7 @@ use crate::util::{Context, Error, Result};
 use crate::{bail, ensure, err};
 use crate::{VertexId, Weight};
 use std::path::Path;
+use std::slice;
 
 /// Parse an `.hgr` file (streaming parser; reads raw bytes, no UTF-8
 /// validation pass).
@@ -166,13 +167,19 @@ pub fn read_hgr_bytes(bytes: &[u8]) -> Result<Hypergraph> {
                                 "edge {g}: pin {v} out of range 1..={num_vertices}"
                             ));
                         }
+                        // SAFETY: base + n stays inside this edge's pin
+                        // range `raw_off[g]..raw_off[g+1]`; ranges of
+                        // distinct edges are disjoint, so no two chunks
+                        // write the same cell.
                         unsafe { *pins_ptr.0.add(base + n) = (v - 1) as VertexId };
                         n += 1;
                     }
                     // Repeated pins occur in public instances; dedup in
                     // place, exactly like the legacy parser.
-                    let edge =
-                        unsafe { std::slice::from_raw_parts_mut(pins_ptr.0.add(base), n) };
+                    // SAFETY: `base..base + n` was fully written above and
+                    // belongs exclusively to edge g; no other chunk
+                    // aliases it.
+                    let edge = unsafe { slice::from_raw_parts_mut(pins_ptr.0.add(base), n) };
                     edge.sort_unstable();
                     let mut kept = 1usize;
                     for i in 1..n {
@@ -181,6 +188,8 @@ pub fn read_hgr_bytes(bytes: &[u8]) -> Result<Hypergraph> {
                             kept += 1;
                         }
                     }
+                    // SAFETY: g < num_edges and new_size has num_edges + 1
+                    // slots; each g is owned by exactly one chunk line.
                     unsafe { *ns_ptr.0.add(g) = kept as i64 };
                 } else if has_vertex_weights && g < num_edges + num_vertices {
                     let v = g - num_edges;
@@ -190,6 +199,8 @@ pub fn read_hgr_bytes(bytes: &[u8]) -> Result<Hypergraph> {
                         return Some(err!("vertex weight {v}: trailing tokens"));
                     }
                     match text::parse_i64(t) {
+                        // SAFETY: v < num_vertices (range-checked by g) and
+                        // each vertex-weight line is owned by one chunk.
                         Some(w) => unsafe { *vw_ptr.0.add(v) = w },
                         None => {
                             return Some(err!("vertex weight {v}: bad integer {}", text::show(t)))

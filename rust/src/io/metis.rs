@@ -155,6 +155,8 @@ pub fn read_graph_bytes(bytes: &[u8]) -> Result<Hypergraph> {
                         k += 1;
                     }
                 }
+                // SAFETY: u < num_vertices, and vertex line u is owned by
+                // exactly one chunk — no concurrent writer for slot u.
                 unsafe { *kept_ptr.0.add(u) = k };
             }
             None

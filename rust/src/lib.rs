@@ -35,6 +35,7 @@
 //! `python/compile/aot.py`, loaded at runtime by [`runtime`]). Python is
 //! never on the request path.
 
+pub mod analysis;
 pub mod par;
 pub mod util;
 pub mod datastructures;

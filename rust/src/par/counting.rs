@@ -188,6 +188,8 @@ pub fn stable_counting_scatter<I: CsrIndex>(
                         acc += v;
                     }
                 }
+                // SAFETY: slot k + 1 is written only by the chunk owning
+                // key k; offsets_out has num_keys + 1 slots.
                 unsafe {
                     *oref.0.add(k + 1) = I::from_usize(acc as usize);
                 }
@@ -268,6 +270,7 @@ mod tests {
     use crate::util::Rng;
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
     fn counting_scatter_matches_stable_sort() {
         let mut rng = Rng::new(31);
         for (n, num_keys) in [(0usize, 1usize), (1, 4), (500, 7), (20_000, 113)] {
@@ -301,6 +304,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
     fn counting_scatter_widths_agree() {
         // The narrow (u32), wide (u64) and legacy (usize) offset widths
         // must produce identical groupings — the u64 path is the

@@ -102,10 +102,15 @@ mod affinity {
     #[cfg(target_arch = "aarch64")]
     const SYS_GETAFFINITY: usize = 123;
 
+    /// # Safety
+    /// `nr` must be a valid Linux syscall number and `a1..a3` arguments
+    /// meeting its contract (pointers valid for the kernel's access).
     #[cfg(target_arch = "x86_64")]
     #[inline]
     unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
         let ret: isize;
+        // SAFETY: raw syscall; clobbers rcx/r11 per the x86_64 ABI, which
+        // the asm! declares. No memory is touched beyond the arguments.
         std::arch::asm!(
             "syscall",
             inlateout("rax") nr => ret,
@@ -119,10 +124,14 @@ mod affinity {
         ret
     }
 
+    /// # Safety
+    /// Same contract as the x86_64 variant: valid syscall number and
+    /// arguments.
     #[cfg(target_arch = "aarch64")]
     #[inline]
     unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
         let ret: isize;
+        // SAFETY: raw `svc 0` syscall per the aarch64 Linux ABI.
         std::arch::asm!(
             "svc 0",
             in("x8") nr,
@@ -140,6 +149,8 @@ mod affinity {
         static ALLOWED: OnceLock<Vec<u32>> = OnceLock::new();
         ALLOWED.get_or_init(|| {
             let mut mask = [0u64; MASK_WORDS];
+            // SAFETY: mask is a live, writable buffer of the size passed;
+            // pid 0 addresses the calling thread.
             let r = unsafe {
                 syscall3(
                     SYS_GETAFFINITY,
@@ -171,6 +182,8 @@ mod affinity {
         let cpu = cpus[slot % cpus.len()] as usize;
         let mut mask = [0u64; MASK_WORDS];
         mask[cpu / 64] = 1u64 << (cpu % 64);
+        // SAFETY: mask is a live buffer of the size passed; a failed set
+        // leaves affinity unchanged, which is benign.
         unsafe {
             syscall3(
                 SYS_SETAFFINITY,
@@ -240,6 +253,9 @@ pub fn chunk_ranges(len: usize, parts: usize) -> Vec<Range<usize>> {
 /// and every slot must be written before any read. One audited `unsafe
 /// impl` here replaces per-module copies.
 pub(crate) struct SendPtr<T>(pub *mut T);
+// SAFETY: SendPtr is a plain pointer wrapper; sharing it across threads
+// is sound iff call sites write disjoint indices (the documented
+// contract above). It adds no interior mutation of its own.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 /// Number of chunks [`chunk_ranges`]`(len, parts)` would produce, without
@@ -668,6 +684,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
     fn reduce_deterministic_in_chunk_order() {
         // Float summation order must be chunk-order, hence identical for a
         // fixed thread count and — with a chunking-independent combine —
@@ -713,6 +730,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "inline-asm affinity syscalls are unsupported under Miri")]
     fn pinned_workers_produce_identical_results() {
         // Pinning is a placement hint: outputs must be bit-identical with
         // it on, and enabling it must never crash (including on kernels

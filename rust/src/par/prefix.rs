@@ -289,6 +289,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
     fn matches_sequential_reference() {
         let xs: Vec<i64> = (0..10_000).map(|i| ((i * 7919) % 97) as i64 - 48).collect();
         let mut expect = Vec::with_capacity(xs.len());
@@ -307,6 +308,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
     fn segmented_prefix_matches_sequential_reference() {
         // Random values with random segment boundaries (including empty
         // segments), across thread counts and sizes straddling the
@@ -340,6 +342,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
     fn segmented_prefix_boundary_at_chunk_edges() {
         // Segments aligned exactly to chunk edges exercise the carry
         // reset cases (boundary == chunk start / chunk end).
@@ -361,6 +364,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
     fn collect_indices_matches_sequential_filter() {
         for len in [0usize, 1, 100, 10_000] {
             let expect: Vec<u32> = (0..len as u32)

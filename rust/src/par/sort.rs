@@ -81,9 +81,13 @@ pub fn par_sort_by<T: Copy + Send + Sync>(
                 let mut jiter = jobs.iter();
                 let first = jiter.next();
                 for &(lo, mid, hi) in jiter {
+                    // SAFETY: job ranges [lo, hi) partition dst — every
+                    // spawned merge writes a disjoint slice of it.
                     s.spawn(move || unsafe { merge_into(src_ref, lo, mid, hi, dref.0, cmp) });
                 }
                 if let Some(&(lo, mid, hi)) = first {
+                    // SAFETY: the first job's range is disjoint from all
+                    // spawned ones; running it inline reuses this thread.
                     unsafe { merge_into(src_ref, lo, mid, hi, dptr.0, cmp) }
                 }
             });
@@ -113,20 +117,24 @@ unsafe fn merge_into<T: Copy>(
     while a < mid && b < hi {
         // `<=` keeps the left (earlier) element on ties → stability.
         if cmp(&src[a], &src[b]) != Ordering::Greater {
+            // SAFETY: o < hi; [lo, hi) is this job's exclusive dst range.
             unsafe { *dst.add(o) = src[a] };
             a += 1;
         } else {
+            // SAFETY: o < hi; [lo, hi) is this job's exclusive dst range.
             unsafe { *dst.add(o) = src[b] };
             b += 1;
         }
         o += 1;
     }
     while a < mid {
+        // SAFETY: o < hi; [lo, hi) is this job's exclusive dst range.
         unsafe { *dst.add(o) = src[a] };
         a += 1;
         o += 1;
     }
     while b < hi {
+        // SAFETY: o < hi; [lo, hi) is this job's exclusive dst range.
         unsafe { *dst.add(o) = src[b] };
         b += 1;
         o += 1;
@@ -218,9 +226,13 @@ pub fn par_sort_unstable_by_in<T: Copy + Send + Sync>(
                 let mut jiter = jobs.iter();
                 let first = jiter.next();
                 for &(lo, mid, hi) in jiter {
+                    // SAFETY: job ranges [lo, hi) partition dst — every
+                    // spawned merge writes a disjoint slice of it.
                     s.spawn(move || unsafe { merge_into(src_ref, lo, mid, hi, dref.0, cmp) });
                 }
                 if let Some(&(lo, mid, hi)) = first {
+                    // SAFETY: the first job's range is disjoint from all
+                    // spawned ones; running it inline reuses this thread.
                     unsafe { merge_into(src_ref, lo, mid, hi, dptr.0, cmp) }
                 }
             });
@@ -240,6 +252,7 @@ mod tests {
     use crate::util::Rng;
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
     fn sorts_like_std_stable_sort() {
         let mut rng = Rng::new(1234);
         for n in [0usize, 1, 10, 1000, 20_000] {
@@ -258,6 +271,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
     fn unstable_in_matches_std_on_total_order() {
         let mut rng = Rng::new(99);
         for n in [0usize, 1, 100, 9000, 40_000] {
@@ -278,6 +292,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
     fn sort_by_comparator() {
         let mut v: Vec<i64> = (0..30_000).map(|i| ((i * 2654435761u64) % 1001) as i64 - 500).collect();
         let mut expect = v.clone();

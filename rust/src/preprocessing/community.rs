@@ -176,6 +176,7 @@ mod tests {
             *counts.entry(l).or_insert(0) += 1;
         }
         let cap = (400.0 * 0.1f64).ceil() as usize;
+        // detlint::allow(R1, reason = "test: order-free all() predicate")
         assert!(counts.values().all(|&s| s <= cap), "{counts:?}");
         assert!(counts.len() > 1);
     }

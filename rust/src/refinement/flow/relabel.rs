@@ -229,6 +229,7 @@ fn push_relabel(
                 par::for_each_chunk_in(nt, active_ref.len(), move |ci, r| {
                     // SAFETY: chunk `ci` exclusively owns its output lists.
                     let chunk_next = unsafe { &mut *nptr.0.add(ci) };
+                    // SAFETY: same exclusive per-chunk slot as above.
                     let chunk_relab = unsafe { &mut *rptr.0.add(ci) };
                     for &u in &active_ref[r] {
                         discharge(

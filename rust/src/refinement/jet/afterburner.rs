@@ -246,12 +246,13 @@ fn simulate_general(
         let (sc, tc) = if small {
             (&mut counts[si].1 as *mut i64, &mut counts[ti].1 as *mut i64)
         } else {
-            // indices into counts_vec — split borrows via raw pointers
             let base = counts_vec.as_mut_ptr();
+            // SAFETY: si/ti index live counts_vec entries; raw pointers
+            // only split the two borrows, no aliasing write overlaps.
             unsafe { (&mut (*base.add(si)).1 as *mut i64, &mut (*base.add(ti)).1 as *mut i64) }
         };
-        // SAFETY: si != ti (s != t for a real move), both in-bounds.
         let mut delta = 0;
+        // SAFETY: si != ti (s != t for a real move), both in-bounds.
         unsafe {
             *sc -= 1;
             if *sc == 0 {

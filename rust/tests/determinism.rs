@@ -177,3 +177,29 @@ fn buggy_term_check_order_can_diverge_but_fixed_never_does() {
     }
     assert!(results_fixed.windows(2).all(|w| w[0] == w[1]));
 }
+
+// ---------------------------------------------------------------------
+// ThreadSanitizer cut — `tsan_cut_*` is the reduced determinism slice
+// the nightly TSan CI job runs (`cargo test … --test determinism
+// tsan_cut`). TSan instruments every memory access (~10-20× slower), so
+// these use deliberately small instances; they also run (and must pass)
+// under plain tier-1.
+// ---------------------------------------------------------------------
+
+#[test]
+fn tsan_cut_detjet_small() {
+    let hg = gen::sat_hypergraph(200, 600, 6, 3);
+    assert_deterministic(&hg, 4, &Config::detjet(3));
+}
+
+#[test]
+fn tsan_cut_detflows_small() {
+    let hg = gen::spm_hypergraph_2d(24, 24);
+    assert_deterministic(&hg, 2, &Config::detflows(1));
+}
+
+#[test]
+fn tsan_cut_sdet_small() {
+    let hg = gen::grid::grid2d_graph(16, 16);
+    assert_deterministic(&hg, 3, &Config::sdet(2));
+}

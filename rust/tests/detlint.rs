@@ -1,0 +1,27 @@
+//! Tier-1 gate: the crate's own source tree must be `detlint`-clean.
+//!
+//! This is the static counterpart of the determinism proptests: any PR
+//! that introduces a hash-order iteration, a wall-clock read, a
+//! truncating pin-scale cast, an unaudited `Relaxed` atomic, an
+//! uncommented `unsafe`, or a serial sweep inside a hot-path region
+//! fails `cargo test` before it ever reaches the dynamic oracles.
+
+use detpart::analysis::lint_tree;
+use std::path::Path;
+
+#[test]
+fn crate_source_tree_is_detlint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_tree(&root).expect("scan crate src/");
+    assert!(report.files_scanned > 40, "suspiciously few files: {}", report.files_scanned);
+    if !report.clean() {
+        for f in &report.findings {
+            eprintln!("{f}");
+        }
+        panic!(
+            "detlint: {} finding(s) in rust/src — fix them or add \
+             `// detlint::allow(Rn, reason = \"…\")` with a real justification",
+            report.findings.len()
+        );
+    }
+}
