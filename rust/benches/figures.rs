@@ -830,6 +830,144 @@ fn activeset_micro() {
     }
 }
 
+/// The PR-10 FM micro: the serial determinism oracle vs the parallel
+/// multi-try localized FM pass — bit-identity of the refined partition
+/// and pass stats, wall time, km1 improvement from a hashed random
+/// start, and a counting-allocator check on warm passes plus warm
+/// `detquality` engine requests (which run the full FM + V-cycle
+/// pipeline). CI gates (machine-independent): the parallel pass must
+/// match the serial oracle on every instance, km1 must never worsen and
+/// must strictly improve somewhere on the suite, and warm
+/// passes/requests must not large-allocate. Emits `BENCH_fm.json`.
+fn fm_micro() {
+    use detpart::config::{ConfigBuilder, FmConfig, Preset};
+    use detpart::datastructures::PartitionedHypergraph;
+    use detpart::engine::{PartitionRequest, Partitioner};
+    use detpart::par::with_num_threads;
+    use detpart::refinement::fm::{refine_fm_in, refine_serial};
+    use detpart::refinement::RefinementContext;
+    use detpart::util::Timer;
+
+    println!("== micro: FM refinement (serial oracle vs parallel rounds) ==");
+    let threads = detpart::par::num_threads();
+    let k = 8usize;
+    let eps = 0.10;
+    let cases: Vec<(&str, detpart::datastructures::Hypergraph)> = vec![
+        ("sat-20k", detpart::gen::sat_hypergraph(20_000, 60_000, 12, 7)),
+        ("rmat-13", detpart::gen::rmat_graph(13, 8, 9)),
+        ("vlsi-40", detpart::gen::vlsi_netlist(40, 1.15, 33)),
+    ];
+    let reps = 3usize;
+    let cfg = FmConfig::default();
+    let mut totals = [0.0f64; 2]; // [serial, parallel] suite ms (best-of-reps sums)
+    let mut rows: Vec<String> = Vec::new();
+    for (name, h) in &cases {
+        let n = h.num_vertices();
+        let part: Vec<u32> = (0..n)
+            .map(|v| (detpart::util::rng::hash64(17, v as u64) % k as u64) as u32)
+            .collect();
+        // The serial determinism oracle, pinned to one thread.
+        let mut sctx = RefinementContext::new(k, n);
+        let ps = PartitionedHypergraph::new(h, k, part.clone());
+        let t = Timer::start();
+        let stats_s = with_num_threads(1, || refine_serial(&ps, eps, &cfg, 11, &mut sctx));
+        let serial_ms = t.elapsed_s() * 1e3;
+        let oracle = (ps.snapshot(), ps.km1());
+        // The parallel pass: the first call sizes every scratch arena …
+        let mut ctx = RefinementContext::new(k, n);
+        let p = PartitionedHypergraph::new(h, k, part.clone());
+        let stats_p = refine_fm_in(&p, eps, &cfg, 11, &mut ctx);
+        let oracle_match = (p.snapshot(), p.km1()) == oracle
+            && (stats_p.rounds, stats_p.moves_applied, stats_p.committed)
+                == (stats_s.rounds, stats_s.moves_applied, stats_s.committed)
+            && stats_p.final_km1 == stats_s.final_km1;
+        assert!(oracle_match, "{name}: parallel FM diverged from the serial oracle");
+        assert!(
+            stats_p.final_km1 <= stats_p.initial_km1,
+            "{name}: FM worsened km1 ({} -> {})",
+            stats_p.initial_km1,
+            stats_p.final_km1
+        );
+        // … so timed warm reps must not fall back to fresh large
+        // allocations, and (begin_pass resets the active set) must land
+        // on the oracle again.
+        let mut parallel_ms = f64::INFINITY;
+        let mut warm_large = 0u64;
+        for _ in 0..reps {
+            let p = PartitionedHypergraph::new(h, k, part.clone());
+            alloc_counter::reset_epoch();
+            let t = Timer::start();
+            refine_fm_in(&p, eps, &cfg, 11, &mut ctx);
+            parallel_ms = parallel_ms.min(t.elapsed_s() * 1e3);
+            warm_large += alloc_counter::large_allocs();
+            assert_eq!(p.km1(), oracle.1, "{name}: warm rep diverged from the oracle");
+        }
+        assert_eq!(warm_large, 0, "{name}: warm FM passes large-allocated");
+        totals[0] += serial_ms;
+        totals[1] += parallel_ms;
+        println!(
+            "  {name}: {n} vertices | km1 {} -> {} in {} rounds ({} moves, {} committed) | serial {serial_ms:.2} ms vs parallel {parallel_ms:.2} ms | {threads} threads",
+            stats_p.initial_km1,
+            stats_p.final_km1,
+            stats_p.rounds,
+            stats_p.moves_applied,
+            stats_p.committed,
+        );
+        rows.push(format!(
+            "{{\"instance\":\"{name}\",\"vertices\":{n},\"rounds\":{},\"moves_applied\":{},\"committed\":{},\"initial_km1\":{},\"final_km1\":{},\"serial_ms\":{serial_ms:.4},\"parallel_ms\":{parallel_ms:.4},\"oracle_match\":{},\"warm_large_allocs\":{warm_large}}}",
+            stats_p.rounds,
+            stats_p.moves_applied,
+            stats_p.committed,
+            stats_p.initial_km1,
+            stats_p.final_km1,
+            u8::from(oracle_match),
+        ));
+    }
+
+    // Warm `detquality` engine requests run the whole FM + V-cycle
+    // pipeline out of session scratch: after the sizing request they
+    // must stay bit-identical to a cold engine and free of large-buffer
+    // allocations.
+    let qcfg = ConfigBuilder::new(Preset::DetQuality).build().expect("valid preset");
+    let qh = detpart::gen::sat_hypergraph(8_000, 24_000, 8, 5);
+    let qreq = PartitionRequest::new(8, 3);
+    let cold = Partitioner::new(qcfg.clone())
+        .expect("valid config")
+        .partition(&qh, &qreq)
+        .expect("valid request");
+    let mut engine = Partitioner::new(qcfg).expect("valid config");
+    let mut engine_warm_large = 0u64;
+    let mut engine_warm_ms = f64::INFINITY;
+    for i in 0..3 {
+        alloc_counter::reset_epoch();
+        let t = Timer::start();
+        let r = engine.partition(&qh, &qreq).expect("valid request");
+        assert_eq!(r.part, cold.part, "warm detquality engine diverged from cold");
+        if i > 0 {
+            engine_warm_ms = engine_warm_ms.min(t.elapsed_s() * 1e3);
+            engine_warm_large += alloc_counter::large_allocs();
+        }
+    }
+    assert_eq!(engine_warm_large, 0, "warm detquality requests large-allocated");
+    println!(
+        "  suite: serial {:.3} ms vs parallel {:.3} ms ({:.2}x) | warm detquality request {engine_warm_ms:.1} ms, 0 large allocs",
+        totals[0],
+        totals[1],
+        totals[0] / totals[1].max(1e-9)
+    );
+    let json = format!(
+        "{{\"bench\":\"fm\",\"threads\":{threads},\"reps\":{reps},\"k\":{k},\"serial_ms_total\":{:.4},\"parallel_ms_total\":{:.4},\"engine_warm_large_allocs\":{engine_warm_large},\"cases\":[{}]}}\n",
+        totals[0],
+        totals[1],
+        rows.join(",")
+    );
+    let path = "BENCH_fm.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+}
+
 fn micro_benchmarks() {
     use detpart::config::JetConfig;
     use detpart::datastructures::PartitionedHypergraph;
@@ -963,6 +1101,7 @@ fn main() {
         layout_micro();
         kernel_micro();
         activeset_micro();
+        fm_micro();
         return;
     }
     for name in names {
@@ -975,6 +1114,7 @@ fn main() {
             layout_micro();
             kernel_micro();
             activeset_micro();
+            fm_micro();
         } else if name == "contraction" {
             contraction_micro();
         } else if name == "selection" || name == "refinement" {
@@ -989,9 +1129,11 @@ fn main() {
             kernel_micro();
         } else if name == "activeset" {
             activeset_micro();
+        } else if name == "fm" {
+            fm_micro();
         } else if !figures::run_by_name(&ctx, name) {
             eprintln!(
-                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, refinement, engine, flow, layout, kernel, activeset, all"
+                "unknown experiment {name:?} — try fig1..fig12, tab1, micro, contraction, refinement, engine, flow, layout, kernel, activeset, fm, all"
             );
             std::process::exit(1);
         }

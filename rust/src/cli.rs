@@ -380,6 +380,40 @@ mod tests {
     }
 
     #[test]
+    fn detquality_preset_runs_end_to_end() {
+        // The quality preset resolves by name and a full partition run
+        // (multilevel + FM + V-cycles) completes on a small instance.
+        dispatch(&s(&[
+            "partition",
+            "--instance",
+            "spm2d-64",
+            "--k",
+            "4",
+            "--preset",
+            "detquality",
+        ]))
+        .unwrap();
+        // It carries FM config and no flows; --flow-solver is an error.
+        let mut f = HashMap::new();
+        f.insert("preset".to_string(), "detquality".to_string());
+        let cfg = build_config(&f).unwrap();
+        assert!(cfg.refinement.fm.is_some());
+        assert!(cfg.refinement.flows.is_none());
+        assert!(dispatch(&s(&[
+            "partition",
+            "--instance",
+            "spm2d-64",
+            "--k",
+            "2",
+            "--preset",
+            "detquality",
+            "--flow-solver",
+            "dinic",
+        ]))
+        .is_err());
+    }
+
+    #[test]
     fn kernel_flag_selects_and_rejects() {
         // A full run with the scalar oracle kernel works end to end.
         dispatch(&s(&[

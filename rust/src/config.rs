@@ -135,6 +135,9 @@ pub enum Preset {
     DetJet,
     /// **DetFlows** — DetJet plus deterministic flow-based refinement.
     DetFlows,
+    /// **DetQuality** — DetJet plus deterministic multi-try localized FM
+    /// and iterated V-cycles: the quality-frontier preset.
+    DetQuality,
     /// **SDet-like** — the previous deterministic Mt-KaHyPar mode.
     SDet,
     /// **BiPart-like** — recursive bipartitioning + synchronous LP.
@@ -147,9 +150,10 @@ pub enum Preset {
 
 impl Preset {
     /// Every preset, in the canonical report order.
-    pub const ALL: [Preset; 6] = [
+    pub const ALL: [Preset; 7] = [
         Preset::DetJet,
         Preset::DetFlows,
+        Preset::DetQuality,
         Preset::SDet,
         Preset::BiPart,
         Preset::NonDetJet,
@@ -161,6 +165,7 @@ impl Preset {
         match self {
             Preset::DetJet => "detjet",
             Preset::DetFlows => "detflows",
+            Preset::DetQuality => "detquality",
             Preset::SDet => "sdet",
             Preset::BiPart => "bipart",
             Preset::NonDetJet => "nondet-jet",
@@ -178,6 +183,7 @@ impl Preset {
         match self {
             Preset::DetJet => Config::detjet(seed),
             Preset::DetFlows => Config::detflows(seed),
+            Preset::DetQuality => Config::detquality(seed),
             Preset::SDet => Config::sdet(seed),
             Preset::BiPart => Config::bipart(seed),
             Preset::NonDetJet => Config::nondet_jet(seed),
@@ -335,6 +341,46 @@ impl Default for JetConfig {
     }
 }
 
+/// Deterministic multi-try localized FM (the `detquality` preset's
+/// quality pass, DESIGN.md §14). Rounds are synchronous: seeds are
+/// drawn deterministically from the active set, per-seed local searches
+/// run read-only against the frozen partition, and the surviving
+/// proposals go through the unified selection pipeline. A pass commits
+/// the best-km1 prefix of its move log via
+/// [`commit_prefix`](crate::datastructures::PartitionedHypergraph::commit_prefix).
+#[derive(Clone, Debug)]
+pub struct FmConfig {
+    /// Seeds expanded per synchronous round (drawn from the scan set by
+    /// deterministic hash order).
+    pub seeds_per_round: usize,
+    /// Cap on moves a single localized search may propose.
+    pub max_moves_per_search: usize,
+    /// Edges larger than this are skipped during neighbor *expansion*
+    /// (they still contribute to gains) — the usual FM hub guard.
+    pub max_edge_size: usize,
+    /// Hard cap on rounds per FM pass.
+    pub max_rounds: usize,
+    /// Stop a pass after this many rounds without a new best km1.
+    pub max_rounds_without_improvement: usize,
+    /// Iterated V-cycles after the initial multilevel pass: re-coarsen
+    /// constrained to the current partition, re-refine, keep on strict
+    /// km1 improvement. `0` disables V-cycles (flat FM only).
+    pub max_vcycles: usize,
+}
+
+impl Default for FmConfig {
+    fn default() -> Self {
+        FmConfig {
+            seeds_per_round: 64,
+            max_moves_per_search: 24,
+            max_edge_size: 256,
+            max_rounds: 32,
+            max_rounds_without_improvement: 4,
+            max_vcycles: 3,
+        }
+    }
+}
+
 /// Which maximum-flow algorithm the two-way flow refinement runs on.
 /// The refinement's cuts are **solver-independent** (Picard–Queyranne
 /// unique cut sides, see DESIGN.md §9), so this knob trades speed, not
@@ -435,6 +481,10 @@ pub struct RefinementConfig {
     pub jet: JetConfig,
     /// `Some` enables flow-based refinement after Jet/LP on each level.
     pub flows: Option<FlowConfig>,
+    /// `Some` enables the deterministic multi-try localized FM pass (and
+    /// its iterated V-cycles) after the multilevel pipeline finishes —
+    /// the `detquality` preset.
+    pub fm: Option<FmConfig>,
     /// Backend for Jet's dense candidate-selection arithmetic.
     pub gain_backend: GainBackend,
     /// CPU kernel implementation for the native affinity/gain hot path
@@ -459,6 +509,7 @@ impl Default for RefinementConfig {
             lp: LpConfig::default(),
             jet: JetConfig::default(),
             flows: None,
+            fm: None,
             gain_backend: GainBackend::Native,
             kernel: KernelKind::Blocked,
             active_set: ActiveSetKind::Frontier,
@@ -513,6 +564,11 @@ pub enum ConfigError {
         /// The offending fraction.
         f64,
     ),
+    /// An FM-refinement parameter is out of range.
+    InvalidFmConfig(
+        /// Which FM parameter failed.
+        &'static str,
+    ),
 }
 
 impl fmt::Display for ConfigError {
@@ -558,6 +614,9 @@ impl fmt::Display for ConfigError {
                     f,
                     "active-set fallback fraction must be finite and in (0, 1], got {frac}"
                 )
+            }
+            ConfigError::InvalidFmConfig(what) => {
+                write!(f, "invalid fm configuration: {what}")
             }
         }
     }
@@ -635,6 +694,20 @@ impl Config {
         c
     }
 
+    /// **DetQuality** — DetJet plus deterministic multi-try localized FM
+    /// and iterated V-cycles. The multilevel pipeline prefix is
+    /// bit-identical to DetJet (nothing reads the FM knobs until the
+    /// uncoarsening loop has finished), so on any instance
+    /// `detquality.km1 <= detjet.km1`: every FM pass commits only its
+    /// best-seen prefix and every V-cycle is accepted only on strict
+    /// improvement.
+    pub fn detquality(seed: u64) -> Self {
+        let mut c = Config::detjet(seed);
+        c.refinement.fm = Some(FmConfig::default());
+        c.preset = Preset::DetQuality;
+        c
+    }
+
     /// **SDet-like** — the previous deterministic Mt-KaHyPar mode:
     /// old coarsening (no prefix doubling / swap prevention / bugfix) and
     /// synchronous label propagation refinement.
@@ -692,7 +765,7 @@ impl Config {
     }
 
     /// All preset names, in the canonical report order.
-    pub fn preset_names() -> [&'static str; 6] {
+    pub fn preset_names() -> [&'static str; 7] {
         Preset::ALL.map(|p| p.name())
     }
 
@@ -732,6 +805,25 @@ impl Config {
             }
             if flows.max_rounds == 0 {
                 return Err(ConfigError::InvalidFlowConfig("max_rounds must be >= 1"));
+            }
+        }
+        if let Some(fm) = &self.refinement.fm {
+            if fm.seeds_per_round == 0 {
+                return Err(ConfigError::InvalidFmConfig("seeds_per_round must be >= 1"));
+            }
+            if fm.max_moves_per_search == 0 {
+                return Err(ConfigError::InvalidFmConfig("max_moves_per_search must be >= 1"));
+            }
+            if fm.max_edge_size < 2 {
+                return Err(ConfigError::InvalidFmConfig("max_edge_size must be >= 2"));
+            }
+            if fm.max_rounds == 0 {
+                return Err(ConfigError::InvalidFmConfig("max_rounds must be >= 1"));
+            }
+            if fm.max_rounds_without_improvement == 0 {
+                return Err(ConfigError::InvalidFmConfig(
+                    "max_rounds_without_improvement must be >= 1",
+                ));
             }
         }
         if self.refinement.kernel == KernelKind::Blocked
@@ -831,6 +923,13 @@ impl ConfigBuilder {
         self
     }
 
+    /// Enable (`Some`) or disable (`None`) the deterministic multi-try
+    /// localized FM pass and its V-cycles.
+    pub fn fm(mut self, fm: Option<FmConfig>) -> Self {
+        self.cfg.refinement.fm = fm;
+        self
+    }
+
     /// Select the max-flow solver behind flow refinement. No effect
     /// unless flows are enabled (enable them first via
     /// [`flows`](Self::flows) or a flows preset).
@@ -887,6 +986,15 @@ mod tests {
 
         let df = Config::detflows(0);
         assert!(df.refinement.flows.is_some());
+
+        let dq = Config::detquality(0);
+        assert_eq!(dq.refinement.algo, RefinementAlgo::Jet);
+        assert!(dq.refinement.flows.is_none());
+        assert!(dq.refinement.fm.is_some());
+        // detquality is detjet + FM: anything the multilevel pipeline
+        // reads must be unchanged (the km1 <= detjet guarantee).
+        assert_eq!(dq.refinement.jet.temperatures, dj.refinement.jet.temperatures);
+        assert!(dj.refinement.fm.is_none());
 
         let sd = Config::sdet(0);
         assert_eq!(sd.refinement.algo, RefinementAlgo::LabelPropagation);
@@ -1083,5 +1191,37 @@ mod tests {
         // Error messages render.
         let e = ConfigBuilder::new(Preset::DetJet).eps(-1.0).build().unwrap_err();
         assert!(e.to_string().contains("eps"));
+    }
+
+    #[test]
+    fn fm_config_validates_and_rejects_bad_values() {
+        // The builder knob round-trips both ways.
+        let cfg = ConfigBuilder::new(Preset::DetJet).fm(Some(FmConfig::default())).build().unwrap();
+        assert!(cfg.refinement.fm.is_some());
+        let cfg = ConfigBuilder::new(Preset::DetQuality).fm(None).build().unwrap();
+        assert!(cfg.refinement.fm.is_none());
+        // max_vcycles = 0 is legal: flat FM without V-cycles.
+        ConfigBuilder::new(Preset::DetQuality)
+            .tweak(|c| c.refinement.fm.as_mut().unwrap().max_vcycles = 0)
+            .build()
+            .unwrap();
+        // Zero/undersized knobs are typed validation errors.
+        let cases: [(&str, fn(&mut FmConfig)); 5] = [
+            ("seeds_per_round must be >= 1", |f| f.seeds_per_round = 0),
+            ("max_moves_per_search must be >= 1", |f| f.max_moves_per_search = 0),
+            ("max_edge_size must be >= 2", |f| f.max_edge_size = 1),
+            ("max_rounds must be >= 1", |f| f.max_rounds = 0),
+            ("max_rounds_without_improvement must be >= 1", |f| {
+                f.max_rounds_without_improvement = 0
+            }),
+        ];
+        for (msg, mutate) in cases {
+            let err = ConfigBuilder::new(Preset::DetQuality)
+                .tweak(|c| mutate(c.refinement.fm.as_mut().unwrap()))
+                .build()
+                .unwrap_err();
+            assert_eq!(err, ConfigError::InvalidFmConfig(msg));
+            assert!(err.to_string().contains("fm"));
+        }
     }
 }

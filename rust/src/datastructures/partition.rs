@@ -623,6 +623,33 @@ impl<'a> PartitionedHypergraph<'a> {
         });
     }
 
+    /// Keep the first `best` entries of a caller-ordered move log and
+    /// undo the rest — FM's rollback-to-best-prefix primitive.
+    ///
+    /// `moves` is the refiner's own ordered log of `(vertex, from)` pairs
+    /// recording, for every move applied since the last
+    /// [`commit_journal`](Self::commit_journal), the block the vertex
+    /// *left*. The suffix `moves[best..]` is undone in reverse order and
+    /// the surviving prefix is committed as the new rollback baseline.
+    /// `best == 0` is equivalent to [`revert_journal`](Self::revert_journal)
+    /// followed by a commit; `best == moves.len()` is equivalent to a
+    /// plain commit.
+    ///
+    /// Requirements: `moves` must list exactly the vertices moved since
+    /// the last commit, each vertex at most once (the FM pass locks every
+    /// mover, so its log satisfies this by construction), and the call
+    /// must not run concurrently with other mutation. The undo is serial
+    /// — suffix entries may touch the same edges, so reverse order is
+    /// what makes the inverse exact.
+    pub fn commit_prefix(&self, moves: &[(VertexId, BlockId)], best: usize) {
+        debug_assert!(best <= moves.len());
+        debug_assert_eq!(moves.len(), self.journal_len(), "log out of sync with journal");
+        for &(v, from) in moves[best..].iter().rev() {
+            self.apply_move_inner(v, from, false);
+        }
+        self.commit_journal();
+    }
+
     /// Gain of moving `v` to `t` w.r.t. the connectivity metric, with all
     /// other vertices fixed:
     /// `gain(v,t) = Σ_e ω(e)·[φ_e(s)=1] − Σ_e ω(e)·[φ_e(t)=0]`.
@@ -960,6 +987,75 @@ mod tests {
         assert_eq!(p.snapshot(), committed);
         assert_eq!(p.km1(), committed_km1);
         p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn commit_prefix_keeps_best_and_undoes_suffix() {
+        let h = hg();
+        let init = vec![0u32, 0, 0, 1, 1, 1];
+        // Ordered FM-style log: each vertex moves at most once. Covers the
+        // empty-prefix (best=0 ≡ revert+commit) and full-commit
+        // (best=len ≡ commit_journal) edges plus every interior cut.
+        let moves = [(0u32, 1u32), (3, 0), (5, 0), (2, 1)];
+        for best in 0..=moves.len() {
+            let p = PartitionedHypergraph::new(&h, 2, init.clone());
+            let mut log = Vec::new();
+            for &(v, t) in &moves {
+                log.push((v, p.part(v)));
+                p.apply_move(v, t);
+            }
+            p.commit_prefix(&log, best);
+            // Oracle: a fresh partition with only the surviving prefix.
+            let oracle = PartitionedHypergraph::new(&h, 2, init.clone());
+            for &(v, t) in &moves[..best] {
+                oracle.apply_move(v, t);
+            }
+            assert_eq!(p.snapshot(), oracle.snapshot(), "best={best}");
+            assert_eq!(p.km1(), oracle.km1(), "best={best}");
+            assert_eq!(p.journal_len(), 0, "prefix commit must clear the journal");
+            // The surviving prefix is the new baseline: revert is a no-op.
+            let committed = p.snapshot();
+            p.revert_journal();
+            assert_eq!(p.snapshot(), committed, "best={best}");
+            p.validate(None).unwrap();
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "heavy workload, too slow under Miri")]
+    fn commit_prefix_matches_snapshot_oracle_across_threads() {
+        let h = crate::gen::sat_hypergraph(300, 900, 8, 5);
+        let part: Vec<BlockId> = (0..300).map(|v| (v % 4) as BlockId).collect();
+        // FM-style log: unique vertices, deterministic targets, every
+        // entry an actual block change.
+        let log_moves: Vec<(u32, u32)> = (0..300u32)
+            .filter(|&v| crate::util::rng::hash64(11, v as u64) % 3 == 0)
+            .map(|v| (v, (crate::util::rng::hash64(13, v as u64) % 4) as u32))
+            .filter(|&(v, t)| part[v as usize] != t)
+            .collect();
+        for best in [0, 1, log_moves.len() / 2, log_moves.len()] {
+            let mut outs = Vec::new();
+            for nt in [1usize, 2, 4] {
+                crate::par::with_num_threads(nt, || {
+                    let p = PartitionedHypergraph::new(&h, 4, part.clone());
+                    let mut log = Vec::with_capacity(log_moves.len());
+                    for &(v, t) in &log_moves {
+                        log.push((v, p.part(v)));
+                        p.apply_move(v, t);
+                    }
+                    p.commit_prefix(&log, best);
+                    p.validate(None).unwrap();
+                    outs.push((p.snapshot(), p.km1()));
+                });
+            }
+            assert!(outs.windows(2).all(|w| w[0] == w[1]), "best={best}");
+            let oracle = PartitionedHypergraph::new(&h, 4, part.clone());
+            for &(v, t) in &log_moves[..best] {
+                oracle.apply_move(v, t);
+            }
+            assert_eq!(outs[0].0, oracle.snapshot(), "best={best}");
+            assert_eq!(outs[0].1, oracle.km1(), "best={best}");
+        }
     }
 
     #[test]

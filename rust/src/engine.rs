@@ -300,6 +300,12 @@ impl SessionScratch {
         ps.reserve_for(hg, k);
         ctx.put_partition_scratch(ps);
         ctx.selection_mut().reserve(n, hg.num_edges());
+        // FM's n-indexed origin buffer sizes here too, so a warm
+        // detquality request allocates nothing large in the pass itself
+        // (the search overlays reach steady state on first use).
+        let mut fm = ctx.take_fm_scratch();
+        fm.reserve(n);
+        ctx.put_fm_scratch(fm);
         ctx
     }
 

@@ -130,7 +130,116 @@ pub(crate) fn direct_kway(
         progress.level_entered((hier.levels.len() - li) as u64, fine_hg);
         refine_level(fine_hg, k, &mut part, cfg, selector, progress, li as u64 + 1, li == 0, ctx);
     }
+
+    // --- Iterated V-cycles (the detquality tail): re-coarsen constrained
+    // to the current blocks, re-refine with FM, keep strict improvements.
+    if let Some(fm_cfg) = &cfg.refinement.fm {
+        if fm_cfg.max_vcycles > 0 {
+            vcycles(hg, k, cfg, fm_cfg.max_vcycles, selector, scratch, progress, &mut part);
+        }
+    }
     part
+}
+
+/// km1 + acceptability (ε-balanced, no empty block) of a flat partition,
+/// through the context's recycled partition-state buffers.
+fn eval_flat(
+    hg: &Hypergraph,
+    k: usize,
+    eps: f64,
+    ctx: &mut RefinementContext,
+    part: Vec<BlockId>,
+) -> (Vec<BlockId>, Weight, bool) {
+    let p = PartitionedHypergraph::new_with_scratch(hg, k, part, ctx.take_partition_scratch());
+    let km1 = p.km1();
+    let ok = p.is_balanced(eps) && (0..k as BlockId).all(|b| p.block_weight(b) > 0);
+    let (snap, ps) = p.into_scratch();
+    ctx.put_partition_scratch(ps);
+    (snap, km1, ok)
+}
+
+/// Iterated V-cycles (DESIGN.md §14): each cycle re-coarsens the input
+/// with the *current partition as communities* — the clustering never
+/// merges across community boundaries, so every coarse vertex lies
+/// inside one block and the projected coarse partition is well-defined
+/// and km1-identical to the flat one — then re-runs the per-level
+/// refinement (Jet each level, FM at the finest). A cycle is accepted
+/// only on a strictly better acceptable km1; the first non-improving
+/// cycle restores the incumbent and stops. The whole loop is a pure
+/// function of `(hg, part, cfg)` — every cycle's seeds derive from
+/// `cfg.seed` and the cycle index.
+#[allow(clippy::too_many_arguments)]
+fn vcycles(
+    hg: &Hypergraph,
+    k: usize,
+    cfg: &Config,
+    max_vcycles: usize,
+    selector: Option<&dyn TileSelector>,
+    scratch: &mut SessionScratch,
+    progress: &mut Progress<'_>,
+    part: &mut Vec<BlockId>,
+) {
+    let ctx = scratch.refinement(k, hg);
+    let (snap, km1, ok) = eval_flat(hg, k, cfg.eps, ctx, std::mem::take(part));
+    *part = snap;
+    let mut best_km1 = if ok { km1 } else { Weight::MAX };
+    let mut best_part = part.clone();
+
+    for cycle in 0..max_vcycles as u64 {
+        let hier = progress.scope("coarsening", || {
+            crate::coarsening::coarsen_in(
+                hg,
+                Some(part.as_slice()),
+                &cfg.coarsening,
+                k,
+                hash64(cfg.seed ^ 0x5C1E, cycle),
+                scratch.coarsening(),
+            )
+        });
+        // Project the current partition onto the coarsest level by
+        // composing the contraction maps (consistent by the community
+        // constraint: all fine vertices of a coarse vertex share a block).
+        let mut vpart = part.clone();
+        for lvl in &hier.levels {
+            let mut next = vec![0 as BlockId; lvl.coarse.num_vertices()];
+            for (v, &cv) in lvl.map.iter().enumerate() {
+                next[cv as usize] = vpart[v];
+            }
+            vpart = next;
+        }
+        let coarsest = hier.coarsest(hg);
+        let ctx = scratch.refinement(k, hg);
+        ctx.set_kernel(cfg.refinement.kernel);
+        ctx.set_active_set(cfg.refinement.active_set, cfg.refinement.active_set_fallback_frac);
+        let base_tag = 1000 + cycle * 100;
+        refine_level(
+            coarsest, k, &mut vpart, cfg, selector, progress, base_tag,
+            hier.levels.is_empty(), ctx,
+        );
+        for li in (0..hier.levels.len()).rev() {
+            let fine_hg: &Hypergraph =
+                if li == 0 { hg } else { &hier.levels[li - 1].coarse };
+            vpart = hier.levels[li].map.iter().map(|&cv| vpart[cv as usize]).collect();
+            refine_level(
+                fine_hg, k, &mut vpart, cfg, selector, progress,
+                base_tag + li as u64 + 1, li == 0, ctx,
+            );
+        }
+        let ctx = scratch.refinement(k, hg);
+        let (snap, km1, ok) = eval_flat(hg, k, cfg.eps, ctx, vpart);
+        progress.km1_after_round("vcycle", km1);
+        if ok && km1 < best_km1 {
+            best_km1 = km1;
+            best_part.clear();
+            best_part.extend_from_slice(&snap);
+            *part = snap;
+        } else {
+            // Converged (or degraded): land on the incumbent and stop.
+            part.clear();
+            part.extend_from_slice(&best_part);
+            break;
+        }
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -210,6 +319,26 @@ fn refine_level(
             });
             progress.km1_after_round("refinement-flow", p.km1());
             progress.round_work("refinement-flow", ctx.take_round_work());
+        }
+    }
+    // The deterministic multi-try FM pass runs on the finest level only
+    // (the detquality quality tail): coarse-level FM sequences are mostly
+    // re-discovered by Jet after projection, and finest-only keeps the
+    // pass count independent of hierarchy depth. Never worsens km1 on an
+    // acceptable entry (best-prefix rollback, DESIGN.md §14).
+    if let Some(fm_cfg) = &cfg.refinement.fm {
+        if is_finest {
+            progress.scope("refinement-fm", || {
+                crate::refinement::fm::refine_fm_in(
+                    &p,
+                    cfg.eps,
+                    fm_cfg,
+                    hash64(cfg.seed ^ 0xF4, level_tag),
+                    ctx,
+                );
+            });
+            progress.km1_after_round("refinement-fm", p.km1());
+            progress.round_work("refinement-fm", ctx.take_round_work());
         }
     }
     let (snap, scratch) = p.into_scratch();

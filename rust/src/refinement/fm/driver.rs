@@ -1,0 +1,360 @@
+//! The parallel FM pass driver: synchronous rounds of seed selection →
+//! parallel localized searches → deterministic dedup → grouped approval
+//! → best-prefix commit (DESIGN.md §14).
+//!
+//! Round structure (both this driver and the serial oracle follow it
+//! verbatim — the only difference is *how* the per-seed searches and the
+//! approval execute):
+//!
+//! 1. Resolve the scan list from the active-set layer (full boundary or
+//!    derived frontier) and draw `seeds_per_round` unlocked seeds in
+//!    deterministic per-round hash order.
+//! 2. Expand one read-only localized search per seed against the frozen
+//!    partition ([`super::search::FmSearch`]); flatten the proposals in
+//!    seed order (chunk-count independent by construction).
+//! 3. Deduplicate proposals on the total key `(vertex, seed_rank)`
+//!    (lowest seed rank wins) and stage the survivors into the unified
+//!    selection pipeline; the grouped approval admits a budget-capped
+//!    `(gain desc, vertex asc)` prefix per target and bulk-applies it.
+//! 4. Append the applied moves (with their captured origin blocks) to
+//!    the pass move log, lock them for the rest of the pass, and track
+//!    the best `(km1, log length)` seen at any round boundary.
+//!
+//! The pass ends by [`commit_prefix`]-ing the log at the best round
+//! boundary: every vertex moves at most once per pass, so undoing the
+//! suffix lands *exactly* on the best observed state — an FM pass never
+//! worsens km1 on an acceptable entry state.
+//!
+//! [`commit_prefix`]: crate::datastructures::PartitionedHypergraph::commit_prefix
+
+use super::super::{select, MoveCandidate, RefinementContext};
+use super::search::Proposal;
+use super::{FmScratch, FmStats};
+use crate::config::FmConfig;
+use crate::datastructures::PartitionedHypergraph;
+use crate::util::rng::hash64;
+use crate::util::Bitset;
+use crate::{BlockId, VertexId};
+
+/// Acceptance predicate shared with the Jet driver: ε-balanced and no
+/// block drained empty.
+pub(super) fn acceptable(p: &PartitionedHypergraph, eps: f64) -> bool {
+    p.is_balanced(eps) && (0..p.k() as BlockId).all(|b| p.block_weight(b) > 0)
+}
+
+/// Deterministic per-round seed selection: the unlocked scan-list
+/// vertices in `(hash64(salt, v), v)` order, truncated to `limit`. The
+/// sort runs serially in both drivers, so the seed list is a pure
+/// function of `(pool, locked, salt)`.
+pub(super) fn select_seeds(
+    pool: &[VertexId],
+    locked: &Bitset,
+    salt: u64,
+    limit: usize,
+    seeds: &mut Vec<VertexId>,
+) {
+    seeds.clear();
+    seeds.extend(pool.iter().copied().filter(|&v| !locked.get(v as usize)));
+    seeds.sort_unstable_by_key(|&v| (hash64(salt, v as u64), v));
+    seeds.truncate(limit);
+}
+
+/// Deduplicate the round's flattened proposals into staged candidates:
+/// sort by the total key `(vertex, seed_rank, order)` — a search moves a
+/// vertex at most once, so `(vertex, seed_rank)` is already unique — and
+/// keep the first proposal per vertex (the lowest-ranked seed's view).
+pub(super) fn dedup_proposals(props: &mut Vec<Proposal>, cands: &mut Vec<MoveCandidate>) {
+    props.sort_unstable_by_key(|pr| (pr.vertex, pr.seed_rank, pr.order));
+    props.dedup_by_key(|pr| pr.vertex);
+    cands.clear();
+    cands.extend(
+        props
+            .iter()
+            .map(|pr| MoveCandidate { vertex: pr.vertex, target: pr.target, gain: pr.gain }),
+    );
+}
+
+/// Run one deterministic parallel FM pass in-place. Allocates a
+/// throwaway scratch arena — the partitioner uses [`refine_fm_in`] with
+/// the cross-level one.
+pub fn refine_fm(p: &PartitionedHypergraph, eps: f64, cfg: &FmConfig, seed: u64) -> FmStats {
+    let mut ctx = RefinementContext::new(p.k(), p.hypergraph().num_vertices());
+    refine_fm_in(p, eps, cfg, seed, &mut ctx)
+}
+
+/// [`refine_fm`] drawing all scratch from the caller's
+/// [`RefinementContext`].
+pub fn refine_fm_in(
+    p: &PartitionedHypergraph,
+    eps: f64,
+    cfg: &FmConfig,
+    seed: u64,
+    ctx: &mut RefinementContext,
+) -> FmStats {
+    let hg = p.hypergraph();
+    let (n, m, k) = (hg.num_vertices(), hg.num_edges(), p.k());
+    let mut stats = FmStats {
+        initial_km1: p.km1(),
+        final_km1: p.km1(),
+        ..Default::default()
+    };
+    // FM refines; it never repairs. An unbalanced (or block-empty) entry
+    // state has no acceptable baseline to roll back to, so the pass is
+    // skipped entirely (the Jet pass before it owns balance repair).
+    if !acceptable(p, eps) {
+        return stats;
+    }
+    // The entry state is the rollback baseline: from here on the journal
+    // mirrors the pass move log one-to-one (pass-level locking ⇒ every
+    // vertex journals at most once).
+    p.commit_journal();
+    let mut fm = ctx.take_fm_scratch();
+    fm.reserve(n);
+    fm.log.clear();
+    fm.lmax.clear();
+    fm.lmax.resize(k, p.max_block_weight(eps));
+    let mut locked = std::mem::take(&mut ctx.locked);
+    locked.reset(n);
+    ctx.active.begin_pass(hg);
+    // Best acceptable state seen at any round boundary, as a prefix
+    // length of the move log; the entry state is prefix 0.
+    let mut best = (stats.initial_km1, 0usize);
+    let mut no_improve = 0usize;
+
+    for round in 0..cfg.max_rounds {
+        stats.rounds += 1;
+        let round_salt = hash64(seed, round as u64);
+        let (pool, was_full) = ctx.take_scan_list(p);
+        let pool_empty = pool.is_empty();
+        ctx.active.note_scanned(pool.len() as u64);
+        select_seeds(&pool, &locked, round_salt, cfg.seeds_per_round, &mut fm.seeds);
+        // Scanned-but-unmoved vertices stay eligible: a seed slot they
+        // lost to the hash order this round must come back next round.
+        if ctx.active.tracking() {
+            for &v in &pool {
+                if !locked.get(v as usize) {
+                    ctx.active.keep_active(v);
+                }
+            }
+        }
+        ctx.put_scan_list(pool, was_full);
+
+        // Parallel per-seed expansion against the frozen state: chunks
+        // tile the seed list in order, each with a private overlay, so
+        // the flattened proposal stream is chunk-count independent.
+        let nt = crate::par::num_threads().max(1);
+        let n_chunks = crate::par::pool::num_chunks(fm.seeds.len(), nt);
+        {
+            let FmScratch { searches, chunk_props, seeds, lmax, props, .. } = &mut fm;
+            while searches.len() < n_chunks {
+                searches.push(super::search::FmSearch::default());
+            }
+            while chunk_props.len() < n_chunks {
+                chunk_props.push(Vec::new());
+            }
+            for s in searches[..n_chunks].iter_mut() {
+                s.prepare(n, m, k);
+            }
+            for c in chunk_props[..n_chunks].iter_mut() {
+                c.clear();
+            }
+            let (seeds, lmax, locked) = (&*seeds, &*lmax, &locked);
+            // detlint::hot_path(begin) — parallel seed-expansion fan-out
+            std::thread::scope(|scope| {
+                for (ci, (search, out)) in searches[..n_chunks]
+                    .iter_mut()
+                    .zip(chunk_props[..n_chunks].iter_mut())
+                    .enumerate()
+                {
+                    let range = crate::par::pool::nth_chunk(seeds.len(), n_chunks, ci);
+                    scope.spawn(move || {
+                        crate::par::pool::pin_worker(ci);
+                        for i in range {
+                            search.run(
+                                p,
+                                locked,
+                                lmax,
+                                cfg.max_moves_per_search,
+                                cfg.max_edge_size,
+                                seeds[i],
+                                i as u32,
+                                out,
+                            );
+                        }
+                    });
+                }
+            });
+            // detlint::hot_path(end)
+            props.clear();
+            for c in chunk_props[..n_chunks].iter() {
+                props.extend_from_slice(c);
+            }
+        }
+
+        dedup_proposals(&mut fm.props, &mut fm.cands);
+        ctx.active.note_staged(fm.cands.len() as u64);
+        // Capture origin blocks before the approval applies the moves.
+        for c in &fm.cands {
+            fm.from_of[c.vertex as usize] = p.part(c.vertex);
+        }
+        let applied_len = {
+            let (sel, aset) = ctx.selection_and_active();
+            sel.stage(&fm.cands);
+            let applied = select::approve_and_apply_in(p, &fm.lmax, sel);
+            for c in applied {
+                fm.log.push((c.vertex, fm.from_of[c.vertex as usize]));
+                locked.set(c.vertex as usize);
+            }
+            aset.note_applied(hg, applied);
+            applied.len()
+        };
+        ctx.active.note_applied_count(applied_len as u64);
+        stats.moves_applied += applied_len;
+        ctx.active.finish_round(hg);
+
+        let cur = p.km1();
+        if acceptable(p, eps) && cur < best.0 {
+            best = (cur, fm.log.len());
+            no_improve = 0;
+        } else {
+            no_improve += 1;
+        }
+        if pool_empty || no_improve >= cfg.max_rounds_without_improvement {
+            break;
+        }
+    }
+
+    // Land exactly on the best round boundary (prefix 0 = entry state).
+    p.commit_prefix(&fm.log, best.1);
+    stats.committed = best.1;
+    stats.final_km1 = p.km1();
+    ctx.locked = locked;
+    ctx.put_fm_scratch(fm);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FmConfig;
+
+    fn bad_partition(n: usize, k: usize) -> Vec<BlockId> {
+        (0..n)
+            .map(|v| (hash64(31, v as u64) % k as u64) as BlockId)
+            .collect()
+    }
+
+    #[test]
+    fn improves_bad_partition_and_stays_balanced() {
+        let h = crate::gen::grid::grid2d_graph(20, 20);
+        let p = PartitionedHypergraph::new(&h, 4, bad_partition(400, 4));
+        let before = p.km1();
+        let stats = refine_fm(&p, 0.05, &FmConfig::default(), 7);
+        assert_eq!(stats.initial_km1, before);
+        assert!(stats.final_km1 < before, "{before} -> {}", stats.final_km1);
+        assert_eq!(stats.final_km1, p.km1());
+        assert!(p.is_balanced(0.05));
+        p.validate(Some(0.05)).unwrap();
+        assert!(stats.committed <= stats.moves_applied);
+    }
+
+    #[test]
+    fn never_worsens_and_skips_unacceptable_entry() {
+        let h = crate::gen::sat_hypergraph(300, 900, 6, 2);
+        let part = bad_partition(300, 3);
+        let p = PartitionedHypergraph::new(&h, 3, part);
+        let before = p.km1();
+        let stats = refine_fm(&p, 0.05, &FmConfig::default(), 1);
+        assert!(stats.final_km1 <= before);
+        // Unbalanced entry: the pass must be a strict no-op.
+        let q = PartitionedHypergraph::new(&h, 3, vec![0; 300]);
+        let snap = q.snapshot();
+        let s2 = refine_fm(&q, 0.05, &FmConfig::default(), 1);
+        assert_eq!(s2.rounds, 0);
+        assert_eq!(s2.moves_applied, 0);
+        assert_eq!(q.snapshot(), snap);
+    }
+
+    #[test]
+    fn matches_serial_oracle_across_threads() {
+        let h = crate::gen::vlsi_netlist(18, 1.2, 13);
+        let n = h.num_vertices();
+        let cfg = FmConfig::default();
+        let oracle = crate::par::with_num_threads(1, || {
+            let p = PartitionedHypergraph::new(&h, 4, bad_partition(n, 4));
+            let mut ctx = RefinementContext::new(4, n);
+            let s = super::super::refine_serial(&p, 0.05, &cfg, 9, &mut ctx);
+            (p.snapshot(), s.final_km1, s.rounds, s.moves_applied, s.committed)
+        });
+        for nt in [1usize, 2, 4] {
+            let got = crate::par::with_num_threads(nt, || {
+                let p = PartitionedHypergraph::new(&h, 4, bad_partition(n, 4));
+                let mut ctx = RefinementContext::new(4, n);
+                let s = refine_fm_in(&p, 0.05, &cfg, 9, &mut ctx);
+                (p.snapshot(), s.final_km1, s.rounds, s.moves_applied, s.committed)
+            });
+            assert_eq!(got, oracle, "diverged from serial oracle at {nt} threads");
+        }
+    }
+
+    #[test]
+    fn shared_context_matches_throwaway_context() {
+        let h = crate::gen::vlsi_netlist(16, 1.2, 5);
+        let n = h.num_vertices();
+        let cfg = FmConfig::default();
+        let p1 = PartitionedHypergraph::new(&h, 4, bad_partition(n, 4));
+        let s1 = refine_fm(&p1, 0.05, &cfg, 3);
+        let mut ctx = RefinementContext::new(4, n);
+        // Dirty the arena with an unrelated run first.
+        let p2 = PartitionedHypergraph::new(&h, 4, bad_partition(n, 4));
+        refine_fm_in(&p2, 0.05, &cfg, 3, &mut ctx);
+        let p3 = PartitionedHypergraph::new(&h, 4, bad_partition(n, 4));
+        let s3 = refine_fm_in(&p3, 0.05, &cfg, 3, &mut ctx);
+        assert_eq!(p1.snapshot(), p3.snapshot());
+        assert_eq!(s1.final_km1, s3.final_km1);
+    }
+
+    #[test]
+    fn seed_selection_is_deterministic_and_respects_locks() {
+        let pool: Vec<VertexId> = (0..40).collect();
+        let mut locked = Bitset::new(40);
+        locked.set(7);
+        locked.set(12);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        select_seeds(&pool, &locked, 0xBEEF, 10, &mut a);
+        select_seeds(&pool, &locked, 0xBEEF, 10, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 10);
+        assert!(!a.contains(&7) && !a.contains(&12));
+        // A different salt reorders the draw.
+        select_seeds(&pool, &locked, 0xF00D, 10, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn dedup_keeps_lowest_seed_rank_per_vertex() {
+        let mk = |vertex, seed_rank, order, target, gain| Proposal {
+            vertex,
+            target,
+            gain,
+            seed_rank,
+            order,
+        };
+        let mut props = vec![
+            mk(5, 2, 0, 1, 4),
+            mk(3, 1, 1, 2, 7),
+            mk(5, 0, 3, 0, 9),
+            mk(3, 4, 0, 1, 1),
+        ];
+        let mut cands = Vec::new();
+        dedup_proposals(&mut props, &mut cands);
+        assert_eq!(
+            cands,
+            vec![
+                MoveCandidate { vertex: 3, target: 2, gain: 7 },
+                MoveCandidate { vertex: 5, target: 0, gain: 9 },
+            ]
+        );
+    }
+}

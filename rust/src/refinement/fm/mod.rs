@@ -1,0 +1,94 @@
+//! Deterministic multi-try localized FM (DESIGN.md §14) — the
+//! `detquality` preset's quality pass.
+//!
+//! Classical FM is inherently sequential: every move updates the gain
+//! structure the next move is chosen from. The deterministic parallel
+//! analogue here keeps FM's strength (coordinated *sequences* of moves,
+//! including negative-gain prefixes that pay off later) while making the
+//! outcome a pure function of the input:
+//!
+//! * **Synchronous rounds.** Each round freezes the partition state,
+//!   draws `seeds_per_round` seed vertices from the active-set scan list
+//!   in deterministic hash order, and expands one localized search per
+//!   seed. Searches are *read-only* with respect to the shared state —
+//!   each runs against a private overlay ([`search::FmSearch`]) — so
+//!   running them in parallel cannot change what any of them computes.
+//! * **Deterministic selection.** The per-seed move sequences are
+//!   truncated to their best strictly-positive prefix, deduplicated by
+//!   a total key, and staged into the unified selection pipeline
+//!   ([`super::select`]), whose grouped approval (gain desc, vertex asc
+//!   per target, budget-capped) is schedule-independent.
+//! * **Best-prefix rollback.** Applied moves are appended to an ordered
+//!   `(vertex, from)` log; every vertex moves at most once per pass
+//!   (pass-level locking), so
+//!   [`commit_prefix`](crate::datastructures::PartitionedHypergraph::commit_prefix)
+//!   can land the pass exactly on the best km1 observed at any round
+//!   boundary. An FM pass therefore *never* worsens km1.
+//!
+//! [`serial::refine_serial`] is the retained determinism oracle: an
+//! independent serial implementation of the same round semantics (shared
+//! per-seed search, serial outer loops, the serial approval oracle).
+//! The proptests assert bit-identical partitions, km1 and work counters
+//! against it at 1/2/4 threads.
+
+pub(crate) mod search;
+
+mod driver;
+mod serial;
+
+pub use driver::{refine_fm, refine_fm_in};
+pub use serial::refine_serial;
+
+use crate::{BlockId, VertexId, Weight};
+
+/// Outcome of one FM pass.
+#[derive(Clone, Debug, Default)]
+pub struct FmStats {
+    /// Synchronous rounds executed.
+    pub rounds: usize,
+    /// Moves applied across all rounds (before the best-prefix undo).
+    pub moves_applied: usize,
+    /// Length of the committed best prefix of the move log.
+    pub committed: usize,
+    /// km1 at pass entry.
+    pub initial_km1: Weight,
+    /// km1 after the best-prefix commit (`<= initial_km1` whenever the
+    /// entry state was acceptable).
+    pub final_km1: Weight,
+}
+
+/// Reusable buffers for FM passes, pooled in the
+/// [`super::RefinementContext`] so warm engine requests allocate nothing
+/// large: per-chunk search overlays, per-chunk/flattened proposal
+/// vectors, the staged-candidate vector, the ordered `(vertex, from)`
+/// move log, the n-sized origin capture, and the seed buffer.
+#[derive(Default)]
+pub struct FmScratch {
+    /// Per-chunk localized-search overlays (sized on first use).
+    pub(crate) searches: Vec<search::FmSearch>,
+    /// Per-chunk proposal outputs for the parallel seed expansion.
+    pub(crate) chunk_props: Vec<Vec<search::Proposal>>,
+    /// Flattened (seed-order) proposals of the round.
+    pub(crate) props: Vec<search::Proposal>,
+    /// Deduplicated move candidates staged into the selection pipeline.
+    pub(crate) cands: Vec<crate::refinement::MoveCandidate>,
+    /// Ordered pass-level move log: `(vertex, block it left)`.
+    pub(crate) log: Vec<(VertexId, BlockId)>,
+    /// Origin blocks captured for the round's staged vertices before the
+    /// approval applies them (indexed by vertex id).
+    pub(crate) from_of: Vec<BlockId>,
+    /// The round's seed list (hash-ordered scan-list prefix).
+    pub(crate) seeds: Vec<VertexId>,
+    /// Per-block `L_max` vector for the grouped approval.
+    pub(crate) lmax: Vec<Weight>,
+}
+
+impl FmScratch {
+    /// Size the n-indexed buffers (idempotent; everything else grows to
+    /// steady state on first use and is then recycled).
+    pub(crate) fn reserve(&mut self, n: usize) {
+        if self.from_of.len() < n {
+            self.from_of.resize(n, 0);
+        }
+    }
+}

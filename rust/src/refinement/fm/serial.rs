@@ -1,0 +1,168 @@
+//! The serial FM determinism oracle: an independent single-threaded
+//! implementation of the exact round semantics of
+//! [`super::driver::refine_fm_in`] — one search overlay, a plain seed
+//! loop in seed order, and the *serial* grouped-approval reference
+//! ([`super::super::select::approve_and_apply_serial`]) instead of the
+//! parallel pipeline. The proptests assert that the parallel driver is
+//! bit-identical to this oracle (partitions, km1, work counters) at
+//! 1/2/4 threads — the same retained-oracle pattern as the selection,
+//! kernel and active-set layers.
+//!
+//! Kept deliberately simple and allocation-happy: this module is the
+//! *specification*, not the hot path.
+
+use super::super::{select, MoveCandidate, RefinementContext};
+use super::driver::{acceptable, dedup_proposals, select_seeds};
+use super::FmStats;
+use crate::config::FmConfig;
+use crate::datastructures::PartitionedHypergraph;
+use crate::util::rng::hash64;
+use crate::util::Bitset;
+use crate::{BlockId, VertexId};
+
+/// Serial reference implementation of one FM pass (see module docs).
+/// Shares the caller's [`RefinementContext`] so the active-set frontier
+/// evolution — and therefore the scan lists and work counters — match
+/// the parallel driver exactly.
+pub fn refine_serial(
+    p: &PartitionedHypergraph,
+    eps: f64,
+    cfg: &FmConfig,
+    seed: u64,
+    ctx: &mut RefinementContext,
+) -> FmStats {
+    let hg = p.hypergraph();
+    let (n, m, k) = (hg.num_vertices(), hg.num_edges(), p.k());
+    let mut stats = FmStats {
+        initial_km1: p.km1(),
+        final_km1: p.km1(),
+        ..Default::default()
+    };
+    if !acceptable(p, eps) {
+        return stats;
+    }
+    p.commit_journal();
+    let lmax = vec![p.max_block_weight(eps); k];
+    let mut search = super::search::FmSearch::default();
+    search.prepare(n, m, k);
+    let mut locked = Bitset::new(n);
+    let mut log: Vec<(VertexId, BlockId)> = Vec::new();
+    let mut from_of: Vec<BlockId> = vec![0; n];
+    let mut seeds: Vec<VertexId> = Vec::new();
+    let mut props: Vec<super::search::Proposal> = Vec::new();
+    let mut cands: Vec<MoveCandidate> = Vec::new();
+    ctx.active.begin_pass(hg);
+    let mut best = (stats.initial_km1, 0usize);
+    let mut no_improve = 0usize;
+
+    for round in 0..cfg.max_rounds {
+        stats.rounds += 1;
+        let round_salt = hash64(seed, round as u64);
+        let (pool, was_full) = ctx.take_scan_list(p);
+        let pool_empty = pool.is_empty();
+        ctx.active.note_scanned(pool.len() as u64);
+        select_seeds(&pool, &locked, round_salt, cfg.seeds_per_round, &mut seeds);
+        if ctx.active.tracking() {
+            for &v in &pool {
+                if !locked.get(v as usize) {
+                    ctx.active.keep_active(v);
+                }
+            }
+        }
+        ctx.put_scan_list(pool, was_full);
+
+        // Seed expansion: one overlay, plain loop in seed order — the
+        // serial specification of the parallel chunked fan-out.
+        props.clear();
+        for (i, &s) in seeds.iter().enumerate() {
+            search.run(
+                p,
+                &locked,
+                &lmax,
+                cfg.max_moves_per_search,
+                cfg.max_edge_size,
+                s,
+                i as u32,
+                &mut props,
+            );
+        }
+
+        dedup_proposals(&mut props, &mut cands);
+        ctx.active.note_staged(cands.len() as u64);
+        for c in &cands {
+            from_of[c.vertex as usize] = p.part(c.vertex);
+        }
+        let applied = select::approve_and_apply_serial(p, cands.clone(), &lmax);
+        for c in &applied {
+            log.push((c.vertex, from_of[c.vertex as usize]));
+            locked.set(c.vertex as usize);
+        }
+        ctx.active.note_applied(hg, &applied);
+        ctx.active.note_applied_count(applied.len() as u64);
+        stats.moves_applied += applied.len();
+        ctx.active.finish_round(hg);
+
+        let cur = p.km1();
+        if acceptable(p, eps) && cur < best.0 {
+            best = (cur, log.len());
+            no_improve = 0;
+        } else {
+            no_improve += 1;
+        }
+        if pool_empty || no_improve >= cfg.max_rounds_without_improvement {
+            break;
+        }
+    }
+
+    p.commit_prefix(&log, best.1);
+    stats.committed = best.1;
+    stats.final_km1 = p.km1();
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_oracle_improves_and_never_worsens() {
+        let h = crate::gen::sat_hypergraph(250, 750, 6, 4);
+        let part: Vec<BlockId> =
+            (0..250).map(|v| (hash64(31, v) % 4) as BlockId).collect();
+        let p = PartitionedHypergraph::new(&h, 4, part);
+        let before = p.km1();
+        let mut ctx = RefinementContext::new(4, 250);
+        let stats = refine_serial(&p, 0.05, &FmConfig::default(), 11, &mut ctx);
+        assert!(stats.final_km1 <= before);
+        assert_eq!(stats.final_km1, p.km1());
+        p.validate(Some(0.05)).unwrap();
+        // Reruns are bit-identical (pure function of the inputs).
+        let q = PartitionedHypergraph::new(
+            &h,
+            4,
+            (0..250).map(|v| (hash64(31, v) % 4) as BlockId).collect(),
+        );
+        let mut ctx2 = RefinementContext::new(4, 250);
+        let s2 = refine_serial(&q, 0.05, &FmConfig::default(), 11, &mut ctx2);
+        assert_eq!(p.snapshot(), q.snapshot());
+        assert_eq!(stats.final_km1, s2.final_km1);
+    }
+
+    #[test]
+    fn rollback_lands_on_best_round_boundary() {
+        // With a tiny round budget the pass may end on a worse state than
+        // its best round; the prefix commit must land on the best.
+        let h = crate::gen::rmat_graph(7, 5, 3);
+        let n = h.num_vertices();
+        let part: Vec<BlockId> =
+            (0..n).map(|v| (hash64(9, v as u64) % 3) as BlockId).collect();
+        let p = PartitionedHypergraph::new(&h, 3, part);
+        let before = p.km1();
+        let cfg = FmConfig { max_rounds: 2, ..Default::default() };
+        let mut ctx = RefinementContext::new(3, n);
+        let stats = refine_serial(&p, 0.1, &cfg, 2, &mut ctx);
+        assert!(stats.final_km1 <= before);
+        assert!(stats.committed <= stats.moves_applied);
+        p.validate(None).unwrap();
+    }
+}

@@ -14,6 +14,7 @@
 //! itself — and every other refiner's move selection — runs on the
 //! unified parallel pipeline in [`select`] (DESIGN.md §7).
 
+pub mod fm;
 pub mod jet;
 pub(crate) mod kernel;
 pub mod lp;
@@ -483,6 +484,11 @@ pub struct RefinementContext {
     /// fallback latch, and the per-round work counters (see [`ActiveSet`]
     /// and DESIGN.md §12).
     pub(crate) active: ActiveSet,
+    /// The FM pass's pooled buffers (search overlays, proposal vectors,
+    /// the move log — see [`fm::FmScratch`]). Taken out with `mem::take`
+    /// for the duration of a pass so the pass can keep borrowing the
+    /// context's other fields.
+    fm: fm::FmScratch,
 }
 
 impl RefinementContext {
@@ -502,6 +508,7 @@ impl RefinementContext {
             flow_rounds: flow::scheduler::FlowRoundScratch::default(),
             selection: select::SelectionScratch::default(),
             active: ActiveSet::new(),
+            fm: fm::FmScratch::default(),
         }
     }
 
@@ -757,6 +764,16 @@ impl RefinementContext {
             out,
             &mut self.selection.counts,
         );
+    }
+
+    /// Take the FM pass scratch out of the context for the duration of a
+    /// pass (return it with [`put_fm_scratch`](Self::put_fm_scratch)).
+    pub(crate) fn take_fm_scratch(&mut self) -> fm::FmScratch {
+        std::mem::take(&mut self.fm)
+    }
+
+    pub(crate) fn put_fm_scratch(&mut self, s: fm::FmScratch) {
+        self.fm = s;
     }
 
     /// Take the partition-state backing buffers (return them with

@@ -60,6 +60,51 @@ fn detflows_deterministic_across_flow_seeds_and_threads() {
 }
 
 #[test]
+fn detquality_is_deterministic_across_threads_and_instances() {
+    // The FM + V-cycle preset honours the same contract as the rest:
+    // bit-identical partitions across 1/2/4/8 threads and reruns.
+    for (name, k) in [("sat-3k", 4usize), ("vlsi-48", 4), ("rmat-s11", 2)] {
+        let hg = gen::instance_by_name(name).unwrap().build();
+        assert_deterministic(&hg, k, &Config::detquality(7));
+    }
+}
+
+#[test]
+fn fm_improves_km1_over_detjet_on_suite() {
+    // Falsifiability guard against a silently inert refiner: detquality
+    // must never be worse than detjet (FM's best-prefix rollback and the
+    // strict-improvement V-cycle gate guarantee km1 ≤ detjet per run),
+    // and must be *strictly* better on at least one suite instance.
+    let instances: Vec<(&str, detpart::datastructures::Hypergraph)> = vec![
+        ("sat", gen::sat_hypergraph(600, 1800, 6, 11)),
+        ("vlsi", gen::vlsi_netlist(28, 1.15, 33)),
+        ("rmat", gen::rmat_graph(9, 6, 5)),
+    ];
+    let mut strict = 0usize;
+    for (name, hg) in &instances {
+        for (k, seed) in [(4usize, 1u64), (4, 9), (8, 3)] {
+            let dj = partition(hg, k, &Config::detjet(seed));
+            let dq = partition(hg, k, &Config::detquality(seed));
+            assert!(dq.balanced, "{name} k={k} seed={seed}: detquality unbalanced");
+            assert!(
+                dq.km1 <= dj.km1,
+                "{name} k={k} seed={seed}: detquality km1 {} worse than detjet {}",
+                dq.km1,
+                dj.km1
+            );
+            if dq.km1 < dj.km1 {
+                strict += 1;
+            }
+        }
+    }
+    assert!(
+        strict > 0,
+        "FM + V-cycles never strictly improved km1 over detjet on the suite — \
+         the refiner is inert"
+    );
+}
+
+#[test]
 fn different_partitioner_seeds_give_different_results() {
     // Determinism is per-seed; the seed must still matter.
     let hg = gen::instance_by_name("rmat-s11").unwrap().build();
@@ -88,7 +133,7 @@ fn warm_engine_bit_identical_to_fresh_engine_across_presets_threads_k_and_seed()
     // state between requests — for every deterministic preset, across
     // thread counts, with k and seed varying per request.
     let hg = gen::sat_hypergraph(500, 1500, 6, 3);
-    for preset in [Preset::DetJet, Preset::SDet, Preset::DetFlows] {
+    for preset in [Preset::DetJet, Preset::SDet, Preset::DetFlows, Preset::DetQuality] {
         let requests =
             [(2usize, 1u64), (4, 7), (8, 1), (3, 42), (2, 1)]; // incl. a repeat
         // Reference run per request from a fresh engine, plus

@@ -91,6 +91,37 @@ fn prop_journal_and_incremental_km1_match_snapshot_oracle() {
                 assert_eq!(p.snapshot(), committed, "seed {seed}: commit baseline lost");
                 assert_eq!(p.km1(), committed_km1, "seed {seed}");
                 check_partition_state(&p);
+                // Epoch 3: a unique-vertex move log committed at a prefix
+                // boundary — the FM rollback primitive (`commit_prefix`)
+                // vs a snapshot oracle, at a hash-drawn cut.
+                let mut fmlog: Vec<(u32, u32)> = Vec::new(); // (v, from)
+                let mut applied: Vec<(u32, u32)> = Vec::new(); // (v, to)
+                for &(v, t) in &batches[1] {
+                    let from = p.part(v);
+                    if from != t {
+                        fmlog.push((v, from));
+                        applied.push((v, t));
+                        p.apply_move(v, t);
+                    }
+                }
+                let cut = (detpart::util::rng::hash64(seed, 0x77) % (fmlog.len() as u64 + 1))
+                    as usize;
+                let mut expect = committed.clone();
+                for &(v, t) in &applied[..cut] {
+                    expect[v as usize] = t;
+                }
+                p.commit_prefix(&fmlog, cut);
+                assert_eq!(
+                    p.snapshot(),
+                    expect,
+                    "seed {seed}: commit_prefix({cut}/{}) != snapshot oracle",
+                    fmlog.len()
+                );
+                check_partition_state(&p);
+                check_metrics_agree(hg, &p);
+                // The prefix state is the new baseline: revert is a no-op.
+                p.revert_journal();
+                assert_eq!(p.snapshot(), expect, "seed {seed}: prefix not committed");
                 outs.push((p.snapshot(), p.km1()));
             });
         }
@@ -824,6 +855,129 @@ fn prop_partitions_bit_identical_across_flow_solvers_seeds_and_threads() {
                     }
                 }
             }
+        }
+    }
+}
+
+#[test]
+fn prop_fm_matches_serial_oracle() {
+    // THE PR-10 acceptance property (DESIGN.md §14): the parallel FM
+    // driver — chunked seed fan-out, parallel grouped approval — is
+    // bit-identical to the independent serial oracle
+    // (`fm::refine_serial`) at 1/2/4 threads: partitions, km1, the
+    // FmStats counters, and the active-set work counters, under both
+    // scan policies, on every generator class.
+    use detpart::config::{ActiveSetKind, FmConfig};
+    use detpart::refinement::fm::{refine_fm_in, refine_serial};
+    use detpart::refinement::RefinementContext;
+
+    let instances: Vec<(&str, detpart::datastructures::Hypergraph)> = vec![
+        ("sat", detpart::gen::sat_hypergraph(260, 780, 5, 11)),
+        ("vlsi", detpart::gen::vlsi_netlist(16, 1.15, 33)),
+        ("rmat", detpart::gen::rmat_graph(8, 6, 5)),
+    ];
+    let (k, eps) = (4usize, 0.1);
+    for (name, hg) in &instances {
+        let n = hg.num_vertices();
+        for seed in [1u64, 42] {
+            let part: Vec<u32> = (0..n)
+                .map(|v| {
+                    (detpart::util::rng::hash64(seed ^ 0xBAD, v as u64) % k as u64) as u32
+                })
+                .collect();
+            for kind in ActiveSetKind::ALL {
+                let cfg = FmConfig::default();
+                let oracle = detpart::par::with_num_threads(1, || {
+                    let p = PartitionedHypergraph::new(hg, k, part.clone());
+                    let mut ctx = RefinementContext::new(k, n);
+                    ctx.set_active_set(kind, 0.75);
+                    let s = refine_serial(&p, eps, &cfg, seed, &mut ctx);
+                    (
+                        p.snapshot(),
+                        s.final_km1,
+                        (s.rounds, s.moves_applied, s.committed),
+                        ctx.take_round_work(),
+                    )
+                });
+                for nt in [1usize, 2, 4] {
+                    let got = detpart::par::with_num_threads(nt, || {
+                        let p = PartitionedHypergraph::new(hg, k, part.clone());
+                        let mut ctx = RefinementContext::new(k, n);
+                        ctx.set_active_set(kind, 0.75);
+                        let s = refine_fm_in(&p, eps, &cfg, seed, &mut ctx);
+                        (
+                            p.snapshot(),
+                            s.final_km1,
+                            (s.rounds, s.moves_applied, s.committed),
+                            ctx.take_round_work(),
+                        )
+                    });
+                    assert_eq!(
+                        got, oracle,
+                        "{name}/{kind} seed={seed}: parallel FM diverged from the \
+                         serial oracle at {nt} threads"
+                    );
+                }
+            }
+        }
+    }
+
+    // Engine-level: the detquality preset's full event stream — work
+    // counters included — is bit-identical across thread counts.
+    use detpart::engine::{PartitionRequest, Partitioner};
+    use detpart::testing::RecordingObserver;
+    let hg = &instances[0].1;
+    let mut views = Vec::new();
+    for nt in [1usize, 2, 4] {
+        detpart::par::with_num_threads(nt, || {
+            let mut engine = Partitioner::new(Config::detquality(13)).unwrap();
+            let mut rec = RecordingObserver::default();
+            let r = engine
+                .partition_observed(hg, &PartitionRequest::new(4, 13), &mut rec)
+                .unwrap();
+            views.push((r.part, r.km1, rec.deterministic_view()));
+        });
+    }
+    assert!(
+        views.windows(2).all(|w| w[0] == w[1]),
+        "detquality event stream depends on thread count"
+    );
+}
+
+#[test]
+fn prop_fm_equal_gain_ties_are_deterministic() {
+    // Tie fixture: a unit-weight ring with an alternating partition —
+    // every boundary vertex has the same gain for the same move, so the
+    // whole pass is tie-breaking. Parallel FM must still bit-match the
+    // serial oracle at every thread count, and reruns must agree.
+    use detpart::config::FmConfig;
+    use detpart::datastructures::Hypergraph;
+    use detpart::refinement::fm::{refine_fm_in, refine_serial};
+    use detpart::refinement::RefinementContext;
+
+    let n = 16usize;
+    let edges: Vec<Vec<u32>> =
+        (0..n as u32).map(|i| vec![i, (i + 1) % n as u32]).collect();
+    let hg = Hypergraph::new(n, &edges, None, None);
+    let part: Vec<u32> = (0..n as u32).map(|v| v % 2).collect();
+    let cfg = FmConfig::default();
+    let oracle = detpart::par::with_num_threads(1, || {
+        let p = PartitionedHypergraph::new(&hg, 2, part.clone());
+        let mut ctx = RefinementContext::new(2, n);
+        let s = refine_serial(&p, 0.1, &cfg, 3, &mut ctx);
+        (p.snapshot(), s.final_km1)
+    });
+    // The alternating ring cuts every edge; FM must find a better state.
+    assert!(oracle.1 < n as i64, "FM inert on the tie fixture");
+    for nt in [1usize, 2, 4] {
+        for _rerun in 0..2 {
+            let got = detpart::par::with_num_threads(nt, || {
+                let p = PartitionedHypergraph::new(&hg, 2, part.clone());
+                let mut ctx = RefinementContext::new(2, n);
+                let s = refine_fm_in(&p, 0.1, &cfg, 3, &mut ctx);
+                (p.snapshot(), s.final_km1)
+            });
+            assert_eq!(got, oracle, "tie fixture diverged at {nt} threads");
         }
     }
 }

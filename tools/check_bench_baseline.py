@@ -17,6 +17,11 @@ Contracts:
       of the full policy's vertices in its best round after the
       (always-full) first one, with zero large allocations on warm
       refinement passes.
+  fm — the parallel multi-try FM pass matching the serial determinism
+      oracle bit-for-bit on every instance, km1 never worsening and
+      strictly improving by at least `min_total_improvement` over the
+      suite, committed moves within the applied log, and zero large
+      allocations on warm FM passes and warm detquality engine requests.
 
 Usage: check_bench_baseline.py <baseline.json> <fresh.json>
 """
@@ -117,9 +122,66 @@ def check_activeset(base: dict, fresh: dict) -> None:
     )
 
 
+def check_fm(base: dict, fresh: dict) -> None:
+    if fresh.get("bench") != base["bench"]:
+        fail(f"bench mismatch: fresh {fresh.get('bench')!r} vs baseline {base['bench']!r}")
+
+    cases = fresh.get("cases")
+    if not cases:
+        fail("fresh artifact has no cases")
+    names = [c.get("instance") for c in cases]
+    if names != base["instances"]:
+        fail(f"instance set changed: fresh {names} vs baseline {base['instances']}")
+
+    schema = set(base["case_schema"])
+    alloc_ceiling = base["max_warm_large_allocs"]
+    total_improvement = 0
+    for row in cases:
+        tag = row.get("instance")
+        missing = sorted(schema - set(row))
+        if missing:
+            fail(f"case {tag}: missing fields {missing}")
+        if row["oracle_match"] != 1:
+            fail(f"case {tag}: parallel FM diverged from the serial oracle")
+        if row["final_km1"] > row["initial_km1"]:
+            fail(
+                f"case {tag}: FM worsened km1 "
+                f"({row['initial_km1']} -> {row['final_km1']})"
+            )
+        if row["committed"] > row["moves_applied"]:
+            fail(
+                f"case {tag}: committed prefix ({row['committed']}) exceeds the "
+                f"applied move log ({row['moves_applied']})"
+            )
+        if row["warm_large_allocs"] > alloc_ceiling:
+            fail(
+                f"case {tag}: {row['warm_large_allocs']} large allocations on warm "
+                f"FM passes (ceiling {alloc_ceiling}) — scratch reuse regressed"
+            )
+        total_improvement += row["initial_km1"] - row["final_km1"]
+
+    floor = base["min_total_improvement"]
+    if total_improvement < floor:
+        fail(
+            f"suite km1 improvement {total_improvement} below floor {floor} — "
+            f"the FM refiner is inert"
+        )
+    if fresh.get("engine_warm_large_allocs", 0) > alloc_ceiling:
+        fail(
+            f"{fresh['engine_warm_large_allocs']} large allocations on warm "
+            f"detquality engine requests (ceiling {alloc_ceiling})"
+        )
+
+    print(
+        f"baseline diff OK: {len(cases)} cases match the serial oracle, suite km1 "
+        f"improvement {total_improvement}, warm large allocs <= {alloc_ceiling}"
+    )
+
+
 CHECKERS = {
     "contraction": check_contraction,
     "activeset": check_activeset,
+    "fm": check_fm,
 }
 
 
